@@ -1,0 +1,120 @@
+//! End-to-end driver: proves all layers compose on a real workload.
+//!
+//! Pipeline exercised, exactly as a deployment would run it:
+//!   1. TPC-H data generated and round-tripped through the columnar
+//!      codec onto the simulated DFS (128 MB-equivalent splits);
+//!   2. the paper's query executed through the full cluster runtime —
+//!      scan → approximate count → **distributed Bloom build** →
+//!      p2p broadcast → **XLA/Pallas probe via PJRT** (the AOT artifact;
+//!      falls back to the native probe if `make artifacts` hasn't run) →
+//!      200-partition shuffle → TimSort sort-merge join;
+//!   3. an ε sweep, cost-model fit, Newton ε*, and the headline metric:
+//!      SBFCJ@ε* speedup over the plain sort-merge join.
+//!
+//!     cargo run --release --example end_to_end
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, ProbePath};
+use bloomjoin::model::{fit, newton};
+use bloomjoin::query::{JoinQuery, JoinStrategy};
+use bloomjoin::runtime::XlaProbe;
+use bloomjoin::storage::{ColumnarCodec, DfsConfig, SimDfs};
+use bloomjoin::tpch::{GenConfig, Lineitem, Order, TpchGenerator};
+
+fn main() {
+    // SF 0.3 = ~450k orders / ~1.8M lineitems: large enough that the
+    // filter's savings outweigh its stage overheads (see cmp_strategies
+    // for the crossover study)
+    let sf = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.3);
+    println!("=== end-to-end driver, TPC-H SF {sf} ===\n");
+
+    // --- 1. storage layer round trip -----------------------------------
+    let gen = TpchGenerator::new(GenConfig { sf, ..Default::default() });
+    let orders: Vec<Order> = gen.orders().into_iter().flatten().collect();
+    let lineitems: Vec<Lineitem> = gen.lineitems().into_iter().flatten().collect();
+
+    let mut dfs = SimDfs::new(DfsConfig { block_size: 4 << 20, ..Default::default() });
+    let ord_groups = Order::encode(&orders, 8192);
+    let li_groups = Lineitem::encode(&lineitems, 8192);
+    let ord_bytes: Vec<u8> = ord_groups.iter().flat_map(|g| g.bytes.clone()).collect();
+    let li_bytes: Vec<u8> = li_groups.iter().flat_map(|g| g.bytes.clone()).collect();
+    dfs.put("tpch/orders.col", &ord_bytes).unwrap();
+    dfs.put("tpch/lineitem.col", &li_bytes).unwrap();
+    let back = Order::decode(&ord_groups).unwrap();
+    assert_eq!(back.len(), orders.len(), "columnar round-trip");
+    println!(
+        "storage: orders {} rows / {} splits, lineitem {} rows / {} splits",
+        orders.len(),
+        dfs.n_blocks("tpch/orders.col").unwrap(),
+        lineitems.len(),
+        dfs.n_blocks("tpch/lineitem.col").unwrap()
+    );
+
+    // --- 2. the query through the full runtime --------------------------
+    let cluster = Cluster::new(ClusterConfig::small_cluster());
+    let probe_path = match XlaProbe::from_default_location() {
+        Some(p) => {
+            println!("runtime: XLA probe loaded, rungs {:?}", p.rungs());
+            ProbePath::Batch(Arc::new(p))
+        }
+        None => {
+            println!("runtime: artifacts/ missing — native probe (run `make artifacts`)");
+            ProbePath::Native
+        }
+    };
+    let base = JoinQuery { sf, ..Default::default() };
+    // generate + WHERE-filter + project once; every run below shares it
+    let (big, small) = base.prepare_inputs();
+    let bloom_q = |eps: f64| JoinQuery {
+        strategy: JoinStrategy::BloomCascade(BloomCascadeConfig {
+            fpr: eps,
+            probe_path: probe_path.clone(),
+            ..Default::default()
+        }),
+        ..base.clone()
+    };
+
+    let out = bloom_q(0.05).run_on(&cluster, big.clone(), small.clone());
+    println!("\nquery at ε=0.05: {} rows", out.rows.len());
+    println!("{}", out.metrics.markdown());
+
+    // cross-check against the plain strategies
+    let smj = JoinQuery { strategy: JoinStrategy::SortMerge, ..base.clone() }
+        .run_on(&cluster, big.clone(), small.clone());
+    assert_eq!(out.rows.len(), smj.rows.len(), "SBFCJ ≠ SMJ result!");
+
+    // --- 3. sweep, fit, optimise, headline metric ------------------------
+    let (a, b) = base.model_ab(&cluster);
+    println!("sweep: 12 points (shared inputs)...");
+    let points: Vec<fit::SweepPoint> = bloom_q(0.05)
+        .sweep_epsilon(&cluster, &JoinQuery::epsilon_series(12))
+        .into_iter()
+        .map(|(eps, m)| fit::SweepPoint {
+            eps,
+            bloom_creation_s: m.bloom_creation_s(),
+            filter_join_s: m.filter_join_s(),
+        })
+        .collect();
+    let model = fit::calibrate(&points, a, b).expect("calibrate");
+    let opt = newton::optimal_epsilon(&model);
+    let at_opt = bloom_q(opt.eps).run_on(&cluster, big, small).metrics;
+
+    let speedup = smj.metrics.total_sim_s() / at_opt.total_sim_s();
+    println!("\n=== headline ===");
+    println!("ε* = {:.4} ({} Newton iterations)", opt.eps, opt.iterations);
+    println!(
+        "SBFCJ@ε*: {:.3}s   plain sort-merge: {:.3}s   speedup: {speedup:.2}×",
+        at_opt.total_sim_s(),
+        smj.metrics.total_sim_s()
+    );
+    println!(
+        "stage split at ε*: bloom creation {:.3}s  ≪  filter+join {:.3}s (paper §6.3.3 shape)",
+        at_opt.bloom_creation_s(),
+        at_opt.filter_join_s()
+    );
+    assert!(speedup > 1.0, "SBFCJ@ε* must beat plain SMJ on this workload");
+}

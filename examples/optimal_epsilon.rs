@@ -1,0 +1,81 @@
+//! The paper's §7.2 pipeline: calibrate the cost model from a sweep,
+//! solve `d(model_total)/dε = 0` with Newton's method, and validate that
+//! ε* beats naive choices.
+//!
+//!     cargo run --release --example optimal_epsilon
+
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::joins::bloom_cascade::BloomCascadeConfig;
+use bloomjoin::model::{fit, newton};
+use bloomjoin::query::{JoinQuery, JoinStrategy};
+use bloomjoin::util::fmt::Table;
+
+fn run_at(cluster: &Cluster, base: &JoinQuery, eps: f64) -> bloomjoin::metrics::QueryMetrics {
+    let q = JoinQuery {
+        strategy: JoinStrategy::BloomCascade(BloomCascadeConfig { fpr: eps, ..Default::default() }),
+        ..base.clone()
+    };
+    q.run(cluster).metrics
+}
+
+fn main() {
+    let cluster = Cluster::new(ClusterConfig::small_cluster());
+    let base = JoinQuery { sf: 0.05, ..Default::default() };
+    let (a, b) = base.model_ab(&cluster);
+    println!("workload features: A = N_filtrable/P = {a:.1}, B = N_matched/P = {b:.1}");
+
+    // calibration sweep (16 points, log-spaced — the paper used 69 for
+    // its plots; 16 is plenty for a 5-parameter fit).  Inputs generated
+    // once and shared across the sweep.
+    let points: Vec<fit::SweepPoint> = base
+        .sweep_epsilon(&cluster, &JoinQuery::epsilon_series(16))
+        .into_iter()
+        .map(|(eps, m)| fit::SweepPoint {
+            eps,
+            bloom_creation_s: m.bloom_creation_s(),
+            filter_join_s: m.filter_join_s(),
+        })
+        .collect();
+    let model = fit::calibrate(&points, a, b).expect("calibration");
+    let xs: Vec<f64> = points.iter().map(|p| p.eps).collect();
+    println!(
+        "fitted: K1={:.4} K2={:.4} L1={:.4} L2={:.4} C={:.3e}",
+        model.k1, model.k2, model.l1, model.l2, model.c
+    );
+    println!(
+        "fit quality: R²(bloom)={:.4} R²(join)={:.4}",
+        fit::r_squared(
+            |e| model.bloom(e),
+            &xs,
+            &points.iter().map(|p| p.bloom_creation_s).collect::<Vec<_>>()
+        ),
+        fit::r_squared(
+            |e| model.join(e),
+            &xs,
+            &points.iter().map(|p| p.filter_join_s).collect::<Vec<_>>()
+        )
+    );
+
+    let opt = newton::optimal_epsilon(&model);
+    println!(
+        "\nε* = {:.5}  (interior: {}, {} iterations)",
+        opt.eps, opt.interior, opt.iterations
+    );
+
+    // validate against naive choices
+    let mut t = Table::new(&["ε", "predicted total (s)", "measured total (s)"]);
+    for eps in [1e-4, 0.01, opt.eps, 0.3, 0.9] {
+        let m = run_at(&cluster, &base, eps);
+        let label = if (eps - opt.eps).abs() < 1e-12 {
+            format!("{eps:.5} (ε*)")
+        } else {
+            format!("{eps:.5}")
+        };
+        t.row(vec![
+            label,
+            format!("{:.3}", model.total(eps)),
+            format!("{:.3}", m.total_sim_s()),
+        ]);
+    }
+    println!("\n{}", t.render());
+}

@@ -1,0 +1,46 @@
+//! Quickstart: run the paper's query once with the Bloom-filtered
+//! cascade join and print the per-stage breakdown.
+//!
+//!     cargo run --release --example quickstart
+
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::joins::bloom_cascade::BloomCascadeConfig;
+use bloomjoin::query::{JoinQuery, JoinStrategy};
+
+fn main() {
+    // a default 8-node simulated cluster (2 executors × 4 cores each)
+    let cluster = Cluster::new(ClusterConfig::default());
+
+    // TPC-H SF 0.01: ~15k orders, ~60k lineitems; the WHERE clause keeps
+    // ~10 % of orders, so ~90 % of lineitems are filterable — SBFCJ's
+    // sweet spot.
+    let query = JoinQuery {
+        sf: 0.01,
+        strategy: JoinStrategy::BloomCascade(BloomCascadeConfig {
+            fpr: 0.05, // ε — the paper's tunable; see examples/optimal_epsilon.rs
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+
+    let out = query.run(&cluster);
+
+    println!("SELECT l_extendedprice, o_orderdate FROM lineitem JOIN orders ...");
+    println!("=> {} result rows\n", out.rows.len());
+    println!("{}", out.metrics.markdown());
+    println!(
+        "bloom filter: {} bits, requested ε {:.3}, realized ε {:.5}",
+        out.metrics.bloom_bits, out.metrics.requested_fpr, out.metrics.realized_fpr
+    );
+    println!(
+        "big table: {} rows scanned, {} survived the filter ({:.1} % removed)",
+        out.metrics.big_rows_scanned,
+        out.metrics.big_rows_after_filter,
+        100.0 * (1.0 - out.metrics.big_rows_after_filter as f64 / out.metrics.big_rows_scanned as f64)
+    );
+    println!(
+        "\npaper's two stages:  bloom creation {:.3}s   filter+join {:.3}s",
+        out.metrics.bloom_creation_s(),
+        out.metrics.filter_join_s()
+    );
+}

@@ -1,0 +1,70 @@
+//! Compare the three join strategies (the §3 context: SBFCJ vs SBJ vs
+//! plain sort-merge) across small-table selectivities.
+//!
+//!     cargo run --release --example strategy_comparison
+
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::joins::bloom_cascade::BloomCascadeConfig;
+use bloomjoin::query::{JoinQuery, JoinStrategy};
+use bloomjoin::tpch::ORDERDATE_RANGE_DAYS;
+use bloomjoin::util::fmt::Table;
+
+fn main() {
+    let cluster = Cluster::new(ClusterConfig::default());
+    let mut table = Table::new(&[
+        "order-window",
+        "small rows",
+        "SBFCJ (s)",
+        "SBJ broadcast (s)",
+        "sort-merge (s)",
+        "winner",
+    ]);
+
+    // selectivity sweep: tiny dimension → broadcast wins; mid-size →
+    // bloom cascade wins; huge (no filtering possible) → plain SMJ
+    for frac in [0.005, 0.05, 0.2, 0.8] {
+        let window = ((ORDERDATE_RANGE_DAYS as f64) * frac) as i32;
+        let base = JoinQuery {
+            sf: 0.01,
+            order_date_window: (100, 100 + window.max(1)),
+            ..Default::default()
+        };
+
+        let run = |strategy: JoinStrategy| {
+            let q = JoinQuery { strategy, ..base.clone() };
+            q.run(&cluster)
+        };
+
+        let bloom = run(JoinStrategy::BloomCascade(BloomCascadeConfig {
+            fpr: 0.05,
+            ..Default::default()
+        }));
+        let bcast = run(JoinStrategy::BroadcastHash);
+        let smj = run(JoinStrategy::SortMerge);
+        assert_eq!(bloom.rows.len(), bcast.rows.len());
+        assert_eq!(bloom.rows.len(), smj.rows.len());
+
+        let times = [
+            ("SBFCJ", bloom.metrics.total_sim_s()),
+            ("SBJ", bcast.metrics.total_sim_s()),
+            ("SMJ", smj.metrics.total_sim_s()),
+        ];
+        let winner = times
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        let small_rows = bloom.metrics.bloom_bits; // proxy printed below instead
+        let _ = small_rows;
+        table.row(vec![
+            format!("{:.1} %", frac * 100.0),
+            bloom.rows.len().to_string(),
+            format!("{:.3}", times[0].1),
+            format!("{:.3}", times[1].1),
+            format!("{:.3}", times[2].1),
+            winner.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(result counts asserted equal across strategies on every row)");
+}

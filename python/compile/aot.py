@@ -1,0 +1,83 @@
+"""AOT export: lower every L2 variant to HLO *text* + a JSON manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and README.md there.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import all_variants, example_args, fn_for
+from .kernels.hashing import C1, C2, K_MAX
+from .kernels.bloom_probe import BLOCK_KEYS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {
+        "format": "hlo-text/return-tuple-1",
+        "hash": {"c1": C1, "c2": C2, "k_max": K_MAX, "scheme": "fmix32-double-hash"},
+        "block_keys": BLOCK_KEYS,
+        "variants": [],
+    }
+    for v in all_variants():
+        lowered = jax.jit(fn_for(v)).lower(*example_args(v))
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{v.name}.hlo.txt"
+        path.write_text(text)
+        manifest["variants"].append(
+            {
+                "name": v.name,
+                "op": v.op,
+                "log2_m": v.log2_m,
+                "m_bits": v.m_bits,
+                "n_words": v.n_words,
+                "batch": v.batch,
+                "file": path.name,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "params": (
+                    ["keys:u32[B]", "words:u32[W]", "k:i32[1]"]
+                    if v.op == "probe"
+                    else ["keys:u32[B]", "k:i32[1]"]
+                ),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'} ({len(manifest['variants'])} variants)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    export_all(pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

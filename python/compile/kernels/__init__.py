@@ -1,0 +1,20 @@
+"""Bloom-filter kernels: L1 Pallas probe, jnp build, pure-jnp oracle."""
+
+from .bloom_build import build
+from .bloom_probe import BLOCK_KEYS, probe
+from .hashing import C1, C2, K_MAX, fold64_py, probe_positions, probe_positions_py
+from .ref import build_ref, probe_ref
+
+__all__ = [
+    "BLOCK_KEYS",
+    "C1",
+    "C2",
+    "K_MAX",
+    "build",
+    "build_ref",
+    "fold64_py",
+    "probe",
+    "probe_positions",
+    "probe_positions_py",
+    "probe_ref",
+]

@@ -1,0 +1,42 @@
+"""L2 graph: distributed Bloom-filter partial build for one partition batch.
+
+Paper §5.1 change #1: the filter is *not* built single-pass on the driver —
+each partition builds a partial filter over its own keys and the partials
+are merged by bitwise OR (a Bloom filter algebra identity).  The Rust
+coordinator runs this graph per partition batch and ORs the resulting word
+arrays; merging is associative/commutative so the merge tree shape is free.
+
+Build is one-time per query (not the request-path hot spot), so it is a
+plain jnp scatter rather than a Pallas kernel: scatter-max into an m-bit
+boolean vector, then pack 32 bits/word.  Padded slots in the last batch are
+filled by the Rust side with a *repeat of a real key*, which is idempotent
+under OR (sets no extra bits).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import K_MAX, probe_positions
+
+
+@functools.partial(jax.jit, static_argnames=("m_bits",))
+def build(keys: jnp.ndarray, k: jnp.ndarray, *, m_bits: int) -> jnp.ndarray:
+    """Partial filter for one key batch.
+
+    keys : u32[B]; k : i32[1]; returns u32[m_bits // 32] packed words.
+    """
+    pos = probe_positions(keys, m_bits)                    # (B, K_MAX)
+    j = jnp.arange(K_MAX, dtype=jnp.uint32)
+    active = (j < k[0].astype(jnp.uint32))                 # (K_MAX,)
+    active = jnp.broadcast_to(active, pos.shape)
+    bits = jnp.zeros((m_bits,), dtype=jnp.bool_)
+    # scatter-max: inactive lanes write False onto False — a no-op.
+    bits = bits.at[pos.reshape(-1)].max(active.reshape(-1))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    words = (bits.reshape(m_bits // 32, 32).astype(jnp.uint32) << shifts).sum(
+        axis=1, dtype=jnp.uint32
+    )
+    return words

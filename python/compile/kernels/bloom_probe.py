@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: Bloom-filter membership probe over a key batch.
+
+This is the compute hot-spot of the paper's SBFCJ algorithm: every record of
+the big table is tested against the broadcast Bloom filter (paper §5.2 step
+4).  The Rust coordinator streams big-table batches through the AOT-compiled
+artifact of this kernel on the request path.
+
+TPU-shaped design (DESIGN.md §Hardware-Adaptation):
+
+* the filter word array is the *working set*: its BlockSpec maps the whole
+  array on every grid step, so it is loaded to VMEM once and stays resident
+  across the key stream (the analogue of Spark pinning the broadcast filter
+  in the executor BlockManager).  The ladder caps W*4 bytes at 4 MiB,
+  comfortably inside a 16 MiB VMEM budget together with the key block;
+* keys stream through in blocks of ``BLOCK_KEYS`` along the grid dimension —
+  the HBM->VMEM schedule that replaces Spark's per-row codegen loop;
+* hashing is branch-free integer VPU work: two fmix32 mixes per key, then
+  ``K_MAX`` fused gather+test lanes masked by ``j < k``.  Filter sizes are
+  powers of two so ``mod m`` is a single bit-mask (no integer division);
+* ``interpret=True`` always — real-TPU lowering emits a Mosaic custom call
+  that the CPU PJRT plugin cannot execute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .hashing import K_MAX, hash_pair
+
+#: Keys per grid step.  8192-key batches (see model.py) split into 8 steps.
+BLOCK_KEYS = 1024
+
+
+def _probe_kernel(k_ref, keys_ref, words_ref, mask_ref, *, m_bits: int):
+    """One grid step: test BLOCK_KEYS keys against the resident filter.
+
+    k_ref     : i32[1]   — number of active hash functions (1..K_MAX)
+    keys_ref  : u32[BLOCK_KEYS]
+    words_ref : u32[W]   — packed filter bits, bit p lives at word p>>5,
+                           bit position p&31
+    mask_ref  : i32[BLOCK_KEYS] out — 1 iff all k probed bits are set
+    """
+    keys = keys_ref[...]
+    k = k_ref[0]
+    h1, h2 = hash_pair(keys)
+    j = jax.lax.broadcasted_iota(jnp.uint32, (keys.shape[0], K_MAX), 1)
+    pos = (h1[:, None] + j * h2[:, None]) & jnp.uint32(m_bits - 1)
+    word_idx = (pos >> jnp.uint32(5)).astype(jnp.int32)
+    bit = jnp.uint32(1) << (pos & jnp.uint32(31))
+    words = words_ref[...]
+    hit = (words[word_idx] & bit) != jnp.uint32(0)
+    active = j < k.astype(jnp.uint32)
+    mask_ref[...] = jnp.all(hit | ~active, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("m_bits",))
+def probe(keys: jnp.ndarray, words: jnp.ndarray, k: jnp.ndarray, *, m_bits: int):
+    """Batched Bloom probe.
+
+    keys : u32[B] with B a multiple of BLOCK_KEYS (the Rust side pads);
+    words: u32[m_bits // 32];
+    k    : i32[1] active hash count;
+    returns i32[B] membership mask (1 = possibly in the small table).
+    """
+    batch, = keys.shape
+    assert batch % BLOCK_KEYS == 0, f"batch {batch} not a multiple of {BLOCK_KEYS}"
+    n_words = m_bits // 32
+    assert words.shape == (n_words,)
+    grid = (batch // BLOCK_KEYS,)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, m_bits=m_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),            # k: resident scalar
+            pl.BlockSpec((BLOCK_KEYS,), lambda i: (i,)),   # keys: streamed
+            pl.BlockSpec((n_words,), lambda i: (0,)),      # words: resident
+        ],
+        out_specs=pl.BlockSpec((BLOCK_KEYS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.int32),
+        interpret=True,
+    )(k, keys, words)

@@ -1,0 +1,101 @@
+"""Shared Bloom-filter hash algebra.
+
+This module is the single source of truth for the hash scheme used by the
+Pallas probe kernel, the jnp build graph, the pure-jnp reference oracle and
+(re-implemented identically, checked by golden vectors) the Rust native
+filter in ``rust/src/bloom/hash.rs``.
+
+Scheme
+------
+Keys arrive as ``uint32`` (the Rust side folds 64-bit join keys with
+splitmix64 before handing them to the kernel).  We derive two independent
+32-bit hashes with murmur3's ``fmix32`` finalizer under distinct xor salts,
+force the second one odd, and use classic double hashing
+
+    pos_j = (h1 + j * h2) mod m        for j in 0..k
+
+with ``m`` a power of two so the ``mod`` is a bit-mask and the odd stride
+``h2`` is a unit of Z/mZ (every probe sequence is a full cycle, no
+clustering on the pow-2 lattice).
+
+All arithmetic is wrapping uint32 — identical semantics in numpy/jnp and
+Rust ``u32``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Salts for the two hash streams (golden-ratio / murmur constants).
+C1 = 0x9E3779B9
+C2 = 0x85EBCA77
+
+#: Upper bound on the number of hash functions any artifact supports.  The
+#: optimal k for the smallest sensible error rate we sweep (1e-4) is
+#: ceil(log2(1/1e-4)) = 14, so 16 leaves headroom and keeps the probe loop
+#: shape static.
+K_MAX = 16
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 finalizer — a full-avalanche 32-bit permutation."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_pair(keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Return the double-hash pair ``(h1, h2)`` with ``h2`` forced odd."""
+    keys = keys.astype(jnp.uint32)
+    h1 = mix32(keys ^ jnp.uint32(C1))
+    h2 = mix32(keys ^ jnp.uint32(C2)) | jnp.uint32(1)
+    return h1, h2
+
+
+def probe_positions(keys: jnp.ndarray, m_bits: int) -> jnp.ndarray:
+    """All ``K_MAX`` candidate bit positions for each key.
+
+    Returns shape ``keys.shape + (K_MAX,)`` uint32, each in ``[0, m_bits)``.
+    ``m_bits`` must be a power of two.
+    """
+    assert m_bits & (m_bits - 1) == 0, "filter size must be a power of two"
+    h1, h2 = hash_pair(keys)
+    j = jnp.arange(K_MAX, dtype=jnp.uint32)
+    pos = h1[..., None] + j * h2[..., None]
+    return pos & jnp.uint32(m_bits - 1)
+
+
+# --- pure-python mirror (int arithmetic), used for golden vectors ---------
+
+def _mix32_py(x: int) -> int:
+    x &= 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x85EBCA6B) & 0xFFFFFFFF
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & 0xFFFFFFFF
+    x ^= x >> 16
+    return x
+
+
+def probe_positions_py(key: int, m_bits: int, k: int) -> list[int]:
+    """Pure-python reference of ``probe_positions`` for one key."""
+    h1 = _mix32_py((key ^ C1) & 0xFFFFFFFF)
+    h2 = _mix32_py((key ^ C2) & 0xFFFFFFFF) | 1
+    return [((h1 + j * h2) & 0xFFFFFFFF) & (m_bits - 1) for j in range(k)]
+
+
+def splitmix64_py(x: int) -> int:
+    """splitmix64 finalizer; the Rust side folds u64 keys to u32 with
+    ``(splitmix64(key) >> 32) as u32`` before calling any kernel."""
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return z ^ (z >> 31)
+
+
+def fold64_py(key: int) -> int:
+    return splitmix64_py(key) >> 32

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the Bloom probe/build kernels.
+
+No Pallas, no grids — just the hash algebra applied with dense jnp ops.
+``python/tests/test_kernel.py`` asserts the Pallas kernel matches this
+bit-for-bit across a hypothesis sweep of shapes, k values and filter sizes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .hashing import K_MAX, probe_positions
+
+
+def probe_ref(keys: jnp.ndarray, words: jnp.ndarray, k: jnp.ndarray, *, m_bits: int):
+    """Reference membership probe; same contract as bloom_probe.probe."""
+    pos = probe_positions(keys, m_bits)                    # (B, K_MAX)
+    word_idx = (pos >> jnp.uint32(5)).astype(jnp.int32)
+    bit = jnp.uint32(1) << (pos & jnp.uint32(31))
+    hit = (words[word_idx] & bit) != jnp.uint32(0)
+    j = jnp.arange(K_MAX, dtype=jnp.uint32)
+    active = j < k[0].astype(jnp.uint32)
+    return jnp.all(hit | ~active, axis=1).astype(jnp.int32)
+
+
+def build_ref(keys: jnp.ndarray, k: jnp.ndarray, *, m_bits: int) -> jnp.ndarray:
+    """Reference partial-filter build via an explicit per-key python loop —
+    slow but obviously correct."""
+    import numpy as np
+
+    pos = np.asarray(probe_positions(keys, m_bits))
+    kk = int(np.asarray(k)[0])
+    words = np.zeros(m_bits // 32, dtype=np.uint32)
+    for row in pos:
+        for p in row[:kk]:
+            words[int(p) >> 5] |= np.uint32(1) << np.uint32(int(p) & 31)
+    return jnp.asarray(words)

@@ -1,0 +1,97 @@
+"""L2: the query's compute graph, one jitted function per artifact variant.
+
+The paper's hot spot is step 4 of SBFCJ — probing every big-table record
+against the broadcast Bloom filter — plus the per-partition partial-filter
+build of step 2/3.  Both are expressed here as jax functions over *static*
+shapes drawn from a filter-size ladder (AOT compilation requires static
+shapes; DESIGN.md §6 explains the pow-2 ladder and its ε distortion).
+
+``aot.py`` lowers each variant once to HLO text; the Rust runtime compiles
+each artifact once per process and executes it on the request path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.bloom_build import build as _build
+from .kernels.bloom_probe import BLOCK_KEYS, probe as _probe
+from .kernels.hashing import K_MAX
+
+#: Keys per request-path batch.  A multiple of the kernel's BLOCK_KEYS; the
+#: Rust side pads the final partial batch (padding for probe is discarded by
+#: slicing the mask; padding for build repeats a real key).
+BATCH_KEYS = 8192
+
+#: Filter-size ladder, in log2(bits).  2^17 = 128 Kbit (16 KiB) up to
+#: 2^25 = 32 Mbit (4 MiB of u32 words — resident-working-set budget, see
+#: DESIGN.md §Hardware-Adaptation).  Rust rounds the cost model's optimal m
+#: up to the next rung.
+PROBE_LADDER = (17, 19, 21, 23, 25)
+
+#: Build artifacts scatter an m-bit dense vector, so cap the lowered
+#: variants at 2^23 bits; larger filters fall back to the Rust native
+#: builder (bit-identical by the golden-vector tests).
+BUILD_LADDER = (17, 19, 21, 23)
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One AOT artifact: an op specialised to a filter rung."""
+
+    op: str            # "probe" | "build"
+    log2_m: int        # filter size in bits = 2**log2_m
+    batch: int = BATCH_KEYS
+
+    @property
+    def m_bits(self) -> int:
+        return 1 << self.log2_m
+
+    @property
+    def n_words(self) -> int:
+        return self.m_bits // 32
+
+    @property
+    def name(self) -> str:
+        return f"{self.op}_m{self.log2_m}_b{self.batch}"
+
+
+def probe_fn(variant: Variant):
+    """probe(keys u32[B], words u32[W], k i32[1]) -> i32[B]."""
+
+    def fn(keys, words, k):
+        return (_probe(keys, words, k, m_bits=variant.m_bits),)
+
+    return fn
+
+
+def build_fn(variant: Variant):
+    """build(keys u32[B], k i32[1]) -> u32[W]."""
+
+    def fn(keys, k):
+        return (_build(keys, k, m_bits=variant.m_bits),)
+
+    return fn
+
+
+def example_args(variant: Variant):
+    """ShapeDtypeStructs used to lower the variant."""
+    import jax
+
+    keys = jax.ShapeDtypeStruct((variant.batch,), jnp.uint32)
+    k = jax.ShapeDtypeStruct((1,), jnp.int32)
+    if variant.op == "probe":
+        words = jax.ShapeDtypeStruct((variant.n_words,), jnp.uint32)
+        return (keys, words, k)
+    return (keys, k)
+
+
+def all_variants() -> list[Variant]:
+    out = [Variant("probe", lm) for lm in PROBE_LADDER]
+    out += [Variant("build", lm) for lm in BUILD_LADDER]
+    return out
+
+
+def fn_for(variant: Variant):
+    return probe_fn(variant) if variant.op == "probe" else build_fn(variant)

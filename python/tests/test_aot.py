@@ -1,0 +1,55 @@
+"""AOT export sanity: every variant lowers to parseable HLO text with the
+expected parameter shapes, and the manifest indexes all of them."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import pytest
+
+from compile.aot import export_all, to_hlo_text
+from compile.model import BATCH_KEYS, Variant, all_variants, example_args, fn_for
+
+
+def test_variant_names_unique() -> None:
+    names = [v.name for v in all_variants()]
+    assert len(names) == len(set(names))
+
+
+def test_variant_shapes() -> None:
+    v = Variant("probe", 17)
+    assert v.m_bits == 1 << 17
+    assert v.n_words == (1 << 17) // 32
+    assert v.batch == BATCH_KEYS
+
+
+@pytest.mark.parametrize("v", [Variant("probe", 17), Variant("build", 17)])
+def test_lower_to_hlo_text(v: Variant) -> None:
+    import jax
+
+    lowered = jax.jit(fn_for(v)).lower(*example_args(v))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # parameters of the ENTRY computation: keys (+words) + k
+    n_params = 3 if v.op == "probe" else 2
+    lines = text.splitlines()
+    start = next(i for i, line in enumerate(lines) if line.startswith("ENTRY"))
+    entry_body = []
+    for line in lines[start + 1 :]:
+        if line.strip() == "}":
+            break
+        entry_body.append(line)
+    assert sum(" parameter(" in line for line in entry_body) == n_params
+
+
+def test_export_all_manifest(tmp_path: pathlib.Path) -> None:
+    manifest = export_all(tmp_path)
+    files = {p.name for p in tmp_path.iterdir()}
+    assert "manifest.json" in files
+    for entry in manifest["variants"]:
+        assert entry["file"] in files
+        assert (tmp_path / entry["file"]).stat().st_size > 0
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk["variants"] == manifest["variants"]
+    assert on_disk["hash"]["scheme"] == "fmix32-double-hash"

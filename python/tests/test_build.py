@@ -1,0 +1,79 @@
+"""Bloom build graph: vs loop oracle, OR-merge algebra, FPR behaviour."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import BLOCK_KEYS, K_MAX, build, build_ref, probe
+
+
+def _keys(rng, n):
+    return jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint64).astype(np.uint32))
+
+
+@pytest.mark.parametrize("log2_m", [17, 19])
+@pytest.mark.parametrize("k", [1, 5, K_MAX])
+def test_build_matches_ref(log2_m: int, k: int) -> None:
+    rng = np.random.default_rng(42 + log2_m + k)
+    keys = _keys(rng, 512)
+    kk = jnp.asarray([k], jnp.int32)
+    got = np.asarray(build(keys, kk, m_bits=1 << log2_m))
+    want = np.asarray(build_ref(keys, kk, m_bits=1 << log2_m))
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, K_MAX), seed=st.integers(0, 2**31 - 1))
+def test_or_merge_equals_bulk_build(k: int, seed: int) -> None:
+    """Partial build + OR == one-shot build over the union (paper §5.1 #1)."""
+    rng = np.random.default_rng(seed)
+    m_bits = 1 << 17
+    a, b = _keys(rng, 300), _keys(rng, 200)
+    kk = jnp.asarray([k], jnp.int32)
+    merged = np.asarray(build(a, kk, m_bits=m_bits)) | np.asarray(build(b, kk, m_bits=m_bits))
+    bulk = np.asarray(build(jnp.concatenate([a, b]), kk, m_bits=m_bits))
+    assert np.array_equal(merged, bulk)
+
+
+def test_duplicate_keys_idempotent() -> None:
+    """Pad-by-repeating-a-real-key sets no extra bits."""
+    rng = np.random.default_rng(9)
+    m_bits = 1 << 17
+    keys = np.asarray(_keys(rng, 100))
+    kk = jnp.asarray([7], jnp.int32)
+    once = np.asarray(build(jnp.asarray(keys), kk, m_bits=m_bits))
+    padded = np.concatenate([keys, np.repeat(keys[-1], 156)])
+    twice = np.asarray(build(jnp.asarray(padded), kk, m_bits=m_bits))
+    assert np.array_equal(once, twice)
+
+
+def test_no_false_negatives_and_fpr_near_epsilon() -> None:
+    """End-to-end build+probe: members always pass; FPR tracks the optimal-
+    filter prediction (1 - e^{-kn/m})^k within a loose statistical band."""
+    rng = np.random.default_rng(11)
+    m_bits = 1 << 17                     # m = 131072 bits
+    n = 8192                             # bits/key = 16 -> with k=11, fpr ~ 4.6e-4
+    k = 11
+    member = np.asarray(_keys(rng, n))
+    kk = jnp.asarray([k], jnp.int32)
+    words = build(jnp.asarray(member), kk, m_bits=m_bits)
+
+    got_members = np.asarray(probe(jnp.asarray(member), words, kk, m_bits=m_bits))
+    assert np.all(got_members == 1), "bloom filters must never false-negative"
+
+    probe_n = 4 * BLOCK_KEYS
+    others = np.asarray(_keys(rng, probe_n))  # collisions with `member` negligible
+    got = np.asarray(probe(jnp.asarray(others), words, kk, m_bits=m_bits))
+    fpr = got.mean()
+    predicted = (1 - np.exp(-k * n / m_bits)) ** k
+    assert fpr <= max(5 * predicted, 0.003), f"fpr {fpr} vs predicted {predicted}"
+
+
+def test_build_empty_k_zero_lanes() -> None:
+    """k=1 on a single key sets exactly <=1 distinct bit per key."""
+    m_bits = 1 << 17
+    words = np.asarray(build(jnp.asarray([123], jnp.uint32), jnp.asarray([1], jnp.int32), m_bits=m_bits))
+    assert int(sum(bin(w).count("1") for w in words)) == 1

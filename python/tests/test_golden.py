@@ -1,0 +1,47 @@
+"""Golden vectors shared with the Rust native implementation.
+
+``rust/src/bloom/hash.rs`` hardcodes the same table; if either side changes
+the hash algebra, both this test and the Rust unit test fail.  Regenerate
+with::
+
+    cd python && python -m tests.test_golden
+"""
+from __future__ import annotations
+
+from compile.kernels.hashing import fold64_py, probe_positions_py
+
+# (key_u32, m_bits, k) -> positions
+GOLDEN_POSITIONS = {
+    (0, 1 << 17, 4): [12046, 81955, 20792, 90701],
+    (1, 1 << 17, 4): [46339, 24664, 2989, 112386],
+    (42, 1 << 19, 6): [126672, 304003, 481334, 134377, 311708, 489039],
+    (0xDEADBEEF, 1 << 21, 8): [
+        965299, 1919236, 776021, 1729958, 586743, 1540680, 397465, 1351402,
+    ],
+    (0xFFFFFFFF, 1 << 25, 3): [23507626, 1190431, 12427668],
+}
+
+# key_u64 -> fold64(key) (splitmix64 >> 32)
+GOLDEN_FOLD64 = {
+    0: 0xE220A839,
+    1: 0x910A2DEC,
+    6000000: 0x810BE29C,
+    0xFFFFFFFFFFFFFFFF: 0xE4D97177,
+}
+
+
+def test_probe_positions_golden() -> None:
+    for (key, m_bits, k), want in GOLDEN_POSITIONS.items():
+        assert probe_positions_py(key, m_bits, k) == want, (key, m_bits, k)
+
+
+def test_fold64_golden() -> None:
+    for key, want in GOLDEN_FOLD64.items():
+        assert fold64_py(key) == want, hex(key)
+
+
+if __name__ == "__main__":
+    for (key, m_bits, k) in GOLDEN_POSITIONS:
+        print((key, m_bits, k), probe_positions_py(key, m_bits, k))
+    for key in GOLDEN_FOLD64:
+        print(hex(key), hex(fold64_py(key)))

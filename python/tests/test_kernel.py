@@ -1,0 +1,104 @@
+"""Pallas probe kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes (batch counts), k values and filter-ladder sizes;
+every case must match the oracle bit-for-bit (integer outputs, so equality,
+with assert_allclose as the final guard).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import BLOCK_KEYS, K_MAX, build, build_ref, probe, probe_ref
+from compile.kernels.hashing import probe_positions, probe_positions_py
+
+
+def _rand_keys(rng: np.random.Generator, n: int) -> jnp.ndarray:
+    return jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint64).astype(np.uint32))
+
+
+def _filter_for(keys: np.ndarray, m_bits: int, k: int) -> jnp.ndarray:
+    """Build a filter with the jnp builder (itself tested vs build_ref)."""
+    pad = (-len(keys)) % BLOCK_KEYS
+    padded = np.concatenate([keys, np.repeat(keys[-1], pad)]) if pad else keys
+    return build(jnp.asarray(padded), jnp.asarray([k], jnp.int32), m_bits=m_bits)
+
+
+@pytest.mark.parametrize("log2_m", [17, 19, 21])
+@pytest.mark.parametrize("k", [1, 7, K_MAX])
+def test_probe_matches_ref(log2_m: int, k: int) -> None:
+    rng = np.random.default_rng(log2_m * 100 + k)
+    m_bits = 1 << log2_m
+    member = np.asarray(_rand_keys(rng, 3 * BLOCK_KEYS))
+    words = _filter_for(member, m_bits, k)
+    queries = jnp.concatenate(
+        [jnp.asarray(member[:BLOCK_KEYS]), _rand_keys(rng, 3 * BLOCK_KEYS)]
+    )
+    kk = jnp.asarray([k], jnp.int32)
+    got = probe(queries, words, kk, m_bits=m_bits)
+    want = probe_ref(queries, words, kk, m_bits=m_bits)
+    assert_allclose(np.asarray(got), np.asarray(want))
+    # zero false negatives: every member key must pass
+    assert np.all(np.asarray(got)[:BLOCK_KEYS] == 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    k=st.integers(1, K_MAX),
+    log2_m=st.sampled_from([17, 19, 21]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_probe_hypothesis_sweep(n_blocks: int, k: int, log2_m: int, seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    m_bits = 1 << log2_m
+    keys = _rand_keys(rng, n_blocks * BLOCK_KEYS)
+    words = jnp.asarray(rng.integers(0, 2**32, size=m_bits // 32, dtype=np.uint64).astype(np.uint32))
+    kk = jnp.asarray([k], jnp.int32)
+    got = probe(keys, words, kk, m_bits=m_bits)
+    want = probe_ref(keys, words, kk, m_bits=m_bits)
+    assert got.shape == (n_blocks * BLOCK_KEYS,)
+    assert got.dtype == jnp.int32
+    assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_probe_k_monotone() -> None:
+    """More hash functions can only make the probe stricter."""
+    rng = np.random.default_rng(7)
+    m_bits = 1 << 17
+    keys = _rand_keys(rng, BLOCK_KEYS)
+    words = jnp.asarray(rng.integers(0, 2**32, size=m_bits // 32, dtype=np.uint64).astype(np.uint32))
+    prev = np.ones(BLOCK_KEYS, dtype=np.int32)
+    for k in range(1, K_MAX + 1):
+        cur = np.asarray(probe(keys, words, jnp.asarray([k], jnp.int32), m_bits=m_bits))
+        assert np.all(cur <= prev)
+        prev = cur
+
+
+def test_positions_match_pure_python() -> None:
+    """jnp hash algebra == pure-python ints (the Rust golden source)."""
+    keys = np.array([0, 1, 42, 0xDEADBEEF, 2**32 - 1], dtype=np.uint32)
+    m_bits = 1 << 19
+    pos = np.asarray(probe_positions(jnp.asarray(keys), m_bits))
+    for i, key in enumerate(keys):
+        assert list(pos[i]) == probe_positions_py(int(key), m_bits, K_MAX)
+
+
+def test_probe_all_ones_filter_accepts_everything() -> None:
+    m_bits = 1 << 17
+    keys = _rand_keys(np.random.default_rng(3), BLOCK_KEYS)
+    words = jnp.full((m_bits // 32,), 0xFFFFFFFF, dtype=jnp.uint32)
+    got = probe(keys, words, jnp.asarray([K_MAX], jnp.int32), m_bits=m_bits)
+    assert np.all(np.asarray(got) == 1)
+
+
+def test_probe_empty_filter_rejects_everything() -> None:
+    m_bits = 1 << 17
+    keys = _rand_keys(np.random.default_rng(4), BLOCK_KEYS)
+    words = jnp.zeros((m_bits // 32,), dtype=jnp.uint32)
+    got = probe(keys, words, jnp.asarray([1], jnp.int32), m_bits=m_bits)
+    assert np.all(np.asarray(got) == 0)

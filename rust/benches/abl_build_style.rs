@@ -1,0 +1,58 @@
+//! A1 — ablation of §5.1 change #1: distributed partial-filter build +
+//! tree merge vs the Brito-2007 driver-side build (collect all keys).
+//!
+//! Expected shape: driver-side stage-1 grows with the small table (flat
+//! collect through one link + serial build); distributed stays near-flat.
+
+use bloomjoin::bench_support::Report;
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, FilterBuildStyle};
+use bloomjoin::query::{JoinQuery, JoinStrategy};
+use bloomjoin::tpch::ORDERDATE_RANGE_DAYS;
+
+fn main() {
+    let cluster = Cluster::new(ClusterConfig::default());
+    let mut report = Report::new(
+        "abl_build_style",
+        &["small_rows", "distributed_s1_s", "driver_side_s1_s", "ratio"],
+    );
+
+    let mut ratios = Vec::new();
+    for frac in [0.05, 0.3, 0.9] {
+        let window = ((ORDERDATE_RANGE_DAYS as f64) * frac).max(1.0) as i32;
+        let base = JoinQuery {
+            sf: 0.3, // the paper's claim bites at large small-table sizes
+            order_date_window: (100, 100 + window),
+            ..Default::default()
+        };
+        let (big, small) = base.prepare_inputs();
+        let small_rows = small.n_rows();
+        let run = |style: FilterBuildStyle| {
+            JoinQuery {
+                strategy: JoinStrategy::BloomCascade(BloomCascadeConfig {
+                    fpr: 0.05,
+                    build_style: style,
+                    ..Default::default()
+                }),
+                ..base.clone()
+            }
+            .run_on(&cluster, big.clone(), small.clone())
+            .metrics
+        };
+        let dist = run(FilterBuildStyle::Distributed);
+        let driver = run(FilterBuildStyle::DriverSide);
+        let ratio = driver.bloom_creation_s() / dist.bloom_creation_s();
+        ratios.push(ratio);
+        report.row(vec![
+            small_rows.to_string(),
+            format!("{:.5}", dist.bloom_creation_s()),
+            format!("{:.5}", driver.bloom_creation_s()),
+            format!("{ratio:.2}"),
+        ]);
+    }
+    report.finish();
+    assert!(
+        ratios.last().unwrap() >= ratios.first().unwrap(),
+        "driver-side penalty should grow with the small table: {ratios:?}"
+    );
+}

@@ -1,0 +1,79 @@
+//! A3 — ablation of the §4.2 claim: whole-stage-codegen-style fused
+//! pipelines vs per-operator materialisation (the Spark-1/RDD analogue),
+//! and Tungsten vs Java-serialisation shuffle pricing.
+//!
+//! Expected shape: fused wins on wall time and the gap widens with row
+//! count; Tungsten shuffle is cheaper at every volume.
+
+use bloomjoin::bench_support::{measure, secs, Report};
+use bloomjoin::cluster::shuffle::{ShuffleCodec, ShuffleVolume};
+use bloomjoin::cluster::ClusterConfig;
+use bloomjoin::dataset::{Op, Pipeline};
+use bloomjoin::tpch::{GenConfig, Lineitem, TpchGenerator};
+
+fn main() {
+    let mut report = Report::new(
+        "abl_codegen",
+        &["rows", "fused_wall", "unfused_wall", "speedup"],
+    );
+
+    for sf in [0.002, 0.01, 0.03] {
+        let gen = TpchGenerator::new(GenConfig { sf, ..Default::default() });
+        let rows: Vec<Lineitem> = gen.lineitems().into_iter().flatten().collect();
+        let pipeline: Pipeline<Lineitem> = Pipeline::new()
+            .then(Op::filter(|l: &Lineitem| l.l_shipdate < 2000))
+            .then(Op::map_in_place(|l: &mut Lineitem| {
+                l.l_extendedprice_cents =
+                    l.l_extendedprice_cents * (10_000 - l.l_discount_bp as i64) / 10_000
+            }))
+            .then(Op::filter(|l: &Lineitem| l.l_quantity < 40));
+
+        let r1 = rows.clone();
+        let fused = measure(1, 5, move || pipeline_run_fused(&r1));
+        let r2 = rows.clone();
+        let unfused = measure(1, 5, move || pipeline_run_unfused(&r2));
+        report.row(vec![
+            rows.len().to_string(),
+            secs(fused.p50),
+            secs(unfused.p50),
+            format!("{:.2}x", unfused.p50 / fused.p50),
+        ]);
+    }
+    report.finish();
+
+    // shuffle codec pricing (simulated constants, not wall time)
+    let cfg = ClusterConfig::default();
+    let mut codec_report =
+        Report::new("abl_codegen_shuffle", &["bytes", "tungsten_s", "javaser_s", "ratio"]);
+    for mb in [1u64, 64, 1024] {
+        let vol = ShuffleVolume { records: mb * 10_000, bytes: mb << 20, partitions_out: 200 };
+        let t = vol.exchange_cost(&cfg, ShuffleCodec::Tungsten).total_seconds(1.0);
+        let j = vol.exchange_cost(&cfg, ShuffleCodec::JavaSer).total_seconds(1.0);
+        codec_report.row(vec![
+            (mb << 20).to_string(),
+            format!("{t:.5}"),
+            format!("{j:.5}"),
+            format!("{:.2}", j / t),
+        ]);
+        assert!(j > t, "java serialisation must price higher");
+    }
+    codec_report.finish();
+}
+
+fn test_pipeline() -> Pipeline<Lineitem> {
+    Pipeline::new()
+        .then(Op::filter(|l: &Lineitem| l.l_shipdate < 2000))
+        .then(Op::map_in_place(|l: &mut Lineitem| {
+            l.l_extendedprice_cents =
+                l.l_extendedprice_cents * (10_000 - l.l_discount_bp as i64) / 10_000
+        }))
+        .then(Op::filter(|l: &Lineitem| l.l_quantity < 40))
+}
+
+fn pipeline_run_fused(rows: &[Lineitem]) -> usize {
+    test_pipeline().run_fused(rows.to_vec()).len()
+}
+
+fn pipeline_run_unfused(rows: &[Lineitem]) -> usize {
+    test_pipeline().run_unfused(rows.to_vec()).len()
+}

@@ -1,0 +1,50 @@
+//! F1 — paper §6.3.2: the 69-experiment series.  For each ε, report the
+//! two per-run points the paper plots: stage-1 (distributed bloom
+//! creation) and stage-2 (filter + join) simulated times, across the SF
+//! axis the paper used (scaled down per DESIGN.md §3).
+//!
+//! Expected shape (§6.3.3): stage-2 ≫ stage-1 for most ε; stage-1 rises
+//! as ε → 0 (bigger filters); stage-2 grows with ε.
+
+use bloomjoin::bench_support::Report;
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::query::JoinQuery;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let runs = if quick { 12 } else { 69 };
+    let sfs: &[f64] = if quick { &[0.02] } else { &[0.02, 0.05, 0.1] };
+
+    let cluster = Cluster::new(ClusterConfig::small_cluster());
+    let mut report = Report::new(
+        "fig1_experiments",
+        &["sf", "eps", "stage1_bloom_s", "stage2_filterjoin_s", "total_s", "survivors"],
+    );
+
+    for &sf in sfs {
+        let base = JoinQuery { sf, ..Default::default() };
+        let series = base.sweep_epsilon(&cluster, &JoinQuery::epsilon_series(runs));
+        let first = &series.first().unwrap().1; // tightest ε
+        let last = &series.last().unwrap().1; // loosest ε
+        assert!(
+            first.bloom_creation_s() > last.bloom_creation_s(),
+            "stage-1 must rise as ε→0 (sf {sf})"
+        );
+        assert!(
+            first.big_rows_after_filter <= last.big_rows_after_filter,
+            "survivors must be monotone in ε"
+        );
+        for (eps, m) in &series {
+            report.row(vec![
+                format!("{sf}"),
+                format!("{eps:.6}"),
+                format!("{:.5}", m.bloom_creation_s()),
+                format!("{:.5}", m.filter_join_s()),
+                format!("{:.5}", m.total_sim_s()),
+                m.big_rows_after_filter.to_string(),
+            ]);
+        }
+    }
+    report.finish();
+    println!("shape check (paper §6.3.3): stage2 ≫ stage1 at moderate ε; stage1 rises as ε → 0");
+}

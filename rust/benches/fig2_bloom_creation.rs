@@ -1,0 +1,88 @@
+//! F2 — paper §7.1.3 (bloom model plot): stage-1 (distributed filter
+//! creation) time vs ε with the `model_bloom(ε) = K1 + K2·log(1/ε)`
+//! least-squares fit overlaid — linear in filter size, since
+//! `size ≈ n·1.44·log2(1/ε)` (§7.1.1).
+//!
+//! Runs at the bloom layer directly with n = 1M keys (the paper's filters
+//! were built over millions of orders; the query-level sweep in fig1
+//! covers the small-n regime).  Expected: linear in log(1/ε), R² ≈ 1.
+
+use bloomjoin::bench_support::Report;
+use bloomjoin::bloom::{BloomFilter, BloomParams};
+use bloomjoin::cluster::{broadcast, ClusterConfig};
+use bloomjoin::model::fit;
+use bloomjoin::util::Rng;
+
+fn main() {
+    let cfg = ClusterConfig::small_cluster();
+    let n: u64 = 1_000_000;
+    let n_parts = 16;
+    let mut rng = Rng::new(2024);
+    let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let parts: Vec<&[u64]> = keys.chunks((n as usize) / n_parts).collect();
+
+    let mut report = Report::new(
+        "fig2_bloom_creation",
+        &["eps", "filter_bits", "k", "measured_s1_s", "model_s"],
+    );
+
+    // measured stage-1 = modeled distributed insert cpu (laid over slots)
+    //                  + real OR-merge wall + tree-collect + p2p broadcast
+    let mut points: Vec<(f64, f64)> = Vec::new();
+    let epsilons: Vec<f64> = (0..24)
+        .map(|i| {
+            let t = i as f64 / 23.0;
+            1e-4f64.powf(1.0 - t) * 0.9f64.powf(t)
+        })
+        .collect();
+    let mut rows = Vec::new();
+    for &eps in &epsilons {
+        let params = BloomParams::optimal(n, eps);
+        // distributed build: per-partition modeled cpu, slots in parallel
+        let per_part_cpu = (n as f64 / n_parts as f64)
+            * (cfg.scan_record_cost + cfg.hash_insert_cost * params.k as f64);
+        let waves = (n_parts as f64 / cfg.total_slots() as f64).ceil();
+        let build_s = waves * (cfg.task_overhead + per_part_cpu) + cfg.stage_overhead;
+        // real OR-merge of the partials
+        let mut partials: Vec<BloomFilter> =
+            parts.iter().map(|_| BloomFilter::new(params)).collect();
+        for (i, chunk) in parts.iter().enumerate() {
+            for &k in chunk.iter().take(2_000) {
+                partials[i].insert(k); // sample inserts: merge cost is size-driven
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let mut merged = partials.pop().unwrap();
+        for p in &partials {
+            merged.merge(p).unwrap();
+        }
+        let merge_s = t0.elapsed().as_secs_f64();
+        let collect_s = broadcast::driver_collect_cost(&cfg, params.size_bytes()).seconds();
+        let bcast_s = broadcast::p2p_broadcast_cost(&cfg, params.size_bytes()).seconds();
+        let s1 = build_s + merge_s + collect_s + bcast_s;
+        points.push((eps, s1));
+        rows.push((eps, params, s1));
+    }
+
+    let x1: Vec<Vec<f64>> = points.iter().map(|(e, _)| vec![1.0, (1.0 / e).ln()]).collect();
+    let y1: Vec<f64> = points.iter().map(|(_, s)| *s).collect();
+    let beta = fit::fit_linear(&x1, &y1).expect("fit");
+    let model = |e: f64| beta[0] + beta[1] * (1.0 / e).ln();
+
+    for (eps, params, s1) in rows {
+        report.row(vec![
+            format!("{eps:.6}"),
+            params.m_bits.to_string(),
+            params.k.to_string(),
+            format!("{s1:.5}"),
+            format!("{:.5}", model(eps)),
+        ]);
+    }
+    report.finish();
+
+    let xs: Vec<f64> = points.iter().map(|p| p.0).collect();
+    let r2 = fit::r_squared(model, &xs, &y1);
+    println!("fit: K1={:.4} K2={:.4}  R²={r2:.4}", beta[0], beta[1]);
+    assert!(beta[1] > 0.0, "stage-1 must grow with log(1/ε)");
+    assert!(r2 > 0.8, "bloom-creation model should explain the series (R²={r2})");
+}

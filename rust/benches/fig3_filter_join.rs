@@ -1,0 +1,54 @@
+//! F3 — paper §7.1.3 (join model plot): stage-2 (filter + join) time vs ε
+//! with the `L1 + L2·ε + Poly(ε)·log(Poly(ε))` fit overlaid.
+//!
+//! Expected shape: a floor (L1: the unfilterable work), an ε-linear rise
+//! (false positives shuffled/sorted/discarded), mild n·log n curvature.
+
+use bloomjoin::bench_support::Report;
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::model::fit;
+use bloomjoin::query::JoinQuery;
+
+fn main() {
+    let cluster = Cluster::new(ClusterConfig::small_cluster());
+    let base = JoinQuery { sf: 0.05, ..Default::default() };
+    let (a, b) = base.model_ab(&cluster);
+
+    let series = base.sweep_epsilon(&cluster, &JoinQuery::epsilon_series(24));
+    let points: Vec<fit::SweepPoint> = series
+        .iter()
+        .map(|(eps, m)| fit::SweepPoint {
+            eps: *eps,
+            bloom_creation_s: m.bloom_creation_s(),
+            filter_join_s: m.filter_join_s(),
+        })
+        .collect();
+    let model = fit::calibrate(&points, a, b).expect("fit");
+
+    let mut report = Report::new(
+        "fig3_filter_join",
+        &["eps", "survivors", "measured_s", "model_s"],
+    );
+    for (p, (_, m)) in points.iter().zip(&series) {
+        report.row(vec![
+            format!("{:.6}", p.eps),
+            m.big_rows_after_filter.to_string(),
+            format!("{:.5}", p.filter_join_s),
+            format!("{:.5}", model.join(p.eps)),
+        ]);
+    }
+    report.finish();
+
+    let xs: Vec<f64> = points.iter().map(|p| p.eps).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.filter_join_s).collect();
+    let r2 = fit::r_squared(|e| model.join(e), &xs, &ys);
+    println!(
+        "fit: L1={:.4} L2={:.4} C={:.3e} (A={a:.0}, B={b:.0})  R²={r2:.4}",
+        model.l1, model.l2, model.c
+    );
+    // stage-2 should grow with ε (the paper's ε-linear term)
+    let lo = points.first().unwrap().filter_join_s;
+    let hi = points.last().unwrap().filter_join_s;
+    assert!(hi > lo, "filter+join time should increase with ε ({lo} -> {hi})");
+    assert!(r2 > 0.5, "join model should explain the trend (R²={r2})");
+}

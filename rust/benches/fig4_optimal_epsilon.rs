@@ -1,0 +1,64 @@
+//! F4 — paper §7.2: the total-time model, its Newton-solved optimum ε*,
+//! and validation runs at ε* vs naive ε.
+//!
+//! Expected shape: measured total at ε* within noise of the best grid
+//! point; extremes (ε→0 pays stage-1, ε→1 pays stage-2) both lose.
+
+use bloomjoin::bench_support::Report;
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::model::{fit, newton};
+use bloomjoin::query::JoinQuery;
+
+fn main() {
+    let cluster = Cluster::new(ClusterConfig::small_cluster());
+    let base = JoinQuery { sf: 0.05, ..Default::default() };
+    let (a, b) = base.model_ab(&cluster);
+
+    // calibrate on a 16-point sweep (shared inputs)
+    let cal = base.sweep_epsilon(&cluster, &JoinQuery::epsilon_series(16));
+    let points: Vec<fit::SweepPoint> = cal
+        .iter()
+        .map(|(eps, m)| fit::SweepPoint {
+            eps: *eps,
+            bloom_creation_s: m.bloom_creation_s(),
+            filter_join_s: m.filter_join_s(),
+        })
+        .collect();
+    let model = fit::calibrate(&points, a, b).expect("fit");
+    let opt = newton::optimal_epsilon(&model);
+
+    // validation grid including ε*
+    let mut grid = vec![1e-4, 1e-3, 0.01, 0.05, 0.2, 0.5, 0.9];
+    grid.push(opt.eps);
+    grid.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let runs = base.sweep_epsilon(&cluster, &grid);
+
+    let mut report = Report::new(
+        "fig4_optimal_epsilon",
+        &["eps", "model_total_s", "measured_total_s", "is_opt"],
+    );
+    let mut measured_at_opt = f64::MAX;
+    let mut best_measured = f64::MAX;
+    for (eps, m) in &runs {
+        let total = m.total_sim_s();
+        if (eps - opt.eps).abs() < 1e-12 {
+            measured_at_opt = total;
+        }
+        best_measured = best_measured.min(total);
+        report.row(vec![
+            format!("{eps:.6}"),
+            format!("{:.5}", model.total(*eps)),
+            format!("{total:.5}"),
+            ((eps - opt.eps).abs() < 1e-12).to_string(),
+        ]);
+    }
+    report.finish();
+    println!(
+        "ε* = {:.5} (interior {}, {} iterations); measured@ε* = {measured_at_opt:.4}s, best measured = {best_measured:.4}s",
+        opt.eps, opt.interior, opt.iterations
+    );
+    assert!(
+        measured_at_opt <= best_measured * 1.25,
+        "ε* run ({measured_at_opt}) should be near the grid optimum ({best_measured})"
+    );
+}

@@ -1,0 +1,97 @@
+//! Micro-benchmarks of the L3 hot path, used by the §Perf iteration loop:
+//! hash/fold, native probe, filter build, TimSort vs std sort, and the
+//! per-partition sort-merge join.
+
+use bloomjoin::bench_support::{measure, secs, Report};
+use bloomjoin::bloom::hash::fold64;
+use bloomjoin::bloom::BloomFilter;
+use bloomjoin::joins::sort_merge::sort_merge_join_partition;
+use bloomjoin::joins::timsort::timsort_by_key;
+use bloomjoin::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(77);
+    let keys: Vec<u64> = (0..1_000_000).map(|_| rng.next_u64()).collect();
+    let mut report = Report::new("micro_hot_path", &["op", "p50", "throughput"]);
+
+    {
+        let k = &keys;
+        let st = measure(2, 9, || k.iter().map(|&x| fold64(x) as u64).sum::<u64>());
+        report.row(vec![
+            "fold64 (1M keys)".into(),
+            secs(st.p50),
+            format!("{:.2e}/s", 1e6 / st.p50),
+        ]);
+    }
+
+    let mut filter = BloomFilter::with_optimal(100_000, 0.01);
+    for &k in &keys[..100_000] {
+        filter.insert(k);
+    }
+    {
+        let f = &filter;
+        let k = &keys;
+        let st = measure(2, 9, || k.iter().filter(|&&x| f.contains_key(x)).count());
+        report.row(vec![
+            "native probe (1M keys)".into(),
+            secs(st.p50),
+            format!("{:.2e}/s", 1e6 / st.p50),
+        ]);
+    }
+    {
+        let k = &keys;
+        let st = measure(1, 5, || {
+            let mut f = BloomFilter::with_optimal(100_000, 0.01);
+            for &x in &k[..100_000] {
+                f.insert(x);
+            }
+            f.fill_ratio()
+        });
+        report.row(vec![
+            "build (100k inserts)".into(),
+            secs(st.p50),
+            format!("{:.2e}/s", 1e5 / st.p50),
+        ]);
+    }
+
+    let rows: Vec<(u64, u64)> = (0..500_000).map(|_| (rng.below(1 << 40), rng.next_u64())).collect();
+    {
+        let r = &rows;
+        let st = measure(1, 5, || {
+            let mut v = r.clone();
+            timsort_by_key(&mut v, |x| x.0);
+            v.len()
+        });
+        report.row(vec![
+            "timsort 500k pairs".into(),
+            secs(st.p50),
+            format!("{:.2e}/s", 5e5 / st.p50),
+        ]);
+        let st = measure(1, 5, || {
+            let mut v = r.clone();
+            v.sort_by_key(|x| x.0);
+            v.len()
+        });
+        report.row(vec![
+            "std stable sort 500k".into(),
+            secs(st.p50),
+            format!("{:.2e}/s", 5e5 / st.p50),
+        ]);
+    }
+
+    {
+        let big: Vec<(u64, u64)> =
+            (0..200_000).map(|_| (rng.below(50_000), rng.next_u64())).collect();
+        let small: Vec<(u64, u64)> =
+            (0..10_000).map(|_| (rng.below(50_000), rng.next_u64())).collect();
+        let st = measure(1, 5, || {
+            sort_merge_join_partition(big.clone(), small.clone()).len()
+        });
+        report.row(vec![
+            "sort-merge join 200k⋈10k".into(),
+            secs(st.p50),
+            format!("{:.2e} rows/s", 2.1e5 / st.p50),
+        ]);
+    }
+    report.finish();
+}

@@ -1,0 +1,10 @@
+//! Approximate counting — step 1 of the paper's algorithm (§5.2): "using
+//! the Spark mechanism that returns a partial result before a job
+//! finishes, we spend a bounded number of seconds obtaining an estimate
+//! of the small table's size."
+
+pub mod count;
+pub mod hll;
+
+pub use count::{approx_count, CountEstimate};
+pub use hll::HyperLogLog;

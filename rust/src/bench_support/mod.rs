@@ -1,0 +1,119 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with mean/p50/p95, markdown tables on stdout, and JSON rows
+//! appended under `target/bench_results/` for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::fmt::{duration, Table};
+use crate::util::Json;
+
+/// One measured statistic set, seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub iters: usize,
+}
+
+/// Measure `f` with `iters` timed runs after `warmup` runs.
+pub fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<f64> = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    Stats {
+        mean: samples.iter().sum::<f64>() / n as f64,
+        p50: samples[n / 2],
+        p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        min: samples[0],
+        iters: n,
+    }
+}
+
+/// A bench report: named rows of (label, value columns).
+pub struct Report {
+    name: String,
+    table: Table,
+    json_rows: Vec<Json>,
+    headers: Vec<String>,
+}
+
+impl Report {
+    pub fn new(name: &str, headers: &[&str]) -> Self {
+        println!("\n## bench: {name}\n");
+        Report {
+            name: name.to_string(),
+            table: Table::new(headers),
+            json_rows: vec![],
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        let obj: Vec<(String, Json)> = self
+            .headers
+            .iter()
+            .zip(&cells)
+            .map(|(h, c)| {
+                let v = c.parse::<f64>().map(Json::Num).unwrap_or_else(|_| Json::str(c.clone()));
+                (h.clone(), v)
+            })
+            .collect();
+        self.json_rows.push(Json::Obj(obj.into_iter().collect()));
+        self.table.row(cells);
+    }
+
+    /// Print the table and persist JSON under target/bench_results/.
+    pub fn finish(self) {
+        println!("{}", self.table.render());
+        let dir = std::path::Path::new("target/bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let payload = Json::obj([
+            ("bench", Json::str(self.name.clone())),
+            ("rows", Json::Arr(self.json_rows)),
+        ]);
+        let path = dir.join(format!("{}.json", self.name));
+        if std::fs::write(&path, payload.to_string()).is_ok() {
+            println!("(json: {})", path.display());
+        }
+    }
+}
+
+/// Format seconds for bench tables.
+pub fn secs(s: f64) -> String {
+    duration(std::time::Duration::from_secs_f64(s.max(0.0)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_sane_stats() {
+        let st = measure(1, 10, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(st.iters, 10);
+        assert!(st.min <= st.p50 && st.p50 <= st.p95);
+        assert!(st.mean > 0.0);
+    }
+
+    #[test]
+    fn secs_formats() {
+        assert!(secs(0.001).contains("ms"));
+    }
+}

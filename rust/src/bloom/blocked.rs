@@ -1,0 +1,114 @@
+//! Cache-line-blocked Bloom filter (Putze et al. style): all k bits of a
+//! key land in one 512-bit block, so a probe touches exactly one cache
+//! line.  Ablation A4 compares probe throughput and realised FPR against
+//! the standard filter — the trade is ~0.1–0.5 extra bits/key of FPR for
+//! locality, mirroring the paper's observation that probe cost is part of
+//! the ε-linear term.
+
+use super::hash::{mix32, HashPair};
+#[cfg(test)]
+use super::hash::K_MAX;
+use super::KeyFilter;
+
+const BLOCK_BITS: u64 = 512; // one cache line
+const BLOCK_WORDS: usize = (BLOCK_BITS / 32) as usize;
+
+#[derive(Clone, Debug)]
+pub struct BlockedBloomFilter {
+    blocks: Vec<[u32; BLOCK_WORDS]>,
+    k: u32,
+    block_mask: u32,
+}
+
+impl BlockedBloomFilter {
+    /// Same global bit budget as the standard filter for fair ablations.
+    pub fn with_optimal(n: u64, fpr: f64) -> Self {
+        let p = super::BloomParams::optimal(n, fpr);
+        let n_blocks = (p.m_bits / BLOCK_BITS).max(1).next_power_of_two();
+        BlockedBloomFilter {
+            blocks: vec![[0u32; BLOCK_WORDS]; n_blocks as usize],
+            k: p.k,
+            block_mask: (n_blocks - 1) as u32,
+        }
+    }
+
+    #[inline]
+    fn slots(&self, key: u64) -> (usize, HashPair) {
+        let hp = HashPair::of_key(key);
+        // block chosen by an independent mix so in-block bits stay unbiased
+        let block = (mix32(hp.h1 ^ 0x6A09_E667) & self.block_mask) as usize;
+        (block, hp)
+    }
+
+    #[inline]
+    pub fn insert(&mut self, key: u64) {
+        let (block, hp) = self.slots(key);
+        let b = &mut self.blocks[block];
+        for j in 0..self.k {
+            let p = hp.position(j, (BLOCK_BITS - 1) as u32);
+            b[(p >> 5) as usize] |= 1 << (p & 31);
+        }
+    }
+
+    #[inline]
+    pub fn contains_key(&self, key: u64) -> bool {
+        let (block, hp) = self.slots(key);
+        let b = &self.blocks[block];
+        for j in 0..self.k {
+            let p = hp.position(j, (BLOCK_BITS - 1) as u32);
+            if b[(p >> 5) as usize] & (1 << (p & 31)) == 0 {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl KeyFilter for BlockedBloomFilter {
+    fn contains(&self, key: u64) -> bool {
+        self.contains_key(key)
+    }
+
+    fn size_bits(&self) -> u64 {
+        self.blocks.len() as u64 * BLOCK_BITS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn never_false_negative() {
+        let mut f = BlockedBloomFilter::with_optimal(5_000, 0.02);
+        let mut rng = Rng::new(11);
+        let keys: Vec<u64> = (0..5_000).map(|_| rng.next_u64()).collect();
+        for &k in &keys {
+            f.insert(k);
+        }
+        assert!(keys.iter().all(|&k| f.contains_key(k)));
+    }
+
+    #[test]
+    fn fpr_degrades_gracefully_vs_standard() {
+        let n = 20_000u64;
+        let eps = 0.01;
+        let mut blocked = BlockedBloomFilter::with_optimal(n, eps);
+        let mut rng = Rng::new(12);
+        for _ in 0..n {
+            blocked.insert(rng.next_u64());
+        }
+        let trials = 50_000;
+        let fp = (0..trials).filter(|_| blocked.contains_key(rng.next_u64())).count();
+        let measured = fp as f64 / trials as f64;
+        // blocked filters pay a locality tax; stay within ~8x of target
+        assert!(measured < eps * 8.0, "blocked fpr {measured}");
+    }
+
+    #[test]
+    fn k_max_respected() {
+        let f = BlockedBloomFilter::with_optimal(10, 1e-9);
+        assert!(f.k as usize <= K_MAX);
+    }
+}

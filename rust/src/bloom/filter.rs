@@ -1,0 +1,339 @@
+//! The paper's Bloom filter: optimal sizing, distributed partial build,
+//! OR-merge, and a fast native probe (the XLA-kernel probe path lives in
+//! `runtime::probe`; both share `bloom::hash`).
+
+use super::hash::{HashPair, K_MAX};
+use super::KeyFilter;
+
+/// Sizing decision for an optimal filter (paper §5.2 step 2 / §7.1.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BloomParams {
+    /// Filter size in bits; always a power of two here (the `mod` is a
+    /// bit-mask both natively and on the TPU VPU — DESIGN.md §6).
+    pub m_bits: u64,
+    /// Number of hash functions, `1..=K_MAX`.
+    pub k: u32,
+    /// The ε the caller asked for.
+    pub requested_fpr: f64,
+    /// Expected n the sizing was computed for.
+    pub expected_items: u64,
+}
+
+impl BloomParams {
+    /// Paper §7.1.1: `m ≈ n · 1.44 · log2(1/ε)`, rounded **up** to a power
+    /// of two (ladder rung), `k = round(ln 2 · m/n)` clamped to `1..=K_MAX`.
+    pub fn optimal(n: u64, fpr: f64) -> BloomParams {
+        let n = n.max(1);
+        let fpr = fpr.clamp(1e-9, 0.999);
+        let bits = (n as f64) * 1.44 * (1.0 / fpr).log2();
+        let m_bits = (bits.max(64.0).ceil() as u64).next_power_of_two();
+        let k = ((m_bits as f64 / n as f64) * std::f64::consts::LN_2).round() as i64;
+        let k = k.clamp(1, K_MAX as i64) as u32;
+        BloomParams { m_bits, k, requested_fpr: fpr, expected_items: n }
+    }
+
+    /// Explicit filter size (e.g. snapped to an artifact ladder rung),
+    /// with the k that is optimal for that (m, n).
+    pub fn with_m(n: u64, fpr: f64, m_bits: u64) -> BloomParams {
+        assert!(m_bits.is_power_of_two() && m_bits >= 64);
+        let n = n.max(1);
+        let k = ((m_bits as f64 / n as f64) * std::f64::consts::LN_2).round() as i64;
+        BloomParams {
+            m_bits,
+            k: k.clamp(1, K_MAX as i64) as u32,
+            requested_fpr: fpr,
+            expected_items: n,
+        }
+    }
+
+    /// Theoretical FPR realised by (m, k) at load n:
+    /// `(1 − e^{−kn/m})^k`.
+    pub fn realized_fpr(&self, n: u64) -> f64 {
+        let kn_m = self.k as f64 * n as f64 / self.m_bits as f64;
+        (1.0 - (-kn_m).exp()).powi(self.k as i32)
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        self.m_bits / 8
+    }
+
+    pub fn n_words(&self) -> usize {
+        (self.m_bits / 32) as usize
+    }
+}
+
+/// Partitioned-buildable Bloom filter over u32 words (same layout as the
+/// kernel artifacts: bit `p` lives at word `p >> 5`, bit `p & 31`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BloomFilter {
+    params: BloomParams,
+    words: Vec<u32>,
+    mask: u32,
+}
+
+impl BloomFilter {
+    pub fn new(params: BloomParams) -> Self {
+        assert!(params.m_bits.is_power_of_two() && params.m_bits >= 64);
+        assert!((1..=K_MAX as u32).contains(&params.k));
+        BloomFilter {
+            words: vec![0; params.n_words()],
+            mask: (params.m_bits - 1) as u32,
+            params,
+        }
+    }
+
+    pub fn with_optimal(n: u64, fpr: f64) -> Self {
+        Self::new(BloomParams::optimal(n, fpr))
+    }
+
+    pub fn params(&self) -> BloomParams {
+        self.params
+    }
+
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Adopt externally-built words (e.g. from the XLA build artifact).
+    pub fn from_words(params: BloomParams, words: Vec<u32>) -> Self {
+        assert_eq!(words.len(), params.n_words());
+        BloomFilter { words, mask: (params.m_bits - 1) as u32, params }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, key: u64) {
+        let hp = HashPair::of_key(key);
+        for j in 0..self.params.k {
+            let p = hp.position(j, self.mask);
+            self.words[(p >> 5) as usize] |= 1 << (p & 31);
+        }
+    }
+
+    #[inline]
+    pub fn contains_key(&self, key: u64) -> bool {
+        let hp = HashPair::of_key(key);
+        for j in 0..self.params.k {
+            let p = hp.position(j, self.mask);
+            if self.words[(p >> 5) as usize] & (1 << (p & 31)) == 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// OR-merge a partial filter built with identical params (paper §5.1
+    /// change #1: per-partition partials merged on the way to the driver).
+    pub fn merge(&mut self, other: &BloomFilter) -> Result<(), MergeError> {
+        if self.params != other.params {
+            return Err(MergeError {
+                ours: self.params,
+                theirs: other.params,
+            });
+        }
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= *b;
+        }
+        Ok(())
+    }
+
+    /// Fraction of set bits (diagnostic: ~0.5 at design load for optimal k).
+    pub fn fill_ratio(&self) -> f64 {
+        let set: u64 = self.words.iter().map(|w| w.count_ones() as u64).sum();
+        set as f64 / self.params.m_bits as f64
+    }
+
+    /// Serialize as length-prefixed little-endian words (what the
+    /// simulated broadcast ships between nodes).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.words.len() * 4);
+        out.extend_from_slice(&self.params.m_bits.to_le_bytes());
+        out.extend_from_slice(&self.params.k.to_le_bytes());
+        out.extend_from_slice(&(self.params.expected_items).to_le_bytes());
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self, DecodeError> {
+        if b.len() < 20 {
+            return Err(DecodeError::Truncated);
+        }
+        let m_bits = u64::from_le_bytes(b[0..8].try_into().unwrap());
+        let k = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        let n = u64::from_le_bytes(b[12..20].try_into().unwrap());
+        if !m_bits.is_power_of_two() || !(1..=K_MAX as u64).contains(&(k as u64)) {
+            return Err(DecodeError::BadHeader);
+        }
+        let n_words = (m_bits / 32) as usize;
+        if b.len() != 20 + n_words * 4 {
+            return Err(DecodeError::Truncated);
+        }
+        let words = b[20..]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let params = BloomParams {
+            m_bits,
+            k,
+            requested_fpr: f64::NAN, // not shipped; callers use realized_fpr
+            expected_items: n,
+        };
+        Ok(BloomFilter { words, mask: (m_bits - 1) as u32, params })
+    }
+}
+
+impl KeyFilter for BloomFilter {
+    fn contains(&self, key: u64) -> bool {
+        self.contains_key(key)
+    }
+
+    fn size_bits(&self) -> u64 {
+        self.params.m_bits
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("cannot merge bloom filters with different params: {ours:?} vs {theirs:?}")]
+pub struct MergeError {
+    pub ours: BloomParams,
+    pub theirs: BloomParams,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum DecodeError {
+    #[error("bloom filter bytes truncated")]
+    Truncated,
+    #[error("bloom filter header invalid")]
+    BadHeader,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn sizing_formula_matches_paper() {
+        // n=1e6, eps=0.01 -> 1.44e6 * log2(100) = 9.57e6 bits -> 2^24
+        let p = BloomParams::optimal(1_000_000, 0.01);
+        assert_eq!(p.m_bits, 1 << 24);
+        // k = ln2 * m/n = 0.693 * 16.78 = 11.6 -> 12
+        assert_eq!(p.k, 12);
+    }
+
+    #[test]
+    fn sizing_monotone_in_eps() {
+        let mut last = u64::MAX;
+        for eps in [0.5, 0.1, 0.01, 0.001, 1e-4] {
+            let p = BloomParams::optimal(100_000, eps);
+            assert!(p.m_bits <= last || p.m_bits >= last, "pow2 rounding");
+            let raw = 100_000.0 * 1.44 * (1.0 / eps).log2();
+            assert!(p.m_bits as f64 >= raw, "rounding must only add bits");
+            last = p.m_bits;
+        }
+    }
+
+    #[test]
+    fn never_false_negative() {
+        let mut f = BloomFilter::with_optimal(10_000, 0.01);
+        let mut rng = Rng::new(1);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_u64()).collect();
+        for &k in &keys {
+            f.insert(k);
+        }
+        for &k in &keys {
+            assert!(f.contains_key(k));
+        }
+    }
+
+    #[test]
+    fn fpr_tracks_request() {
+        let n = 20_000u64;
+        for eps in [0.2, 0.05, 0.01] {
+            let mut f = BloomFilter::with_optimal(n, eps);
+            let mut rng = Rng::new(2);
+            for _ in 0..n {
+                f.insert(rng.next_u64());
+            }
+            let trials = 100_000;
+            let fp = (0..trials).filter(|_| f.contains_key(rng.next_u64())).count();
+            let measured = fp as f64 / trials as f64;
+            // pow-2 rounding only lowers FPR; allow sampling noise upward
+            assert!(
+                measured <= eps * 1.35 + 2e-3,
+                "eps={eps} measured={measured}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_bulk_build() {
+        let params = BloomParams::optimal(2_000, 0.03);
+        let mut bulk = BloomFilter::new(params);
+        let mut pa = BloomFilter::new(params);
+        let mut pb = BloomFilter::new(params);
+        let mut rng = Rng::new(3);
+        for i in 0..2_000u64 {
+            let key = rng.next_u64();
+            bulk.insert(key);
+            if i % 2 == 0 {
+                pa.insert(key);
+            } else {
+                pb.insert(key);
+            }
+        }
+        pa.merge(&pb).unwrap();
+        assert_eq!(pa.words(), bulk.words());
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_params() {
+        let mut a = BloomFilter::with_optimal(1000, 0.01);
+        let b = BloomFilter::with_optimal(1000, 0.2);
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn serde_roundtrip() {
+        let mut f = BloomFilter::with_optimal(500, 0.05);
+        for k in 0..500u64 {
+            f.insert(k * 7919);
+        }
+        let restored = BloomFilter::from_bytes(&f.to_bytes()).unwrap();
+        assert_eq!(restored.words(), f.words());
+        assert_eq!(restored.params().m_bits, f.params().m_bits);
+        assert_eq!(restored.params().k, f.params().k);
+        for k in 0..500u64 {
+            assert!(restored.contains_key(k * 7919));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(BloomFilter::from_bytes(&[1, 2, 3]).is_err());
+        let mut good = BloomFilter::with_optimal(100, 0.1).to_bytes();
+        good.truncate(good.len() - 1);
+        assert!(BloomFilter::from_bytes(&good).is_err());
+    }
+
+    #[test]
+    fn fill_ratio_near_half_at_design_load() {
+        let n = 50_000u64;
+        let mut f = BloomFilter::with_optimal(n, 0.01);
+        let mut rng = Rng::new(4);
+        for _ in 0..n {
+            f.insert(rng.next_u64());
+        }
+        let r = f.fill_ratio();
+        // pow-2 rounding over-allocates, so fill <= 0.5; must be substantial
+        assert!(r > 0.15 && r <= 0.55, "fill {r}");
+    }
+
+    #[test]
+    fn realized_fpr_matches_theory_shape() {
+        let p = BloomParams::optimal(10_000, 0.01);
+        assert!(p.realized_fpr(10_000) <= 0.011);
+        assert!(p.realized_fpr(100_000) > p.realized_fpr(10_000));
+    }
+}

@@ -1,0 +1,145 @@
+//! Hash algebra shared with the JAX/Pallas kernels.
+//!
+//! Single source of truth is `python/compile/kernels/hashing.py`; this file
+//! re-implements it for the native probe path and is pinned against the
+//! same golden vectors (`python/tests/test_golden.py`).  If either side
+//! drifts, both test suites fail.
+//!
+//! Scheme: 64-bit join keys are folded to u32 with splitmix64 (high word),
+//! then double hashing `pos_j = (h1 + j*h2) mod m` with murmur3 `fmix32`
+//! under two salts, `h2` forced odd, `m` a power of two.
+
+/// Salt for the first hash stream (golden ratio).
+pub const C1: u32 = 0x9E37_79B9;
+/// Salt for the second hash stream (murmur constant).
+pub const C2: u32 = 0x85EB_CA77;
+/// Max hash functions any probe path supports (kernel lane count).
+pub const K_MAX: usize = 16;
+
+/// murmur3 fmix32 finalizer — full-avalanche 32-bit permutation.
+#[inline(always)]
+pub fn mix32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x85EB_CA6B);
+    x ^= x >> 13;
+    x = x.wrapping_mul(0xC2B2_AE35);
+    x ^= x >> 16;
+    x
+}
+
+/// Fold a 64-bit key to the u32 the kernels consume: splitmix64 high word.
+#[inline(always)]
+pub fn fold64(key: u64) -> u32 {
+    let mut z = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    ((z ^ (z >> 31)) >> 32) as u32
+}
+
+/// The double-hash pair for a folded key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HashPair {
+    pub h1: u32,
+    /// Always odd, so the probe stride is a unit of Z/2^t Z.
+    pub h2: u32,
+}
+
+impl HashPair {
+    #[inline(always)]
+    pub fn of_folded(kf: u32) -> Self {
+        HashPair { h1: mix32(kf ^ C1), h2: mix32(kf ^ C2) | 1 }
+    }
+
+    #[inline(always)]
+    pub fn of_key(key: u64) -> Self {
+        Self::of_folded(fold64(key))
+    }
+
+    /// j-th probe position in a filter of `m_bits` (power of two).
+    #[inline(always)]
+    pub fn position(&self, j: u32, m_mask: u32) -> u32 {
+        self.h1.wrapping_add(j.wrapping_mul(self.h2)) & m_mask
+    }
+}
+
+/// All `k` probe positions for a folded key (test/reference helper).
+pub fn probe_positions(kf: u32, m_bits: u64, k: usize) -> Vec<u32> {
+    debug_assert!(m_bits.is_power_of_two());
+    let mask = (m_bits - 1) as u32;
+    let hp = HashPair::of_folded(kf);
+    (0..k as u32).map(|j| hp.position(j, mask)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mirrors python/tests/test_golden.py::GOLDEN_POSITIONS exactly.
+    #[test]
+    fn golden_positions_match_python() {
+        assert_eq!(probe_positions(0, 1 << 17, 4), vec![12046, 81955, 20792, 90701]);
+        assert_eq!(probe_positions(1, 1 << 17, 4), vec![46339, 24664, 2989, 112386]);
+        assert_eq!(
+            probe_positions(42, 1 << 19, 6),
+            vec![126672, 304003, 481334, 134377, 311708, 489039]
+        );
+        assert_eq!(
+            probe_positions(0xDEAD_BEEF, 1 << 21, 8),
+            vec![965299, 1919236, 776021, 1729958, 586743, 1540680, 397465, 1351402]
+        );
+        assert_eq!(
+            probe_positions(0xFFFF_FFFF, 1 << 25, 3),
+            vec![23507626, 1190431, 12427668]
+        );
+    }
+
+    /// Mirrors python/tests/test_golden.py::GOLDEN_FOLD64 exactly.
+    #[test]
+    fn golden_fold64_match_python() {
+        assert_eq!(fold64(0), 0xE220_A839);
+        assert_eq!(fold64(1), 0x910A_2DEC);
+        assert_eq!(fold64(6_000_000), 0x810B_E29C);
+        assert_eq!(fold64(u64::MAX), 0xE4D9_7177);
+    }
+
+    #[test]
+    fn h2_is_always_odd() {
+        for k in [0u32, 1, 2, 3, 0xFFFF_FFFF, 0x1234_5678] {
+            assert_eq!(HashPair::of_folded(k).h2 & 1, 1);
+        }
+    }
+
+    #[test]
+    fn positions_within_mask() {
+        for key in 0..1000u64 {
+            let hp = HashPair::of_key(key);
+            for j in 0..K_MAX as u32 {
+                assert!(hp.position(j, (1 << 17) - 1) < (1 << 17));
+            }
+        }
+    }
+
+    #[test]
+    fn mix32_avalanche_smoke() {
+        // flipping one input bit flips ~half the output bits on average
+        let mut total = 0u32;
+        let trials = 1000;
+        for i in 0..trials {
+            let a = mix32(i);
+            let b = mix32(i ^ 1);
+            total += (a ^ b).count_ones();
+        }
+        let avg = total as f64 / trials as f64;
+        assert!((avg - 16.0).abs() < 2.0, "avalanche avg {avg}");
+    }
+
+    #[test]
+    fn distinct_keys_rarely_share_pair() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for key in 0..10_000u64 {
+            let hp = HashPair::of_key(key);
+            assert!(seen.insert((hp.h1, hp.h2)), "pair collision at {key}");
+        }
+    }
+}

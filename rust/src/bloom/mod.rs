@@ -1,0 +1,27 @@
+//! Bloom filters: the paper's core data structure.
+//!
+//! * [`hash`] — the hash algebra shared bit-for-bit with the Pallas kernel
+//!   (`python/compile/kernels/hashing.py`), pinned by golden vectors.
+//! * [`filter`] — the standard partitioned-build/OR-merge filter with the
+//!   paper's optimal sizing `m ≈ n·1.44·log2(1/ε)` (§7.1.1).
+//! * [`blocked`] — cache-line-blocked variant (one line per key), an
+//!   ablation for probe locality.
+//! * [`pagh`] — a compact single-hash-function filter after Pagh, Pagh &
+//!   Rao 2005, the "possible optimisation we did not explore" the paper
+//!   cites (space factor ~1 instead of 1.44).
+
+pub mod blocked;
+pub mod filter;
+pub mod hash;
+pub mod pagh;
+
+pub use filter::{BloomFilter, BloomParams};
+pub use hash::{fold64, probe_positions, HashPair};
+
+/// Common probe interface so joins and benches can swap filter kinds.
+pub trait KeyFilter {
+    /// May return false positives, never false negatives.
+    fn contains(&self, key: u64) -> bool;
+    /// Size of the structure in bits (for the cost model / metrics).
+    fn size_bits(&self) -> u64;
+}

@@ -1,0 +1,142 @@
+//! Per-node block manager: the cache where the small table's partitions
+//! sit between the filter-build stage and the join stage (the paper's
+//! §7.1.2 notes the last stage "reads the small table's partitions from
+//! the BlockManager, where they have been since the filter was formed").
+//!
+//! LRU with a byte budget per node (the executor-memory knob, §6.2);
+//! evicted blocks must be re-read from DFS, which the join coordinator
+//! prices as disk cost.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct CachedBlock {
+    pub bytes: u64,
+    /// monotone counter for LRU
+    last_used: u64,
+}
+
+pub struct BlockManager {
+    pub node: usize,
+    capacity: u64,
+    used: u64,
+    tick: u64,
+    blocks: HashMap<String, CachedBlock>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl BlockManager {
+    pub fn new(node: usize, capacity: u64) -> Self {
+        BlockManager {
+            node,
+            capacity,
+            used: 0,
+            tick: 0,
+            blocks: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Cache a block, evicting LRU entries as needed.  Blocks larger than
+    /// the whole budget are refused (Spark would spill them).
+    pub fn put(&mut self, id: impl Into<String>, bytes: u64) -> bool {
+        if bytes > self.capacity {
+            return false;
+        }
+        let id = id.into();
+        if let Some(b) = self.blocks.get_mut(&id) {
+            self.tick += 1;
+            b.last_used = self.tick;
+            return true;
+        }
+        while self.used + bytes > self.capacity {
+            let victim = self
+                .blocks
+                .iter()
+                .min_by_key(|(_, b)| b.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("used>0 implies nonempty");
+            let freed = self.blocks.remove(&victim).unwrap().bytes;
+            self.used -= freed;
+            self.evictions += 1;
+        }
+        self.tick += 1;
+        self.blocks.insert(id, CachedBlock { bytes, last_used: self.tick });
+        self.used += bytes;
+        true
+    }
+
+    /// Touch a block; true = cache hit.
+    pub fn get(&mut self, id: &str) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.blocks.get_mut(id) {
+            Some(b) => {
+                b.last_used = tick;
+                self.hits += 1;
+                true
+            }
+            None => {
+                self.misses += 1;
+                false
+            }
+        }
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.blocks.contains_key(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_and_hits() {
+        let mut bm = BlockManager::new(0, 100);
+        assert!(bm.put("a", 40));
+        assert!(bm.put("b", 40));
+        assert!(bm.get("a"));
+        assert!(!bm.get("zzz"));
+        assert_eq!(bm.hits, 1);
+        assert_eq!(bm.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut bm = BlockManager::new(0, 100);
+        bm.put("a", 40);
+        bm.put("b", 40);
+        bm.get("a"); // b is now LRU
+        bm.put("c", 40); // evicts b
+        assert!(bm.contains("a"));
+        assert!(!bm.contains("b"));
+        assert!(bm.contains("c"));
+        assert_eq!(bm.evictions, 1);
+        assert!(bm.used_bytes() <= 100);
+    }
+
+    #[test]
+    fn oversized_block_refused() {
+        let mut bm = BlockManager::new(0, 10);
+        assert!(!bm.put("huge", 11));
+        assert_eq!(bm.used_bytes(), 0);
+    }
+
+    #[test]
+    fn reput_updates_recency_not_size() {
+        let mut bm = BlockManager::new(0, 100);
+        bm.put("a", 60);
+        bm.put("a", 60);
+        assert_eq!(bm.used_bytes(), 60);
+    }
+}

@@ -1,0 +1,83 @@
+//! Broadcast cost models.
+//!
+//! The paper (§5.2 step 3) uses Spark's torrent broadcast: the driver
+//! seeds blocks, executors re-serve fetched blocks peer-to-peer, so the
+//! distribution completes in ~log2(E) rounds instead of E serial sends.
+//! `driver_collect_cost` prices the opposite direction (all executors →
+//! driver), which is both the §5.1-#1 baseline (driver-side filter build
+//! needs all keys at the driver) and the merge leg of the distributed
+//! build (partials → driver, tree-aggregated).
+
+use super::config::ClusterConfig;
+use super::time::SimDuration;
+
+/// Torrent-style p2p broadcast of `bytes` from the driver to every
+/// executor: ceil(log2(E+1)) doubling rounds, each shipping `bytes` over
+/// one link per participant.
+pub fn p2p_broadcast_cost(cfg: &ClusterConfig, bytes: u64) -> SimDuration {
+    let e = cfg.total_executors().max(1) as f64;
+    let rounds = (e + 1.0).log2().ceil().max(1.0);
+    SimDuration::from_secs(rounds * cfg.transfer_seconds(bytes))
+}
+
+/// Naive one-by-one broadcast (driver sends to each executor serially) —
+/// what SBFCJ would pay without the torrent mechanism; used in ablations.
+pub fn serial_broadcast_cost(cfg: &ClusterConfig, bytes: u64) -> SimDuration {
+    let e = cfg.total_executors().max(1) as f64;
+    SimDuration::from_secs(e * cfg.transfer_seconds(bytes))
+}
+
+/// Tree-aggregate collect of per-executor payloads of `bytes` each into
+/// the driver: log2 rounds, paying one transfer per round plus the driver's
+/// final fan-in.  (Spark 2's `treeAggregate`, used by `stat.bloomFilter`.)
+pub fn driver_collect_cost(cfg: &ClusterConfig, bytes: u64) -> SimDuration {
+    let e = cfg.total_executors().max(1) as f64;
+    let rounds = (e + 1.0).log2().ceil().max(1.0);
+    SimDuration::from_secs(rounds * cfg.transfer_seconds(bytes))
+}
+
+/// Flat collect: every executor ships `bytes` straight to the driver,
+/// which ingests them serially through its single link — the Spark-1-era
+/// behaviour of `collect()` the paper's §5.1 change #1 avoids.
+pub fn flat_collect_cost(cfg: &ClusterConfig, bytes_per_executor: u64) -> SimDuration {
+    let e = cfg.total_executors().max(1) as f64;
+    SimDuration::from_secs(e * cfg.transfer_seconds(bytes_per_executor))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_beats_serial_on_real_clusters() {
+        let cfg = ClusterConfig::default(); // 16 executors
+        let b = 64 << 20;
+        assert!(p2p_broadcast_cost(&cfg, b).seconds() < serial_broadcast_cost(&cfg, b).seconds());
+    }
+
+    #[test]
+    fn p2p_rounds_are_logarithmic() {
+        let small = ClusterConfig { n_nodes: 2, ..ClusterConfig::default() }; // 4 exec
+        let big = ClusterConfig { n_nodes: 64, ..ClusterConfig::default() }; // 128 exec
+        let b = 8 << 20;
+        let ratio =
+            p2p_broadcast_cost(&big, b).seconds() / p2p_broadcast_cost(&small, b).seconds();
+        // log2(129)/log2(5) ≈ 3.0, definitely not 32x
+        assert!(ratio < 4.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn tree_collect_beats_flat_collect() {
+        let cfg = ClusterConfig::default();
+        let b = 16 << 20;
+        assert!(driver_collect_cost(&cfg, b).seconds() < flat_collect_cost(&cfg, b).seconds());
+    }
+
+    #[test]
+    fn costs_scale_with_bytes() {
+        let cfg = ClusterConfig::default();
+        for f in [p2p_broadcast_cost, serial_broadcast_cost, driver_collect_cost] {
+            assert!(f(&cfg, 1 << 30).seconds() > f(&cfg, 1 << 10).seconds());
+        }
+    }
+}

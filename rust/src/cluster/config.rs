@@ -1,0 +1,161 @@
+//! Cluster topology and cost constants.
+//!
+//! The paper's experiments varied executors, per-executor parallelism and
+//! memory (§6.2) on Grid'5000 machines; these are the corresponding knobs
+//! plus the I/O constants the simulation prices transfers with.  All
+//! constants are per-link sustained rates of mid-2010s cluster hardware
+//! (10 GbE, SATA-era disks), which is what Grid'5000 offered the paper.
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Physical nodes.
+    pub n_nodes: usize,
+    /// Executors per node (YARN containers).
+    pub executors_per_node: usize,
+    /// Task slots per executor ("parallelism of each executor", §6.2).
+    pub cores_per_executor: usize,
+    /// Live memory per executor, bytes (§6.2 knob; bounds shuffle buffers
+    /// and block-manager caches).
+    pub executor_mem_bytes: u64,
+    /// Per-link network bandwidth, bytes/s (10 GbE ≈ 1.1 GiB/s effective).
+    pub net_bandwidth: f64,
+    /// Per-message network latency, seconds.
+    pub net_latency: f64,
+    /// Sequential disk bandwidth, bytes/s.
+    pub disk_bandwidth: f64,
+    /// Per-task launch overhead, seconds — the paper's "time Spark spends
+    /// between tasks", which dominated its small-SF runs (§6.3.1).
+    pub task_overhead: f64,
+    /// Per-stage scheduling barrier overhead, seconds.
+    pub stage_overhead: f64,
+    /// Reduce-side partition count after a join (Spark default the paper
+    /// kept: 200, §6.2).
+    pub shuffle_partitions: usize,
+    /// CPU-time scale: simulated-cluster-core seconds per measured local
+    /// second.  1.0 = this machine's core ≡ a cluster core.
+    pub cpu_scale: f64,
+    /// Modeled per-record scan cost, seconds (JVM read+deserialise+probe;
+    /// Spark 2 codegen ≈ 1 µs/record).  Native Rust is ~50× faster, so
+    /// simulated stage times use this constant rather than the measured
+    /// wall time — keeping the simulation faithful to the paper's
+    /// platform and independent of which probe engine ran.
+    pub scan_record_cost: f64,
+    /// Modeled per-comparison sort cost, seconds (JVM TimSort on
+    /// serialized rows — the paper's §7.1.2 L2/TimSort term).
+    pub sort_compare_cost: f64,
+    /// Modeled per-record merge/emit cost in the join, seconds.
+    pub merge_record_cost: f64,
+    /// Modeled per-hash-application insert cost during filter build,
+    /// seconds (k applications per record).
+    pub hash_insert_cost: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_nodes: 8,
+            executors_per_node: 2,
+            cores_per_executor: 4,
+            executor_mem_bytes: 4 << 30,
+            net_bandwidth: 1.1e9,
+            net_latency: 120e-6,
+            disk_bandwidth: 180e6,
+            task_overhead: 0.045,
+            stage_overhead: 0.35,
+            shuffle_partitions: 200,
+            cpu_scale: 1.0,
+            scan_record_cost: 1.0e-6,
+            sort_compare_cost: 0.25e-6,
+            merge_record_cost: 0.3e-6,
+            hash_insert_cost: 0.08e-6,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// A Grid'5000-like site: 16 beefy nodes (the paper calls its cluster
+    /// "powerful" relative to its ≤SF-150 data).
+    pub fn grid5000_like() -> Self {
+        ClusterConfig {
+            n_nodes: 16,
+            executors_per_node: 2,
+            cores_per_executor: 8,
+            executor_mem_bytes: 16 << 30,
+            ..Default::default()
+        }
+    }
+
+    /// A small commodity cluster (where SBFCJ's savings matter most).
+    pub fn small_cluster() -> Self {
+        ClusterConfig {
+            n_nodes: 4,
+            executors_per_node: 1,
+            cores_per_executor: 2,
+            executor_mem_bytes: 2 << 30,
+            net_bandwidth: 120e6, // 1 GbE
+            net_latency: 300e-6,
+            ..Default::default()
+        }
+    }
+
+    /// Single-node pseudo-distributed mode (CI-sized).
+    pub fn local() -> Self {
+        ClusterConfig {
+            n_nodes: 1,
+            executors_per_node: 1,
+            cores_per_executor: 4,
+            shuffle_partitions: 16,
+            ..Default::default()
+        }
+    }
+
+    pub fn total_executors(&self) -> usize {
+        self.n_nodes * self.executors_per_node
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.total_executors() * self.cores_per_executor
+    }
+
+    /// Node hosting executor `e`.
+    pub fn node_of_executor(&self, e: usize) -> usize {
+        e / self.executors_per_node
+    }
+
+    /// Network transfer cost of one message of `bytes` over one link.
+    pub fn transfer_seconds(&self, bytes: u64) -> f64 {
+        self.net_latency + bytes as f64 / self.net_bandwidth
+    }
+
+    /// Sequential disk cost of `bytes`.
+    pub fn disk_seconds(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.disk_bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_math() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.total_executors(), 16);
+        assert_eq!(c.total_slots(), 64);
+        assert_eq!(c.node_of_executor(0), 0);
+        assert_eq!(c.node_of_executor(3), 1);
+    }
+
+    #[test]
+    fn transfer_cost_monotone() {
+        let c = ClusterConfig::default();
+        assert!(c.transfer_seconds(0) > 0.0); // latency floor
+        assert!(c.transfer_seconds(1 << 30) > c.transfer_seconds(1 << 20));
+    }
+
+    #[test]
+    fn presets_are_distinct() {
+        assert!(ClusterConfig::grid5000_like().total_slots() > ClusterConfig::local().total_slots());
+        assert!(ClusterConfig::small_cluster().net_bandwidth < ClusterConfig::default().net_bandwidth);
+    }
+}

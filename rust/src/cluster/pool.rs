@@ -1,0 +1,114 @@
+//! Worker thread pool: real threads standing in for executor JVMs.
+//!
+//! (tokio is unavailable offline — see Cargo.toml; a dedicated pool with
+//! channel-fed workers covers the engine's needs: run N task closures,
+//! collect results in task order, measure per-task wall time.)
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    workers: Vec<JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("bloomjoin-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { workers, tx: Some(tx) }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run every task, returning `(result, wall_seconds)` per task in
+    /// input order.  Panics in tasks propagate as poisoned results.
+    pub fn run_tasks<T, F>(&self, tasks: Vec<F>) -> Vec<(T, f64)>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, T, f64)>();
+        for (i, task) in tasks.into_iter().enumerate() {
+            let done = done_tx.clone();
+            let job: Job = Box::new(move || {
+                let t0 = Instant::now();
+                let out = task();
+                let dt = t0.elapsed().as_secs_f64();
+                let _ = done.send((i, out, dt));
+            });
+            self.tx.as_ref().expect("pool alive").send(job).expect("worker alive");
+        }
+        drop(done_tx);
+        let mut slots: Vec<Option<(T, f64)>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, out, dt) = done_rx.recv().expect("task panicked");
+            slots[i] = Some((out, dt));
+        }
+        slots.into_iter().map(|s| s.expect("all tasks reported")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_tasks_in_order() {
+        let pool = ThreadPool::new(4);
+        let results = pool.run_tasks((0..32).map(|i| move || i * 2).collect::<Vec<_>>());
+        let values: Vec<i32> = results.iter().map(|(v, _)| *v).collect();
+        assert_eq!(values, (0..32).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(results.iter().all(|(_, dt)| *dt >= 0.0));
+    }
+
+    #[test]
+    fn empty_task_list() {
+        let pool = ThreadPool::new(2);
+        let results: Vec<((), f64)> = pool.run_tasks(Vec::<fn()>::new());
+        assert!(results.is_empty());
+    }
+
+    #[test]
+    fn pool_reusable_across_batches() {
+        let pool = ThreadPool::new(2);
+        for round in 0..3 {
+            let tasks: Vec<Box<dyn FnOnce() -> i32 + Send>> =
+                vec![Box::new(move || round), Box::new(move || round + 10)];
+            let r = pool.run_tasks(tasks);
+            assert_eq!(r[0].0, round);
+            assert_eq!(r[1].0, round + 10);
+        }
+    }
+}

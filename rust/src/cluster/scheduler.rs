@@ -1,0 +1,218 @@
+//! Stage scheduler: FIFO slot assignment with locality preference — the
+//! YARN-shaped piece of the simulation (the paper notes the resource
+//! manager's placement affects total time, §6.3.1).
+//!
+//! A stage is a set of independent tasks.  Execution happens on the real
+//! thread pool (measuring per-task CPU); *simulated* stage time is then
+//! computed by laying each task's `Cost` onto the configured executor
+//! slots: tasks are assigned FIFO to the earliest-free slot, preferring
+//! slots on the task's preferred node (delay scheduling, one-deep), and
+//! each task pays the configured launch overhead.  Stage time = latest
+//! slot finish + stage barrier overhead.
+
+use super::config::ClusterConfig;
+use super::pool::ThreadPool;
+use super::time::{Cost, SimDuration};
+
+/// One task: real work + a simulated-cost descriptor.
+pub struct Task<T> {
+    /// The actual computation (runs on the worker pool; its wall time
+    /// becomes `cost.cpu_s` unless the closure supplied one already).
+    pub work: Box<dyn FnOnce() -> (T, Cost) + Send + 'static>,
+    /// Preferred node (DFS locality hint), if any.
+    pub preferred_node: Option<usize>,
+}
+
+impl<T> Task<T> {
+    pub fn new(work: impl FnOnce() -> (T, Cost) + Send + 'static) -> Self {
+        Task { work: Box::new(work), preferred_node: None }
+    }
+
+    pub fn with_locality(mut self, node: usize) -> Self {
+        self.preferred_node = Some(node);
+        self
+    }
+}
+
+pub struct Stage<T> {
+    pub name: String,
+    pub tasks: Vec<Task<T>>,
+}
+
+impl<T> Stage<T> {
+    pub fn new(name: impl Into<String>, tasks: Vec<Task<T>>) -> Self {
+        Stage { name: name.into(), tasks }
+    }
+}
+
+/// Outcome of a stage run.
+pub struct StageResult<T> {
+    pub name: String,
+    /// Task outputs, in task order.
+    pub outputs: Vec<T>,
+    /// Simulated cluster time for the stage (the paper's y-axis).
+    pub sim_time: SimDuration,
+    /// Real wall time spent executing the closures locally.
+    pub wall_time: SimDuration,
+    /// Aggregate cost across tasks.
+    pub total_cost: Cost,
+    pub n_tasks: usize,
+    /// Fraction of tasks that ran on their preferred node.
+    pub locality_hit_rate: f64,
+}
+
+pub(super) fn run_stage<T: Send + 'static>(
+    cfg: &ClusterConfig,
+    pool: &ThreadPool,
+    stage: Stage<T>,
+) -> StageResult<T> {
+    let name = stage.name;
+    let n_tasks = stage.tasks.len();
+    let preferred: Vec<Option<usize>> = stage.tasks.iter().map(|t| t.preferred_node).collect();
+
+    let t0 = std::time::Instant::now();
+    let ran = pool.run_tasks(stage.tasks.into_iter().map(|t| t.work).collect::<Vec<_>>());
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut outputs = Vec::with_capacity(n_tasks);
+    let mut costs = Vec::with_capacity(n_tasks);
+    let mut total_cost = Cost::default();
+    for ((out, cost), measured) in ran.into_iter().map(|((o, c), dt)| ((o, c), dt)) {
+        let mut cost = cost;
+        if cost.cpu_s == 0.0 {
+            cost.cpu_s = measured;
+        }
+        total_cost.merge(&cost);
+        outputs.push(out);
+        costs.push(cost);
+    }
+
+    let (sim, locality_hits) = simulate_placement(cfg, &costs, &preferred);
+
+    StageResult {
+        name,
+        outputs,
+        sim_time: sim,
+        wall_time: SimDuration::from_secs(wall),
+        total_cost,
+        n_tasks,
+        locality_hit_rate: if n_tasks == 0 { 1.0 } else { locality_hits as f64 / n_tasks as f64 },
+    }
+}
+
+/// FIFO + locality-preferred placement onto simulated slots; returns
+/// (stage sim time, number of locality hits).
+fn simulate_placement(
+    cfg: &ClusterConfig,
+    costs: &[Cost],
+    preferred: &[Option<usize>],
+) -> (SimDuration, usize) {
+    let n_slots = cfg.total_slots().max(1);
+    // slot -> (free_at, node)
+    let mut slots: Vec<(f64, usize)> = (0..n_slots)
+        .map(|s| {
+            let exec = s / cfg.cores_per_executor.max(1);
+            (0.0, cfg.node_of_executor(exec))
+        })
+        .collect();
+    let mut hits = 0usize;
+
+    for (cost, pref) in costs.iter().zip(preferred) {
+        let dur = cfg.task_overhead + cost.total_seconds(cfg.cpu_scale);
+        // earliest-free slot overall, and earliest-free on preferred node
+        let mut best_any = 0usize;
+        let mut best_local: Option<usize> = None;
+        for (i, (free, node)) in slots.iter().enumerate() {
+            if *free < slots[best_any].0 {
+                best_any = i;
+            }
+            if Some(*node) == *pref {
+                match best_local {
+                    Some(b) if slots[b].0 <= *free => {}
+                    _ => best_local = Some(i),
+                }
+            }
+        }
+        // delay scheduling, one-deep: take the local slot if it's free no
+        // later than `task_overhead` after the global best.
+        let chosen = match best_local {
+            Some(l) if slots[l].0 <= slots[best_any].0 + cfg.task_overhead => {
+                hits += 1;
+                l
+            }
+            _ => {
+                if pref.is_none() {
+                    hits += 1; // no preference = trivially local
+                }
+                best_any
+            }
+        };
+        slots[chosen].0 += dur;
+    }
+
+    let makespan = slots.iter().map(|(f, _)| *f).fold(0.0, f64::max);
+    (SimDuration::from_secs(makespan + cfg.stage_overhead), hits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig { task_overhead: 0.01, stage_overhead: 0.1, ..ClusterConfig::default() }
+    }
+
+    #[test]
+    fn placement_parallelises_across_slots() {
+        let c = cfg(); // 64 slots
+        let costs = vec![Cost::cpu(1.0); 64];
+        let (t, _) = simulate_placement(&c, &costs, &vec![None; 64]);
+        // all fit in one wave: ~1s + overheads, not 64s
+        assert!(t.seconds() < 1.5, "{}", t.seconds());
+
+        let costs = vec![Cost::cpu(1.0); 128];
+        let (t2, _) = simulate_placement(&c, &costs, &vec![None; 128]);
+        assert!(t2.seconds() > 1.9 && t2.seconds() < 2.5, "{}", t2.seconds());
+    }
+
+    #[test]
+    fn task_overhead_dominates_tiny_tasks() {
+        // the paper's §6.3.1 observation: sub-second tasks are overhead-bound
+        let c = ClusterConfig { task_overhead: 0.045, ..ClusterConfig::local() };
+        let costs = vec![Cost::cpu(0.001); 200];
+        let (t, _) = simulate_placement(&c, &costs, &vec![None; 200]);
+        // 200 tasks on 4 slots: 50 waves * ~0.046s
+        assert!(t.seconds() > 2.0, "{}", t.seconds());
+    }
+
+    #[test]
+    fn locality_preference_counted() {
+        let c = cfg();
+        let costs = vec![Cost::cpu(0.1); 8];
+        let prefs: Vec<Option<usize>> = (0..8).map(|i| Some(i % c.n_nodes)).collect();
+        let (_, hits) = simulate_placement(&c, &costs, &prefs);
+        assert_eq!(hits, 8); // empty cluster: every preference satisfiable
+    }
+
+    #[test]
+    fn stage_runs_real_work() {
+        let cluster = super::super::Cluster::new(ClusterConfig::local());
+        let stage = Stage::new(
+            "square",
+            (0..10)
+                .map(|i| Task::new(move || (i * i, Cost::default())))
+                .collect(),
+        );
+        let r = cluster.run_stage(stage);
+        assert_eq!(r.outputs, (0..10).map(|i| i * i).collect::<Vec<_>>());
+        assert!(r.sim_time.seconds() > 0.0);
+        assert_eq!(r.n_tasks, 10);
+    }
+
+    #[test]
+    fn empty_stage_costs_only_barrier() {
+        let cluster = super::super::Cluster::new(cfg());
+        let r = cluster.run_stage(Stage::<()>::new("empty", vec![]));
+        assert!((r.sim_time.seconds() - 0.1).abs() < 1e-9);
+    }
+}

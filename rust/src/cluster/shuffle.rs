@@ -1,0 +1,144 @@
+//! Hash shuffle: repartition records by key across `shuffle_partitions`
+//! targets (Spark keeps 200 by default after a join — the paper left this
+//! untouched, §6.2) and price the all-to-all exchange.
+//!
+//! The data movement itself is real (records are re-bucketed in memory);
+//! the *cost* of the exchange (serialisation to shuffle files, network,
+//! deserialisation) is simulated from byte counts, with a Spark-2 twist:
+//! the Dataset/Tungsten path ships compact binary rows and can sort
+//! without deserialising, so its per-byte constants are lower than the
+//! RDD path's (the §4.2/§5.1 claim; the `abl_codegen` bench measures it).
+
+use super::config::ClusterConfig;
+use super::time::Cost;
+use crate::bloom::hash::mix32;
+
+/// How records are serialised during the exchange.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShuffleCodec {
+    /// Spark 2 Dataset / whole-stage codegen: binary rows, no
+    /// deserialisation on the sort path.
+    Tungsten,
+    /// Spark 1 RDD: Java serialisation both ways (ablation baseline).
+    JavaSer,
+}
+
+impl ShuffleCodec {
+    /// (write amplification, cpu seconds per MB serialised)
+    fn constants(self) -> (f64, f64) {
+        match self {
+            // tungsten rows ~= wire size; ~0.4 GB/s encode
+            ShuffleCodec::Tungsten => (1.0, 0.0025),
+            // java serialisation inflates ~1.6x and costs ~4x the cpu
+            ShuffleCodec::JavaSer => (1.6, 0.010),
+        }
+    }
+}
+
+/// Target partition of a key (hash partitioning on the join key).
+#[inline]
+pub fn partition_of(key: u64, n_partitions: usize) -> usize {
+    (mix32(crate::bloom::hash::fold64(key)) as usize) % n_partitions.max(1)
+}
+
+/// Repartition `(key, row)` records into `n_partitions` buckets.
+/// Returns buckets + the per-source-partition byte counts for costing.
+pub fn repartition<T>(
+    parts: Vec<Vec<(u64, T)>>,
+    n_partitions: usize,
+    bytes_of: impl Fn(&T) -> u64,
+) -> (Vec<Vec<(u64, T)>>, ShuffleVolume) {
+    let mut buckets: Vec<Vec<(u64, T)>> = (0..n_partitions).map(|_| Vec::new()).collect();
+    let mut volume = ShuffleVolume::default();
+    for part in parts {
+        for (key, row) in part {
+            volume.records += 1;
+            volume.bytes += 8 + bytes_of(&row);
+            buckets[partition_of(key, n_partitions)].push((key, row));
+        }
+    }
+    volume.partitions_out = n_partitions;
+    (buckets, volume)
+}
+
+/// Byte/record volume of one shuffle exchange.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShuffleVolume {
+    pub records: u64,
+    pub bytes: u64,
+    pub partitions_out: usize,
+}
+
+impl ShuffleVolume {
+    /// Simulated cost of the exchange as seen by the whole stage, spread
+    /// over the cluster: every byte is written to shuffle files, shipped
+    /// once, and read back; each node moves ~1/N of the traffic through
+    /// its own link, so the *stage-level* added time divides by N.
+    pub fn exchange_cost(&self, cfg: &ClusterConfig, codec: ShuffleCodec) -> Cost {
+        let (amp, cpu_per_mb) = codec.constants();
+        let wire = (self.bytes as f64 * amp) as u64;
+        let nodes = cfg.n_nodes.max(1) as f64;
+        let per_node_bytes = wire as f64 / nodes;
+        let net_s = per_node_bytes / cfg.net_bandwidth
+            + cfg.net_latency * (self.partitions_out as f64 / nodes).max(1.0);
+        let disk_s = 2.0 * per_node_bytes / cfg.disk_bandwidth; // write + read back
+        let cpu_s = 2.0 * (wire as f64 / 1e6) * cpu_per_mb / nodes; // ser + deser
+        Cost { cpu_s, net_s, disk_s, net_bytes: wire, disk_bytes: 2 * wire }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repartition_is_a_partition_of_input() {
+        let parts: Vec<Vec<(u64, u32)>> =
+            (0..4).map(|p| (0..100u64).map(|i| (p * 1000 + i, i as u32)).collect()).collect();
+        let total: usize = parts.iter().map(Vec::len).sum();
+        let (buckets, vol) = repartition(parts, 16, |_| 4);
+        assert_eq!(buckets.iter().map(Vec::len).sum::<usize>(), total);
+        assert_eq!(vol.records, total as u64);
+        assert_eq!(vol.bytes, total as u64 * 12);
+    }
+
+    #[test]
+    fn same_key_lands_in_same_bucket() {
+        let n = 32;
+        for key in [0u64, 1, 42, 1 << 40, u64::MAX] {
+            let a = partition_of(key, n);
+            let b = partition_of(key, n);
+            assert_eq!(a, b);
+            assert!(a < n);
+        }
+    }
+
+    #[test]
+    fn buckets_roughly_balanced() {
+        let parts = vec![(0..40_000u64).map(|i| (i, ())).collect::<Vec<_>>()];
+        let (buckets, _) = repartition(parts, 20, |_| 0);
+        let min = buckets.iter().map(Vec::len).min().unwrap();
+        let max = buckets.iter().map(Vec::len).max().unwrap();
+        assert!((max as f64 / min.max(1) as f64) < 1.3, "min {min} max {max}");
+    }
+
+    #[test]
+    fn tungsten_cheaper_than_javaser() {
+        let cfg = ClusterConfig::default();
+        let vol = ShuffleVolume { records: 1_000_000, bytes: 100 << 20, partitions_out: 200 };
+        let t = vol.exchange_cost(&cfg, ShuffleCodec::Tungsten);
+        let j = vol.exchange_cost(&cfg, ShuffleCodec::JavaSer);
+        assert!(j.total_seconds(1.0) > t.total_seconds(1.0) * 1.3);
+    }
+
+    #[test]
+    fn exchange_cost_scales_with_bytes() {
+        let cfg = ClusterConfig::default();
+        let small = ShuffleVolume { records: 10, bytes: 1 << 10, partitions_out: 200 };
+        let large = ShuffleVolume { records: 10, bytes: 1 << 30, partitions_out: 200 };
+        assert!(
+            large.exchange_cost(&cfg, ShuffleCodec::Tungsten).total_seconds(1.0)
+                > small.exchange_cost(&cfg, ShuffleCodec::Tungsten).total_seconds(1.0)
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! Simulated time: the currency the cost model is fitted in.
+
+use std::iter::Sum;
+use std::ops::{Add, AddAssign};
+
+/// Simulated cluster duration, seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, PartialOrd)]
+pub struct SimDuration(f64);
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0.0);
+
+    pub fn from_secs(s: f64) -> Self {
+        debug_assert!(s.is_finite() && s >= 0.0, "bad duration {s}");
+        SimDuration(s)
+    }
+
+    pub fn seconds(self) -> f64 {
+        self.0
+    }
+
+    pub fn max(self, other: Self) -> Self {
+        SimDuration(self.0.max(other.0))
+    }
+}
+
+impl Add for SimDuration {
+    type Output = SimDuration;
+    fn add(self, rhs: Self) -> Self {
+        SimDuration(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimDuration {
+    fn add_assign(&mut self, rhs: Self) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sum for SimDuration {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        SimDuration(iter.map(|d| d.0).sum())
+    }
+}
+
+/// Decomposed cost of one task: what the scheduler lays onto a slot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cost {
+    /// Measured compute seconds (then scaled by `cpu_scale`).
+    pub cpu_s: f64,
+    /// Simulated network seconds.
+    pub net_s: f64,
+    /// Simulated disk seconds.
+    pub disk_s: f64,
+    /// Bytes moved over the network (metrics/model features).
+    pub net_bytes: u64,
+    /// Bytes touched on disk.
+    pub disk_bytes: u64,
+}
+
+impl Cost {
+    pub fn cpu(cpu_s: f64) -> Cost {
+        Cost { cpu_s, ..Default::default() }
+    }
+
+    pub fn total_seconds(&self, cpu_scale: f64) -> f64 {
+        self.cpu_s * cpu_scale + self.net_s + self.disk_s
+    }
+
+    pub fn merge(&mut self, other: &Cost) {
+        self.cpu_s += other.cpu_s;
+        self.net_s += other.net_s;
+        self.disk_s += other.disk_s;
+        self.net_bytes += other.net_bytes;
+        self.disk_bytes += other.disk_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_arithmetic() {
+        let a = SimDuration::from_secs(1.5) + SimDuration::from_secs(0.5);
+        assert_eq!(a.seconds(), 2.0);
+        let s: SimDuration = [1.0, 2.0, 3.0].iter().map(|&x| SimDuration::from_secs(x)).sum();
+        assert_eq!(s.seconds(), 6.0);
+        assert_eq!(
+            SimDuration::from_secs(1.0).max(SimDuration::from_secs(2.0)).seconds(),
+            2.0
+        );
+    }
+
+    #[test]
+    fn cost_accounting() {
+        let mut c = Cost { cpu_s: 1.0, net_s: 0.5, disk_s: 0.25, net_bytes: 10, disk_bytes: 20 };
+        c.merge(&Cost::cpu(1.0));
+        assert_eq!(c.cpu_s, 2.0);
+        assert_eq!(c.total_seconds(2.0), 4.75);
+    }
+}

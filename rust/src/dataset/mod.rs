@@ -1,0 +1,17 @@
+//! Typed, partitioned datasets and operator pipelines.
+//!
+//! The Spark-2 mechanism the paper leans on (§4.2) is *whole-stage code
+//! generation*: scan → filter → project collapse into one tight loop over
+//! each partition, with no per-operator materialisation.  Here that is
+//! modelled precisely: a [`Pipeline`] is a list of operators which can run
+//! **fused** (one pass, closure composition — the codegen analogue) or
+//! **unfused** (each operator materialises an intermediate vector — the
+//! Spark-1/RDD analogue).  `benches/abl_codegen.rs` measures the delta,
+//! which is the paper's argument for why SBFCJ needed re-evaluation on
+//! Spark 2.
+
+pub mod pipeline;
+pub mod table;
+
+pub use pipeline::{Op, Pipeline};
+pub use table::PartitionedTable;

@@ -1,0 +1,142 @@
+//! Operator pipelines: fused (whole-stage-codegen analogue) vs unfused
+//! (per-operator materialisation, the RDD analogue).
+//!
+//! Operators are monomorphic over a row type `T` (filter/map-in-place) to
+//! keep the fused path allocation-free; projections that change type
+//! happen at pipeline boundaries, exactly like Spark's codegen stage
+//! breaks at exchanges.
+
+/// One operator over rows of `T`.
+pub enum Op<T> {
+    /// Keep rows satisfying the predicate.
+    Filter(Box<dyn Fn(&T) -> bool + Send + Sync>),
+    /// Transform rows in place.
+    MapInPlace(Box<dyn Fn(&mut T) + Send + Sync>),
+}
+
+impl<T> Op<T> {
+    pub fn filter(f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Self {
+        Op::Filter(Box::new(f))
+    }
+
+    pub fn map_in_place(f: impl Fn(&mut T) + Send + Sync + 'static) -> Self {
+        Op::MapInPlace(Box::new(f))
+    }
+}
+
+/// An ordered chain of operators.
+pub struct Pipeline<T> {
+    ops: Vec<Op<T>>,
+}
+
+impl<T> Default for Pipeline<T> {
+    fn default() -> Self {
+        Pipeline { ops: Vec::new() }
+    }
+}
+
+impl<T> Pipeline<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn then(mut self, op: Op<T>) -> Self {
+        self.ops.push(op);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Fused execution: one pass, one output vector, no intermediates —
+    /// the whole-stage-codegen analogue.
+    pub fn run_fused(&self, rows: Vec<T>) -> Vec<T> {
+        let mut out = Vec::with_capacity(rows.len());
+        'row: for mut row in rows {
+            for op in &self.ops {
+                match op {
+                    Op::Filter(f) => {
+                        if !f(&row) {
+                            continue 'row;
+                        }
+                    }
+                    Op::MapInPlace(f) => f(&mut row),
+                }
+            }
+            out.push(row);
+        }
+        out
+    }
+
+    /// Unfused execution: each operator materialises a full intermediate
+    /// vector (the Spark-1/RDD analogue the paper's §4.2 claim targets).
+    pub fn run_unfused(&self, rows: Vec<T>) -> Vec<T>
+    where
+        T: Clone,
+    {
+        let mut cur = rows;
+        for op in &self.ops {
+            cur = match op {
+                // clone-through to model per-stage (de)serialisation churn
+                Op::Filter(f) => cur.iter().filter(|r| f(r)).cloned().collect(),
+                Op::MapInPlace(f) => {
+                    let mut next = cur.clone();
+                    next.iter_mut().for_each(|r| f(r));
+                    next
+                }
+            };
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pipeline() -> Pipeline<i64> {
+        Pipeline::new()
+            .then(Op::filter(|x: &i64| x % 2 == 0))
+            .then(Op::map_in_place(|x: &mut i64| *x *= 10))
+            .then(Op::filter(|x: &i64| *x < 500))
+    }
+
+    #[test]
+    fn fused_and_unfused_agree() {
+        let rows: Vec<i64> = (0..200).collect();
+        let p = pipeline();
+        assert_eq!(p.run_fused(rows.clone()), p.run_unfused(rows));
+    }
+
+    #[test]
+    fn fused_semantics() {
+        let p = pipeline();
+        let out = p.run_fused((0..200).collect());
+        assert!(out.iter().all(|x| x % 20 == 0 && *x < 500));
+        assert_eq!(out.len(), 25); // 0,2,..,48 -> *10 < 500
+    }
+
+    #[test]
+    fn empty_pipeline_is_identity() {
+        let p: Pipeline<u8> = Pipeline::new();
+        assert!(p.is_empty());
+        assert_eq!(p.run_fused(vec![1, 2, 3]), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn order_matters() {
+        let p1 = Pipeline::new()
+            .then(Op::map_in_place(|x: &mut i64| *x += 1))
+            .then(Op::filter(|x: &i64| x % 2 == 0));
+        let p2 = Pipeline::new()
+            .then(Op::filter(|x: &i64| x % 2 == 0))
+            .then(Op::map_in_place(|x: &mut i64| *x += 1));
+        let rows: Vec<i64> = (0..10).collect();
+        assert_ne!(p1.run_fused(rows.clone()), p2.run_fused(rows));
+    }
+}

@@ -1,0 +1,102 @@
+//! A partitioned in-memory table — the engine's `Dataset<T>`.
+
+/// Rows of `T` split into partitions (one scan task per partition).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionedTable<T> {
+    parts: Vec<Vec<T>>,
+}
+
+impl<T> PartitionedTable<T> {
+    pub fn from_partitions(parts: Vec<Vec<T>>) -> Self {
+        PartitionedTable { parts }
+    }
+
+    /// Split a flat vector into `n` near-equal partitions.
+    pub fn from_rows(rows: Vec<T>, n: usize) -> Self {
+        let n = n.max(1);
+        let total = rows.len();
+        let base = total / n;
+        let rem = total % n;
+        let mut parts = Vec::with_capacity(n);
+        let mut it = rows.into_iter();
+        for p in 0..n {
+            let len = base + usize::from(p < rem);
+            parts.push(it.by_ref().take(len).collect());
+        }
+        PartitionedTable { parts }
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.parts.iter().map(Vec::len).sum()
+    }
+
+    pub fn partitions(&self) -> &[Vec<T>] {
+        &self.parts
+    }
+
+    pub fn into_partitions(self) -> Vec<Vec<T>> {
+        self.parts
+    }
+
+    pub fn partition(&self, p: usize) -> &[T] {
+        &self.parts[p]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.parts.iter().flatten()
+    }
+
+    pub fn into_rows(self) -> Vec<T> {
+        self.parts.into_iter().flatten().collect()
+    }
+
+    pub fn map_partitions<U>(self, f: impl Fn(Vec<T>) -> Vec<U>) -> PartitionedTable<U> {
+        PartitionedTable { parts: self.parts.into_iter().map(f).collect() }
+    }
+
+    /// Total serialized size given a per-row sizer (I/O cost accounting).
+    pub fn ser_bytes(&self, bytes_of: impl Fn(&T) -> u64) -> u64 {
+        self.iter().map(bytes_of).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_rows_balances() {
+        let t = PartitionedTable::from_rows((0..10).collect(), 3);
+        assert_eq!(t.n_partitions(), 3);
+        assert_eq!(t.partitions().iter().map(Vec::len).collect::<Vec<_>>(), vec![4, 3, 3]);
+        assert_eq!(t.into_rows(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let t: PartitionedTable<u8> = PartitionedTable::from_rows(vec![], 4);
+        assert_eq!(t.n_rows(), 0);
+        assert_eq!(t.n_partitions(), 4);
+        let t = PartitionedTable::from_rows(vec![7], 4);
+        assert_eq!(t.n_rows(), 1);
+    }
+
+    #[test]
+    fn map_partitions_preserves_structure() {
+        let t = PartitionedTable::from_rows((0..9).collect(), 3);
+        let u = t.map_partitions(|p| p.into_iter().map(|x| x * 2).collect());
+        assert_eq!(u.n_partitions(), 3);
+        assert_eq!(u.n_rows(), 9);
+        assert_eq!(u.into_rows(), (0..9).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ser_bytes_sums() {
+        let t = PartitionedTable::from_rows(vec![1u32, 2, 3], 2);
+        assert_eq!(t.ser_bytes(|_| 4), 12);
+    }
+}

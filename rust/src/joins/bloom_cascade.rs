@@ -1,0 +1,459 @@
+//! SBFCJ — the Spark Bloom-Filtered Cascade Join, modernised per the
+//! paper's §5: the system contribution this repo reproduces.
+//!
+//! The five steps, each its own simulated stage with its own accounting:
+//!
+//! 1. **approximate count** of the small table (time-bounded);
+//! 2. **optimal filter sizing** from (estimate, ε);
+//! 3. **distributed filter build**: per-partition partial filters,
+//!    OR-merged driver-wards (tree) — or, as the ablation baseline, the
+//!    original driver-side build that collects all keys;
+//! 4. **peer-to-peer broadcast** of the merged filter;
+//! 5. **filter the big table** (fused with the scan) and **sort-merge
+//!    join** the survivors through a 200-partition shuffle.
+//!
+//! The probe of step 5 can run through the native Rust filter or through
+//! the AOT-compiled Pallas kernel (`runtime::XlaProbe`), selected by
+//! [`ProbePath`] — both use the same hash algebra, pinned by golden
+//! vectors, so results are identical.
+
+use std::sync::Arc;
+
+use crate::approx::approx_count;
+use crate::bloom::{BloomFilter, BloomParams};
+use crate::cluster::shuffle::{repartition, ShuffleCodec};
+use crate::cluster::{broadcast, Cluster, Cost, Stage, Task};
+use crate::dataset::PartitionedTable;
+use crate::metrics::{QueryMetrics, StageTiming};
+
+use super::sort_merge::sort_merge_join_partition;
+use super::{JoinedRow, Keyed, RowSize};
+
+/// How step 3 builds the filter (ablation A1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FilterBuildStyle {
+    /// Paper §5.1 change #1: partial filters per partition, tree-merged.
+    Distributed,
+    /// Brito et al. 2007 baseline: ship all keys to the driver, build
+    /// there in one pass.
+    DriverSide,
+}
+
+/// Which engine probes the filter during the big-table scan (ablation A4).
+#[derive(Clone)]
+pub enum ProbePath {
+    /// Native Rust probe (`BloomFilter::contains_key`).
+    Native,
+    /// A batch-probe engine (the PJRT-loaded Pallas kernel).
+    Batch(Arc<dyn BatchProbe>),
+}
+
+impl std::fmt::Debug for ProbePath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProbePath::Native => write!(f, "Native"),
+            ProbePath::Batch(_) => write!(f, "Batch(..)"),
+        }
+    }
+}
+
+/// Batched membership probe (implemented by `runtime::XlaProbe`).
+pub trait BatchProbe: Send + Sync {
+    /// One bool per key: false ⇒ definitely not in the filter.
+    fn probe(&self, keys: &[u64], filter: &BloomFilter) -> Vec<bool>;
+    fn name(&self) -> &'static str;
+    /// Snap a raw (pre-rounding) filter-size request onto this engine's
+    /// supported size ladder (AOT artifacts have static shapes —
+    /// DESIGN.md §6).  `None` = no constraint / off-ladder.
+    fn snap_m_bits(&self, _min_bits: f64) -> Option<u64> {
+        None
+    }
+}
+
+/// SBFCJ knobs.
+#[derive(Clone, Debug)]
+pub struct BloomCascadeConfig {
+    /// Target false-positive rate ε — the paper's tunable.
+    pub fpr: f64,
+    pub build_style: FilterBuildStyle,
+    pub probe_path: ProbePath,
+    /// Simulated budget for the approximate count (step 1), seconds.
+    pub count_budget_s: f64,
+    /// Shuffle serialisation (Tungsten vs JavaSer — ablation A3 input).
+    pub codec: ShuffleCodec,
+}
+
+impl Default for BloomCascadeConfig {
+    fn default() -> Self {
+        BloomCascadeConfig {
+            fpr: 0.05,
+            build_style: FilterBuildStyle::Distributed,
+            probe_path: ProbePath::Native,
+            count_budget_s: 2.0,
+            codec: ShuffleCodec::Tungsten,
+        }
+    }
+}
+
+/// The coordinator.
+pub struct BloomCascadeJoin {
+    pub cfg: BloomCascadeConfig,
+}
+
+impl BloomCascadeJoin {
+    pub fn new(cfg: BloomCascadeConfig) -> Self {
+        BloomCascadeJoin { cfg }
+    }
+
+    /// Execute the cascade join on `cluster`.  Inputs are keyed,
+    /// partitioned tables (WHERE-clauses already applied by the caller's
+    /// fused scan pipeline — see `query.rs`).
+    pub fn execute<B, S>(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<B>>,
+        small: PartitionedTable<Keyed<S>>,
+    ) -> (Vec<JoinedRow<B, S>>, QueryMetrics)
+    where
+        B: Clone + Send + Sync + RowSize + 'static,
+        S: Clone + Send + Sync + RowSize + 'static,
+    {
+        let cfg = cluster.config().clone();
+        let mut metrics = QueryMetrics::default();
+        metrics.requested_fpr = self.cfg.fpr;
+        metrics.big_rows_scanned = big.n_rows() as u64;
+
+        // -- step 1: approximate count ------------------------------------
+        let sizes: Vec<usize> = small.partitions().iter().map(Vec::len).collect();
+        let est = approx_count(&cfg, &sizes, self.cfg.count_budget_s, 2e-8);
+        metrics.push(StageTiming {
+            tasks: est.partitions_seen,
+            ..StageTiming::new("approx_count", crate::cluster::SimDuration::from_secs(est.sim_s))
+        });
+
+        // -- step 2: sizing -------------------------------------------------
+        let mut params = BloomParams::optimal(est.estimate.max(1), self.cfg.fpr);
+        // with an XLA probe engine, snap the size up to its artifact
+        // ladder so the AOT kernel (static shapes) can run the scan
+        if let ProbePath::Batch(engine) = &self.cfg.probe_path {
+            let raw = crate::model::CostModel::filter_bits(est.estimate.max(1), self.cfg.fpr);
+            if let Some(m) = engine.snap_m_bits(raw) {
+                params = BloomParams::with_m(est.estimate.max(1), self.cfg.fpr, m);
+            }
+        }
+        metrics.bloom_bits = params.m_bits;
+
+        // -- step 3: build ----------------------------------------------------
+        let (filter, build_timing) = match self.cfg.build_style {
+            FilterBuildStyle::Distributed => self.build_distributed(cluster, &small, params),
+            FilterBuildStyle::DriverSide => self.build_driver_side(cluster, &small, params),
+        };
+        metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
+        metrics.push(build_timing);
+
+        // -- step 4: broadcast ---------------------------------------------
+        let filter_bytes = filter.to_bytes().len() as u64;
+        let bc = broadcast::p2p_broadcast_cost(&cfg, filter_bytes);
+        metrics.push(
+            StageTiming::new("broadcast", bc).with_cost(&Cost {
+                net_bytes: filter_bytes * cfg.total_executors() as u64,
+                ..Default::default()
+            }),
+        );
+
+        // -- step 5a: filtered scan ------------------------------------------
+        let filter = Arc::new(filter);
+        let probe = self.cfg.probe_path.clone();
+        let n_nodes = cfg.n_nodes;
+        let tasks: Vec<Task<Vec<Keyed<B>>>> = big
+            .into_partitions()
+            .into_iter()
+            .enumerate()
+            .map(|(p, part)| {
+                let filter = Arc::clone(&filter);
+                let probe = probe.clone();
+                let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
+                let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
+                // modeled JVM-scale scan cost (see ClusterConfig docs):
+                // keeps simulated time faithful to the paper's platform
+                // and identical across probe engines
+                let cpu_s = part.len() as f64 * cfg.scan_record_cost;
+                Task::new(move || {
+                    let survivors = match &probe {
+                        ProbePath::Native => part
+                            .into_iter()
+                            .filter(|(k, _)| filter.contains_key(*k))
+                            .collect::<Vec<_>>(),
+                        ProbePath::Batch(engine) => {
+                            let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
+                            let mask = engine.probe(&keys, &filter);
+                            part.into_iter()
+                                .zip(mask)
+                                .filter_map(|(row, keep)| keep.then_some(row))
+                                .collect()
+                        }
+                    };
+                    (survivors, Cost { cpu_s, disk_s, disk_bytes, ..Default::default() })
+                })
+                .with_locality(p % n_nodes)
+            })
+            .collect();
+        let scan = cluster.run_stage(Stage::new("filter_scan", tasks));
+        let filtered: Vec<Vec<Keyed<B>>> = scan.outputs;
+        metrics.big_rows_after_filter = filtered.iter().map(|p| p.len() as u64).sum();
+        metrics.push(StageTiming {
+            tasks: scan.n_tasks,
+            wall_s: scan.wall_time.seconds(),
+            cpu_s: scan.total_cost.cpu_s,
+            net_bytes: scan.total_cost.net_bytes,
+            disk_bytes: scan.total_cost.disk_bytes,
+            ..StageTiming::new("filter_scan", scan.sim_time)
+        });
+
+        // -- step 5b: shuffle both sides -------------------------------------
+        let n_shuffle = cfg.shuffle_partitions;
+        let (big_buckets, big_vol) =
+            repartition(filtered, n_shuffle, |b: &B| b.row_bytes());
+        let (small_buckets, small_vol) =
+            repartition(small.into_partitions(), n_shuffle, |s: &S| s.row_bytes());
+        let mut ex_cost = big_vol.exchange_cost(&cfg, self.cfg.codec);
+        ex_cost.merge(&small_vol.exchange_cost(&cfg, self.cfg.codec));
+        metrics.push(
+            StageTiming {
+                tasks: n_shuffle,
+                ..StageTiming::new(
+                    "shuffle",
+                    crate::cluster::SimDuration::from_secs(ex_cost.total_seconds(cfg.cpu_scale)),
+                )
+            }
+            .with_cost(&ex_cost),
+        );
+
+        // -- step 5c: per-partition sort-merge join ---------------------------
+        let tasks: Vec<Task<Vec<JoinedRow<B, S>>>> = big_buckets
+            .into_iter()
+            .zip(small_buckets)
+            .map(|(b, s)| {
+                let disk_bw = cfg.disk_bandwidth;
+                let sort_c = cfg.sort_compare_cost;
+                let merge_c = cfg.merge_record_cost;
+                Task::new(move || {
+                    // modeled JVM sort+merge cost (the paper's §7.1.2
+                    // TimSort / Poly·log Poly term)
+                    let nlogn = |n: usize| {
+                        if n < 2 { n as f64 } else { n as f64 * (n as f64).log2() }
+                    };
+                    let cpu_s = sort_c * (nlogn(b.len()) + nlogn(s.len()))
+                        + merge_c * (b.len() + s.len()) as f64;
+                    let out = sort_merge_join_partition(b, s);
+                    let cpu_s = cpu_s + merge_c * out.len() as f64;
+                    let write_bytes: u64 =
+                        out.iter().map(|(_, b, s)| 8 + b.row_bytes() + s.row_bytes()).sum();
+                    let disk_s = write_bytes as f64 / disk_bw;
+                    (out, Cost { cpu_s, disk_s, disk_bytes: write_bytes, ..Default::default() })
+                })
+            })
+            .collect();
+        let join = cluster.run_stage(Stage::new("join", tasks));
+        let rows: Vec<JoinedRow<B, S>> = join.outputs.into_iter().flatten().collect();
+        metrics.push(StageTiming {
+            tasks: join.n_tasks,
+            wall_s: join.wall_time.seconds(),
+            cpu_s: join.total_cost.cpu_s,
+            disk_bytes: join.total_cost.disk_bytes,
+            ..StageTiming::new("join", join.sim_time)
+        });
+
+        metrics.output_rows = rows.len() as u64;
+        (rows, metrics)
+    }
+
+    /// §5.1 change #1: per-partition partial build + tree OR-merge.
+    fn build_distributed<S>(
+        &self,
+        cluster: &Cluster,
+        small: &PartitionedTable<Keyed<S>>,
+        params: BloomParams,
+    ) -> (BloomFilter, StageTiming)
+    where
+        S: Clone + Send + Sync + 'static,
+    {
+        let cfg = cluster.config();
+        let tasks: Vec<Task<BloomFilter>> = small
+            .partitions()
+            .iter()
+            .map(|part| {
+                let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
+                let hash_c = cfg.hash_insert_cost;
+                let scan_c = cfg.scan_record_cost;
+                Task::new(move || {
+                    // modeled cost: read the partition + k hash
+                    // applications per key (the paper's per-bit K1 term
+                    // shows up in the merge/broadcast legs below)
+                    let cpu_s = keys.len() as f64 * (scan_c + hash_c * params.k as f64);
+                    let mut f = BloomFilter::new(params);
+                    for k in keys {
+                        f.insert(k);
+                    }
+                    (f, Cost { cpu_s, ..Default::default() })
+                })
+            })
+            .collect();
+        let stage = cluster.run_stage(Stage::new("bloom_build", tasks));
+
+        // tree-merge the partials (driver side; cost = collect of filter
+        // bytes + the measured OR time)
+        let t0 = std::time::Instant::now();
+        let mut it = stage.outputs.into_iter();
+        let mut merged = it.next().unwrap_or_else(|| BloomFilter::new(params));
+        for partial in it {
+            merged.merge(&partial).expect("identical params by construction");
+        }
+        let merge_cpu = t0.elapsed().as_secs_f64();
+        let collect = broadcast::driver_collect_cost(cfg, params.size_bytes());
+
+        let sim = stage.sim_time
+            + collect
+            + crate::cluster::SimDuration::from_secs(merge_cpu * cfg.cpu_scale);
+        let timing = StageTiming {
+            tasks: stage.n_tasks,
+            wall_s: stage.wall_time.seconds() + merge_cpu,
+            cpu_s: stage.total_cost.cpu_s + merge_cpu,
+            net_bytes: params.size_bytes() * stage.n_tasks as u64,
+            ..StageTiming::new("bloom_build", sim)
+        };
+        (merged, timing)
+    }
+
+    /// Brito et al. baseline: collect every key at the driver, build once.
+    fn build_driver_side<S>(
+        &self,
+        cluster: &Cluster,
+        small: &PartitionedTable<Keyed<S>>,
+        params: BloomParams,
+    ) -> (BloomFilter, StageTiming)
+    where
+        S: Clone,
+    {
+        let cfg = cluster.config();
+        let key_bytes: u64 = 8 * small.n_rows() as u64 / cfg.total_executors().max(1) as u64;
+        let collect = broadcast::flat_collect_cost(cfg, key_bytes);
+        let mut f = BloomFilter::new(params);
+        for (k, _) in small.iter() {
+            f.insert(*k);
+        }
+        // modeled serial driver build (no slot parallelism — the point of
+        // the ablation)
+        let cpu = small.n_rows() as f64
+            * (cfg.scan_record_cost + cfg.hash_insert_cost * params.k as f64);
+        let sim = collect + crate::cluster::SimDuration::from_secs(cpu * cfg.cpu_scale);
+        let timing = StageTiming {
+            tasks: 1,
+            wall_s: cpu,
+            cpu_s: cpu,
+            net_bytes: 8 * small.n_rows() as u64,
+            ..StageTiming::new("bloom_build", sim)
+        };
+        (f, timing)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::util::Rng;
+
+    fn inputs(
+        n_big: usize,
+        n_small: usize,
+        key_space: u64,
+    ) -> (PartitionedTable<Keyed<u64>>, PartitionedTable<Keyed<u64>>) {
+        let mut rng = Rng::new(42);
+        let big: Vec<Keyed<u64>> =
+            (0..n_big).map(|_| (rng.below(key_space), rng.next_u64())).collect();
+        let small: Vec<Keyed<u64>> =
+            (0..n_small).map(|_| (rng.below(key_space / 10), rng.next_u64())).collect();
+        (
+            PartitionedTable::from_rows(big, 4),
+            PartitionedTable::from_rows(small, 2),
+        )
+    }
+
+    fn oracle_count(
+        big: &PartitionedTable<Keyed<u64>>,
+        small: &PartitionedTable<Keyed<u64>>,
+    ) -> usize {
+        use std::collections::HashMap;
+        let mut sc: HashMap<u64, usize> = HashMap::new();
+        for (k, _) in small.iter() {
+            *sc.entry(*k).or_default() += 1;
+        }
+        big.iter().map(|(k, _)| sc.get(k).copied().unwrap_or(0)).sum()
+    }
+
+    #[test]
+    fn produces_exact_join_result() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (big, small) = inputs(2_000, 200, 10_000);
+        let want = oracle_count(&big, &small);
+        let join = BloomCascadeJoin::new(BloomCascadeConfig::default());
+        let (rows, metrics) = join.execute(&cluster, big, small);
+        assert_eq!(rows.len(), want);
+        assert_eq!(metrics.output_rows as usize, want);
+    }
+
+    #[test]
+    fn filter_actually_filters() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (big, small) = inputs(5_000, 100, 100_000);
+        let join = BloomCascadeJoin::new(BloomCascadeConfig { fpr: 0.01, ..Default::default() });
+        let scanned = big.n_rows() as u64;
+        let (_, metrics) = join.execute(&cluster, big, small);
+        assert_eq!(metrics.big_rows_scanned, scanned);
+        // key space 100k, small keys < 10k: most big rows filterable
+        assert!(
+            metrics.big_rows_after_filter < scanned / 2,
+            "{} of {scanned} survived",
+            metrics.big_rows_after_filter
+        );
+    }
+
+    #[test]
+    fn driver_side_build_same_result() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (big, small) = inputs(1_000, 150, 5_000);
+        let want = oracle_count(&big, &small);
+        let join = BloomCascadeJoin::new(BloomCascadeConfig {
+            build_style: FilterBuildStyle::DriverSide,
+            ..Default::default()
+        });
+        let (rows, _) = join.execute(&cluster, big, small);
+        assert_eq!(rows.len(), want);
+    }
+
+    #[test]
+    fn lower_fpr_means_bigger_filter_and_fewer_survivors() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (big, small) = inputs(20_000, 100, 1_000_000);
+        let loose = BloomCascadeJoin::new(BloomCascadeConfig { fpr: 0.5, ..Default::default() });
+        let tight = BloomCascadeJoin::new(BloomCascadeConfig { fpr: 0.001, ..Default::default() });
+        let (_, m_loose) = loose.execute(&cluster, big.clone(), small.clone());
+        let (_, m_tight) = tight.execute(&cluster, big, small);
+        assert!(m_tight.bloom_bits > m_loose.bloom_bits);
+        assert!(m_tight.big_rows_after_filter <= m_loose.big_rows_after_filter);
+    }
+
+    #[test]
+    fn metrics_have_all_five_stages() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (big, small) = inputs(500, 50, 1_000);
+        let join = BloomCascadeJoin::new(BloomCascadeConfig::default());
+        let (_, metrics) = join.execute(&cluster, big, small);
+        for stage in ["approx_count", "bloom_build", "broadcast", "filter_scan", "shuffle", "join"] {
+            assert!(metrics.stage(stage).is_some(), "missing {stage}");
+        }
+        assert!(metrics.bloom_creation_s() > 0.0);
+        assert!(metrics.filter_join_s() > 0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Sort-merge join — Spark's default strategy for two large inputs, and
+//! the final step of the paper's SBFCJ cascade (§5.2 step 5: "we let
+//! Spark decide; for sufficiently large data it uses sort-merge join").
+//!
+//! Per reduce partition: TimSort both sides by key (the paper names
+//! TimSort explicitly in its §7.1.2 cost analysis), then a two-pointer
+//! merge that emits the cross product of equal-key groups.
+
+use super::timsort::timsort_by_key;
+use super::{JoinedRow, Keyed};
+
+/// Join one co-partitioned bucket pair.  Inputs need not be sorted.
+pub fn sort_merge_join_partition<B: Clone, S: Clone>(
+    mut big: Vec<Keyed<B>>,
+    mut small: Vec<Keyed<S>>,
+) -> Vec<JoinedRow<B, S>> {
+    timsort_by_key(&mut big, |r| r.0);
+    timsort_by_key(&mut small, |r| r.0);
+    merge_sorted(big, small)
+}
+
+/// Merge already-sorted sides (exposed for the pre-sorted fast path).
+pub fn merge_sorted<B: Clone, S: Clone>(
+    big: Vec<Keyed<B>>,
+    small: Vec<Keyed<S>>,
+) -> Vec<JoinedRow<B, S>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut j = 0;
+    while i < big.len() && j < small.len() {
+        let kb = big[i].0;
+        let ks = small[j].0;
+        if kb < ks {
+            i += 1;
+        } else if kb > ks {
+            j += 1;
+        } else {
+            // equal-key groups: emit the cross product
+            let i_end = big[i..].iter().take_while(|r| r.0 == kb).count() + i;
+            let j_end = small[j..].iter().take_while(|r| r.0 == kb).count() + j;
+            for bi in i..i_end {
+                for sj in j..j_end {
+                    out.push((kb, big[bi].1.clone(), small[sj].1.clone()));
+                }
+            }
+            i = i_end;
+            j = j_end;
+        }
+    }
+    out
+}
+
+/// Comparison-count estimate for the model's `n log n` term: what the
+/// per-partition sort costs at size `n` (used by DESIGN §model docs and
+/// tests, not the hot path).
+pub fn sort_cost_estimate(n: usize) -> f64 {
+    if n < 2 {
+        return n as f64;
+    }
+    let n = n as f64;
+    n * n.log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    fn oracle<B: Clone, S: Clone>(
+        big: &[Keyed<B>],
+        small: &[Keyed<S>],
+    ) -> Vec<JoinedRow<B, S>> {
+        let mut out = Vec::new();
+        for (kb, b) in big {
+            for (ks, s) in small {
+                if kb == ks {
+                    out.push((*kb, b.clone(), s.clone()));
+                }
+            }
+        }
+        out
+    }
+
+    fn canon<B: Ord + Clone, S: Ord + Clone>(
+        mut v: Vec<JoinedRow<B, S>>,
+    ) -> Vec<JoinedRow<B, S>> {
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn matches_nested_loop_oracle() {
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let big: Vec<Keyed<u64>> =
+                (0..rng.range(0, 200)).map(|_| (rng.below(50), rng.next_u64())).collect();
+            let small: Vec<Keyed<u64>> =
+                (0..rng.range(0, 60)).map(|_| (rng.below(50), rng.next_u64())).collect();
+            let got = canon(sort_merge_join_partition(big.clone(), small.clone()));
+            let want = canon(oracle(&big, &small));
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_cross_product() {
+        let big = vec![(1u64, "b1"), (1, "b2"), (2, "b3")];
+        let small = vec![(1u64, "s1"), (1, "s2")];
+        let got = sort_merge_join_partition(big, small);
+        assert_eq!(got.len(), 4);
+        assert!(got.iter().all(|(k, _, _)| *k == 1));
+    }
+
+    #[test]
+    fn disjoint_keys_empty() {
+        let big = vec![(1u64, ()), (2, ())];
+        let small = vec![(3u64, ()), (4, ())];
+        assert!(sort_merge_join_partition(big, small).is_empty());
+    }
+
+    #[test]
+    fn empty_sides() {
+        assert!(sort_merge_join_partition::<(), ()>(vec![], vec![(1, ())]).is_empty());
+        assert!(sort_merge_join_partition::<(), ()>(vec![(1, ())], vec![]).is_empty());
+    }
+
+    #[test]
+    fn output_count_equals_key_multiplicity_product() {
+        let mut rng = Rng::new(6);
+        let big: Vec<Keyed<()>> = (0..500).map(|_| (rng.below(20), ())).collect();
+        let small: Vec<Keyed<()>> = (0..100).map(|_| (rng.below(20), ())).collect();
+        let mut bc: HashMap<u64, u64> = HashMap::new();
+        let mut sc: HashMap<u64, u64> = HashMap::new();
+        for (k, _) in &big {
+            *bc.entry(*k).or_default() += 1;
+        }
+        for (k, _) in &small {
+            *sc.entry(*k).or_default() += 1;
+        }
+        let want: u64 = bc.iter().map(|(k, nb)| nb * sc.get(k).copied().unwrap_or(0)).sum();
+        assert_eq!(sort_merge_join_partition(big, small).len() as u64, want);
+    }
+}

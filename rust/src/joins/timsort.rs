@@ -1,0 +1,337 @@
+//! TimSort (Peters 2002) — from scratch.
+//!
+//! The paper's §7.1.2 attributes part of the ε-linear join cost to
+//! "re-sorting elements with the TimSort algorithm" (what the JVM sorts
+//! shuffle runs with), so the sort in our sort-merge join is the real
+//! thing: natural-run detection with strictly-descending-run reversal,
+//! binary-insertion extension of short runs to `minrun`, a run stack with
+//! the classic (A > B+C, B > C) invariants, and galloping merges.
+
+const MIN_MERGE: usize = 32;
+const MIN_GALLOP: usize = 7;
+
+/// Sort `v` by `key` (stable).
+pub fn timsort_by_key<T, K: Ord>(v: &mut [T], key: impl Fn(&T) -> K) {
+    timsort_by(v, |a, b| key(a).cmp(&key(b)));
+}
+
+/// Stable sort with an explicit comparator.
+pub fn timsort_by<T>(v: &mut [T], mut cmp: impl FnMut(&T, &T) -> std::cmp::Ordering) {
+    let n = v.len();
+    if n < 2 {
+        return;
+    }
+    if n < MIN_MERGE {
+        let run_end = count_run(v, &mut cmp);
+        binary_insertion(v, run_end, &mut cmp);
+        return;
+    }
+
+    let minrun = min_run_length(n);
+    // run stack: (start, len)
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    let mut pos = 0;
+    while pos < n {
+        let mut run_len = count_run(&mut v[pos..], &mut cmp);
+        if run_len < minrun {
+            let force = minrun.min(n - pos);
+            binary_insertion(&mut v[pos..pos + force], run_len, &mut cmp);
+            run_len = force;
+        }
+        runs.push((pos, run_len));
+        pos += run_len;
+        collapse(v, &mut runs, &mut cmp);
+    }
+    // final collapse
+    while runs.len() > 1 {
+        let r = runs.len();
+        merge_at(v, &mut runs, r - 2, &mut cmp);
+    }
+    debug_assert_eq!(runs[0], (0, n));
+}
+
+/// Length of the run starting at v[0]; strictly-descending runs reversed.
+fn count_run<T>(v: &mut [T], cmp: &mut impl FnMut(&T, &T) -> std::cmp::Ordering) -> usize {
+    let n = v.len();
+    if n <= 1 {
+        return n;
+    }
+    let mut i = 1;
+    if cmp(&v[1], &v[0]).is_lt() {
+        // strictly descending (strictness keeps stability)
+        while i + 1 < n && cmp(&v[i + 1], &v[i]).is_lt() {
+            i += 1;
+        }
+        v[..=i].reverse();
+    } else {
+        while i + 1 < n && !cmp(&v[i + 1], &v[i]).is_lt() {
+            i += 1;
+        }
+    }
+    i + 1
+}
+
+/// Extend a sorted prefix of length `sorted` to cover all of `v`.
+fn binary_insertion<T>(
+    v: &mut [T],
+    sorted: usize,
+    cmp: &mut impl FnMut(&T, &T) -> std::cmp::Ordering,
+) {
+    for i in sorted.max(1)..v.len() {
+        // binary search for insertion point of v[i] in v[..i] (stable:
+        // insert after equals)
+        let mut lo = 0;
+        let mut hi = i;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if cmp(&v[i], &v[mid]).is_lt() {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        v[lo..=i].rotate_right(1);
+    }
+}
+
+/// CPython's minrun: n/2^k in [16, 32], rounding up if any bits shifted out.
+fn min_run_length(mut n: usize) -> usize {
+    let mut r = 0;
+    while n >= MIN_MERGE {
+        r |= n & 1;
+        n >>= 1;
+    }
+    n + r
+}
+
+/// Restore the stack invariants by merging.
+fn collapse<T>(
+    v: &mut [T],
+    runs: &mut Vec<(usize, usize)>,
+    cmp: &mut impl FnMut(&T, &T) -> std::cmp::Ordering,
+) {
+    while runs.len() > 1 {
+        let n = runs.len();
+        if n >= 3 && runs[n - 3].1 <= runs[n - 2].1 + runs[n - 1].1 {
+            if runs[n - 3].1 < runs[n - 1].1 {
+                merge_at(v, runs, n - 3, cmp);
+            } else {
+                merge_at(v, runs, n - 2, cmp);
+            }
+        } else if runs[n - 2].1 <= runs[n - 1].1 {
+            merge_at(v, runs, n - 2, cmp);
+        } else {
+            break;
+        }
+    }
+}
+
+/// Merge runs[i] and runs[i+1] (adjacent in v).
+fn merge_at<T>(
+    v: &mut [T],
+    runs: &mut Vec<(usize, usize)>,
+    i: usize,
+    cmp: &mut impl FnMut(&T, &T) -> std::cmp::Ordering,
+) {
+    let (s1, l1) = runs[i];
+    let (s2, l2) = runs[i + 1];
+    debug_assert_eq!(s1 + l1, s2);
+    merge_adjacent(&mut v[s1..s2 + l2], l1, cmp);
+    runs[i] = (s1, l1 + l2);
+    runs.remove(i + 1);
+}
+
+/// Galloping merge of v[..mid] and v[mid..], both sorted.
+fn merge_adjacent<T>(v: &mut [T], mid: usize, cmp: &mut impl FnMut(&T, &T) -> std::cmp::Ordering) {
+    let n = v.len();
+    if mid == 0 || mid == n {
+        return;
+    }
+    // temp copy of the left run (classic merge-lo; fine for our sizes)
+    let mut tmp: Vec<T> = Vec::with_capacity(mid);
+    // SAFETY-free approach: use Option slots via ManuallyDrop would be
+    // unsafe; instead require T: Clone? No — do an index-based merge with
+    // a scratch Vec by moving elements out through std::mem::replace with
+    // a sentinel is impossible generically.  Use ptr reads safely via
+    // Vec::drain-like approach:
+    unsafe {
+        tmp.set_len(0);
+        tmp.reserve(mid);
+        std::ptr::copy_nonoverlapping(v.as_ptr(), tmp.as_mut_ptr(), mid);
+        tmp.set_len(mid);
+        // v[..mid] is now logically moved out; we overwrite it below.
+        let mut i = 0; // tmp index
+        let mut j = mid; // right run index in v
+        let mut d = 0; // destination in v
+        let mut gallop_l = 0usize;
+        let mut gallop_r = 0usize;
+        while i < mid && j < n {
+            let take_right = cmp(&*v.as_ptr().add(j), &*tmp.as_ptr().add(i)).is_lt();
+            if take_right {
+                let src = v.as_ptr().add(j);
+                std::ptr::copy(src, v.as_mut_ptr().add(d), 1);
+                j += 1;
+                gallop_r += 1;
+                gallop_l = 0;
+            } else {
+                std::ptr::copy_nonoverlapping(tmp.as_ptr().add(i), v.as_mut_ptr().add(d), 1);
+                i += 1;
+                gallop_l += 1;
+                gallop_r = 0;
+            }
+            d += 1;
+            // galloping mode: one side won MIN_GALLOP times in a row —
+            // binary-search how far it keeps winning and copy in bulk.
+            if gallop_l >= MIN_GALLOP && i < mid && j < n {
+                let right_head = &*v.as_ptr().add(j);
+                let run = gallop_count(&tmp[i..mid], |x| !cmp(right_head, x).is_lt());
+                std::ptr::copy_nonoverlapping(tmp.as_ptr().add(i), v.as_mut_ptr().add(d), run);
+                i += run;
+                d += run;
+                gallop_l = 0;
+            } else if gallop_r >= MIN_GALLOP && i < mid && j < n {
+                let left_head = &*tmp.as_ptr().add(i);
+                // count right-run elements strictly less than left head
+                let mut run = 0;
+                while j + run < n && cmp(&*v.as_ptr().add(j + run), left_head).is_lt() {
+                    run += 1;
+                    if run >= 64 {
+                        break; // bounded linear gallop; enough in practice
+                    }
+                }
+                std::ptr::copy(v.as_ptr().add(j), v.as_mut_ptr().add(d), run);
+                j += run;
+                d += run;
+                gallop_r = 0;
+            }
+        }
+        if i < mid {
+            std::ptr::copy_nonoverlapping(tmp.as_ptr().add(i), v.as_mut_ptr().add(d), mid - i);
+        }
+        // if j < n the tail is already in place
+        tmp.set_len(0); // elements were moved into v; don't double-drop
+    }
+}
+
+/// How many leading elements of sorted `xs` satisfy `pred` (pred is
+/// monotone: true-prefix) — exponential probe + binary search.
+fn gallop_count<T>(xs: &[T], mut pred: impl FnMut(&T) -> bool) -> usize {
+    if xs.is_empty() || !pred(&xs[0]) {
+        return 0;
+    }
+    let mut hi = 1;
+    while hi < xs.len() && pred(&xs[hi]) {
+        hi = (hi * 2).min(xs.len());
+        if hi == xs.len() {
+            break;
+        }
+    }
+    let mut lo = hi / 2;
+    let mut hi = hi.min(xs.len());
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if pred(&xs[mid]) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn sorts_random() {
+        let mut rng = Rng::new(1);
+        for n in [0usize, 1, 2, 31, 32, 33, 100, 1_000, 50_000] {
+            let mut v: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+            let mut want = v.clone();
+            want.sort();
+            timsort_by(&mut v, |a, b| a.cmp(b));
+            assert_eq!(v, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sorts_adversarial_patterns() {
+        for n in [100usize, 1000, 4096] {
+            // sawtooth, organ pipe, sorted, reversed, constant
+            let patterns: Vec<Vec<u64>> = vec![
+                (0..n as u64).map(|i| i % 17).collect(),
+                (0..n as u64).map(|i| (n as u64 / 2).abs_diff(i)).collect(),
+                (0..n as u64).collect(),
+                (0..n as u64).rev().collect(),
+                vec![7; n],
+            ];
+            for mut v in patterns {
+                let mut want = v.clone();
+                want.sort();
+                timsort_by(&mut v, |a, b| a.cmp(b));
+                assert_eq!(v, want);
+            }
+        }
+    }
+
+    #[test]
+    fn stability() {
+        let mut rng = Rng::new(2);
+        let mut v: Vec<(u64, usize)> =
+            (0..5_000).map(|i| (rng.below(50), i)).collect();
+        timsort_by(&mut v, |a, b| a.0.cmp(&b.0));
+        for w in v.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "stability violated");
+            }
+        }
+    }
+
+    #[test]
+    fn by_key_api() {
+        let mut v = vec![(3, "c"), (1, "a"), (2, "b")];
+        timsort_by_key(&mut v, |x| x.0);
+        assert_eq!(v, vec![(1, "a"), (2, "b"), (3, "c")]);
+    }
+
+    #[test]
+    fn sorts_strings_no_drop_issues() {
+        let mut rng = Rng::new(3);
+        let mut v: Vec<String> =
+            (0..2_000).map(|_| format!("key-{:06}", rng.below(500))).collect();
+        let mut want = v.clone();
+        want.sort();
+        timsort_by(&mut v, |a, b| a.cmp(b));
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn min_run_length_in_range() {
+        for n in [32usize, 33, 63, 64, 1000, 1 << 20] {
+            let m = min_run_length(n);
+            assert!((16..=32).contains(&m), "n={n} minrun={m}");
+        }
+    }
+
+    #[test]
+    fn gallop_count_correct() {
+        let xs = [1, 2, 3, 10, 20, 30];
+        assert_eq!(gallop_count(&xs, |x| *x < 5), 3);
+        assert_eq!(gallop_count(&xs, |x| *x < 1), 0);
+        assert_eq!(gallop_count(&xs, |x| *x < 100), 6);
+    }
+
+    #[test]
+    fn presorted_runs_detected_fast() {
+        // mostly-sorted data with natural runs must still sort correctly
+        let mut v: Vec<u64> = (0..10_000).collect();
+        v[5_000] = 0;
+        let mut want = v.clone();
+        want.sort();
+        timsort_by(&mut v, |a, b| a.cmp(b));
+        assert_eq!(v, want);
+    }
+}

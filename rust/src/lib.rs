@@ -1,0 +1,37 @@
+//! # bloomjoin
+//!
+//! Reproduction of *"Optimal parameters for bloom-filtered joins in Spark"*
+//! (Ophir Lojkine, 2017) as a three-layer Rust + JAX/Pallas system:
+//!
+//! * **L3 (this crate)** — a mini distributed dataflow engine
+//!   (*"minispark"*): simulated cluster topology, FIFO slot scheduler,
+//!   peer-to-peer broadcast, hash shuffle, block manager, a typed
+//!   [`dataset`] API with fused operator pipelines, three join strategies
+//!   ([`joins`]), the paper's cost model and optimal-ε solver ([`model`]),
+//!   a from-scratch TPC-H generator ([`tpch`]) and columnar storage over a
+//!   simulated distributed FS ([`storage`]).
+//! * **L2/L1 (python/, build-time only)** — the Bloom probe/build compute
+//!   graphs (Pallas kernel + jnp), AOT-lowered to HLO text; [`runtime`]
+//!   loads the artifacts through PJRT and executes them on the request
+//!   path.  Python never runs at query time.
+//!
+//! The headline API is [`joins::bloom_cascade::BloomCascadeJoin`] driven by
+//! [`cluster::Cluster`], usually via [`query::JoinQuery`]; see
+//! `examples/quickstart.rs`.
+
+pub mod approx;
+pub mod bench_support;
+pub mod bloom;
+pub mod cluster;
+pub mod dataset;
+pub mod joins;
+pub mod metrics;
+pub mod model;
+pub mod query;
+pub mod runtime;
+pub mod storage;
+pub mod testkit;
+pub mod tpch;
+pub mod util;
+
+pub use query::{JoinQuery, JoinStrategy, QueryOutput};

@@ -1,0 +1,268 @@
+//! `bloomjoin` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   generate   write TPC-H .tbl data onto the simulated DFS and report splits
+//!   query      run the paper's join once with a chosen strategy/ε
+//!   sweep      the paper's §6 experiment series (ε sweep, CSV output)
+//!   calibrate  fit the §7 cost model from a sweep
+//!   optimal    solve for ε* (§7.2) and validate with a run
+//!   info       artifact/runtime status
+
+use std::process::ExitCode;
+
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, FilterBuildStyle, ProbePath};
+use bloomjoin::model::{fit, newton};
+use bloomjoin::query::{JoinQuery, JoinStrategy};
+use bloomjoin::runtime::XlaProbe;
+use bloomjoin::util::cli::Args;
+use bloomjoin::util::fmt::Table;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv, &["xla", "driver-side", "verbose"]);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match run(cmd, &args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "generate" => generate(args),
+        "query" => query(args),
+        "sweep" => sweep(args),
+        "calibrate" | "optimal" => optimal(args, cmd == "calibrate"),
+        "info" => info(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn cluster_from(args: &Args) -> anyhow::Result<Cluster> {
+    let mut cfg = match args.get_or("cluster", "default") {
+        "grid5000" => ClusterConfig::grid5000_like(),
+        "small" => ClusterConfig::small_cluster(),
+        "local" => ClusterConfig::local(),
+        _ => ClusterConfig::default(),
+    };
+    if let Some(n) = args.parse_as::<usize>("nodes")? {
+        cfg.n_nodes = n;
+    }
+    if let Some(e) = args.parse_as::<usize>("executors")? {
+        cfg.executors_per_node = e;
+    }
+    if let Some(c) = args.parse_as::<usize>("cores")? {
+        cfg.cores_per_executor = c;
+    }
+    if let Some(p) = args.parse_as::<usize>("shuffle-partitions")? {
+        cfg.shuffle_partitions = p;
+    }
+    Ok(Cluster::new(cfg))
+}
+
+fn query_from(args: &Args) -> anyhow::Result<JoinQuery> {
+    let mut q = JoinQuery {
+        sf: args.parse_or("sf", 0.01)?,
+        partitions: args.parse_or("partitions", 16)?,
+        seed: args.parse_or("seed", 0xB100_F117u64)?,
+        ..Default::default()
+    };
+    if let Some(w) = args.parse_as::<i32>("order-window-days")? {
+        q.order_date_window = (400, 400 + w);
+    }
+    let eps = args.parse_or("eps", 0.05)?;
+    let probe_path = if args.flag("xla") {
+        match XlaProbe::from_default_location() {
+            Some(p) => ProbePath::Batch(std::sync::Arc::new(p)),
+            None => anyhow::bail!("--xla requested but artifacts/ not found (run `make artifacts`)"),
+        }
+    } else {
+        ProbePath::Native
+    };
+    q.strategy = match args.get_or("strategy", "bloom") {
+        "bloom" => JoinStrategy::BloomCascade(BloomCascadeConfig {
+            fpr: eps,
+            probe_path,
+            build_style: if args.flag("driver-side") {
+                FilterBuildStyle::DriverSide
+            } else {
+                FilterBuildStyle::Distributed
+            },
+            ..Default::default()
+        }),
+        "broadcast" => JoinStrategy::BroadcastHash,
+        "sortmerge" => JoinStrategy::SortMerge,
+        other => anyhow::bail!("unknown strategy {other:?} (bloom|broadcast|sortmerge)"),
+    };
+    Ok(q)
+}
+
+fn generate(args: &Args) -> anyhow::Result<()> {
+    use bloomjoin::storage::tbl::TblCodec;
+    use bloomjoin::storage::{DfsConfig, SimDfs};
+    use bloomjoin::tpch::{GenConfig, TpchGenerator};
+
+    let sf = args.parse_or("sf", 0.01)?;
+    let gen = TpchGenerator::new(GenConfig { sf, ..Default::default() });
+    let mut dfs = SimDfs::new(DfsConfig {
+        block_size: args.parse_or("block-mb", 128u64)? << 20,
+        ..Default::default()
+    });
+    let orders: Vec<_> = gen.orders().into_iter().flatten().collect();
+    let lineitems: Vec<_> = gen.lineitems().into_iter().flatten().collect();
+    dfs.put("tpch/orders.tbl", TblCodec::write_all(&orders).as_bytes())?;
+    dfs.put("tpch/lineitem.tbl", TblCodec::write_all(&lineitems).as_bytes())?;
+
+    let mut t = Table::new(&["file", "rows", "bytes", "splits"]);
+    for (path, rows) in [("tpch/orders.tbl", orders.len()), ("tpch/lineitem.tbl", lineitems.len())]
+    {
+        t.row(vec![
+            path.into(),
+            rows.to_string(),
+            bloomjoin::util::fmt::bytes(dfs.len(path)?),
+            dfs.n_blocks(path)?.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn query(args: &Args) -> anyhow::Result<()> {
+    let cluster = cluster_from(args)?;
+    let q = query_from(args)?;
+    let out = q.run(&cluster);
+    println!("strategy: {:?}\nrows: {}\n", q.strategy, out.rows.len());
+    println!("{}", out.metrics.markdown());
+    println!(
+        "stage1 (bloom creation): {:.3}s   stage2 (filter+join): {:.3}s",
+        out.metrics.bloom_creation_s(),
+        out.metrics.filter_join_s()
+    );
+    Ok(())
+}
+
+fn eps_series(n: usize) -> Vec<f64> {
+    // n log-spaced points in [1e-4, 0.9], like the paper's 69 experiments
+    (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1).max(1) as f64;
+            1e-4f64.powf(1.0 - t) * 0.9f64.powf(t)
+        })
+        .collect()
+}
+
+fn sweep(args: &Args) -> anyhow::Result<()> {
+    let cluster = cluster_from(args)?;
+    let n = args.parse_or("runs", 69usize)?;
+    let base = query_from(args)?;
+    println!("eps,requested_fpr,realized_fpr,bloom_bits,stage1_s,stage2_s,total_s,survivors,rows");
+    for (eps, m) in base.sweep_epsilon(&cluster, &eps_series(n)) {
+        println!(
+            "{eps},{},{},{},{:.6},{:.6},{:.6},{},{}",
+            m.requested_fpr,
+            m.realized_fpr,
+            m.bloom_bits,
+            m.bloom_creation_s(),
+            m.filter_join_s(),
+            m.total_sim_s(),
+            m.big_rows_after_filter,
+            m.output_rows
+        );
+    }
+    Ok(())
+}
+
+fn optimal(args: &Args, calibrate_only: bool) -> anyhow::Result<()> {
+    let cluster = cluster_from(args)?;
+    let base = query_from(args)?;
+    let n = args.parse_or("runs", 16usize)?;
+    let (a, b) = base.model_ab(&cluster);
+
+    let points: Vec<fit::SweepPoint> = base
+        .sweep_epsilon(&cluster, &eps_series(n))
+        .into_iter()
+        .map(|(eps, m)| fit::SweepPoint {
+            eps,
+            bloom_creation_s: m.bloom_creation_s(),
+            filter_join_s: m.filter_join_s(),
+        })
+        .collect();
+    let model = fit::calibrate(&points, a, b)?;
+    println!("fitted model: {model:#?}");
+    let xs: Vec<f64> = points.iter().map(|p| p.eps).collect();
+    let y1: Vec<f64> = points.iter().map(|p| p.bloom_creation_s).collect();
+    let y2: Vec<f64> = points.iter().map(|p| p.filter_join_s).collect();
+    println!(
+        "R² bloom: {:.4}   R² join: {:.4}",
+        fit::r_squared(|e| model.bloom(e), &xs, &y1),
+        fit::r_squared(|e| model.join(e), &xs, &y2)
+    );
+    if calibrate_only {
+        return Ok(());
+    }
+
+    let opt = newton::optimal_epsilon(&model);
+    println!(
+        "\noptimal ε* = {:.5} (interior: {}, {} newton iterations, predicted total {:.3}s)",
+        opt.eps, opt.interior, opt.iterations, opt.predicted_total_s
+    );
+    let mut q = base.clone();
+    if let JoinStrategy::BloomCascade(ref mut c) = q.strategy {
+        c.fpr = opt.eps;
+    }
+    let m = q.run(&cluster).metrics;
+    println!("validated: measured total at ε* = {:.3}s", m.total_sim_s());
+    Ok(())
+}
+
+fn info() -> anyhow::Result<()> {
+    match bloomjoin::runtime::find_artifacts_dir() {
+        Some(dir) => {
+            println!("artifacts: {}", dir.display());
+            let manifest = bloomjoin::runtime::ArtifactManifest::load(&dir)?;
+            let mut t = Table::new(&["variant", "op", "m_bits", "batch"]);
+            for v in &manifest.variants {
+                t.row(vec![
+                    v.name.clone(),
+                    v.op.clone(),
+                    v.m_bits.to_string(),
+                    v.batch.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            match XlaProbe::load(&manifest) {
+                Ok(p) => println!("PJRT CPU client OK; probe rungs: {:?}", p.rungs()),
+                Err(e) => println!("PJRT load failed: {e}"),
+            }
+        }
+        None => println!("artifacts/ not found — run `make artifacts` (python build step)"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "bloomjoin — Bloom-filtered cascade joins (SBFCJ) on a simulated Spark-like cluster
+
+USAGE: bloomjoin <command> [options]
+
+COMMANDS
+  generate   --sf 0.01 --block-mb 128
+  query      --sf 0.01 --strategy bloom|broadcast|sortmerge --eps 0.05 [--xla] [--driver-side]
+  sweep      --sf 0.01 --runs 69 --eps 0.05           (CSV on stdout — the paper's §6 series)
+  calibrate  --sf 0.01 --runs 16                      (fit the §7 cost model)
+  optimal    --sf 0.01 --runs 16                      (fit + solve ε*, validate)
+  info                                                (artifact/runtime status)
+
+CLUSTER OPTIONS (all commands)
+  --cluster default|grid5000|small|local   --nodes N --executors E --cores C
+  --shuffle-partitions P"
+    );
+}

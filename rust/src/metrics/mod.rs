@@ -1,0 +1,184 @@
+//! Stage/query metrics: what every bench and example reports, and the
+//! features the cost model is fitted on.
+
+use crate::cluster::{Cost, SimDuration};
+use crate::util::fmt::Table;
+use crate::util::Json;
+
+/// One stage's accounting.
+#[derive(Clone, Debug)]
+pub struct StageTiming {
+    pub name: String,
+    pub sim_s: f64,
+    pub wall_s: f64,
+    pub tasks: usize,
+    pub net_bytes: u64,
+    pub disk_bytes: u64,
+    pub cpu_s: f64,
+}
+
+impl StageTiming {
+    pub fn new(name: impl Into<String>, sim: SimDuration) -> Self {
+        StageTiming {
+            name: name.into(),
+            sim_s: sim.seconds(),
+            wall_s: 0.0,
+            tasks: 0,
+            net_bytes: 0,
+            disk_bytes: 0,
+            cpu_s: 0.0,
+        }
+    }
+
+    pub fn with_cost(mut self, cost: &Cost) -> Self {
+        self.net_bytes = cost.net_bytes;
+        self.disk_bytes = cost.disk_bytes;
+        self.cpu_s = cost.cpu_s;
+        self
+    }
+}
+
+/// Whole-query accounting (the paper's two headline stages and friends).
+#[derive(Clone, Debug, Default)]
+pub struct QueryMetrics {
+    pub stages: Vec<StageTiming>,
+    pub output_rows: u64,
+    /// Rows of the big table surviving the bloom filter (model feature).
+    pub big_rows_after_filter: u64,
+    /// Rows of the big table scanned.
+    pub big_rows_scanned: u64,
+    /// Bloom filter size in bits (0 for non-bloom strategies).
+    pub bloom_bits: u64,
+    /// Requested / realized false-positive rates.
+    pub requested_fpr: f64,
+    pub realized_fpr: f64,
+}
+
+impl QueryMetrics {
+    pub fn push(&mut self, s: StageTiming) {
+        self.stages.push(s);
+    }
+
+    pub fn stage(&self, name: &str) -> Option<&StageTiming> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+
+    pub fn total_sim_s(&self) -> f64 {
+        self.stages.iter().map(|s| s.sim_s).sum()
+    }
+
+    pub fn total_wall_s(&self) -> f64 {
+        self.stages.iter().map(|s| s.wall_s).sum()
+    }
+
+    /// The paper's "stage 1": everything before the big-table scan
+    /// (approximate count + distributed filter build + broadcast).
+    pub fn bloom_creation_s(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| matches!(s.name.as_str(), "approx_count" | "bloom_build" | "broadcast"))
+            .map(|s| s.sim_s)
+            .sum()
+    }
+
+    /// The paper's "stage 2": filter + shuffle + sort-merge join + write.
+    pub fn filter_join_s(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| matches!(s.name.as_str(), "filter_scan" | "shuffle" | "join" | "write"))
+            .map(|s| s.sim_s)
+            .sum()
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut t = Table::new(&["stage", "sim time (s)", "wall (s)", "tasks", "net", "disk"]);
+        for s in &self.stages {
+            t.row(vec![
+                s.name.clone(),
+                format!("{:.4}", s.sim_s),
+                format!("{:.4}", s.wall_s),
+                s.tasks.to_string(),
+                crate::util::fmt::bytes(s.net_bytes),
+                crate::util::fmt::bytes(s.disk_bytes),
+            ]);
+        }
+        t.row(vec![
+            "TOTAL".into(),
+            format!("{:.4}", self.total_sim_s()),
+            format!("{:.4}", self.total_wall_s()),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+        t.render()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("output_rows", Json::num(self.output_rows as f64)),
+            ("big_rows_scanned", Json::num(self.big_rows_scanned as f64)),
+            ("big_rows_after_filter", Json::num(self.big_rows_after_filter as f64)),
+            ("bloom_bits", Json::num(self.bloom_bits as f64)),
+            ("requested_fpr", Json::num(self.requested_fpr)),
+            ("realized_fpr", Json::num(self.realized_fpr)),
+            ("bloom_creation_s", Json::num(self.bloom_creation_s())),
+            ("filter_join_s", Json::num(self.filter_join_s())),
+            ("total_sim_s", Json::num(self.total_sim_s())),
+            (
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|s| {
+                            Json::obj([
+                                ("name", Json::str(s.name.clone())),
+                                ("sim_s", Json::num(s.sim_s)),
+                                ("wall_s", Json::num(s.wall_s)),
+                                ("tasks", Json::num(s.tasks as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> QueryMetrics {
+        let mut m = QueryMetrics::default();
+        for (name, t) in
+            [("approx_count", 0.5), ("bloom_build", 1.0), ("broadcast", 0.2), ("filter_scan", 3.0), ("join", 4.0)]
+        {
+            m.push(StageTiming { sim_s: t, ..StageTiming::new(name, SimDuration::ZERO) });
+        }
+        m
+    }
+
+    #[test]
+    fn stage_grouping_matches_paper() {
+        let m = metrics();
+        assert!((m.bloom_creation_s() - 1.7).abs() < 1e-12);
+        assert!((m.filter_join_s() - 7.0).abs() < 1e-12);
+        assert!((m.total_sim_s() - 8.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn markdown_has_all_stages() {
+        let md = metrics().markdown();
+        assert!(md.contains("bloom_build"));
+        assert!(md.contains("TOTAL"));
+        assert_eq!(md.lines().count(), 2 + 5 + 1);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = metrics().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("stages").unwrap().as_arr().unwrap().len(), 5);
+        assert!(parsed.get("bloom_creation_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

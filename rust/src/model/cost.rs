@@ -1,0 +1,114 @@
+//! Parametric stage-time models (paper §7.1–7.2).
+//!
+//! Bloom creation (§7.1.1):
+//!   `bloomCreationTime = K1' · bloomFilterSize + K2'` with
+//!   `bloomFilterSize ≈ n · 1.44 · log2(1/ε)`, which the paper folds into
+//!   `model_bloom(ε) = K1 + K2 · log(1/ε)`.
+//!
+//! Filter + join (§7.1.2):
+//!   `filterAndJoinTime = L1 + L2·ε + Poly(ε)·log(Poly(ε))`,
+//!   `Poly(X) = A·X + B`, where A/B derive from the workload: after
+//!   filtering, each of the P reduce partitions sorts
+//!   `(matched + ε·N_filtrable)/P` records, so `A = N_filtrable/P`,
+//!   `B = N_matched/P`, and the fitted coefficient `C` prices one
+//!   comparison.  We fit (L1, L2, C) linearly with A, B known.
+
+/// The full fitted model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    pub k1: f64,
+    pub k2: f64,
+    pub l1: f64,
+    pub l2: f64,
+    /// comparison-cost coefficient on the n·log n term
+    pub c: f64,
+    /// `A = N_filtrable / P` (records per reduce partition that are
+    /// filterable but survive at rate ε)
+    pub a: f64,
+    /// `B = N_matched / P` (records per reduce partition that always
+    /// survive)
+    pub b: f64,
+}
+
+impl CostModel {
+    /// §7.1.1 bloom-creation model.
+    pub fn bloom(&self, eps: f64) -> f64 {
+        self.k1 + self.k2 * (1.0 / eps).ln()
+    }
+
+    /// §7.1.2 filter+join model.
+    pub fn join(&self, eps: f64) -> f64 {
+        let poly = self.a * eps + self.b;
+        self.l1 + self.l2 * eps + self.c * poly * poly.max(1.0).ln()
+    }
+
+    /// §7.2 total.
+    pub fn total(&self, eps: f64) -> f64 {
+        self.bloom(eps) + self.join(eps)
+    }
+
+    /// d(total)/dε = A·C·(ln(Aε+B)+1) + L2 − K2/ε   (paper §7.2, with the
+    /// fitted C carried through).
+    pub fn d_total(&self, eps: f64) -> f64 {
+        let poly = self.a * eps + self.b;
+        let dsort = if poly > 1.0 { self.c * self.a * (poly.ln() + 1.0) } else { 0.0 };
+        dsort + self.l2 - self.k2 / eps
+    }
+
+    /// The paper's §7.1.1 size formula (bits), pre-pow2-rounding.
+    pub fn filter_bits(n: u64, eps: f64) -> f64 {
+        n as f64 * 1.44 * (1.0 / eps).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel { k1: 1.0, k2: 0.4, l1: 5.0, l2: 8.0, c: 2e-7, a: 1e6, b: 1e4 }
+    }
+
+    #[test]
+    fn bloom_decreasing_in_eps() {
+        let m = model();
+        assert!(m.bloom(0.01) > m.bloom(0.1));
+        assert!(m.bloom(0.1) > m.bloom(0.5));
+    }
+
+    #[test]
+    fn join_increasing_in_eps() {
+        let m = model();
+        assert!(m.join(0.5) > m.join(0.1));
+        assert!(m.join(0.1) > m.join(0.001));
+    }
+
+    #[test]
+    fn total_has_interior_minimum() {
+        let m = model();
+        let ends = m.total(1e-4).min(m.total(0.9));
+        let mid = (1..90).map(|i| m.total(i as f64 / 100.0)).fold(f64::MAX, f64::min);
+        assert!(mid < ends, "interior {mid} vs ends {ends}");
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let m = model();
+        for eps in [0.01, 0.05, 0.2, 0.7] {
+            let h = 1e-7;
+            let fd = (m.total(eps + h) - m.total(eps - h)) / (2.0 * h);
+            let an = m.d_total(eps);
+            assert!(
+                (fd - an).abs() < 1e-3 * (1.0 + an.abs()),
+                "eps {eps}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn filter_bits_formula() {
+        // n=1e6, eps=0.01: 1.44e6 * log2(100) ≈ 9.57e6
+        let bits = CostModel::filter_bits(1_000_000, 0.01);
+        assert!((bits - 9.566e6).abs() / 9.566e6 < 1e-3, "{bits}");
+    }
+}

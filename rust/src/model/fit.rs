@@ -1,0 +1,185 @@
+//! Linear least squares via normal equations + Gaussian elimination with
+//! partial pivoting — enough to calibrate both stage models (≤3 features)
+//! from sweep observations, as the paper did in its analysis notebook.
+
+use super::cost::CostModel;
+
+#[derive(Debug, thiserror::Error)]
+pub enum FitError {
+    #[error("need at least {needed} samples, got {got}")]
+    TooFewSamples { needed: usize, got: usize },
+    #[error("singular normal matrix (features collinear)")]
+    Singular,
+}
+
+/// Solve `min ‖X·β − y‖²`; `rows[i]` is the feature vector of sample i.
+pub fn fit_linear(rows: &[Vec<f64>], y: &[f64]) -> Result<Vec<f64>, FitError> {
+    let n = rows.len();
+    let p = rows.first().map(Vec::len).unwrap_or(0);
+    if n < p || p == 0 {
+        return Err(FitError::TooFewSamples { needed: p.max(1), got: n });
+    }
+    // normal equations: (XᵀX) β = Xᵀy
+    let mut ata = vec![vec![0.0; p]; p];
+    let mut aty = vec![0.0; p];
+    for (row, &yi) in rows.iter().zip(y) {
+        debug_assert_eq!(row.len(), p);
+        for i in 0..p {
+            aty[i] += row[i] * yi;
+            for j in 0..p {
+                ata[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    solve(ata, aty)
+}
+
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>, FitError> {
+    let n = b.len();
+    for col in 0..n {
+        // partial pivot
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        if a[pivot][col].abs() < 1e-12 {
+            return Err(FitError::Singular);
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut s = b[row];
+        for k in row + 1..n {
+            s -= a[row][k] * x[k];
+        }
+        x[row] = s / a[row][row];
+    }
+    Ok(x)
+}
+
+/// Observations from one sweep run, in the model's coordinates.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub eps: f64,
+    pub bloom_creation_s: f64,
+    pub filter_join_s: f64,
+}
+
+/// Calibrate the full [`CostModel`] from sweep observations.
+///
+/// `a`/`b` are workload-derived (`N_filtrable/P`, `N_matched/P`); the
+/// remaining five parameters are fitted with two independent linear
+/// regressions:
+///   stage1 ~ 1 + ln(1/ε)                       → K1, K2
+///   stage2 ~ 1 + ε + (Aε+B)·ln(Aε+B)           → L1, L2, C
+pub fn calibrate(points: &[SweepPoint], a: f64, b: f64) -> Result<CostModel, FitError> {
+    let x1: Vec<Vec<f64>> =
+        points.iter().map(|p| vec![1.0, (1.0 / p.eps).ln()]).collect();
+    let y1: Vec<f64> = points.iter().map(|p| p.bloom_creation_s).collect();
+    let beta1 = fit_linear(&x1, &y1)?;
+
+    let x2: Vec<Vec<f64>> = points
+        .iter()
+        .map(|p| {
+            let poly = a * p.eps + b;
+            vec![1.0, p.eps, poly * poly.max(1.0).ln()]
+        })
+        .collect();
+    let y2: Vec<f64> = points.iter().map(|p| p.filter_join_s).collect();
+    let beta2 = fit_linear(&x2, &y2)?;
+
+    Ok(CostModel {
+        k1: beta1[0],
+        k2: beta1[1],
+        l1: beta2[0],
+        l2: beta2[1],
+        c: beta2[2],
+        a,
+        b,
+    })
+}
+
+/// R² of a fitted model against observations (reported in EXPERIMENTS.md).
+pub fn r_squared(pred: impl Fn(f64) -> f64, xs: &[f64], ys: &[f64]) -> f64 {
+    let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+    let ss_tot: f64 = ys.iter().map(|y| (y - mean).powi(2)).sum();
+    let ss_res: f64 = xs.iter().zip(ys).map(|(&x, &y)| (y - pred(x)).powi(2)).sum();
+    if ss_tot == 0.0 {
+        return 1.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn recovers_exact_linear_coefficients() {
+        let rows: Vec<Vec<f64>> =
+            (0..20).map(|i| vec![1.0, i as f64, (i * i) as f64]).collect();
+        let y: Vec<f64> = rows.iter().map(|r| 3.0 + 2.0 * r[1] - 0.5 * r[2]).collect();
+        let beta = fit_linear(&rows, &y).unwrap();
+        assert!((beta[0] - 3.0).abs() < 1e-9);
+        assert!((beta[1] - 2.0).abs() < 1e-9);
+        assert!((beta[2] + 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_fit_close() {
+        let mut rng = Rng::new(8);
+        let rows: Vec<Vec<f64>> = (0..200).map(|i| vec![1.0, i as f64 / 10.0]).collect();
+        let y: Vec<f64> =
+            rows.iter().map(|r| 1.5 + 0.7 * r[1] + (rng.f64() - 0.5) * 0.01).collect();
+        let beta = fit_linear(&rows, &y).unwrap();
+        assert!((beta[0] - 1.5).abs() < 0.01);
+        assert!((beta[1] - 0.7).abs() < 0.01);
+    }
+
+    #[test]
+    fn rejects_underdetermined_and_singular() {
+        assert!(matches!(
+            fit_linear(&[vec![1.0, 2.0]], &[1.0]),
+            Err(FitError::TooFewSamples { .. })
+        ));
+        let rows = vec![vec![1.0, 2.0], vec![2.0, 4.0], vec![3.0, 6.0]];
+        assert!(matches!(fit_linear(&rows, &[1.0, 2.0, 3.0]), Err(FitError::Singular)));
+    }
+
+    #[test]
+    fn calibration_recovers_synthetic_model() {
+        let truth = CostModel { k1: 0.8, k2: 0.3, l1: 4.0, l2: 6.0, c: 3e-7, a: 5e5, b: 2e4 };
+        let mut rng = Rng::new(9);
+        let points: Vec<SweepPoint> = (0..69)
+            .map(|i| {
+                let eps = 10f64.powf(-4.0 + 4.0 * i as f64 / 68.0).min(0.9);
+                SweepPoint {
+                    eps,
+                    bloom_creation_s: truth.bloom(eps) * (1.0 + 0.01 * (rng.f64() - 0.5)),
+                    filter_join_s: truth.join(eps) * (1.0 + 0.01 * (rng.f64() - 0.5)),
+                }
+            })
+            .collect();
+        let fitted = calibrate(&points, truth.a, truth.b).unwrap();
+        assert!((fitted.k2 - truth.k2).abs() / truth.k2 < 0.05, "{fitted:?}");
+        assert!((fitted.l1 - truth.l1).abs() / truth.l1 < 0.10, "{fitted:?}");
+        assert!((fitted.c - truth.c).abs() / truth.c < 0.10, "{fitted:?}");
+    }
+
+    #[test]
+    fn r_squared_perfect_and_poor() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((r_squared(|x| 2.0 * x, &xs, &ys) - 1.0).abs() < 1e-12);
+        assert!(r_squared(|_| 0.0, &xs, &ys) < 0.0);
+    }
+}

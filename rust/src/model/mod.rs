@@ -1,0 +1,19 @@
+//! The paper's cost model (§7): fitted stage-time models and the
+//! optimal-ε solver.
+//!
+//! * [`cost`] — the parametric forms:
+//!   `model_bloom(ε) = K1 + K2·log(1/ε)` and
+//!   `model_join(ε) = L1 + L2·ε + C·(Aε+B)·log(Aε+B)`;
+//! * [`fit`] — linear least squares (normal equations) used to calibrate
+//!   the parameters from sweep observations;
+//! * [`newton`] — the §7.2 root-finder for `d(model_total)/dε = 0`,
+//!   Newton's method with a bisection fallback, run on the driver while
+//!   the approximate count executes.
+
+pub mod cost;
+pub mod fit;
+pub mod newton;
+
+pub use cost::CostModel;
+pub use fit::{fit_linear, FitError};
+pub use newton::optimal_epsilon;

@@ -1,0 +1,148 @@
+//! Optimal-ε solver (paper §7.2): find the root of
+//! `d(model_total)/dε = A·C·(ln(Aε+B)+1) + L2 − K2/ε = 0` on (0, 1].
+//!
+//! The paper notes the symbolic solution is impossible and suggests
+//! Newton's method on the driver, concurrent with the approximate-count
+//! job.  Newton can overshoot out of (0,1] from bad starts, so each step
+//! falls back to bisection on a maintained bracket — guaranteed
+//! convergence when the derivative changes sign, and a boundary answer
+//! (ε→min or max) when it does not (e.g. K2 so small that bigger filters
+//! are never worth it).
+
+use super::cost::CostModel;
+
+/// Search domain: realised FPRs outside this range are not practical.
+pub const EPS_MIN: f64 = 1e-6;
+pub const EPS_MAX: f64 = 0.999;
+
+/// Result of the optimisation.
+#[derive(Clone, Copy, Debug)]
+pub struct Optimum {
+    pub eps: f64,
+    pub predicted_total_s: f64,
+    pub iterations: u32,
+    /// true if the optimum is interior (derivative root), false if the
+    /// model is monotone and the boundary wins.
+    pub interior: bool,
+}
+
+/// Second derivative of the total model (for Newton steps).
+fn d2_total(m: &CostModel, eps: f64) -> f64 {
+    let poly = m.a * eps + m.b;
+    let dsort2 = if poly > 1.0 { m.c * m.a * m.a / poly } else { 0.0 };
+    dsort2 + m.k2 / (eps * eps)
+}
+
+/// Find the ε minimising `model.total` on [EPS_MIN, EPS_MAX].
+pub fn optimal_epsilon(model: &CostModel) -> Optimum {
+    let f = |e: f64| model.d_total(e);
+
+    // bracket the root
+    let (mut lo, mut hi) = (EPS_MIN, EPS_MAX);
+    let (flo, fhi) = (f(lo), f(hi));
+    if flo >= 0.0 && fhi >= 0.0 {
+        // derivative non-negative everywhere: cost increasing ⇒ smallest ε…
+        // except the bloom term's −K2/ε should dominate at small ε; this
+        // branch means filters are effectively free — pick the boundary.
+        return boundary(model, lo);
+    }
+    if flo <= 0.0 && fhi <= 0.0 {
+        return boundary(model, hi);
+    }
+
+    // Newton with bisection fallback
+    let mut x = (lo * hi).sqrt(); // geometric midpoint suits the log scale
+    let mut iterations = 0;
+    for _ in 0..100 {
+        iterations += 1;
+        let fx = f(x);
+        if fx.abs() < 1e-10 {
+            break;
+        }
+        // maintain bracket (d_total is increasing: negative left of root)
+        if fx < 0.0 {
+            lo = x;
+        } else {
+            hi = x;
+        }
+        let step = fx / d2_total(model, x);
+        let newton = x - step;
+        x = if newton > lo && newton < hi { newton } else { (lo * hi).sqrt() };
+        if (hi - lo) / x < 1e-12 {
+            break;
+        }
+    }
+    Optimum {
+        eps: x,
+        predicted_total_s: model.total(x),
+        iterations,
+        interior: true,
+    }
+}
+
+fn boundary(model: &CostModel, eps: f64) -> Optimum {
+    Optimum { eps, predicted_total_s: model.total(eps), iterations: 0, interior: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel { k1: 1.0, k2: 0.4, l1: 5.0, l2: 8.0, c: 2e-7, a: 1e6, b: 1e4 }
+    }
+
+    #[test]
+    fn finds_interior_optimum() {
+        let m = model();
+        let opt = optimal_epsilon(&m);
+        assert!(opt.interior);
+        assert!(opt.eps > 1e-4 && opt.eps < 0.5, "eps {}", opt.eps);
+        // verify minimality against a dense grid
+        let grid_best = (1..1000)
+            .map(|i| i as f64 * 1e-3)
+            .map(|e| m.total(e))
+            .fold(f64::MAX, f64::min);
+        assert!(opt.predicted_total_s <= grid_best + 1e-6);
+    }
+
+    #[test]
+    fn root_of_derivative() {
+        let m = model();
+        let opt = optimal_epsilon(&m);
+        assert!(m.d_total(opt.eps).abs() < 1e-6, "residual {}", m.d_total(opt.eps));
+    }
+
+    #[test]
+    fn free_filters_push_eps_down() {
+        // huge K2 (expensive filters) vs tiny K2 (cheap filters)
+        let cheap = CostModel { k2: 1e-4, ..model() };
+        let costly = CostModel { k2: 10.0, ..model() };
+        let e_cheap = optimal_epsilon(&cheap).eps;
+        let e_costly = optimal_epsilon(&costly).eps;
+        assert!(e_cheap < e_costly, "{e_cheap} vs {e_costly}");
+    }
+
+    #[test]
+    fn monotone_model_hits_boundary() {
+        // no bloom cost at all: always prefer the tightest filter
+        let m = CostModel { k2: 0.0, ..model() };
+        let opt = optimal_epsilon(&m);
+        assert!(!opt.interior);
+        assert!(opt.eps <= EPS_MIN * 1.0001);
+    }
+
+    #[test]
+    fn bigger_big_table_lowers_optimal_eps() {
+        // more filterable rows (larger A) = more value per filter bit
+        let small_big = CostModel { a: 1e5, ..model() };
+        let large_big = CostModel { a: 1e8, ..model() };
+        assert!(optimal_epsilon(&large_big).eps < optimal_epsilon(&small_big).eps);
+    }
+
+    #[test]
+    fn converges_fast() {
+        let opt = optimal_epsilon(&model());
+        assert!(opt.iterations < 60, "{} iterations", opt.iterations);
+    }
+}

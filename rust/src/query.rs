@@ -1,0 +1,403 @@
+//! The paper's query, end to end (§2):
+//!
+//! ```sql
+//! SELECT BIG.attr1, SMALL.attr2
+//! FROM   LINEITEM BIG INNER JOIN ORDERS SMALL
+//!        ON BIG.l_orderkey = SMALL.o_orderkey
+//! WHERE  cond1(BIG.l_shipdate) AND cond2(SMALL.o_orderdate)
+//! ```
+//!
+//! [`JoinQuery`] generates the TPC-H inputs, applies the WHERE clauses as
+//! fused scan pipelines (column-pruned projections, like Spark's codegen
+//! would), and dispatches one of the three [`JoinStrategy`]s.  Everything
+//! benches and examples run goes through here.
+
+use std::sync::Arc;
+
+use crate::cluster::shuffle::{repartition, ShuffleCodec};
+use crate::cluster::{broadcast, Cluster, Cost, SimDuration, Stage, Task};
+use crate::dataset::{Op, PartitionedTable, Pipeline};
+use crate::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
+use crate::joins::broadcast_hash::{broadcast_bytes, build_hash_table, probe_partition};
+use crate::joins::sort_merge::sort_merge_join_partition;
+use crate::joins::{JoinedRow, Keyed, RowSize};
+use crate::metrics::{QueryMetrics, StageTiming};
+use crate::tpch::{GenConfig, Lineitem, Order, TpchGenerator, ORDERDATE_RANGE_DAYS};
+
+/// Projected big-side payload: `l_extendedprice_cents` (BIG.attr1).
+pub type BigRow = i64;
+/// Projected small-side payload: `o_orderdate` (SMALL.attr2).
+pub type SmallRow = i32;
+
+impl RowSize for i64 {
+    fn row_bytes(&self) -> u64 {
+        8
+    }
+}
+
+impl RowSize for i32 {
+    fn row_bytes(&self) -> u64 {
+        4
+    }
+}
+
+/// Which join algorithm runs step 5.
+#[derive(Clone, Debug)]
+pub enum JoinStrategy {
+    /// The paper's contribution (SBFCJ).
+    BloomCascade(BloomCascadeConfig),
+    /// Spark's broadcast hash join (SBJ).
+    BroadcastHash,
+    /// Plain shuffle + sort-merge join (Spark's large-large default).
+    SortMerge,
+}
+
+/// The paper's parameterised query.
+#[derive(Clone, Debug)]
+pub struct JoinQuery {
+    /// TPC-H scale factor.
+    pub sf: f64,
+    pub seed: u64,
+    pub partitions: usize,
+    /// cond2: keep orders with `o_orderdate ∈ [lo, hi)` — its width sets
+    /// the small table's selectivity (and therefore n).
+    pub order_date_window: (i32, i32),
+    /// cond1: keep lineitems with `l_shipdate < max` (selectivity of the
+    /// big-table WHERE).
+    pub ship_date_max: i32,
+    pub strategy: JoinStrategy,
+}
+
+impl Default for JoinQuery {
+    fn default() -> Self {
+        JoinQuery {
+            sf: 0.01,
+            seed: 0xB100_F117,
+            partitions: 16,
+            // ~10 % of the order-date range
+            order_date_window: (400, 400 + ORDERDATE_RANGE_DAYS / 10),
+            ship_date_max: ORDERDATE_RANGE_DAYS + 121,
+            strategy: JoinStrategy::BloomCascade(BloomCascadeConfig::default()),
+        }
+    }
+}
+
+/// Query result + accounting.
+pub struct QueryOutput {
+    /// (orderkey, BIG.attr1, SMALL.attr2) rows.
+    pub rows: Vec<JoinedRow<BigRow, SmallRow>>,
+    pub metrics: QueryMetrics,
+}
+
+impl JoinQuery {
+    /// Generate inputs, apply WHERE clauses, run the chosen strategy.
+    pub fn run(&self, cluster: &Cluster) -> QueryOutput {
+        let (big, small) = self.prepare_inputs();
+        self.run_on(cluster, big, small)
+    }
+
+    /// Run on pre-prepared inputs — what sweeps use so the (expensive)
+    /// TPC-H generation happens once per series, not once per ε.
+    pub fn run_on(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<BigRow>>,
+        small: PartitionedTable<Keyed<SmallRow>>,
+    ) -> QueryOutput {
+        match &self.strategy {
+            JoinStrategy::BloomCascade(cfg) => {
+                let join = BloomCascadeJoin::new(cfg.clone());
+                let (rows, metrics) = join.execute(cluster, big, small);
+                QueryOutput { rows, metrics }
+            }
+            JoinStrategy::BroadcastHash => self.run_broadcast_hash(cluster, big, small),
+            JoinStrategy::SortMerge => self.run_sort_merge(cluster, big, small),
+        }
+    }
+
+    /// ε-sweep with shared inputs: run the bloom-cascade join at each ε
+    /// and return the (ε, stage1, stage2) observations the cost model is
+    /// fitted on (the paper's §6 experiment series).
+    pub fn sweep_epsilon(
+        &self,
+        cluster: &Cluster,
+        epsilons: &[f64],
+    ) -> Vec<(f64, crate::metrics::QueryMetrics)> {
+        let (big, small) = self.prepare_inputs();
+        epsilons
+            .iter()
+            .map(|&eps| {
+                let cfg = match &self.strategy {
+                    JoinStrategy::BloomCascade(c) => {
+                        BloomCascadeConfig { fpr: eps, ..c.clone() }
+                    }
+                    _ => BloomCascadeConfig { fpr: eps, ..Default::default() },
+                };
+                let q = JoinQuery {
+                    strategy: JoinStrategy::BloomCascade(cfg),
+                    ..self.clone()
+                };
+                (eps, q.run_on(cluster, big.clone(), small.clone()).metrics)
+            })
+            .collect()
+    }
+
+    /// Log-spaced ε series in [1e-4, 0.9] (the paper swept 69 points).
+    pub fn epsilon_series(n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                let t = i as f64 / (n - 1).max(1) as f64;
+                1e-4f64.powf(1.0 - t) * 0.9f64.powf(t)
+            })
+            .collect()
+    }
+
+    /// Generate + filter + project both sides (the fused scan every
+    /// strategy shares; its cost is charged inside each strategy's scan
+    /// stage, so strategies stay comparable).
+    pub fn prepare_inputs(
+        &self,
+    ) -> (PartitionedTable<Keyed<BigRow>>, PartitionedTable<Keyed<SmallRow>>) {
+        let gen = TpchGenerator::new(GenConfig {
+            sf: self.sf,
+            seed: self.seed,
+            partitions: self.partitions,
+            ..Default::default()
+        });
+        let (date_lo, date_hi) = self.order_date_window;
+        let ship_max = self.ship_date_max;
+
+        let small_pipe: Pipeline<Order> = Pipeline::new()
+            .then(Op::filter(move |o: &Order| o.o_orderdate >= date_lo && o.o_orderdate < date_hi));
+        let small = PartitionedTable::from_partitions(gen.orders())
+            .map_partitions(|p| small_pipe.run_fused(p))
+            .map_partitions(|p| {
+                p.into_iter().map(|o| (o.o_orderkey, o.o_orderdate)).collect()
+            });
+
+        let big_pipe: Pipeline<Lineitem> =
+            Pipeline::new().then(Op::filter(move |l: &Lineitem| l.l_shipdate < ship_max));
+        let big = PartitionedTable::from_partitions(gen.lineitems())
+            .map_partitions(|p| big_pipe.run_fused(p))
+            .map_partitions(|p| {
+                p.into_iter().map(|l| (l.l_orderkey, l.l_extendedprice_cents)).collect()
+            });
+
+        (big, small)
+    }
+
+    fn run_broadcast_hash(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<BigRow>>,
+        small: PartitionedTable<Keyed<SmallRow>>,
+    ) -> QueryOutput {
+        let cfg = cluster.config().clone();
+        let mut metrics = QueryMetrics::default();
+        metrics.big_rows_scanned = big.n_rows() as u64;
+
+        // collect small table to driver, broadcast to all executors
+        let small_rows: Vec<Keyed<SmallRow>> = small.into_rows();
+        let payload = broadcast_bytes(&small_rows);
+        let collect = broadcast::driver_collect_cost(&cfg, payload);
+        let bc = broadcast::p2p_broadcast_cost(&cfg, payload);
+        metrics.push(StageTiming::new("broadcast", collect + bc).with_cost(&Cost {
+            net_bytes: payload * (cfg.total_executors() as u64 + 1),
+            ..Default::default()
+        }));
+
+        // every executor builds the hash table from the broadcast payload
+        // once; modeled at merge_record_cost per row (spread over slots as
+        // one warm-up task per executor is approximated by adding it to
+        // each scan task's first-touch cost share)
+        let table = Arc::new(build_hash_table(&small_rows));
+        let table_build_cpu = small_rows.len() as f64 * cfg.merge_record_cost;
+        let n_nodes = cfg.n_nodes;
+        let n_tasks_total = big.n_partitions().max(1);
+        let tasks: Vec<Task<Vec<JoinedRow<BigRow, SmallRow>>>> = big
+            .into_partitions()
+            .into_iter()
+            .enumerate()
+            .map(|(p, part)| {
+                let table = Arc::clone(&table);
+                let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
+                let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
+                // modeled JVM scan + hash-probe cost (see ClusterConfig)
+                let cpu_s = part.len() as f64 * cfg.scan_record_cost
+                    + table_build_cpu / n_tasks_total as f64;
+                let merge_c = cfg.merge_record_cost;
+                Task::new(move || {
+                    let out = probe_partition(&part, &table);
+                    let cpu_s = cpu_s + out.len() as f64 * merge_c;
+                    (out, Cost { cpu_s, disk_s, disk_bytes, ..Default::default() })
+                })
+                .with_locality(p % n_nodes)
+            })
+            .collect();
+        let scan = cluster.run_stage(Stage::new("join", tasks));
+        let rows: Vec<_> = scan.outputs.into_iter().flatten().collect();
+        metrics.push(StageTiming {
+            tasks: scan.n_tasks,
+            wall_s: scan.wall_time.seconds(),
+            cpu_s: scan.total_cost.cpu_s,
+            disk_bytes: scan.total_cost.disk_bytes,
+            ..StageTiming::new("join", scan.sim_time)
+        });
+        metrics.output_rows = rows.len() as u64;
+        metrics.big_rows_after_filter = metrics.big_rows_scanned; // no pre-filter
+        QueryOutput { rows, metrics }
+    }
+
+    fn run_sort_merge(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<BigRow>>,
+        small: PartitionedTable<Keyed<SmallRow>>,
+    ) -> QueryOutput {
+        let cfg = cluster.config().clone();
+        let mut metrics = QueryMetrics::default();
+        metrics.big_rows_scanned = big.n_rows() as u64;
+        metrics.big_rows_after_filter = metrics.big_rows_scanned;
+
+        // scan stage: read both tables (disk + modeled per-record scan
+        // cpu spread over the cluster; WHERE already fused)
+        let scan_bytes: u64 = big.ser_bytes(|(_, b)| 8 + b.row_bytes())
+            + small.ser_bytes(|(_, s)| 8 + s.row_bytes());
+        let scan_cpu = (big.n_rows() + small.n_rows()) as f64 * cfg.scan_record_cost
+            / cfg.total_slots().max(1) as f64;
+        metrics.push(
+            StageTiming::new(
+                "filter_scan",
+                SimDuration::from_secs(
+                    cfg.disk_seconds(scan_bytes / cfg.n_nodes.max(1) as u64)
+                        + scan_cpu
+                        + cfg.stage_overhead,
+                ),
+            )
+            .with_cost(&Cost { disk_bytes: scan_bytes, cpu_s: scan_cpu, ..Default::default() }),
+        );
+
+        let n_shuffle = cfg.shuffle_partitions;
+        let (big_buckets, big_vol) =
+            repartition(big.into_partitions(), n_shuffle, |b: &BigRow| b.row_bytes());
+        let (small_buckets, small_vol) =
+            repartition(small.into_partitions(), n_shuffle, |s: &SmallRow| s.row_bytes());
+        let mut ex = big_vol.exchange_cost(&cfg, ShuffleCodec::Tungsten);
+        ex.merge(&small_vol.exchange_cost(&cfg, ShuffleCodec::Tungsten));
+        metrics.push(
+            StageTiming {
+                tasks: n_shuffle,
+                ..StageTiming::new(
+                    "shuffle",
+                    SimDuration::from_secs(ex.total_seconds(cfg.cpu_scale)),
+                )
+            }
+            .with_cost(&ex),
+        );
+
+        let tasks: Vec<Task<Vec<JoinedRow<BigRow, SmallRow>>>> = big_buckets
+            .into_iter()
+            .zip(small_buckets)
+            .map(|(b, s)| {
+                let sort_c = cfg.sort_compare_cost;
+                let merge_c = cfg.merge_record_cost;
+                let disk_bw = cfg.disk_bandwidth;
+                Task::new(move || {
+                    let nlogn = |n: usize| {
+                        if n < 2 { n as f64 } else { n as f64 * (n as f64).log2() }
+                    };
+                    let cpu_s = sort_c * (nlogn(b.len()) + nlogn(s.len()))
+                        + merge_c * (b.len() + s.len()) as f64;
+                    let out = sort_merge_join_partition(b, s);
+                    let cpu_s = cpu_s + merge_c * out.len() as f64;
+                    let bytes: u64 = out.len() as u64 * 20;
+                    (out, Cost { cpu_s, disk_s: bytes as f64 / disk_bw, disk_bytes: bytes, ..Default::default() })
+                })
+            })
+            .collect();
+        let join = cluster.run_stage(Stage::new("join", tasks));
+        let rows: Vec<_> = join.outputs.into_iter().flatten().collect();
+        metrics.push(StageTiming {
+            tasks: join.n_tasks,
+            wall_s: join.wall_time.seconds(),
+            cpu_s: join.total_cost.cpu_s,
+            disk_bytes: join.total_cost.disk_bytes,
+            ..StageTiming::new("join", join.sim_time)
+        });
+        metrics.output_rows = rows.len() as u64;
+        QueryOutput { rows, metrics }
+    }
+
+    /// Workload features the cost model needs: `(N_filtrable/P, N_matched/P)`.
+    pub fn model_ab(&self, cluster: &Cluster) -> (f64, f64) {
+        let (big, small) = self.prepare_inputs();
+        let keys: std::collections::HashSet<u64> = small.iter().map(|(k, _)| *k).collect();
+        let matched = big.iter().filter(|(k, _)| keys.contains(k)).count() as f64;
+        let filtrable = big.n_rows() as f64 - matched;
+        let p = cluster.config().shuffle_partitions.max(1) as f64;
+        (filtrable / p, matched / p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn tiny_query(strategy: JoinStrategy) -> JoinQuery {
+        JoinQuery { sf: 0.002, partitions: 4, strategy, ..Default::default() }
+    }
+
+    fn run(strategy: JoinStrategy) -> QueryOutput {
+        let cluster = Cluster::new(ClusterConfig::local());
+        tiny_query(strategy).run(&cluster)
+    }
+
+    #[test]
+    fn all_three_strategies_agree() {
+        let mut bloom = run(JoinStrategy::BloomCascade(BloomCascadeConfig::default())).rows;
+        let mut hash = run(JoinStrategy::BroadcastHash).rows;
+        let mut smj = run(JoinStrategy::SortMerge).rows;
+        bloom.sort_unstable();
+        hash.sort_unstable();
+        smj.sort_unstable();
+        assert!(!bloom.is_empty(), "query returned nothing; widen the window");
+        assert_eq!(bloom, hash);
+        assert_eq!(bloom, smj);
+    }
+
+    #[test]
+    fn join_respects_where_clauses() {
+        let out = run(JoinStrategy::BroadcastHash);
+        let q = tiny_query(JoinStrategy::BroadcastHash);
+        let (lo, hi) = q.order_date_window;
+        for (_, _, orderdate) in &out.rows {
+            assert!(*orderdate >= lo && *orderdate < hi);
+        }
+    }
+
+    #[test]
+    fn bloom_filters_most_nonmatching_rows() {
+        let out = run(JoinStrategy::BloomCascade(BloomCascadeConfig {
+            fpr: 0.01,
+            ..Default::default()
+        }));
+        let m = &out.metrics;
+        // window is ~10% of dates: ~90% of lineitems are filterable
+        assert!(m.big_rows_after_filter < m.big_rows_scanned / 3);
+        // and nothing the join needed was lost
+        assert_eq!(
+            out.rows.len() as u64,
+            run(JoinStrategy::SortMerge).metrics.output_rows
+        );
+    }
+
+    #[test]
+    fn model_ab_positive() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (a, b) = tiny_query(JoinStrategy::SortMerge).model_ab(&cluster);
+        assert!(a > 0.0);
+        assert!(b > 0.0);
+        assert!(a > b, "most rows are filterable in this workload");
+    }
+}

@@ -1,0 +1,149 @@
+//! Artifact manifest: what `python/compile/aot.py` exported.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// One AOT variant (mirrors the manifest entries).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    pub name: String,
+    pub op: String, // "probe" | "build"
+    pub m_bits: u64,
+    pub n_words: u64,
+    pub batch: u64,
+    pub file: PathBuf,
+}
+
+/// Parsed manifest + artifact directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub variants: Vec<Variant>,
+    pub block_keys: u64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error("manifest missing field {0}")]
+    Missing(&'static str),
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<Self, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| ManifestError::Io(path.clone(), e))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self, ManifestError> {
+        let json = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let block_keys =
+            json.get("block_keys").and_then(Json::as_u64).unwrap_or(1024);
+        let arr = json
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or(ManifestError::Missing("variants"))?;
+        let mut variants = Vec::with_capacity(arr.len());
+        for v in arr {
+            let get_str = |k: &'static str| {
+                v.get(k).and_then(Json::as_str).ok_or(ManifestError::Missing(k))
+            };
+            let get_u64 = |k: &'static str| {
+                v.get(k).and_then(Json::as_u64).ok_or(ManifestError::Missing(k))
+            };
+            variants.push(Variant {
+                name: get_str("name")?.to_string(),
+                op: get_str("op")?.to_string(),
+                m_bits: get_u64("m_bits")?,
+                n_words: get_u64("n_words")?,
+                batch: get_u64("batch")?,
+                file: dir.join(get_str("file")?),
+            });
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), variants, block_keys })
+    }
+
+    /// The probe variant matching `m_bits` exactly (hash positions depend
+    /// on m, so only exact matches are usable).
+    pub fn probe_variant(&self, m_bits: u64) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.op == "probe" && v.m_bits == m_bits)
+    }
+
+    pub fn build_variant(&self, m_bits: u64) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.op == "build" && v.m_bits == m_bits)
+    }
+
+    /// Smallest probe rung ≥ `bits` (what the sizing step rounds up to so
+    /// the XLA path is usable).
+    pub fn probe_rung_for(&self, bits: f64) -> Option<u64> {
+        self.variants
+            .iter()
+            .filter(|v| v.op == "probe" && v.m_bits as f64 >= bits)
+            .map(|v| v.m_bits)
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text/return-tuple-1",
+      "block_keys": 1024,
+      "variants": [
+        {"name": "probe_m17_b8192", "op": "probe", "log2_m": 17, "m_bits": 131072,
+         "n_words": 4096, "batch": 8192, "file": "probe_m17_b8192.hlo.txt", "sha256": "x"},
+        {"name": "probe_m19_b8192", "op": "probe", "log2_m": 19, "m_bits": 524288,
+         "n_words": 16384, "batch": 8192, "file": "probe_m19_b8192.hlo.txt", "sha256": "x"},
+        {"name": "build_m17_b8192", "op": "build", "log2_m": 17, "m_bits": 131072,
+         "n_words": 4096, "batch": 8192, "file": "build_m17_b8192.hlo.txt", "sha256": "x"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 3);
+        assert_eq!(m.block_keys, 1024);
+        assert_eq!(m.variants[0].file, PathBuf::from("/tmp/a/probe_m17_b8192.hlo.txt"));
+    }
+
+    #[test]
+    fn variant_selection() {
+        let m = ArtifactManifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert!(m.probe_variant(131072).is_some());
+        assert!(m.probe_variant(1 << 20).is_none());
+        assert_eq!(m.probe_rung_for(200_000.0), Some(524288));
+        assert_eq!(m.probe_rung_for(1e9), None);
+        assert!(m.build_variant(131072).is_some());
+        assert!(m.build_variant(524288).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse(Path::new("."), "{}").is_err());
+        assert!(ArtifactManifest::parse(Path::new("."), "not json").is_err());
+        assert!(
+            ArtifactManifest::parse(Path::new("."), r#"{"variants": [{"name": "x"}]}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn loads_real_artifacts_when_present() {
+        if let Some(dir) = crate::runtime::find_artifacts_dir() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.variants.iter().any(|v| v.op == "probe"));
+            for v in &m.variants {
+                assert!(v.file.exists(), "{:?} missing", v.file);
+                assert_eq!(v.n_words * 32, v.m_bits);
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! PJRT runtime: load the AOT artifacts `python/compile/aot.py` produced
+//! (HLO text + manifest) and run them on the request path.
+//!
+//! Python never executes at query time: `make artifacts` is the single
+//! build-time python step, and this module turns its output into compiled
+//! PJRT executables via the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`).
+//!
+//! * [`artifacts`] — manifest parsing + filter-size-ladder variant
+//!   selection;
+//! * [`probe`] — [`probe::XlaProbe`], a [`BatchProbe`] running the Pallas
+//!   bloom-probe kernel; falls back to the native probe for filter sizes
+//!   off the ladder (results are bit-identical either way — same hash
+//!   algebra, pinned by golden vectors).
+//!
+//! [`BatchProbe`]: crate::joins::bloom_cascade::BatchProbe
+
+pub mod artifacts;
+pub mod probe;
+
+pub use artifacts::{ArtifactManifest, Variant};
+pub use probe::XlaProbe;
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts dir from the current working directory or its
+/// parents (tests and benches run from target subdirs).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(env) = std::env::var("BLOOMJOIN_ARTIFACTS") {
+        let p = std::path::PathBuf::from(env);
+        return p.join("manifest.json").exists().then_some(p);
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let candidate = dir.join(DEFAULT_ARTIFACTS_DIR);
+        if candidate.join("manifest.json").exists() {
+            return Some(candidate);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! The XLA probe path: execute the AOT-compiled Pallas bloom-probe kernel
+//! from the join's hot loop.
+//!
+//! PJRT handles in the `xla` crate are `Rc`-based (not `Send`), so the
+//! client and every compiled executable live on a dedicated **XLA server
+//! thread**; [`XlaProbe`] is a `Send + Sync` handle that ships probe
+//! requests over a channel and blocks on the response.  This also
+//! serialises device access, which is what PJRT's CPU client wants.
+//!
+//! Request path per batch: fold keys to u32, pad to the kernel batch,
+//! execute, unpack the i32 mask.  Filters whose size is off the artifact
+//! ladder fall back to the native probe — identical results either way
+//! (shared hash algebra, pinned by golden vectors).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::bloom::hash::fold64;
+use crate::bloom::BloomFilter;
+use crate::joins::bloom_cascade::BatchProbe;
+
+use super::artifacts::ArtifactManifest;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("artifact error: {0}")]
+    Artifacts(#[from] super::artifacts::ManifestError),
+    #[error("xla server thread died")]
+    ServerGone,
+}
+
+struct ProbeRequest {
+    folded_keys: Vec<u32>, // already padded to the variant batch
+    m_bits: u64,
+    words: Vec<u32>,
+    k: i32,
+    resp: mpsc::Sender<Result<Vec<i32>, String>>,
+}
+
+/// PJRT-backed batch probe (a cheap-to-share handle).
+pub struct XlaProbe {
+    tx: Mutex<mpsc::Sender<ProbeRequest>>,
+    /// rung -> kernel batch size
+    rungs: HashMap<u64, usize>,
+    fallbacks: AtomicU64,
+    executions: AtomicU64,
+    _server: std::thread::JoinHandle<()>,
+}
+
+impl XlaProbe {
+    /// Spawn the server thread, build the PJRT CPU client there, compile
+    /// every probe variant in the manifest.
+    pub fn load(manifest: &ArtifactManifest) -> Result<Self, RuntimeError> {
+        let variants: Vec<(u64, usize, std::path::PathBuf)> = manifest
+            .variants
+            .iter()
+            .filter(|v| v.op == "probe")
+            .map(|v| (v.m_bits, v.batch as usize, v.file.clone()))
+            .collect();
+        let (tx, rx) = mpsc::channel::<ProbeRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<u64>, String>>();
+
+        let server = std::thread::Builder::new()
+            .name("bloomjoin-xla-server".into())
+            .spawn(move || xla_server(variants, rx, ready_tx))
+            .expect("spawn xla server");
+
+        let compiled = ready_rx
+            .recv()
+            .map_err(|_| RuntimeError::ServerGone)?
+            .map_err(RuntimeError::Xla)?;
+        let mut rungs = HashMap::new();
+        for m_bits in compiled {
+            // batch is uniform across variants today, but keep it per-rung
+            let batch = manifest
+                .variants
+                .iter()
+                .find(|v| v.op == "probe" && v.m_bits == m_bits)
+                .map(|v| v.batch as usize)
+                .unwrap_or(8192);
+            rungs.insert(m_bits, batch);
+        }
+        Ok(XlaProbe {
+            tx: Mutex::new(tx),
+            rungs,
+            fallbacks: AtomicU64::new(0),
+            executions: AtomicU64::new(0),
+            _server: server,
+        })
+    }
+
+    /// Convenience: locate artifacts, load, compile.  `None` when absent
+    /// (callers then use the native [`ProbePath`]).
+    ///
+    /// [`ProbePath`]: crate::joins::bloom_cascade::ProbePath
+    pub fn from_default_location() -> Option<Self> {
+        let dir = super::find_artifacts_dir()?;
+        let manifest = ArtifactManifest::load(&dir).ok()?;
+        Self::load(&manifest).ok()
+    }
+
+    pub fn fallback_count(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    pub fn execution_count(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    pub fn rungs(&self) -> Vec<u64> {
+        let mut r: Vec<u64> = self.rungs.keys().copied().collect();
+        r.sort_unstable();
+        r
+    }
+
+    fn probe_xla(&self, keys: &[u64], filter: &BloomFilter) -> Option<Vec<bool>> {
+        let m_bits = filter.params().m_bits;
+        let &batch = self.rungs.get(&m_bits)?;
+        let words = filter.words().to_vec();
+        let k = filter.params().k as i32;
+
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(batch) {
+            let mut folded: Vec<u32> = chunk.iter().map(|&key| fold64(key)).collect();
+            folded.resize(batch, 0); // probe padding discarded below
+            let (resp_tx, resp_rx) = mpsc::channel();
+            let req = ProbeRequest {
+                folded_keys: folded,
+                m_bits,
+                words: words.clone(),
+                k,
+                resp: resp_tx,
+            };
+            self.tx.lock().unwrap().send(req).ok()?;
+            let mask = resp_rx.recv().ok()?.ok()?;
+            out.extend(mask[..chunk.len()].iter().map(|&m| m != 0));
+            self.executions.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(out)
+    }
+}
+
+/// Server loop: owns the (non-Send) PJRT state.
+fn xla_server(
+    variants: Vec<(u64, usize, std::path::PathBuf)>,
+    rx: mpsc::Receiver<ProbeRequest>,
+    ready: mpsc::Sender<Result<Vec<u64>, String>>,
+) {
+    let setup = (|| -> Result<_, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| e.to_string())?;
+        let mut exes = HashMap::new();
+        for (m_bits, _batch, path) in &variants {
+            let path = path.to_str().ok_or("non-utf8 artifact path")?;
+            let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| e.to_string())?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| e.to_string())?;
+            exes.insert(*m_bits, exe);
+        }
+        Ok((client, exes))
+    })();
+
+    let exes = match setup {
+        Ok((_client, exes)) => {
+            let _ = ready.send(Ok(exes.keys().copied().collect()));
+            exes
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        let result = (|| -> Result<Vec<i32>, String> {
+            let exe = exes.get(&req.m_bits).ok_or("no variant for m_bits")?;
+            let keys_lit = xla::Literal::vec1(&req.folded_keys);
+            let words_lit = xla::Literal::vec1(&req.words);
+            let k_lit = xla::Literal::vec1(&[req.k]);
+            let result = exe
+                .execute::<xla::Literal>(&[keys_lit, words_lit, k_lit])
+                .map_err(|e| e.to_string())?[0][0]
+                .to_literal_sync()
+                .map_err(|e| e.to_string())?;
+            result
+                .to_tuple1()
+                .map_err(|e| e.to_string())?
+                .to_vec::<i32>()
+                .map_err(|e| e.to_string())
+        })();
+        let _ = req.resp.send(result);
+    }
+}
+
+impl BatchProbe for XlaProbe {
+    fn probe(&self, keys: &[u64], filter: &BloomFilter) -> Vec<bool> {
+        match self.probe_xla(keys, filter) {
+            Some(mask) => mask,
+            // off-ladder filter size or server failure: native path
+            None => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                keys.iter().map(|&k| filter.contains_key(k)).collect()
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pallas"
+    }
+
+    fn snap_m_bits(&self, min_bits: f64) -> Option<u64> {
+        self.rungs.keys().filter(|&&m| m as f64 >= min_bits).min().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bloom::BloomParams;
+    use crate::util::Rng;
+
+    fn xla_probe() -> Option<XlaProbe> {
+        XlaProbe::from_default_location()
+    }
+
+    #[test]
+    fn xla_probe_matches_native_exactly() {
+        let Some(probe) = xla_probe() else {
+            eprintln!("artifacts not built; skipping (run `make artifacts`)");
+            return;
+        };
+        let mut rng = Rng::new(31);
+        let params =
+            BloomParams { m_bits: 1 << 17, k: 7, requested_fpr: 0.01, expected_items: 1000 };
+        let mut filter = BloomFilter::new(params);
+        let members: Vec<u64> = (0..1000).map(|_| rng.next_u64()).collect();
+        for &k in &members {
+            filter.insert(k);
+        }
+        let mut queries = members.clone();
+        queries.extend((0..20_000).map(|_| rng.next_u64()));
+        let got = probe.probe(&queries, &filter);
+        let want: Vec<bool> = queries.iter().map(|&k| filter.contains_key(k)).collect();
+        assert_eq!(got, want);
+        assert_eq!(probe.fallback_count(), 0, "should have used the XLA path");
+        assert!(probe.execution_count() > 0);
+    }
+
+    #[test]
+    fn off_ladder_size_falls_back_to_native() {
+        let Some(probe) = xla_probe() else {
+            return;
+        };
+        let params = BloomParams { m_bits: 1 << 10, k: 3, requested_fpr: 0.1, expected_items: 50 };
+        let mut filter = BloomFilter::new(params);
+        for k in 0..50u64 {
+            filter.insert(k * 31);
+        }
+        let queries: Vec<u64> = (0..200).map(|i| i * 31).collect();
+        let got = probe.probe(&queries, &filter);
+        let want: Vec<bool> = queries.iter().map(|&k| filter.contains_key(k)).collect();
+        assert_eq!(got, want);
+        assert!(probe.fallback_count() > 0);
+    }
+
+    #[test]
+    fn non_multiple_batch_sizes_padded_correctly() {
+        let Some(probe) = xla_probe() else {
+            return;
+        };
+        let params =
+            BloomParams { m_bits: 1 << 17, k: 5, requested_fpr: 0.05, expected_items: 100 };
+        let mut filter = BloomFilter::new(params);
+        for k in 0..100u64 {
+            filter.insert(k);
+        }
+        for n in [1usize, 100, 8191, 8193, 10_000] {
+            let queries: Vec<u64> = (0..n as u64).collect();
+            let got = probe.probe(&queries, &filter);
+            assert_eq!(got.len(), n);
+            assert!(got.iter().take(100.min(n)).all(|&b| b), "false negative at n={n}");
+        }
+    }
+
+    #[test]
+    fn usable_from_many_threads() {
+        let Some(probe) = xla_probe() else {
+            return;
+        };
+        let probe = std::sync::Arc::new(probe);
+        let params =
+            BloomParams { m_bits: 1 << 17, k: 4, requested_fpr: 0.05, expected_items: 500 };
+        let mut filter = BloomFilter::new(params);
+        for k in 0..500u64 {
+            filter.insert(k * 3);
+        }
+        let filter = std::sync::Arc::new(filter);
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let probe = std::sync::Arc::clone(&probe);
+                let filter = std::sync::Arc::clone(&filter);
+                std::thread::spawn(move || {
+                    let queries: Vec<u64> = (0..2000u64).map(|i| i + t * 1000).collect();
+                    let got = probe.probe(&queries, &filter);
+                    let want: Vec<bool> =
+                        queries.iter().map(|&k| filter.contains_key(k)).collect();
+                    assert_eq!(got, want);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

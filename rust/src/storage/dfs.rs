@@ -1,0 +1,195 @@
+//! Simulated distributed file system (the paper's HDFS).
+//!
+//! Files are sequences of fixed-size blocks placed round-robin (with
+//! replication) across nodes.  Reads report whether they were node-local,
+//! which the cluster's network model prices: the paper's 128 MB-CSV split
+//! convention (§6.1) is what decides how many scan tasks a table produces.
+
+use std::collections::BTreeMap;
+
+/// 128 MiB, the Spark/HDFS default split the paper kept.
+pub const DEFAULT_BLOCK_SIZE: u64 = 128 * 1024 * 1024;
+
+#[derive(Clone, Debug)]
+pub struct DfsConfig {
+    pub block_size: u64,
+    pub replication: usize,
+    pub n_nodes: usize,
+}
+
+impl Default for DfsConfig {
+    fn default() -> Self {
+        DfsConfig { block_size: DEFAULT_BLOCK_SIZE, replication: 3, n_nodes: 4 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub data: Vec<u8>,
+    /// Nodes holding a replica, primary first.
+    pub replicas: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DfsFile {
+    pub blocks: Vec<Block>,
+    pub len: u64,
+}
+
+/// In-memory DFS: path → file.
+pub struct SimDfs {
+    cfg: DfsConfig,
+    files: BTreeMap<String, DfsFile>,
+    next_primary: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum DfsError {
+    #[error("no such file: {0}")]
+    NotFound(String),
+    #[error("file exists: {0}")]
+    Exists(String),
+}
+
+impl SimDfs {
+    pub fn new(cfg: DfsConfig) -> Self {
+        assert!(cfg.n_nodes >= 1 && cfg.replication >= 1);
+        SimDfs { cfg, files: BTreeMap::new(), next_primary: 0 }
+    }
+
+    pub fn config(&self) -> &DfsConfig {
+        &self.cfg
+    }
+
+    /// Write a file, splitting into blocks and placing replicas.
+    pub fn put(&mut self, path: &str, data: &[u8]) -> Result<(), DfsError> {
+        if self.files.contains_key(path) {
+            return Err(DfsError::Exists(path.to_string()));
+        }
+        let bs = self.cfg.block_size as usize;
+        let mut blocks = Vec::new();
+        let chunks: Vec<&[u8]> = if data.is_empty() {
+            vec![&[][..]]
+        } else {
+            data.chunks(bs).collect()
+        };
+        for chunk in chunks {
+            let primary = self.next_primary % self.cfg.n_nodes;
+            self.next_primary += 1;
+            let replicas: Vec<usize> = (0..self.cfg.replication.min(self.cfg.n_nodes))
+                .map(|r| (primary + r) % self.cfg.n_nodes)
+                .collect();
+            blocks.push(Block { data: chunk.to_vec(), replicas });
+        }
+        self.files.insert(path.to_string(), DfsFile { blocks, len: data.len() as u64 });
+        Ok(())
+    }
+
+    /// Whole-file read (driver-side convenience).
+    pub fn get(&self, path: &str) -> Result<Vec<u8>, DfsError> {
+        let f = self.files.get(path).ok_or_else(|| DfsError::NotFound(path.to_string()))?;
+        let mut out = Vec::with_capacity(f.len as usize);
+        for b in &f.blocks {
+            out.extend_from_slice(&b.data);
+        }
+        Ok(out)
+    }
+
+    /// Read one block from `node`'s perspective; returns (bytes, local?).
+    pub fn read_block(&self, path: &str, idx: usize, node: usize) -> Result<(&[u8], bool), DfsError> {
+        let f = self.files.get(path).ok_or_else(|| DfsError::NotFound(path.to_string()))?;
+        let b = f
+            .blocks
+            .get(idx)
+            .ok_or_else(|| DfsError::NotFound(format!("{path}#{idx}")))?;
+        Ok((&b.data, b.replicas.contains(&node)))
+    }
+
+    pub fn n_blocks(&self, path: &str) -> Result<usize, DfsError> {
+        Ok(self
+            .files
+            .get(path)
+            .ok_or_else(|| DfsError::NotFound(path.to_string()))?
+            .blocks
+            .len())
+    }
+
+    pub fn len(&self, path: &str) -> Result<u64, DfsError> {
+        Ok(self.files.get(path).ok_or_else(|| DfsError::NotFound(path.to_string()))?.len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    pub fn ls(&self) -> Vec<&str> {
+        self.files.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Preferred node for a scan task over block `idx` (primary replica) —
+    /// the locality hint a YARN-like scheduler consumes.
+    pub fn preferred_node(&self, path: &str, idx: usize) -> Result<usize, DfsError> {
+        let f = self.files.get(path).ok_or_else(|| DfsError::NotFound(path.to_string()))?;
+        Ok(f.blocks[idx].replicas[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dfs(block: u64) -> SimDfs {
+        SimDfs::new(DfsConfig { block_size: block, replication: 2, n_nodes: 4 })
+    }
+
+    #[test]
+    fn roundtrip_small_and_multiblock() {
+        let mut d = dfs(8);
+        let data: Vec<u8> = (0..50u8).collect();
+        d.put("t/orders", &data).unwrap();
+        assert_eq!(d.get("t/orders").unwrap(), data);
+        assert_eq!(d.n_blocks("t/orders").unwrap(), 7); // ceil(50/8)
+        assert_eq!(d.len("t/orders").unwrap(), 50);
+    }
+
+    #[test]
+    fn replication_and_placement() {
+        let mut d = dfs(4);
+        d.put("f", &[0u8; 16]).unwrap();
+        for i in 0..4 {
+            let (_, _) = d.read_block("f", i, 0).unwrap();
+            let pref = d.preferred_node("f", i).unwrap();
+            assert!(pref < 4);
+            // primary rotates round-robin
+            assert_eq!(pref, i % 4);
+        }
+    }
+
+    #[test]
+    fn locality_flag() {
+        let mut d = dfs(4);
+        d.put("f", &[1u8; 4]).unwrap();
+        let pref = d.preferred_node("f", 0).unwrap();
+        let (_, local) = d.read_block("f", 0, pref).unwrap();
+        assert!(local);
+        let far = (pref + 2) % 4; // replication=2 → pref and pref+1 are local
+        let (_, local) = d.read_block("f", 0, far).unwrap();
+        assert!(!local);
+    }
+
+    #[test]
+    fn errors() {
+        let mut d = dfs(4);
+        assert!(matches!(d.get("nope"), Err(DfsError::NotFound(_))));
+        d.put("f", &[]).unwrap();
+        assert!(matches!(d.put("f", &[]), Err(DfsError::Exists(_))));
+        assert_eq!(d.get("f").unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn empty_file_has_one_empty_block() {
+        let mut d = dfs(4);
+        d.put("e", &[]).unwrap();
+        assert_eq!(d.n_blocks("e").unwrap(), 1);
+    }
+}

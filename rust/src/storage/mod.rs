@@ -1,0 +1,10 @@
+//! Storage substrate: a columnar row-group format ("mini-parquet"), the
+//! dbgen `.tbl` text codec, and a simulated distributed file system with
+//! 128 MB-equivalent splits and block placement (the paper's HDFS, §6.1).
+
+pub mod columnar;
+pub mod dfs;
+pub mod tbl;
+
+pub use columnar::{ColumnarCodec, RowGroup};
+pub use dfs::{DfsConfig, SimDfs};

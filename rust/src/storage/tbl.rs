@@ -1,0 +1,253 @@
+//! dbgen `.tbl` text codec ('|'-separated, one trailing '|'), the CSV
+//! interchange format of the paper's pipeline (CSV → Parquet → HDFS).
+//! Dates render as yyyy-mm-dd like dbgen's output.
+
+use crate::tpch::{Customer, Lineitem, Order, MKT_SEGMENTS, SHIP_MODES};
+
+/// Days since 1992-01-01 → "yyyy-mm-dd".
+pub fn render_date(days: i32) -> String {
+    // civil-date arithmetic (Howard Hinnant's algorithm), anchored at
+    // 1992-01-01 = day 0  (1992-01-01 is 8035 days after 1970-01-01).
+    let z = days as i64 + 8035 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// "yyyy-mm-dd" → days since 1992-01-01.
+pub fn parse_date(s: &str) -> Option<i32> {
+    let mut it = s.split('-');
+    let y: i64 = it.next()?.parse().ok()?;
+    let m: i64 = it.next()?.parse().ok()?;
+    let d: i64 = it.next()?.parse().ok()?;
+    if it.next().is_some() || !(1..=12).contains(&m) || !(1..=31).contains(&d) {
+        return None;
+    }
+    let y2 = if m <= 2 { y - 1 } else { y };
+    let era = y2.div_euclid(400);
+    let yoe = y2 - era * 400;
+    let mp = if m > 2 { m - 3 } else { m + 9 };
+    let doy = (153 * mp + 2) / 5 + d - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    Some((era * 146_097 + doe - 719_468 - 8035) as i32)
+}
+
+fn money(cents: i64) -> String {
+    format!("{}.{:02}", cents / 100, (cents % 100).abs())
+}
+
+fn parse_money(s: &str) -> Option<i64> {
+    let (int, frac) = s.split_once('.')?;
+    let sign = if int.starts_with('-') { -1 } else { 1 };
+    let int: i64 = int.parse().ok()?;
+    let frac: i64 = frac.parse().ok()?;
+    Some(int * 100 + sign * frac)
+}
+
+pub trait TblCodec: Sized {
+    fn to_tbl_line(&self) -> String;
+    fn from_tbl_line(line: &str) -> Option<Self>;
+
+    fn write_all(rows: &[Self]) -> String {
+        rows.iter().map(|r| r.to_tbl_line()).collect()
+    }
+
+    fn read_all(text: &str) -> Result<Vec<Self>, String> {
+        text.lines()
+            .filter(|l| !l.is_empty())
+            .enumerate()
+            .map(|(i, l)| Self::from_tbl_line(l).ok_or_else(|| format!("line {}: {l:?}", i + 1)))
+            .collect()
+    }
+}
+
+impl TblCodec for Order {
+    fn to_tbl_line(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}-{}|Clerk#{:09}|{}|{}|\n",
+            self.o_orderkey,
+            self.o_custkey,
+            self.o_orderstatus as char,
+            money(self.o_totalprice_cents),
+            render_date(self.o_orderdate),
+            self.o_orderpriority,
+            priority_name(self.o_orderpriority),
+            self.o_clerk,
+            self.o_shippriority,
+            self.o_comment
+        )
+    }
+
+    fn from_tbl_line(line: &str) -> Option<Self> {
+        let f: Vec<&str> = line.trim_end_matches('\n').split('|').collect();
+        if f.len() < 9 {
+            return None;
+        }
+        Some(Order {
+            o_orderkey: f[0].parse().ok()?,
+            o_custkey: f[1].parse().ok()?,
+            o_orderstatus: *f[2].as_bytes().first()?,
+            o_totalprice_cents: parse_money(f[3])?,
+            o_orderdate: parse_date(f[4])?,
+            o_orderpriority: f[5].split('-').next()?.parse().ok()?,
+            o_clerk: f[6].strip_prefix("Clerk#")?.parse().ok()?,
+            o_shippriority: f[7].parse().ok()?,
+            o_comment: f[8].to_string(),
+        })
+    }
+}
+
+fn priority_name(p: u8) -> &'static str {
+    match p {
+        1 => "URGENT",
+        2 => "HIGH",
+        3 => "MEDIUM",
+        4 => "NOT SPECIFIED",
+        _ => "LOW",
+    }
+}
+
+impl TblCodec for Lineitem {
+    fn to_tbl_line(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|NONE|{}|{}|\n",
+            self.l_orderkey,
+            self.l_partkey,
+            self.l_suppkey,
+            self.l_linenumber,
+            self.l_quantity,
+            money(self.l_extendedprice_cents),
+            format_args!("0.{:02}", self.l_discount_bp / 10),
+            format_args!("0.{:02}", self.l_tax_bp / 10),
+            self.l_returnflag as char,
+            self.l_linestatus as char,
+            render_date(self.l_shipdate),
+            render_date(self.l_commitdate),
+            render_date(self.l_receiptdate),
+            SHIP_MODES[self.l_shipmode as usize],
+            self.l_comment
+        )
+    }
+
+    fn from_tbl_line(line: &str) -> Option<Self> {
+        let f: Vec<&str> = line.trim_end_matches('\n').split('|').collect();
+        if f.len() < 16 {
+            return None;
+        }
+        let mode = SHIP_MODES.iter().position(|m| *m == f[14])? as u8;
+        Some(Lineitem {
+            l_orderkey: f[0].parse().ok()?,
+            l_partkey: f[1].parse().ok()?,
+            l_suppkey: f[2].parse().ok()?,
+            l_linenumber: f[3].parse().ok()?,
+            l_quantity: f[4].parse().ok()?,
+            l_extendedprice_cents: parse_money(f[5])?,
+            l_discount_bp: f[6].strip_prefix("0.")?.parse::<i32>().ok()? * 10,
+            l_tax_bp: f[7].strip_prefix("0.")?.parse::<i32>().ok()? * 10,
+            l_returnflag: *f[8].as_bytes().first()?,
+            l_linestatus: *f[9].as_bytes().first()?,
+            l_shipdate: parse_date(f[10])?,
+            l_commitdate: parse_date(f[11])?,
+            l_receiptdate: parse_date(f[12])?,
+            l_shipmode: mode,
+            l_comment: f[15].to_string(),
+        })
+    }
+}
+
+impl TblCodec for Customer {
+    fn to_tbl_line(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}|\n",
+            self.c_custkey,
+            self.c_name,
+            self.c_nationkey,
+            money(self.c_acctbal_cents),
+            MKT_SEGMENTS[self.c_mktsegment as usize],
+            self.c_comment
+        )
+    }
+
+    fn from_tbl_line(line: &str) -> Option<Self> {
+        let f: Vec<&str> = line.trim_end_matches('\n').split('|').collect();
+        if f.len() < 6 {
+            return None;
+        }
+        Some(Customer {
+            c_custkey: f[0].parse().ok()?,
+            c_name: f[1].to_string(),
+            c_nationkey: f[2].parse().ok()?,
+            c_acctbal_cents: parse_money(f[3])?,
+            c_mktsegment: MKT_SEGMENTS.iter().position(|m| *m == f[4])? as u8,
+            c_comment: f[5].to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpch::{GenConfig, TpchGenerator};
+
+    #[test]
+    fn date_roundtrip() {
+        for d in [0, 1, 31, 365, 366, 1263, 2252, 2405, 2555] {
+            assert_eq!(parse_date(&render_date(d)), Some(d), "day {d}");
+        }
+        assert_eq!(render_date(0), "1992-01-01");
+        assert_eq!(render_date(2252), "1998-03-02");
+        assert_eq!(render_date(2405), "1998-08-02");
+    }
+
+    #[test]
+    fn date_known_values() {
+        assert_eq!(render_date(59), "1992-02-29"); // 1992 is a leap year
+        assert_eq!(render_date(60), "1992-03-01");
+        assert_eq!(parse_date("1995-06-17"), Some(1263));
+    }
+
+    #[test]
+    fn money_roundtrip() {
+        for c in [0i64, 1, 99, 100, 12_345, -250] {
+            assert_eq!(parse_money(&money(c)), Some(c), "{c}");
+        }
+    }
+
+    #[test]
+    fn tbl_roundtrip_all_tables() {
+        let g = TpchGenerator::new(GenConfig { sf: 0.0002, ..Default::default() });
+        let orders: Vec<Order> = g.orders().into_iter().flatten().collect();
+        let text = Order::write_all(&orders);
+        assert_eq!(Order::read_all(&text).unwrap(), orders);
+
+        let items: Vec<Lineitem> = g.lineitems().into_iter().flatten().collect();
+        // discount/tax lose sub-0.1% precision in text (2 decimals) — the
+        // same loss dbgen's fixed-point format has; normalise and compare.
+        let text = Lineitem::write_all(&items);
+        let back = Lineitem::read_all(&text).unwrap();
+        assert_eq!(back.len(), items.len());
+        for (a, b) in back.iter().zip(&items) {
+            assert_eq!(a.l_orderkey, b.l_orderkey);
+            assert_eq!(a.l_extendedprice_cents, b.l_extendedprice_cents);
+            assert_eq!(a.l_shipdate, b.l_shipdate);
+            assert!((a.l_discount_bp - b.l_discount_bp).abs() < 10);
+        }
+
+        let cust: Vec<Customer> = g.customers().into_iter().flatten().collect();
+        let text = Customer::write_all(&cust);
+        assert_eq!(Customer::read_all(&text).unwrap(), cust);
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Order::from_tbl_line("1|2|3").is_none());
+        assert!(Order::read_all("garbage|\n").is_err());
+    }
+}

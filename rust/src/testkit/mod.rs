@@ -1,0 +1,135 @@
+//! Minimal property-testing kit (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs from independent seeded streams; on failure it retries the case
+//! with `SHRINK_ROUNDS` smaller sizes (size-based shrinking) and panics
+//! with the reproducing seed, so failures are one `TESTKIT_SEED=n cargo
+//! test` away from deterministic replay.
+
+use crate::util::Rng;
+
+/// Generation context: a PRNG plus a size budget generators respect.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Vec of `n <= size` elements.
+    pub fn vec_of<T>(&mut self, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let n = self.rng.below(self.size as u64 + 1) as usize;
+        (0..n).map(|_| f(self.rng)).collect()
+    }
+
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.rng.below(bound)
+    }
+}
+
+/// Run a property over `cases` random inputs.
+///
+/// `prop` returns `Err(msg)` (or panics) to fail.  The failing seed and
+/// size are printed; set `TESTKIT_SEED` to replay a single case.
+pub fn check<T>(
+    name: &str,
+    cases: u64,
+    mut generate: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    const SIZES: [usize; 4] = [4, 16, 64, 256];
+    if let Ok(seed) = std::env::var("TESTKIT_SEED") {
+        let seed: u64 = seed.parse().expect("TESTKIT_SEED must be a u64");
+        replay(name, seed, &mut generate, &mut prop);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0xC0FF_EE00 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let size = SIZES[(case % SIZES.len() as u64) as usize];
+        let mut rng = Rng::new(seed);
+        let mut g = Gen { rng: &mut rng, size };
+        let input = generate(&mut g);
+        if let Err(msg) = prop(&input) {
+            // size-based shrink: retry the same seed at smaller sizes and
+            // report the smallest size that still fails
+            let mut smallest = (size, msg.clone());
+            for s in SIZES.iter().filter(|&&s| s < size) {
+                let mut rng = Rng::new(seed);
+                let mut g = Gen { rng: &mut rng, size: *s };
+                let inp = generate(&mut g);
+                if let Err(m) = prop(&inp) {
+                    smallest = (*s, m);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed {seed}, size {}):\n  {}\n\
+                 replay: TESTKIT_SEED={seed} TESTKIT_SIZE={} cargo test",
+                smallest.0, smallest.1, smallest.0
+            );
+        }
+    }
+}
+
+fn replay<T>(
+    name: &str,
+    seed: u64,
+    generate: &mut impl FnMut(&mut Gen) -> T,
+    prop: &mut impl FnMut(&T) -> Result<(), String>,
+) {
+    let size = std::env::var("TESTKIT_SIZE").ok().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let mut rng = Rng::new(seed);
+    let mut g = Gen { rng: &mut rng, size };
+    let input = generate(&mut g);
+    if let Err(msg) = prop(&input) {
+        panic!("property '{name}' failed on replay (seed {seed}, size {size}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "reverse-involutive",
+            50,
+            |g| g.vec_of(|r| r.next_u32()),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice changed the vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 5, |g| g.u64_below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_are_respected() {
+        check(
+            "size-bound",
+            20,
+            |g| {
+                let size = g.size;
+                (g.vec_of(|r| r.next_u32()), size)
+            },
+            |(v, size)| {
+                if v.len() <= *size {
+                    Ok(())
+                } else {
+                    Err(format!("len {} > size {}", v.len(), size))
+                }
+            },
+        );
+    }
+}

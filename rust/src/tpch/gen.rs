@@ -1,0 +1,346 @@
+//! Partitioned, deterministic TPC-H generation.
+//!
+//! Each partition is generated from an independently-forked PRNG stream,
+//! so partition `p` of SF `s` under seed `σ` is identical no matter which
+//! executor (or how many) generates it — the same property dbgen's
+//! `-C/-S` chunking gives the paper's HDFS loading step.
+
+use super::text;
+use super::{
+    orderkey_at, Customer, Lineitem, Order, CUSTOMERS_PER_SF, ORDERDATE_RANGE_DAYS,
+    ORDERS_PER_SF, PARTS_PER_SF, SUPPLIERS_PER_SF,
+};
+use crate::util::Rng;
+
+/// Generation knobs.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    /// TPC-H scale factor (fractional SF supported for in-process runs).
+    pub sf: f64,
+    /// Root seed; every table/partition forks from it.
+    pub seed: u64,
+    /// Comment column target length (dbgen uses up to 79/44; shrink to
+    /// trade realism for memory on small machines).
+    pub comment_len: usize,
+    /// Partition count for each generated table.
+    pub partitions: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { sf: 0.01, seed: 0xB100_F117, comment_len: 24, partitions: 8 }
+    }
+}
+
+impl GenConfig {
+    pub fn with_sf(sf: f64) -> Self {
+        GenConfig { sf, ..Default::default() }
+    }
+
+    pub fn n_orders(&self) -> u64 {
+        ((ORDERS_PER_SF as f64) * self.sf).round().max(1.0) as u64
+    }
+
+    pub fn n_customers(&self) -> u64 {
+        ((CUSTOMERS_PER_SF as f64) * self.sf).round().max(1.0) as u64
+    }
+
+    pub fn n_parts(&self) -> u64 {
+        ((PARTS_PER_SF as f64) * self.sf).round().max(1.0) as u64
+    }
+
+    pub fn n_suppliers(&self) -> u64 {
+        ((SUPPLIERS_PER_SF as f64) * self.sf).round().max(1.0) as u64
+    }
+}
+
+/// Deterministic partitioned generator.
+pub struct TpchGenerator {
+    cfg: GenConfig,
+}
+
+impl TpchGenerator {
+    pub fn new(cfg: GenConfig) -> Self {
+        TpchGenerator { cfg }
+    }
+
+    pub fn config(&self) -> &GenConfig {
+        &self.cfg
+    }
+
+    /// Row-index range `[start, end)` of partition `p` of `total` rows.
+    fn slice(total: u64, parts: usize, p: usize) -> (u64, u64) {
+        let parts = parts as u64;
+        let p = p as u64;
+        let base = total / parts;
+        let rem = total % parts;
+        let start = p * base + p.min(rem);
+        let len = base + if p < rem { 1 } else { 0 };
+        (start, start + len)
+    }
+
+    /// Generate partition `p` of ORDERS (with its lineitem count decided
+    /// here so LINEITEM generation can be independent yet consistent).
+    pub fn orders_partition(&self, p: usize) -> Vec<Order> {
+        let (start, end) = Self::slice(self.cfg.n_orders(), self.cfg.partitions, p);
+        (start..end).map(|i| self.order_at(i)).collect()
+    }
+
+    /// Generate partition `p` of LINEITEM: the lineitems of the orders in
+    /// the same index range (TPC-H correlates the two tables this way).
+    pub fn lineitem_partition(&self, p: usize) -> Vec<Lineitem> {
+        let (start, end) = Self::slice(self.cfg.n_orders(), self.cfg.partitions, p);
+        let mut out = Vec::new();
+        for i in start..end {
+            self.lineitems_of_order(i, &mut out);
+        }
+        out
+    }
+
+    pub fn customers_partition(&self, p: usize) -> Vec<Customer> {
+        let (start, end) = Self::slice(self.cfg.n_customers(), self.cfg.partitions, p);
+        (start..end)
+            .map(|i| {
+                let custkey = i + 1;
+                let mut rng = self.stream(2, i);
+                Customer {
+                    c_custkey: custkey,
+                    c_name: text::customer_name(custkey),
+                    c_nationkey: rng.below(25) as i32,
+                    c_acctbal_cents: rng.range(0, 999_999_99) as i64 - 99_999,
+                    c_mktsegment: rng.below(5) as u8,
+                    c_comment: text::comment(&mut rng, self.cfg.comment_len),
+                }
+            })
+            .collect()
+    }
+
+    /// All orders / lineitems / customers as partitioned tables.
+    pub fn orders(&self) -> Vec<Vec<Order>> {
+        (0..self.cfg.partitions).map(|p| self.orders_partition(p)).collect()
+    }
+
+    pub fn lineitems(&self) -> Vec<Vec<Lineitem>> {
+        (0..self.cfg.partitions).map(|p| self.lineitem_partition(p)).collect()
+    }
+
+    pub fn customers(&self) -> Vec<Vec<Customer>> {
+        (0..self.cfg.partitions).map(|p| self.customers_partition(p)).collect()
+    }
+
+    // -- per-row generation --------------------------------------------------
+
+    /// Independent stream per (table, row) so any row is addressable.
+    fn stream(&self, table: u64, row: u64) -> Rng {
+        Rng::new(self.cfg.seed ^ (table << 56) ^ row.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    fn lineitem_count_of(&self, order_index: u64) -> u64 {
+        let mut rng = self.stream(1, order_index);
+        rng.range(1, 7)
+    }
+
+    fn order_at(&self, i: u64) -> Order {
+        let mut rng = self.stream(0, i);
+        let n_cust = self.cfg.n_customers().max(3);
+        // only custkeys with key % 3 != 0 place orders (spec 4.2.3)
+        let mut custkey = rng.range(1, n_cust);
+        if custkey % 3 == 0 {
+            custkey = if custkey + 1 > n_cust { custkey - 1 } else { custkey + 1 };
+        }
+        let orderdate = rng.below(ORDERDATE_RANGE_DAYS as u64) as i32;
+        let n_items = self.lineitem_count_of(i);
+        // approximate totalprice: sum of per-line extendedprice*(1+tax)*(1-disc)
+        let mut total = 0i64;
+        let mut item_rng = self.stream(1, i);
+        let _ = item_rng.range(1, 7); // consume the count draw
+        for ln in 0..n_items {
+            let (price, disc_bp, tax_bp) = Self::line_money(&mut item_rng, i, ln);
+            total += price * (10_000 - disc_bp as i64) / 10_000 * (10_000 + tax_bp as i64)
+                / 10_000;
+        }
+        let status_draw = rng.f64();
+        Order {
+            o_orderkey: orderkey_at(i),
+            o_custkey: custkey,
+            o_orderstatus: if status_draw < 0.486 {
+                b'F'
+            } else if status_draw < 0.973 {
+                b'O'
+            } else {
+                b'P'
+            },
+            o_totalprice_cents: total,
+            o_orderdate: orderdate,
+            o_orderpriority: rng.range(1, 5) as u8,
+            o_clerk: rng.below((1000.0 * self.cfg.sf).max(1.0) as u64) as u32,
+            o_shippriority: 0,
+            o_comment: text::comment(&mut rng, self.cfg.comment_len),
+        }
+    }
+
+    fn line_money(rng: &mut Rng, order_index: u64, _ln: u64) -> (i64, i32, i32) {
+        let quantity = rng.range(1, 50) as i64;
+        // spec's retailprice(partkey) shape: 90000 + (pk/10)%20001 + 100*(pk%1000)
+        let partkey = rng.below(200_000.max(order_index / 4 + 1)) + 1;
+        let retail = 90_000 + (partkey / 10) % 20_001 + 100 * (partkey % 1_000);
+        let price = quantity * retail as i64;
+        let disc_bp = rng.range(0, 1000) as i32;
+        let tax_bp = rng.range(0, 800) as i32;
+        (price, disc_bp, tax_bp)
+    }
+
+    fn lineitems_of_order(&self, order_index: u64, out: &mut Vec<Lineitem>) {
+        let orderkey = orderkey_at(order_index);
+        let order = self.order_at(order_index);
+        let mut rng = self.stream(1, order_index);
+        let n_items = rng.range(1, 7);
+        let n_parts = self.cfg.n_parts().max(1);
+        let n_supp = self.cfg.n_suppliers().max(1);
+        for ln in 0..n_items {
+            let (price, disc_bp, tax_bp) = Self::line_money(&mut rng, order_index, ln);
+            let partkey = rng.below(n_parts) + 1;
+            let shipdate = order.o_orderdate + rng.range(1, 121) as i32;
+            let commitdate = order.o_orderdate + rng.range(30, 90) as i32;
+            let receiptdate = shipdate + rng.range(1, 30) as i32;
+            let returnflag = if receiptdate <= CURRENT_DATE_DAYS {
+                if rng.chance(0.5) {
+                    b'R'
+                } else {
+                    b'A'
+                }
+            } else {
+                b'N'
+            };
+            out.push(Lineitem {
+                l_orderkey: orderkey,
+                l_partkey: partkey,
+                l_suppkey: rng.below(n_supp) + 1,
+                l_linenumber: ln as i32 + 1,
+                l_quantity: (price / 90_000).clamp(1, 50) as i32,
+                l_extendedprice_cents: price,
+                l_discount_bp: disc_bp,
+                l_tax_bp: tax_bp,
+                l_returnflag: returnflag,
+                l_linestatus: if shipdate <= CURRENT_DATE_DAYS { b'F' } else { b'O' },
+                l_shipdate: shipdate,
+                l_commitdate: commitdate,
+                l_receiptdate: receiptdate,
+                l_shipmode: rng.below(7) as u8,
+                l_comment: text::comment(&mut rng, self.cfg.comment_len.min(44)),
+            });
+        }
+    }
+}
+
+/// TPC-H CURRENT_DATE = 1995-06-17, in days since 1992-01-01.
+pub const CURRENT_DATE_DAYS: i32 = 1263;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn tiny() -> TpchGenerator {
+        TpchGenerator::new(GenConfig { sf: 0.001, ..Default::default() })
+    }
+
+    #[test]
+    fn row_counts_scale() {
+        let g = tiny();
+        assert_eq!(g.config().n_orders(), 1_500);
+        assert_eq!(g.config().n_customers(), 150);
+        let total: usize = g.orders().iter().map(Vec::len).sum();
+        assert_eq!(total as u64, g.config().n_orders());
+    }
+
+    #[test]
+    fn lineitems_per_order_in_range_and_avg_four() {
+        let g = tiny();
+        let lineitems: Vec<Lineitem> = g.lineitems().into_iter().flatten().collect();
+        let orders = g.config().n_orders();
+        let avg = lineitems.len() as f64 / orders as f64;
+        assert!((3.5..=4.5).contains(&avg), "avg {avg}");
+        let mut per_order = std::collections::HashMap::new();
+        for l in &lineitems {
+            *per_order.entry(l.l_orderkey).or_insert(0u64) += 1;
+        }
+        assert!(per_order.values().all(|&c| (1..=7).contains(&c)));
+    }
+
+    #[test]
+    fn every_lineitem_joins_to_exactly_one_order() {
+        let g = tiny();
+        let orderkeys: HashSet<u64> =
+            g.orders().into_iter().flatten().map(|o| o.o_orderkey).collect();
+        for l in g.lineitems().into_iter().flatten() {
+            assert!(orderkeys.contains(&l.l_orderkey), "dangling {:?}", l.l_orderkey);
+        }
+    }
+
+    #[test]
+    fn orderkeys_unique_and_sparse() {
+        let g = tiny();
+        let keys: Vec<u64> = g.orders().into_iter().flatten().map(|o| o.o_orderkey).collect();
+        let set: HashSet<_> = keys.iter().collect();
+        assert_eq!(set.len(), keys.len());
+        assert!(keys.iter().all(|&k| super::super::is_valid_orderkey(k)));
+    }
+
+    #[test]
+    fn deterministic_across_partitionings() {
+        let mut a_cfg = GenConfig { sf: 0.001, ..Default::default() };
+        a_cfg.partitions = 3;
+        let mut b_cfg = a_cfg.clone();
+        b_cfg.partitions = 7;
+        let a: Vec<Order> = TpchGenerator::new(a_cfg).orders().into_iter().flatten().collect();
+        let b: Vec<Order> = TpchGenerator::new(b_cfg).orders().into_iter().flatten().collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn custkeys_skip_every_third() {
+        let g = tiny();
+        for o in g.orders().into_iter().flatten() {
+            assert_ne!(o.o_custkey % 3, 0, "custkey {}", o.o_custkey);
+        }
+    }
+
+    #[test]
+    fn dates_in_spec_ranges() {
+        let g = tiny();
+        for o in g.orders().into_iter().flatten() {
+            assert!((0..ORDERDATE_RANGE_DAYS).contains(&o.o_orderdate));
+        }
+        for l in g.lineitems().into_iter().flatten() {
+            assert!(l.l_shipdate > 0);
+            assert!(l.l_receiptdate > l.l_shipdate);
+        }
+    }
+
+    #[test]
+    fn partition_slicing_covers_exactly() {
+        for total in [0u64, 1, 7, 100, 1001] {
+            for parts in [1usize, 2, 3, 8] {
+                let mut covered = 0;
+                let mut expect_start = 0;
+                for p in 0..parts {
+                    let (s, e) = TpchGenerator::slice(total, parts, p);
+                    assert_eq!(s, expect_start);
+                    expect_start = e;
+                    covered += e - s;
+                }
+                assert_eq!(covered, total);
+            }
+        }
+    }
+
+    #[test]
+    fn orderstatus_distribution() {
+        let g = TpchGenerator::new(GenConfig { sf: 0.01, ..Default::default() });
+        let orders: Vec<Order> = g.orders().into_iter().flatten().collect();
+        let f = orders.iter().filter(|o| o.o_orderstatus == b'F').count() as f64
+            / orders.len() as f64;
+        assert!((0.4..0.6).contains(&f), "F fraction {f}");
+    }
+}

@@ -1,0 +1,161 @@
+//! From-scratch TPC-H data generator (the paper's workload, §6.1).
+//!
+//! The paper generated ORDERS and LINEITEM with `dbgen` at SF ∈
+//! {10, 100, 150}, converted to Parquet (128 MB-CSV splits) on HDFS.  This
+//! module reproduces the *distributions that matter for the join study*:
+//!
+//! * exact row-count scaling (`orders = 1.5 M · SF`, 1–7 lineitems per
+//!   order, avg ≈ 4);
+//! * the spec's **sparse orderkey encoding** (8 of every 32 key values
+//!   used) — this is why a Bloom filter is needed at all: the big table's
+//!   key domain is not dense, so you cannot range-prune;
+//! * only ⅔ of customers ever order (`custkey % 3 != 0`);
+//! * date-correlated columns (`o_orderdate`, `l_shipdate = o_orderdate +
+//!   1..121 days`) so WHERE-clause selectivities behave like TPC-H's;
+//! * price/discount/quantity in the spec's ranges.
+//!
+//! Text columns are syllable-generated ([`text`]); generation is
+//! deterministic from a seed and partitioned (each partition is generated
+//! independently, like dbgen's `-C/-S` chunking), so executors can
+//! generate their own splits without shipping data.
+
+pub mod gen;
+pub mod text;
+
+pub use gen::{GenConfig, TpchGenerator};
+
+/// Days between 1992-01-01 (epoch of all TPC-H dates, day 0) and the last
+/// order date 1998-08-02 (= 1998-12-31 minus the 151-day tail the spec
+/// reserves so all ship/receipt dates land before year end).
+pub const ORDERDATE_RANGE_DAYS: i32 = 2405;
+
+/// Orders per scale-factor unit.
+pub const ORDERS_PER_SF: u64 = 1_500_000;
+/// Customers per scale-factor unit.
+pub const CUSTOMERS_PER_SF: u64 = 150_000;
+/// Parts per scale-factor unit.
+pub const PARTS_PER_SF: u64 = 200_000;
+/// Suppliers per scale-factor unit.
+pub const SUPPLIERS_PER_SF: u64 = 10_000;
+
+/// ORDERS row (columns used by the paper's query + enough realism for the
+/// examples; money is fixed-point cents, dates are days since 1992-01-01).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Order {
+    pub o_orderkey: u64,
+    pub o_custkey: u64,
+    pub o_orderstatus: u8, // b'F' | b'O' | b'P'
+    pub o_totalprice_cents: i64,
+    pub o_orderdate: i32,
+    pub o_orderpriority: u8, // 1..=5
+    pub o_clerk: u32,
+    pub o_shippriority: i32,
+    pub o_comment: String,
+}
+
+/// LINEITEM row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Lineitem {
+    pub l_orderkey: u64,
+    pub l_partkey: u64,
+    pub l_suppkey: u64,
+    pub l_linenumber: i32,
+    pub l_quantity: i32, // 1..=50
+    pub l_extendedprice_cents: i64,
+    pub l_discount_bp: i32, // basis points, 0..=1000
+    pub l_tax_bp: i32,      // 0..=800
+    pub l_returnflag: u8,   // b'R' | b'A' | b'N'
+    pub l_linestatus: u8,   // b'O' | b'F'
+    pub l_shipdate: i32,
+    pub l_commitdate: i32,
+    pub l_receiptdate: i32,
+    pub l_shipmode: u8, // index into SHIP_MODES
+    pub l_comment: String,
+}
+
+/// CUSTOMER row (for the snowflake examples).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Customer {
+    pub c_custkey: u64,
+    pub c_name: String,
+    pub c_nationkey: i32,
+    pub c_acctbal_cents: i64,
+    pub c_mktsegment: u8, // index into MKT_SEGMENTS
+    pub c_comment: String,
+}
+
+pub const SHIP_MODES: [&str; 7] = ["REG AIR", "AIR", "RAIL", "SHIP", "TRUCK", "MAIL", "FOB"];
+pub const MKT_SEGMENTS: [&str; 5] =
+    ["AUTOMOBILE", "BUILDING", "FURNITURE", "MACHINERY", "HOUSEHOLD"];
+
+/// The spec's sparse orderkey encoding: 8 keys used of each 32-key block.
+#[inline]
+pub fn orderkey_at(index: u64) -> u64 {
+    (index / 8) * 32 + (index % 8) + 1
+}
+
+/// Inverse check: is this key a valid (generated) orderkey?
+#[inline]
+pub fn is_valid_orderkey(key: u64) -> bool {
+    key >= 1 && (key - 1) % 32 < 8
+}
+
+impl Order {
+    /// Serialized width in bytes (CSV-equivalent), for I/O cost accounting.
+    pub fn ser_bytes(&self) -> u64 {
+        8 + 8 + 1 + 8 + 4 + 1 + 4 + 4 + self.o_comment.len() as u64 + 9
+    }
+}
+
+impl Lineitem {
+    pub fn ser_bytes(&self) -> u64 {
+        8 + 8 + 8 + 4 + 4 + 8 + 4 + 4 + 1 + 1 + 4 + 4 + 4 + 1 + self.l_comment.len() as u64 + 16
+    }
+}
+
+impl Customer {
+    pub fn ser_bytes(&self) -> u64 {
+        8 + self.c_name.len() as u64 + 4 + 8 + 1 + self.c_comment.len() as u64 + 6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orderkey_sparsity() {
+        // first 8 indexes map into the first 32-block
+        assert_eq!(orderkey_at(0), 1);
+        assert_eq!(orderkey_at(7), 8);
+        assert_eq!(orderkey_at(8), 33);
+        assert_eq!(orderkey_at(15), 40);
+        assert_eq!(orderkey_at(16), 65);
+    }
+
+    #[test]
+    fn orderkeys_strictly_increasing_and_valid() {
+        let mut last = 0;
+        for i in 0..10_000 {
+            let k = orderkey_at(i);
+            assert!(k > last);
+            assert!(is_valid_orderkey(k), "{k}");
+            last = k;
+        }
+    }
+
+    #[test]
+    fn invalid_keys_rejected() {
+        assert!(!is_valid_orderkey(0));
+        assert!(!is_valid_orderkey(9)); // 9-1=8, 8%32=8 >= 8
+        assert!(!is_valid_orderkey(32));
+        assert!(is_valid_orderkey(33));
+    }
+
+    #[test]
+    fn density_is_one_quarter() {
+        let max = orderkey_at(100_000 - 1);
+        let density = 100_000 as f64 / max as f64;
+        assert!((density - 0.25).abs() < 0.01, "density {density}");
+    }
+}

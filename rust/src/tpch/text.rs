@@ -1,0 +1,78 @@
+//! Deterministic pseudo-English text for comment columns — a light
+//! stand-in for dbgen's grammar-based text generator, with the same
+//! purpose: give rows realistic, compressible, variable-length payloads.
+
+use crate::util::Rng;
+
+const NOUNS: [&str; 16] = [
+    "packages", "requests", "accounts", "deposits", "instructions", "foxes",
+    "ideas", "theodolites", "pinto beans", "platelets", "asymptotes",
+    "dependencies", "excuses", "dolphins", "warthogs", "sentiments",
+];
+const VERBS: [&str; 12] = [
+    "sleep", "haggle", "nag", "wake", "cajole", "integrate", "detect",
+    "boost", "affix", "doze", "engage", "maintain",
+];
+const ADVERBS: [&str; 10] = [
+    "quickly", "slyly", "furiously", "carefully", "blithely", "ruthlessly",
+    "ironically", "silently", "daringly", "evenly",
+];
+const ADJS: [&str; 10] = [
+    "final", "regular", "express", "special", "pending", "ironic", "even",
+    "bold", "silent", "unusual",
+];
+
+/// Generate a comment of roughly `target_len` bytes (capped at the TPC-H
+/// column widths by callers).  Always non-empty, always <= target_len + 16.
+pub fn comment(rng: &mut Rng, target_len: usize) -> String {
+    let mut out = String::with_capacity(target_len + 16);
+    while out.len() < target_len {
+        if !out.is_empty() {
+            out.push(' ');
+        }
+        out.push_str(ADVERBS[rng.below(ADVERBS.len() as u64) as usize]);
+        out.push(' ');
+        out.push_str(ADJS[rng.below(ADJS.len() as u64) as usize]);
+        out.push(' ');
+        out.push_str(NOUNS[rng.below(NOUNS.len() as u64) as usize]);
+        out.push(' ');
+        out.push_str(VERBS[rng.below(VERBS.len() as u64) as usize]);
+    }
+    out.truncate(target_len);
+    if out.is_empty() {
+        out.push('x');
+    }
+    out
+}
+
+/// Customer name in the spec's `Customer#000000042` shape.
+pub fn customer_name(custkey: u64) -> String {
+    format!("Customer#{custkey:09}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = comment(&mut Rng::new(5), 40);
+        let b = comment(&mut Rng::new(5), 40);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn length_bounded() {
+        let mut rng = Rng::new(6);
+        for target in [1usize, 10, 44, 117] {
+            let c = comment(&mut rng, target);
+            assert!(!c.is_empty());
+            assert!(c.len() <= target.max(1));
+        }
+    }
+
+    #[test]
+    fn name_shape() {
+        assert_eq!(customer_name(42), "Customer#000000042");
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! positional arguments, with typed getters and error messages.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("invalid value for --{0}: {1:?} ({2})")]
+    Invalid(String, String, String),
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(name.to_string());
+                    } else {
+                        out.options.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| {
+                CliError::Invalid(name.to_string(), v.to_string(), e.to_string())
+            }),
+        }
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.parse_as(name)?.unwrap_or(default))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::Missing(name.to_string()))
+    }
+}
+
+/// Parse a comma-separated list of T.
+pub fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>, String>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split(',')
+        .filter(|p| !p.is_empty())
+        .map(|p| p.trim().parse::<T>().map_err(|e| format!("{p:?}: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positional() {
+        let a = Args::parse(argv("sweep --sf 0.1 --verbose --eps=0.03 out.csv"), &["verbose"]);
+        assert_eq!(a.positional, vec!["sweep", "out.csv"]);
+        assert_eq!(a.get("sf"), Some("0.1"));
+        assert_eq!(a.get("eps"), Some("0.03"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(argv("--n 100 --x 1.5"), &[]);
+        assert_eq!(a.parse_or("n", 0u64).unwrap(), 100);
+        assert_eq!(a.parse_or("x", 0.0f64).unwrap(), 1.5);
+        assert_eq!(a.parse_or("missing", 7i32).unwrap(), 7);
+        assert!(a.parse_as::<u64>("x").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(argv("--quiet"), &[]);
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let a = Args::parse(argv(""), &[]);
+        assert!(matches!(a.require("sf"), Err(CliError::Missing(_))));
+    }
+
+    #[test]
+    fn list_parsing() {
+        assert_eq!(parse_list::<f64>("0.1, 0.2,0.3").unwrap(), vec![0.1, 0.2, 0.3]);
+        assert!(parse_list::<f64>("a,b").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Human-readable formatting for bytes, durations and counts, plus a
+//! fixed-width markdown table writer used by benches and the CLI.
+
+use std::time::Duration;
+
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+pub fn duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 60.0 {
+        format!("{:.0}m{:04.1}s", (s / 60.0).floor(), s % 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+pub fn count(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.2}G", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 10_000 {
+        format!("{:.1}k", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Markdown table accumulator: `Table::new(&["a","b"]).row(...)...`.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = w[i] - c.chars().count();
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let dashes: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        out.push_str(&line(&dashes));
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(bytes(17), "17 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(duration(Duration::from_micros(5)), "5.0µs");
+        assert_eq!(duration(Duration::from_millis(12)), "12.000ms");
+        assert_eq!(duration(Duration::from_secs_f64(2.5)), "2.500s");
+        assert_eq!(duration(Duration::from_secs(90)), "1m30.0s");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(count(999), "999");
+        assert_eq!(count(15_000), "15.0k");
+        assert_eq!(count(2_500_000), "2.50M");
+    }
+
+    #[test]
+    fn table_renders_aligned_markdown() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let out = t.render();
+        assert!(out.starts_with("| name"));
+        assert_eq!(out.lines().count(), 4);
+        for line in out.lines() {
+            assert_eq!(line.chars().filter(|c| *c == '|').count(), 3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        Table::new(&["a"]).row(vec!["x".into(), "y".into()]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained utilities the offline build cannot pull from
+//! crates.io: a JSON parser (manifest loading), a deterministic PRNG
+//! (data generation and property tests), CLI argument parsing, and
+//! human-readable byte/time formatting.
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

