@@ -1,0 +1,1 @@
+"""Build-time compile package: Pallas/jnp kernels + AOT export."""

@@ -4,7 +4,7 @@
 //! Expected shape: driver-side stage-1 grows with the small table (flat
 //! collect through one link + serial build); distributed stays near-flat.
 
-use bloomjoin::bench_support::Report;
+use bloomjoin::bench_support::{smoke_or, Report};
 use bloomjoin::cluster::{Cluster, ClusterConfig};
 use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, FilterBuildStyle};
 use bloomjoin::query::{JoinQuery, JoinStrategy};
@@ -21,7 +21,8 @@ fn main() {
     for frac in [0.05, 0.3, 0.9] {
         let window = ((ORDERDATE_RANGE_DAYS as f64) * frac).max(1.0) as i32;
         let base = JoinQuery {
-            sf: 0.3, // the paper's claim bites at large small-table sizes
+            // the paper's claim bites at large small-table sizes
+            sf: smoke_or(0.02, 0.3),
             order_date_window: (100, 100 + window),
             ..Default::default()
         };

@@ -5,7 +5,7 @@
 //! Expected shape: fused wins on wall time and the gap widens with row
 //! count; Tungsten shuffle is cheaper at every volume.
 
-use bloomjoin::bench_support::{measure, secs, Report};
+use bloomjoin::bench_support::{measure, secs, smoke_or, Report};
 use bloomjoin::cluster::shuffle::{ShuffleCodec, ShuffleVolume};
 use bloomjoin::cluster::ClusterConfig;
 use bloomjoin::dataset::{Op, Pipeline};
@@ -17,7 +17,8 @@ fn main() {
         &["rows", "fused_wall", "unfused_wall", "speedup"],
     );
 
-    for sf in [0.002, 0.01, 0.03] {
+    let sfs: &[f64] = smoke_or(&[0.002, 0.01], &[0.002, 0.01, 0.03]);
+    for &sf in sfs {
         let gen = TpchGenerator::new(GenConfig { sf, ..Default::default() });
         let rows: Vec<Lineitem> = gen.lineitems().into_iter().flatten().collect();
         let pipeline: Pipeline<Lineitem> = Pipeline::new()

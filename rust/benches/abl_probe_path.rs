@@ -7,7 +7,7 @@
 //! real TPU the batch path is the one that scales); Pagh saves space at
 //! low ε; blocked trades FPR for locality.
 
-use bloomjoin::bench_support::{measure, secs, Report};
+use bloomjoin::bench_support::{measure, secs, smoke_or, Report};
 use bloomjoin::bloom::blocked::BlockedBloomFilter;
 use bloomjoin::bloom::pagh::PaghFilter;
 use bloomjoin::bloom::{BloomFilter, KeyFilter};
@@ -18,9 +18,10 @@ use bloomjoin::util::Rng;
 fn main() {
     let n = 50_000u64;
     let eps = 0.01;
+    let n_queries: usize = smoke_or(50_000, 200_000);
     let mut rng = Rng::new(4242);
     let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
-    let queries: Vec<u64> = (0..200_000).map(|_| rng.next_u64()).collect();
+    let queries: Vec<u64> = (0..n_queries).map(|_| rng.next_u64()).collect();
 
     // --- filter kinds ---------------------------------------------------
     let mut std_f = BloomFilter::with_optimal(n, eps);

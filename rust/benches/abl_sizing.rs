@@ -5,7 +5,7 @@
 //! fixed-large over-sizes when n is small (stage-1 pays).  The sized
 //! filter tracks the better of the two everywhere.
 
-use bloomjoin::bench_support::Report;
+use bloomjoin::bench_support::{smoke_or, Report};
 use bloomjoin::bloom::{BloomFilter, BloomParams};
 use bloomjoin::cluster::{broadcast, Cluster, ClusterConfig};
 use bloomjoin::util::Rng;
@@ -23,7 +23,8 @@ fn main() {
     );
 
     let target_eps = 0.05;
-    for n in [1_000u64, 20_000, 200_000, 1_000_000] {
+    let sizes: &[u64] = smoke_or(&[1_000, 20_000, 200_000], &[1_000, 20_000, 200_000, 1_000_000]);
+    for &n in sizes {
         let mut rng = Rng::new(n);
         let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
 

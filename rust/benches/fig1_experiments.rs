@@ -6,12 +6,12 @@
 //! Expected shape (§6.3.3): stage-2 ≫ stage-1 for most ε; stage-1 rises
 //! as ε → 0 (bigger filters); stage-2 grows with ε.
 
-use bloomjoin::bench_support::Report;
+use bloomjoin::bench_support::{smoke, Report};
 use bloomjoin::cluster::{Cluster, ClusterConfig};
 use bloomjoin::query::JoinQuery;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = std::env::args().any(|a| a == "--quick") || smoke();
     let runs = if quick { 12 } else { 69 };
     let sfs: &[f64] = if quick { &[0.02] } else { &[0.02, 0.05, 0.1] };
 

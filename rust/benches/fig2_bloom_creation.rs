@@ -7,7 +7,7 @@
 //! were built over millions of orders; the query-level sweep in fig1
 //! covers the small-n regime).  Expected: linear in log(1/ε), R² ≈ 1.
 
-use bloomjoin::bench_support::Report;
+use bloomjoin::bench_support::{smoke_or, Report};
 use bloomjoin::bloom::{BloomFilter, BloomParams};
 use bloomjoin::cluster::{broadcast, ClusterConfig};
 use bloomjoin::model::fit;
@@ -15,7 +15,7 @@ use bloomjoin::util::Rng;
 
 fn main() {
     let cfg = ClusterConfig::small_cluster();
-    let n: u64 = 1_000_000;
+    let n: u64 = smoke_or(200_000, 1_000_000);
     let n_parts = 16;
     let mut rng = Rng::new(2024);
     let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();

@@ -4,17 +4,17 @@
 //! Expected shape: a floor (L1: the unfilterable work), an ε-linear rise
 //! (false positives shuffled/sorted/discarded), mild n·log n curvature.
 
-use bloomjoin::bench_support::Report;
+use bloomjoin::bench_support::{smoke_or, Report};
 use bloomjoin::cluster::{Cluster, ClusterConfig};
 use bloomjoin::model::fit;
 use bloomjoin::query::JoinQuery;
 
 fn main() {
     let cluster = Cluster::new(ClusterConfig::small_cluster());
-    let base = JoinQuery { sf: 0.05, ..Default::default() };
+    let base = JoinQuery { sf: smoke_or(0.01, 0.05), ..Default::default() };
     let (a, b) = base.model_ab(&cluster);
 
-    let series = base.sweep_epsilon(&cluster, &JoinQuery::epsilon_series(24));
+    let series = base.sweep_epsilon(&cluster, &JoinQuery::epsilon_series(smoke_or(12, 24)));
     let points: Vec<fit::SweepPoint> = series
         .iter()
         .map(|(eps, m)| fit::SweepPoint {

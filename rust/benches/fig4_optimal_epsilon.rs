@@ -4,18 +4,18 @@
 //! Expected shape: measured total at ε* within noise of the best grid
 //! point; extremes (ε→0 pays stage-1, ε→1 pays stage-2) both lose.
 
-use bloomjoin::bench_support::Report;
+use bloomjoin::bench_support::{smoke_or, Report};
 use bloomjoin::cluster::{Cluster, ClusterConfig};
 use bloomjoin::model::{fit, newton};
 use bloomjoin::query::JoinQuery;
 
 fn main() {
     let cluster = Cluster::new(ClusterConfig::small_cluster());
-    let base = JoinQuery { sf: 0.05, ..Default::default() };
+    let base = JoinQuery { sf: smoke_or(0.01, 0.05), ..Default::default() };
     let (a, b) = base.model_ab(&cluster);
 
     // calibrate on a 16-point sweep (shared inputs)
-    let cal = base.sweep_epsilon(&cluster, &JoinQuery::epsilon_series(16));
+    let cal = base.sweep_epsilon(&cluster, &JoinQuery::epsilon_series(smoke_or(10, 16)));
     let points: Vec<fit::SweepPoint> = cal
         .iter()
         .map(|(eps, m)| fit::SweepPoint {

@@ -2,7 +2,7 @@
 //! hash/fold, native probe, filter build, TimSort vs std sort, and the
 //! per-partition sort-merge join.
 
-use bloomjoin::bench_support::{measure, secs, Report};
+use bloomjoin::bench_support::{measure, secs, smoke_or, Report};
 use bloomjoin::bloom::hash::fold64;
 use bloomjoin::bloom::BloomFilter;
 use bloomjoin::joins::sort_merge::sort_merge_join_partition;
@@ -11,16 +11,17 @@ use bloomjoin::util::Rng;
 
 fn main() {
     let mut rng = Rng::new(77);
-    let keys: Vec<u64> = (0..1_000_000).map(|_| rng.next_u64()).collect();
+    let n_keys: usize = smoke_or(200_000, 1_000_000);
+    let keys: Vec<u64> = (0..n_keys).map(|_| rng.next_u64()).collect();
     let mut report = Report::new("micro_hot_path", &["op", "p50", "throughput"]);
 
     {
         let k = &keys;
         let st = measure(2, 9, || k.iter().map(|&x| fold64(x) as u64).sum::<u64>());
         report.row(vec![
-            "fold64 (1M keys)".into(),
+            format!("fold64 ({n_keys} keys)"),
             secs(st.p50),
-            format!("{:.2e}/s", 1e6 / st.p50),
+            format!("{:.2e}/s", n_keys as f64 / st.p50),
         ]);
     }
 
@@ -33,9 +34,9 @@ fn main() {
         let k = &keys;
         let st = measure(2, 9, || k.iter().filter(|&&x| f.contains_key(x)).count());
         report.row(vec![
-            "native probe (1M keys)".into(),
+            format!("native probe ({n_keys} keys)"),
             secs(st.p50),
-            format!("{:.2e}/s", 1e6 / st.p50),
+            format!("{:.2e}/s", n_keys as f64 / st.p50),
         ]);
     }
     {
@@ -54,7 +55,8 @@ fn main() {
         ]);
     }
 
-    let rows: Vec<(u64, u64)> = (0..500_000).map(|_| (rng.below(1 << 40), rng.next_u64())).collect();
+    let n_rows: usize = smoke_or(100_000, 500_000);
+    let rows: Vec<(u64, u64)> = (0..n_rows).map(|_| (rng.below(1 << 40), rng.next_u64())).collect();
     {
         let r = &rows;
         let st = measure(1, 5, || {
@@ -63,9 +65,9 @@ fn main() {
             v.len()
         });
         report.row(vec![
-            "timsort 500k pairs".into(),
+            format!("timsort {n_rows} pairs"),
             secs(st.p50),
-            format!("{:.2e}/s", 5e5 / st.p50),
+            format!("{:.2e}/s", n_rows as f64 / st.p50),
         ]);
         let st = measure(1, 5, || {
             let mut v = r.clone();
@@ -73,24 +75,26 @@ fn main() {
             v.len()
         });
         report.row(vec![
-            "std stable sort 500k".into(),
+            format!("std stable sort {n_rows}"),
             secs(st.p50),
-            format!("{:.2e}/s", 5e5 / st.p50),
+            format!("{:.2e}/s", n_rows as f64 / st.p50),
         ]);
     }
 
     {
+        let n_big: usize = smoke_or(50_000, 200_000);
+        let n_small = n_big / 20;
         let big: Vec<(u64, u64)> =
-            (0..200_000).map(|_| (rng.below(50_000), rng.next_u64())).collect();
+            (0..n_big).map(|_| (rng.below(50_000), rng.next_u64())).collect();
         let small: Vec<(u64, u64)> =
-            (0..10_000).map(|_| (rng.below(50_000), rng.next_u64())).collect();
+            (0..n_small).map(|_| (rng.below(50_000), rng.next_u64())).collect();
         let st = measure(1, 5, || {
             sort_merge_join_partition(big.clone(), small.clone()).len()
         });
         report.row(vec![
-            "sort-merge join 200k⋈10k".into(),
+            format!("sort-merge join {n_big}⋈{n_small}"),
             secs(st.p50),
-            format!("{:.2e} rows/s", 2.1e5 / st.p50),
+            format!("{:.2e} rows/s", (n_big + n_small) as f64 / st.p50),
         ]);
     }
     report.finish();

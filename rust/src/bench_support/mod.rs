@@ -7,6 +7,27 @@ use std::time::Instant;
 use crate::util::fmt::{duration, Table};
 use crate::util::Json;
 
+/// True when `BLOOMJOIN_BENCH_SMOKE=1` (or any non-`0` value): benches
+/// shrink to seconds-scale shapes so CI can compile **and execute** every
+/// bench target without the full experiment runtime.  Shapes change;
+/// every bench's asserted invariants must hold in both modes.
+pub fn smoke() -> bool {
+    match std::env::var("BLOOMJOIN_BENCH_SMOKE") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+/// `full` normally, `small` under [`smoke`] — the one-liner benches use
+/// to pick their shapes.
+pub fn smoke_or<T>(small: T, full: T) -> T {
+    if smoke() {
+        small
+    } else {
+        full
+    }
+}
+
 /// One measured statistic set, seconds.
 #[derive(Clone, Copy, Debug)]
 pub struct Stats {

@@ -193,20 +193,40 @@ impl KeyFilter for BloomFilter {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("cannot merge bloom filters with different params: {ours:?} vs {theirs:?}")]
+#[derive(Debug)]
 pub struct MergeError {
     pub ours: BloomParams,
     pub theirs: BloomParams,
 }
 
-#[derive(Debug, thiserror::Error)]
+impl std::fmt::Display for MergeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cannot merge bloom filters with different params: {:?} vs {:?}",
+            self.ours, self.theirs
+        )
+    }
+}
+
+impl std::error::Error for MergeError {}
+
+#[derive(Debug)]
 pub enum DecodeError {
-    #[error("bloom filter bytes truncated")]
     Truncated,
-    #[error("bloom filter header invalid")]
     BadHeader,
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated => write!(f, "bloom filter bytes truncated"),
+            DecodeError::BadHeader => write!(f, "bloom filter header invalid"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 #[cfg(test)]
 mod tests {

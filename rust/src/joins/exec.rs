@@ -1,0 +1,203 @@
+//! Generic binary join executors: the broadcast-hash and sort-merge
+//! strategies as free functions over any keyed payload types.
+//!
+//! Extracted from `query.rs` so both the paper's two-table [`JoinQuery`]
+//! and the multi-way [`plan`] executor dispatch the same stage
+//! implementations — one cost-accounting code path per strategy, however
+//! many edges a plan has.  The bloom-cascade strategy already lives in
+//! [`bloom_cascade::BloomCascadeJoin::execute`], which is equally generic.
+//!
+//! [`JoinQuery`]: crate::query::JoinQuery
+//! [`plan`]: crate::plan
+//! [`bloom_cascade::BloomCascadeJoin::execute`]: crate::joins::bloom_cascade::BloomCascadeJoin::execute
+
+use std::sync::Arc;
+
+use crate::cluster::shuffle::{repartition, ShuffleCodec};
+use crate::cluster::{broadcast, Cluster, Cost, SimDuration, Stage, Task};
+use crate::metrics::{QueryMetrics, StageTiming};
+
+use super::broadcast_hash::{broadcast_bytes, build_hash_table, probe_partition};
+use super::sort_merge::sort_merge_join_partition;
+use super::{JoinedRow, Keyed, RowSize};
+use crate::dataset::PartitionedTable;
+
+/// Spark's `BroadcastHashJoin` (SBJ): collect + broadcast the small side,
+/// build a hash table per executor, stream the big side through it.
+pub fn broadcast_hash_join<B, S>(
+    cluster: &Cluster,
+    big: PartitionedTable<Keyed<B>>,
+    small: PartitionedTable<Keyed<S>>,
+) -> (Vec<JoinedRow<B, S>>, QueryMetrics)
+where
+    B: Clone + Send + Sync + RowSize + 'static,
+    S: Clone + Send + Sync + RowSize + 'static,
+{
+    let cfg = cluster.config().clone();
+    let mut metrics = QueryMetrics::default();
+    metrics.big_rows_scanned = big.n_rows() as u64;
+
+    // collect small table to driver, broadcast to all executors
+    let small_rows: Vec<Keyed<S>> = small.into_rows();
+    let payload = broadcast_bytes(&small_rows);
+    let collect = broadcast::driver_collect_cost(&cfg, payload);
+    let bc = broadcast::p2p_broadcast_cost(&cfg, payload);
+    metrics.push(StageTiming::new("broadcast", collect + bc).with_cost(&Cost {
+        net_bytes: payload * (cfg.total_executors() as u64 + 1),
+        ..Default::default()
+    }));
+
+    // every executor builds the hash table from the broadcast payload
+    // once; modeled at merge_record_cost per row (spread over slots as
+    // one warm-up task per executor is approximated by adding it to
+    // each scan task's first-touch cost share)
+    let table = Arc::new(build_hash_table(&small_rows));
+    let table_build_cpu = small_rows.len() as f64 * cfg.merge_record_cost;
+    let n_nodes = cfg.n_nodes;
+    let n_tasks_total = big.n_partitions().max(1);
+    let tasks: Vec<Task<Vec<JoinedRow<B, S>>>> = big
+        .into_partitions()
+        .into_iter()
+        .enumerate()
+        .map(|(p, part)| {
+            let table = Arc::clone(&table);
+            let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
+            let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
+            // modeled JVM scan + hash-probe cost (see ClusterConfig)
+            let cpu_s = part.len() as f64 * cfg.scan_record_cost
+                + table_build_cpu / n_tasks_total as f64;
+            let merge_c = cfg.merge_record_cost;
+            Task::new(move || {
+                let out = probe_partition(&part, &table);
+                let cpu_s = cpu_s + out.len() as f64 * merge_c;
+                (out, Cost { cpu_s, disk_s, disk_bytes, ..Default::default() })
+            })
+            .with_locality(p % n_nodes)
+        })
+        .collect();
+    let scan = cluster.run_stage(Stage::new("join", tasks));
+    let rows: Vec<_> = scan.outputs.into_iter().flatten().collect();
+    metrics.push(StageTiming {
+        tasks: scan.n_tasks,
+        wall_s: scan.wall_time.seconds(),
+        cpu_s: scan.total_cost.cpu_s,
+        disk_bytes: scan.total_cost.disk_bytes,
+        ..StageTiming::new("join", scan.sim_time)
+    });
+    metrics.output_rows = rows.len() as u64;
+    metrics.big_rows_after_filter = metrics.big_rows_scanned; // no pre-filter
+    (rows, metrics)
+}
+
+/// Plain shuffle + sort-merge join (Spark's large-large default).
+pub fn sort_merge_join<B, S>(
+    cluster: &Cluster,
+    big: PartitionedTable<Keyed<B>>,
+    small: PartitionedTable<Keyed<S>>,
+) -> (Vec<JoinedRow<B, S>>, QueryMetrics)
+where
+    B: Clone + Send + Sync + RowSize + 'static,
+    S: Clone + Send + Sync + RowSize + 'static,
+{
+    let cfg = cluster.config().clone();
+    let mut metrics = QueryMetrics::default();
+    metrics.big_rows_scanned = big.n_rows() as u64;
+    metrics.big_rows_after_filter = metrics.big_rows_scanned;
+
+    // scan stage: read both tables (disk + modeled per-record scan
+    // cpu spread over the cluster; WHERE already fused)
+    let scan_bytes: u64 = big.ser_bytes(|(_, b)| 8 + b.row_bytes())
+        + small.ser_bytes(|(_, s)| 8 + s.row_bytes());
+    let scan_cpu = (big.n_rows() + small.n_rows()) as f64 * cfg.scan_record_cost
+        / cfg.total_slots().max(1) as f64;
+    metrics.push(
+        StageTiming::new(
+            "filter_scan",
+            SimDuration::from_secs(
+                cfg.disk_seconds(scan_bytes / cfg.n_nodes.max(1) as u64)
+                    + scan_cpu
+                    + cfg.stage_overhead,
+            ),
+        )
+        .with_cost(&Cost { disk_bytes: scan_bytes, cpu_s: scan_cpu, ..Default::default() }),
+    );
+
+    let n_shuffle = cfg.shuffle_partitions;
+    let (big_buckets, big_vol) =
+        repartition(big.into_partitions(), n_shuffle, |b: &B| b.row_bytes());
+    let (small_buckets, small_vol) =
+        repartition(small.into_partitions(), n_shuffle, |s: &S| s.row_bytes());
+    let mut ex = big_vol.exchange_cost(&cfg, ShuffleCodec::Tungsten);
+    ex.merge(&small_vol.exchange_cost(&cfg, ShuffleCodec::Tungsten));
+    metrics.push(
+        StageTiming {
+            tasks: n_shuffle,
+            ..StageTiming::new("shuffle", SimDuration::from_secs(ex.total_seconds(cfg.cpu_scale)))
+        }
+        .with_cost(&ex),
+    );
+
+    let tasks: Vec<Task<Vec<JoinedRow<B, S>>>> = big_buckets
+        .into_iter()
+        .zip(small_buckets)
+        .map(|(b, s)| {
+            let sort_c = cfg.sort_compare_cost;
+            let merge_c = cfg.merge_record_cost;
+            let disk_bw = cfg.disk_bandwidth;
+            Task::new(move || {
+                let nlogn = |n: usize| {
+                    if n < 2 { n as f64 } else { n as f64 * (n as f64).log2() }
+                };
+                let cpu_s = sort_c * (nlogn(b.len()) + nlogn(s.len()))
+                    + merge_c * (b.len() + s.len()) as f64;
+                let out = sort_merge_join_partition(b, s);
+                let cpu_s = cpu_s + merge_c * out.len() as f64;
+                let bytes: u64 = out.len() as u64 * 20;
+                (
+                    out,
+                    Cost { cpu_s, disk_s: bytes as f64 / disk_bw, disk_bytes: bytes, ..Default::default() },
+                )
+            })
+        })
+        .collect();
+    let join = cluster.run_stage(Stage::new("join", tasks));
+    let rows: Vec<_> = join.outputs.into_iter().flatten().collect();
+    metrics.push(StageTiming {
+        tasks: join.n_tasks,
+        wall_s: join.wall_time.seconds(),
+        cpu_s: join.total_cost.cpu_s,
+        disk_bytes: join.total_cost.disk_bytes,
+        ..StageTiming::new("join", join.sim_time)
+    });
+    metrics.output_rows = rows.len() as u64;
+    (rows, metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::util::Rng;
+
+    fn inputs() -> (PartitionedTable<Keyed<u64>>, PartitionedTable<Keyed<u32>>) {
+        let mut rng = Rng::new(17);
+        let big: Vec<Keyed<u64>> = (0..3_000).map(|_| (rng.below(900), rng.next_u64())).collect();
+        let small: Vec<Keyed<u32>> = (0..400).map(|_| (rng.below(900), rng.next_u32())).collect();
+        (PartitionedTable::from_rows(big, 5), PartitionedTable::from_rows(small, 3))
+    }
+
+    #[test]
+    fn broadcast_and_sort_merge_agree() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (big, small) = inputs();
+        let (mut a, am) = broadcast_hash_join(&cluster, big.clone(), small.clone());
+        let (mut b, bm) = sort_merge_join(&cluster, big, small);
+        a.sort_unstable();
+        b.sort_unstable();
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+        assert_eq!(am.output_rows, bm.output_rows);
+        assert!(am.total_sim_s() > 0.0);
+        assert!(bm.total_sim_s() > 0.0);
+    }
+}

@@ -9,10 +9,12 @@
 
 pub mod bloom_cascade;
 pub mod broadcast_hash;
+pub mod exec;
 pub mod sort_merge;
 pub mod timsort;
 
 pub use bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin, FilterBuildStyle, ProbePath};
+pub use exec::{broadcast_hash_join, sort_merge_join};
 pub use sort_merge::sort_merge_join_partition;
 
 /// A keyed row: the join key plus an opaque payload.

@@ -16,8 +16,15 @@
 //!   path.  Python never runs at query time.
 //!
 //! The headline API is [`joins::bloom_cascade::BloomCascadeJoin`] driven by
-//! [`cluster::Cluster`], usually via [`query::JoinQuery`]; see
-//! `examples/quickstart.rs`.
+//! [`cluster::Cluster`], usually via [`query::JoinQuery`] for the paper's
+//! two-table query or [`plan`] for multi-way star/chain joins with
+//! per-filter optimal ε; see `examples/quickstart.rs` and
+//! `examples/star_join.rs`.
+
+// The engine deliberately builds metrics structs field-by-field after
+// `default()` (the accounting reads top-to-bottom like the paper's stage
+// list); silence the style lint once, crate-wide.
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod approx;
 pub mod bench_support;
@@ -27,6 +34,7 @@ pub mod dataset;
 pub mod joins;
 pub mod metrics;
 pub mod model;
+pub mod plan;
 pub mod query;
 pub mod runtime;
 pub mod storage;

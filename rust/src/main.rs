@@ -3,6 +3,14 @@
 //! Subcommands:
 //!   generate   write TPC-H .tbl data onto the simulated DFS and report splits
 //!   query      run the paper's join once with a chosen strategy/ε
+//!   plan       plan + execute a multi-way join (star or chain) over
+//!              CUSTOMER ⋈ ORDERS ⋈ LINEITEM: each edge picks its own
+//!              strategy (bloom cascade / broadcast hash / sort-merge)
+//!              from the §7 cost model, and every bloom edge solves its
+//!              own optimal ε from HLL cardinality estimates —
+//!              `bloomjoin plan --relations customer,orders,lineitem
+//!              [--topology star|chain] [--eps-mode per-filter|global]
+//!              [--no-execute]`
 //!   sweep      the paper's §6 experiment series (ε sweep, CSV output)
 //!   calibrate  fit the §7 cost model from a sweep
 //!   optimal    solve for ε* (§7.2) and validate with a run
@@ -20,7 +28,7 @@ use bloomjoin::util::fmt::Table;
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["xla", "driver-side", "verbose"]);
+    let args = Args::parse(argv, &["xla", "driver-side", "verbose", "no-execute"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match run(cmd, &args) {
         Ok(()) => ExitCode::SUCCESS,
@@ -35,6 +43,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     match cmd {
         "generate" => generate(args),
         "query" => query(args),
+        "plan" => plan_cmd(args),
         "sweep" => sweep(args),
         "calibrate" | "optimal" => optimal(args, cmd == "calibrate"),
         "info" => info(),
@@ -148,6 +157,78 @@ fn query(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn plan_cmd(args: &Args) -> anyhow::Result<()> {
+    use bloomjoin::plan::{self, EpsMode, PlanSpec, Relation, Topology};
+
+    let rels = args.get_or("relations", "customer,orders,lineitem");
+    let mut names: Vec<&'static str> = Vec::new();
+    for r in rels.split(',').filter(|s| !s.is_empty()) {
+        match Relation::parse(r.trim()) {
+            Some(rel) => names.push(rel.name()),
+            None => anyhow::bail!("unknown relation {r:?} (customer|orders|lineitem)"),
+        }
+    }
+    names.sort_unstable();
+    names.dedup();
+    if names != ["customer", "lineitem", "orders"] {
+        anyhow::bail!(
+            "the planner currently supports exactly customer,orders,lineitem (got {rels:?})"
+        );
+    }
+
+    let cluster = cluster_from(args)?;
+    let topology = match Topology::parse(args.get_or("topology", "star")) {
+        Some(t) => t,
+        None => anyhow::bail!("unknown topology (star|chain)"),
+    };
+    let eps_mode = match args.get_or("eps-mode", "per-filter") {
+        "per-filter" => EpsMode::PerFilter,
+        "global" => EpsMode::Global(args.parse_or("eps", 0.05)?),
+        other => anyhow::bail!("unknown eps-mode {other:?} (per-filter|global)"),
+    };
+    let spec = PlanSpec {
+        sf: args.parse_or("sf", 0.01)?,
+        seed: args.parse_or("seed", 0xB100_F117u64)?,
+        partitions: args.parse_or("partitions", 8)?,
+        topology,
+        eps_mode,
+        ..Default::default()
+    };
+
+    let inputs = plan::prepare(&spec);
+    let join_plan = plan::plan_edges(&cluster, &spec, &inputs);
+    println!(
+        "topology: {}   predicted total: {:.4}s",
+        join_plan.topology.name(),
+        join_plan.predicted_total_s()
+    );
+    let mut t =
+        Table::new(&["edge", "strategy", "eps*", "bloom_s", "broadcast_s", "sortmerge_s"]);
+    for e in &join_plan.edges {
+        t.row(vec![
+            e.name.clone(),
+            e.strategy.label(),
+            format!("{:.5}", e.prediction.eps_star),
+            format!("{:.4}", e.prediction.bloom_s),
+            format!("{:.4}", e.prediction.broadcast_s),
+            format!("{:.4}", e.prediction.sortmerge_s),
+        ]);
+    }
+    println!("{}", t.render());
+
+    if args.flag("no-execute") {
+        return Ok(());
+    }
+    let out = plan::execute(&cluster, &spec, &join_plan, inputs);
+    for r in &out.edge_reports {
+        println!("{}: {} -> {} rows in {:.4}s", r.name, r.strategy, r.output_rows, r.sim_s);
+    }
+    println!("\nrows: {}\n", out.rows.len());
+    println!("{}", out.metrics.markdown());
+    println!("plan total (simulated): {:.4}s", out.total_sim_s());
+    Ok(())
+}
+
 fn eps_series(n: usize) -> Vec<f64> {
     // n log-spaced points in [1e-4, 0.9], like the paper's 69 experiments
     (0..n)
@@ -256,6 +337,10 @@ USAGE: bloomjoin <command> [options]
 COMMANDS
   generate   --sf 0.01 --block-mb 128
   query      --sf 0.01 --strategy bloom|broadcast|sortmerge --eps 0.05 [--xla] [--driver-side]
+  plan       --relations customer,orders,lineitem --topology star|chain
+             --eps-mode per-filter|global [--eps 0.05] [--no-execute]
+             (multi-way planner: per-edge strategy from the cost model,
+              per-filter optimal ε from HLL estimates)
   sweep      --sf 0.01 --runs 69 --eps 0.05           (CSV on stdout — the paper's §6 series)
   calibrate  --sf 0.01 --runs 16                      (fit the §7 cost model)
   optimal    --sf 0.01 --runs 16                      (fit + solve ε*, validate)

@@ -54,6 +54,13 @@ pub struct QueryMetrics {
     pub realized_fpr: f64,
 }
 
+/// Stage names in a multi-way plan are prefixed per edge (`e1/shuffle`);
+/// the grouping helpers classify by the part after the last `/` so the
+/// paper's two-stage decomposition still works summed across edges.
+fn base_name(name: &str) -> &str {
+    name.rsplit('/').next().unwrap_or(name)
+}
+
 impl QueryMetrics {
     pub fn push(&mut self, s: StageTiming) {
         self.stages.push(s);
@@ -61,6 +68,24 @@ impl QueryMetrics {
 
     pub fn stage(&self, name: &str) -> Option<&StageTiming> {
         self.stages.iter().find(|s| s.name == name)
+    }
+
+    /// Fold another query's stages into this one under `prefix` — how a
+    /// multi-way plan composes per-edge accounting into one ledger whose
+    /// `total_sim_s` is the plan's simulated cost.  Scanned/filtered row
+    /// counters and filter bits accumulate; `output_rows` is overwritten
+    /// with the absorbed edge's output (the most recent edge's output IS
+    /// the pipeline's output so far); per-filter ε fields stay with the
+    /// caller (each edge has its own ε).
+    pub fn absorb(&mut self, prefix: &str, other: QueryMetrics) {
+        for mut s in other.stages {
+            s.name = format!("{prefix}/{}", s.name);
+            self.stages.push(s);
+        }
+        self.output_rows = other.output_rows;
+        self.big_rows_scanned += other.big_rows_scanned;
+        self.big_rows_after_filter += other.big_rows_after_filter;
+        self.bloom_bits += other.bloom_bits;
     }
 
     pub fn total_sim_s(&self) -> f64 {
@@ -76,7 +101,7 @@ impl QueryMetrics {
     pub fn bloom_creation_s(&self) -> f64 {
         self.stages
             .iter()
-            .filter(|s| matches!(s.name.as_str(), "approx_count" | "bloom_build" | "broadcast"))
+            .filter(|s| matches!(base_name(&s.name), "approx_count" | "bloom_build" | "broadcast"))
             .map(|s| s.sim_s)
             .sum()
     }
@@ -85,7 +110,7 @@ impl QueryMetrics {
     pub fn filter_join_s(&self) -> f64 {
         self.stages
             .iter()
-            .filter(|s| matches!(s.name.as_str(), "filter_scan" | "shuffle" | "join" | "write"))
+            .filter(|s| matches!(base_name(&s.name), "filter_scan" | "shuffle" | "join" | "write"))
             .map(|s| s.sim_s)
             .sum()
     }
@@ -172,6 +197,26 @@ mod tests {
         assert!(md.contains("bloom_build"));
         assert!(md.contains("TOTAL"));
         assert_eq!(md.lines().count(), 2 + 5 + 1);
+    }
+
+    #[test]
+    fn absorb_prefixes_and_composes() {
+        let mut plan = QueryMetrics::default();
+        let mut e1 = metrics();
+        e1.big_rows_scanned = 100;
+        let mut e2 = metrics();
+        e2.big_rows_scanned = 40;
+        e2.output_rows = 7;
+        plan.absorb("e1", e1);
+        plan.absorb("e2", e2);
+        assert!(plan.stage("e1/bloom_build").is_some());
+        assert!(plan.stage("e2/join").is_some());
+        assert_eq!(plan.big_rows_scanned, 140);
+        assert_eq!(plan.output_rows, 7);
+        // suffix grouping: both edges' stages land in the paper buckets
+        assert!((plan.bloom_creation_s() - 2.0 * 1.7).abs() < 1e-12);
+        assert!((plan.filter_join_s() - 2.0 * 7.0).abs() < 1e-12);
+        assert!((plan.total_sim_s() - 2.0 * 8.7).abs() < 1e-12);
     }
 
     #[test]

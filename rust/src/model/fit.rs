@@ -4,13 +4,24 @@
 
 use super::cost::CostModel;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FitError {
-    #[error("need at least {needed} samples, got {got}")]
     TooFewSamples { needed: usize, got: usize },
-    #[error("singular normal matrix (features collinear)")]
     Singular,
 }
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitError::TooFewSamples { needed, got } => {
+                write!(f, "need at least {needed} samples, got {got}")
+            }
+            FitError::Singular => write!(f, "singular normal matrix (features collinear)"),
+        }
+    }
+}
+
+impl std::error::Error for FitError {}
 
 /// Solve `min ‖X·β − y‖²`; `rows[i]` is the feature vector of sample i.
 pub fn fit_linear(rows: &[Vec<f64>], y: &[f64]) -> Result<Vec<f64>, FitError> {

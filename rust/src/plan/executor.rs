@@ -1,0 +1,281 @@
+//! Plan execution: run the two planned edges with their chosen
+//! strategies and compose the per-edge stage accounting into one ledger.
+//!
+//! Both topologies produce the same logical result set (the equivalence
+//! property `rust/tests/join_equivalence.rs` checks against a
+//! nested-loop oracle for every per-edge strategy assignment); what
+//! differs is the simulated cost of the composition — which is the
+//! planner's whole subject.
+
+use crate::cluster::Cluster;
+use crate::dataset::PartitionedTable;
+use crate::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
+use crate::joins::{exec, JoinedRow, Keyed, RowSize};
+use crate::metrics::QueryMetrics;
+
+use super::catalog::PlanInputs;
+use super::{EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, Topology};
+
+/// One row of the 3-way join result:
+/// `(orderkey, custkey, l_extendedprice, o_orderdate, c_nationkey)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PlanRow {
+    pub orderkey: u64,
+    pub custkey: u64,
+    pub price_cents: i64,
+    pub orderdate: i32,
+    pub nationkey: i32,
+}
+
+/// Measured summary of one executed edge.
+#[derive(Clone, Debug)]
+pub struct EdgeReport {
+    pub name: String,
+    pub strategy: String,
+    pub sim_s: f64,
+    pub output_rows: u64,
+}
+
+/// Execution result: rows + composed metrics + per-edge breakdown.
+pub struct PlanOutput {
+    pub rows: Vec<PlanRow>,
+    pub metrics: QueryMetrics,
+    pub edge_reports: Vec<EdgeReport>,
+}
+
+impl PlanOutput {
+    pub fn total_sim_s(&self) -> f64 {
+        self.metrics.total_sim_s()
+    }
+}
+
+/// Reference semantics of the 3-way join: an index-nested-loop over
+/// plain row slices, emitting the same [`PlanRow`]s every plan must
+/// produce.  This is the single oracle both the executor's unit tests
+/// and `rust/tests/join_equivalence.rs` compare strategy assignments
+/// against — one copy, so the reference cannot drift between suites.
+pub fn nested_loop_oracle(
+    customer: &[(u64, i32)],
+    orders: &[(u64, u64, i32)],
+    lineitem: &[(u64, i64)],
+) -> Vec<PlanRow> {
+    use std::collections::HashMap;
+    let mut orders_by_key: HashMap<u64, Vec<(u64, i32)>> = HashMap::new();
+    for &(ok, ck, od) in orders {
+        orders_by_key.entry(ok).or_default().push((ck, od));
+    }
+    let mut cust_by_key: HashMap<u64, Vec<i32>> = HashMap::new();
+    for &(ck, nk) in customer {
+        cust_by_key.entry(ck).or_default().push(nk);
+    }
+    let mut out = Vec::new();
+    for &(l_ok, price) in lineitem {
+        let Some(os) = orders_by_key.get(&l_ok) else { continue };
+        for &(ck, od) in os {
+            let Some(nks) = cust_by_key.get(&ck) else { continue };
+            for &nk in nks {
+                out.push(PlanRow {
+                    orderkey: l_ok,
+                    custkey: ck,
+                    price_cents: price,
+                    orderdate: od,
+                    nationkey: nk,
+                });
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Dispatch one edge to its strategy's executor.
+fn run_edge<B, S>(
+    cluster: &Cluster,
+    edge: &PlannedEdge,
+    big: PartitionedTable<Keyed<B>>,
+    small: PartitionedTable<Keyed<S>>,
+) -> (Vec<JoinedRow<B, S>>, QueryMetrics)
+where
+    B: Clone + Send + Sync + RowSize + 'static,
+    S: Clone + Send + Sync + RowSize + 'static,
+{
+    match &edge.strategy {
+        EdgeStrategy::Bloom { eps } => {
+            let join =
+                BloomCascadeJoin::new(BloomCascadeConfig { fpr: *eps, ..Default::default() });
+            join.execute(cluster, big, small)
+        }
+        EdgeStrategy::Broadcast => exec::broadcast_hash_join(cluster, big, small),
+        EdgeStrategy::SortMerge => exec::sort_merge_join(cluster, big, small),
+    }
+}
+
+/// Execute `plan` over `inputs` on `cluster`.
+///
+/// Panics if the plan does not have exactly two edges (the supported
+/// 3-relation trees).
+pub fn execute(
+    cluster: &Cluster,
+    spec: &PlanSpec,
+    plan: &JoinPlan,
+    inputs: PlanInputs,
+) -> PlanOutput {
+    assert_eq!(plan.edges.len(), 2, "3-way plans have exactly two edges");
+    let parts = spec.partitions.max(1);
+    let PlanInputs { customer, orders, lineitem } = inputs;
+
+    let mut metrics = QueryMetrics::default();
+    let mut edge_reports = Vec::with_capacity(2);
+    let report = |edge: &PlannedEdge, m: &QueryMetrics| EdgeReport {
+        name: edge.name.clone(),
+        strategy: edge.strategy.label(),
+        sim_s: m.total_sim_s(),
+        output_rows: m.output_rows,
+    };
+
+    let rows: Vec<PlanRow> = match plan.topology {
+        Topology::Star => {
+            // edge 1: LINEITEM ⋈ ORDERS on orderkey (orders build side)
+            let small1: PartitionedTable<Keyed<(u64, i32)>> =
+                orders.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect());
+            let (j1, m1) = run_edge(cluster, &plan.edges[0], lineitem, small1);
+            edge_reports.push(report(&plan.edges[0], &m1));
+            metrics.absorb("e1", m1);
+
+            // re-key the join output by custkey for the customer edge
+            let inter: PartitionedTable<Keyed<(u64, (i64, i32))>> = PartitionedTable::from_rows(
+                j1.into_iter().map(|(ok, price, (ck, od))| (ck, (ok, (price, od)))).collect(),
+                parts,
+            );
+
+            // edge 2: (L⋈O) ⋈ CUSTOMER on custkey (customer build side)
+            let (j2, m2) = run_edge(cluster, &plan.edges[1], inter, customer);
+            edge_reports.push(report(&plan.edges[1], &m2));
+            metrics.absorb("e2", m2);
+
+            j2.into_iter()
+                .map(|(ck, (ok, (price, od)), nk)| PlanRow {
+                    orderkey: ok,
+                    custkey: ck,
+                    price_cents: price,
+                    orderdate: od,
+                    nationkey: nk,
+                })
+                .collect()
+        }
+        Topology::Chain => {
+            // edge 1: ORDERS ⋈ CUSTOMER on custkey (customer build side)
+            let big1: PartitionedTable<Keyed<(u64, i32)>> =
+                orders.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect());
+            let (j1, m1) = run_edge(cluster, &plan.edges[0], big1, customer);
+            edge_reports.push(report(&plan.edges[0], &m1));
+            metrics.absorb("e1", m1);
+
+            // re-key the reduced orders by orderkey for the fact edge
+            let small2: PartitionedTable<Keyed<(u64, (i32, i32))>> =
+                PartitionedTable::from_rows(
+                    j1.into_iter().map(|(ck, (ok, od), nk)| (ok, (ck, (od, nk)))).collect(),
+                    parts,
+                );
+
+            // edge 2: LINEITEM ⋈ ORDERS' on orderkey
+            let (j2, m2) = run_edge(cluster, &plan.edges[1], lineitem, small2);
+            edge_reports.push(report(&plan.edges[1], &m2));
+            metrics.absorb("e2", m2);
+
+            j2.into_iter()
+                .map(|(ok, price, (ck, (od, nk)))| PlanRow {
+                    orderkey: ok,
+                    custkey: ck,
+                    price_cents: price,
+                    orderdate: od,
+                    nationkey: nk,
+                })
+                .collect()
+        }
+    };
+
+    metrics.output_rows = rows.len() as u64;
+    PlanOutput { rows, metrics, edge_reports }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{plan_edges, prepare, EpsMode, PlanSpec};
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn tiny_spec() -> PlanSpec {
+        PlanSpec { sf: 0.002, partitions: 4, ..Default::default() }
+    }
+
+    /// The shared oracle, applied to prepared inputs.
+    fn oracle(inputs: &PlanInputs) -> Vec<PlanRow> {
+        nested_loop_oracle(
+            &inputs.customer.iter().copied().collect::<Vec<_>>(),
+            &inputs.orders.iter().copied().collect::<Vec<_>>(),
+            &inputs.lineitem.iter().copied().collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn planned_star_matches_oracle() {
+        let spec = tiny_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&spec);
+        let want = oracle(&inputs);
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        let mut out = execute(&cluster, &spec, &plan, inputs);
+        out.rows.sort_unstable();
+        assert!(!out.rows.is_empty(), "widen the predicates");
+        assert_eq!(out.rows, want);
+        assert_eq!(out.edge_reports.len(), 2);
+        assert!(out.total_sim_s() > 0.0);
+    }
+
+    #[test]
+    fn star_and_chain_agree() {
+        let spec = tiny_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let star_inputs = prepare(&spec);
+        let star_plan = plan_edges(&cluster, &spec, &star_inputs);
+        let mut star = execute(&cluster, &spec, &star_plan, star_inputs);
+
+        let chain_spec = PlanSpec { topology: Topology::Chain, ..tiny_spec() };
+        let chain_inputs = prepare(&chain_spec);
+        let chain_plan = plan_edges(&cluster, &chain_spec, &chain_inputs);
+        let mut chain = execute(&cluster, &chain_spec, &chain_plan, chain_inputs);
+
+        star.rows.sort_unstable();
+        chain.rows.sort_unstable();
+        assert_eq!(star.rows, chain.rows);
+    }
+
+    #[test]
+    fn global_eps_mode_pins_every_filter() {
+        let spec = PlanSpec { eps_mode: EpsMode::Global(0.2), ..tiny_spec() };
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&spec);
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        for e in &plan.edges {
+            if let EdgeStrategy::Bloom { eps } = e.strategy {
+                assert!((eps - 0.2).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn composed_metrics_prefix_stages_per_edge() {
+        let spec = tiny_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&spec);
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        let out = execute(&cluster, &spec, &plan, inputs);
+        assert!(out.metrics.stages.iter().all(|s| {
+            s.name.starts_with("e1/") || s.name.starts_with("e2/")
+        }));
+        // the composition is the sum of the edge totals
+        let edge_sum: f64 = out.edge_reports.iter().map(|r| r.sim_s).sum();
+        assert!((out.total_sim_s() - edge_sum).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,197 @@
+//! Multi-way join planner: star and chain join trees over TPC-H
+//! CUSTOMER ⋈ ORDERS ⋈ LINEITEM with **per-edge strategy choice and
+//! per-filter optimal ε**.
+//!
+//! The paper's headline claim is that optimally-sized bloom filters win
+//! "not only on star-joins, but also on traditional database schema";
+//! this module reproduces the star-join half.  A [`JoinPlan`] is a
+//! sequence of binary join edges over a [`Topology`]:
+//!
+//! * **Star** — LINEITEM is the fact table:
+//!   `(LINEITEM ⋈ ORDERS) ⋈ CUSTOMER`;
+//! * **Chain** — dimensions reduce upstream first:
+//!   `LINEITEM ⋈ (ORDERS ⋈ CUSTOMER)`.
+//!
+//! Planning works from per-relation cardinality estimates ([`catalog`]:
+//! row counts + HyperLogLog distinct-key sketches from [`crate::approx`]),
+//! prices each edge under all three strategies with an a-priori instance
+//! of the §7 cost model ([`costing`]), and — when an edge takes the
+//! bloom-cascade — solves that edge's **own** optimal ε with
+//! [`crate::model::newton`] instead of one global ε.  Execution
+//! ([`executor`]) composes the per-edge stage accounting into a single
+//! [`crate::metrics::QueryMetrics`] ledger, so a plan's simulated cost is
+//! the composition of its stages.
+
+pub mod catalog;
+pub mod costing;
+pub mod executor;
+
+pub use catalog::{edge_stats, prepare, EdgeStats, PlanInputs, Relation};
+pub use costing::{plan_edges, EdgePrediction};
+pub use executor::{execute, nested_loop_oracle, EdgeReport, PlanOutput, PlanRow};
+
+use crate::tpch::ORDERDATE_RANGE_DAYS;
+
+/// Shape of the 3-way join tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// `(LINEITEM ⋈ ORDERS) ⋈ CUSTOMER` — the fact table first.
+    Star,
+    /// `LINEITEM ⋈ (ORDERS ⋈ CUSTOMER)` — dimension reduction first.
+    Chain,
+}
+
+impl Topology {
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::Star => "star",
+            Topology::Chain => "chain",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Topology> {
+        match s {
+            "star" => Some(Topology::Star),
+            "chain" => Some(Topology::Chain),
+            _ => None,
+        }
+    }
+}
+
+/// How bloom edges pick their ε.
+#[derive(Clone, Copy, Debug)]
+pub enum EpsMode {
+    /// Each edge solves its own ε* from its own workload (the tentpole).
+    PerFilter,
+    /// One fixed ε for every filter (the baseline the bench compares).
+    Global(f64),
+}
+
+/// The parameterised 3-way query (predicates mirror `query::JoinQuery`).
+#[derive(Clone, Debug)]
+pub struct PlanSpec {
+    pub sf: f64,
+    pub seed: u64,
+    pub partitions: usize,
+    pub topology: Topology,
+    /// cond on ORDERS: keep `o_orderdate ∈ [lo, hi)`.
+    pub order_date_window: (i32, i32),
+    /// cond on LINEITEM: keep `l_shipdate < max`.
+    pub ship_date_max: i32,
+    /// cond on CUSTOMER: keep `c_mktsegment == seg` (None = all).
+    pub mktsegment: Option<u8>,
+    pub eps_mode: EpsMode,
+}
+
+impl Default for PlanSpec {
+    fn default() -> Self {
+        PlanSpec {
+            sf: 0.01,
+            seed: 0xB100_F117,
+            partitions: 8,
+            topology: Topology::Star,
+            // ~10 % of the order-date range, like the paper's query
+            order_date_window: (400, 400 + ORDERDATE_RANGE_DAYS / 10),
+            ship_date_max: ORDERDATE_RANGE_DAYS + 121,
+            // one of five segments: ~20 % of customers
+            mktsegment: Some(0),
+            eps_mode: EpsMode::PerFilter,
+        }
+    }
+}
+
+/// The strategy one edge executes with.
+#[derive(Clone, Debug)]
+pub enum EdgeStrategy {
+    /// SBFCJ with this edge's ε (per-filter optimal or the global value).
+    Bloom { eps: f64 },
+    /// Broadcast hash join (SBJ).
+    Broadcast,
+    /// Plain shuffle + sort-merge.
+    SortMerge,
+}
+
+impl EdgeStrategy {
+    pub fn label(&self) -> String {
+        match self {
+            EdgeStrategy::Bloom { eps } => format!("bloom(eps={eps:.4})"),
+            EdgeStrategy::Broadcast => "broadcast".to_string(),
+            EdgeStrategy::SortMerge => "sortmerge".to_string(),
+        }
+    }
+}
+
+/// One planned binary join.
+#[derive(Clone, Debug)]
+pub struct PlannedEdge {
+    pub name: String,
+    pub strategy: EdgeStrategy,
+    pub stats: EdgeStats,
+    pub prediction: EdgePrediction,
+}
+
+impl PlannedEdge {
+    /// An edge with a caller-forced strategy and no planning stats —
+    /// what the equivalence tests use to enumerate strategy assignments.
+    pub fn forced(name: impl Into<String>, strategy: EdgeStrategy) -> PlannedEdge {
+        PlannedEdge {
+            name: name.into(),
+            strategy,
+            stats: EdgeStats::default(),
+            prediction: EdgePrediction::default(),
+        }
+    }
+}
+
+/// A fully-decided plan: topology + per-edge strategies.
+#[derive(Clone, Debug)]
+pub struct JoinPlan {
+    pub topology: Topology,
+    pub edges: Vec<PlannedEdge>,
+}
+
+impl JoinPlan {
+    /// Model-predicted simulated seconds for the whole plan (the sum of
+    /// each edge's predicted cost under its chosen strategy).
+    pub fn predicted_total_s(&self) -> f64 {
+        self.edges
+            .iter()
+            .map(|e| match e.strategy {
+                EdgeStrategy::Bloom { .. } => e.prediction.bloom_s,
+                EdgeStrategy::Broadcast => e.prediction.broadcast_s,
+                EdgeStrategy::SortMerge => e.prediction.sortmerge_s,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_parse_roundtrips() {
+        for t in [Topology::Star, Topology::Chain] {
+            assert_eq!(Topology::parse(t.name()), Some(t));
+        }
+        assert_eq!(Topology::parse("snowflake"), None);
+    }
+
+    #[test]
+    fn forced_edge_carries_strategy() {
+        let e = PlannedEdge::forced("x", EdgeStrategy::Broadcast);
+        assert_eq!(e.name, "x");
+        assert!(matches!(e.strategy, EdgeStrategy::Broadcast));
+    }
+
+    #[test]
+    fn strategy_labels_distinct() {
+        let labels = [
+            EdgeStrategy::Bloom { eps: 0.05 }.label(),
+            EdgeStrategy::Broadcast.label(),
+            EdgeStrategy::SortMerge.label(),
+        ];
+        assert!(labels[0].contains("bloom"));
+        assert_ne!(labels[1], labels[2]);
+    }
+}

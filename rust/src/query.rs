@@ -12,16 +12,12 @@
 //! would), and dispatches one of the three [`JoinStrategy`]s.  Everything
 //! benches and examples run goes through here.
 
-use std::sync::Arc;
-
-use crate::cluster::shuffle::{repartition, ShuffleCodec};
-use crate::cluster::{broadcast, Cluster, Cost, SimDuration, Stage, Task};
+use crate::cluster::Cluster;
 use crate::dataset::{Op, PartitionedTable, Pipeline};
 use crate::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
-use crate::joins::broadcast_hash::{broadcast_bytes, build_hash_table, probe_partition};
-use crate::joins::sort_merge::sort_merge_join_partition;
+use crate::joins::exec;
 use crate::joins::{JoinedRow, Keyed, RowSize};
-use crate::metrics::{QueryMetrics, StageTiming};
+use crate::metrics::QueryMetrics;
 use crate::tpch::{GenConfig, Lineitem, Order, TpchGenerator, ORDERDATE_RANGE_DAYS};
 
 /// Projected big-side payload: `l_extendedprice_cents` (BIG.attr1).
@@ -110,8 +106,14 @@ impl JoinQuery {
                 let (rows, metrics) = join.execute(cluster, big, small);
                 QueryOutput { rows, metrics }
             }
-            JoinStrategy::BroadcastHash => self.run_broadcast_hash(cluster, big, small),
-            JoinStrategy::SortMerge => self.run_sort_merge(cluster, big, small),
+            JoinStrategy::BroadcastHash => {
+                let (rows, metrics) = exec::broadcast_hash_join(cluster, big, small);
+                QueryOutput { rows, metrics }
+            }
+            JoinStrategy::SortMerge => {
+                let (rows, metrics) = exec::sort_merge_join(cluster, big, small);
+                QueryOutput { rows, metrics }
+            }
         }
     }
 
@@ -184,148 +186,6 @@ impl JoinQuery {
             });
 
         (big, small)
-    }
-
-    fn run_broadcast_hash(
-        &self,
-        cluster: &Cluster,
-        big: PartitionedTable<Keyed<BigRow>>,
-        small: PartitionedTable<Keyed<SmallRow>>,
-    ) -> QueryOutput {
-        let cfg = cluster.config().clone();
-        let mut metrics = QueryMetrics::default();
-        metrics.big_rows_scanned = big.n_rows() as u64;
-
-        // collect small table to driver, broadcast to all executors
-        let small_rows: Vec<Keyed<SmallRow>> = small.into_rows();
-        let payload = broadcast_bytes(&small_rows);
-        let collect = broadcast::driver_collect_cost(&cfg, payload);
-        let bc = broadcast::p2p_broadcast_cost(&cfg, payload);
-        metrics.push(StageTiming::new("broadcast", collect + bc).with_cost(&Cost {
-            net_bytes: payload * (cfg.total_executors() as u64 + 1),
-            ..Default::default()
-        }));
-
-        // every executor builds the hash table from the broadcast payload
-        // once; modeled at merge_record_cost per row (spread over slots as
-        // one warm-up task per executor is approximated by adding it to
-        // each scan task's first-touch cost share)
-        let table = Arc::new(build_hash_table(&small_rows));
-        let table_build_cpu = small_rows.len() as f64 * cfg.merge_record_cost;
-        let n_nodes = cfg.n_nodes;
-        let n_tasks_total = big.n_partitions().max(1);
-        let tasks: Vec<Task<Vec<JoinedRow<BigRow, SmallRow>>>> = big
-            .into_partitions()
-            .into_iter()
-            .enumerate()
-            .map(|(p, part)| {
-                let table = Arc::clone(&table);
-                let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
-                let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
-                // modeled JVM scan + hash-probe cost (see ClusterConfig)
-                let cpu_s = part.len() as f64 * cfg.scan_record_cost
-                    + table_build_cpu / n_tasks_total as f64;
-                let merge_c = cfg.merge_record_cost;
-                Task::new(move || {
-                    let out = probe_partition(&part, &table);
-                    let cpu_s = cpu_s + out.len() as f64 * merge_c;
-                    (out, Cost { cpu_s, disk_s, disk_bytes, ..Default::default() })
-                })
-                .with_locality(p % n_nodes)
-            })
-            .collect();
-        let scan = cluster.run_stage(Stage::new("join", tasks));
-        let rows: Vec<_> = scan.outputs.into_iter().flatten().collect();
-        metrics.push(StageTiming {
-            tasks: scan.n_tasks,
-            wall_s: scan.wall_time.seconds(),
-            cpu_s: scan.total_cost.cpu_s,
-            disk_bytes: scan.total_cost.disk_bytes,
-            ..StageTiming::new("join", scan.sim_time)
-        });
-        metrics.output_rows = rows.len() as u64;
-        metrics.big_rows_after_filter = metrics.big_rows_scanned; // no pre-filter
-        QueryOutput { rows, metrics }
-    }
-
-    fn run_sort_merge(
-        &self,
-        cluster: &Cluster,
-        big: PartitionedTable<Keyed<BigRow>>,
-        small: PartitionedTable<Keyed<SmallRow>>,
-    ) -> QueryOutput {
-        let cfg = cluster.config().clone();
-        let mut metrics = QueryMetrics::default();
-        metrics.big_rows_scanned = big.n_rows() as u64;
-        metrics.big_rows_after_filter = metrics.big_rows_scanned;
-
-        // scan stage: read both tables (disk + modeled per-record scan
-        // cpu spread over the cluster; WHERE already fused)
-        let scan_bytes: u64 = big.ser_bytes(|(_, b)| 8 + b.row_bytes())
-            + small.ser_bytes(|(_, s)| 8 + s.row_bytes());
-        let scan_cpu = (big.n_rows() + small.n_rows()) as f64 * cfg.scan_record_cost
-            / cfg.total_slots().max(1) as f64;
-        metrics.push(
-            StageTiming::new(
-                "filter_scan",
-                SimDuration::from_secs(
-                    cfg.disk_seconds(scan_bytes / cfg.n_nodes.max(1) as u64)
-                        + scan_cpu
-                        + cfg.stage_overhead,
-                ),
-            )
-            .with_cost(&Cost { disk_bytes: scan_bytes, cpu_s: scan_cpu, ..Default::default() }),
-        );
-
-        let n_shuffle = cfg.shuffle_partitions;
-        let (big_buckets, big_vol) =
-            repartition(big.into_partitions(), n_shuffle, |b: &BigRow| b.row_bytes());
-        let (small_buckets, small_vol) =
-            repartition(small.into_partitions(), n_shuffle, |s: &SmallRow| s.row_bytes());
-        let mut ex = big_vol.exchange_cost(&cfg, ShuffleCodec::Tungsten);
-        ex.merge(&small_vol.exchange_cost(&cfg, ShuffleCodec::Tungsten));
-        metrics.push(
-            StageTiming {
-                tasks: n_shuffle,
-                ..StageTiming::new(
-                    "shuffle",
-                    SimDuration::from_secs(ex.total_seconds(cfg.cpu_scale)),
-                )
-            }
-            .with_cost(&ex),
-        );
-
-        let tasks: Vec<Task<Vec<JoinedRow<BigRow, SmallRow>>>> = big_buckets
-            .into_iter()
-            .zip(small_buckets)
-            .map(|(b, s)| {
-                let sort_c = cfg.sort_compare_cost;
-                let merge_c = cfg.merge_record_cost;
-                let disk_bw = cfg.disk_bandwidth;
-                Task::new(move || {
-                    let nlogn = |n: usize| {
-                        if n < 2 { n as f64 } else { n as f64 * (n as f64).log2() }
-                    };
-                    let cpu_s = sort_c * (nlogn(b.len()) + nlogn(s.len()))
-                        + merge_c * (b.len() + s.len()) as f64;
-                    let out = sort_merge_join_partition(b, s);
-                    let cpu_s = cpu_s + merge_c * out.len() as f64;
-                    let bytes: u64 = out.len() as u64 * 20;
-                    (out, Cost { cpu_s, disk_s: bytes as f64 / disk_bw, disk_bytes: bytes, ..Default::default() })
-                })
-            })
-            .collect();
-        let join = cluster.run_stage(Stage::new("join", tasks));
-        let rows: Vec<_> = join.outputs.into_iter().flatten().collect();
-        metrics.push(StageTiming {
-            tasks: join.n_tasks,
-            wall_s: join.wall_time.seconds(),
-            cpu_s: join.total_cost.cpu_s,
-            disk_bytes: join.total_cost.disk_bytes,
-            ..StageTiming::new("join", join.sim_time)
-        });
-        metrics.output_rows = rows.len() as u64;
-        QueryOutput { rows, metrics }
     }
 
     /// Workload features the cost model needs: `(N_filtrable/P, N_matched/P)`.

@@ -23,15 +23,24 @@ pub struct ArtifactManifest {
     pub block_keys: u64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {0}: {1}")]
     Io(PathBuf, std::io::Error),
-    #[error("manifest parse error: {0}")]
     Parse(String),
-    #[error("manifest missing field {0}")]
     Missing(&'static str),
 }
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(path, err) => write!(f, "cannot read {}: {err}", path.display()),
+            ManifestError::Parse(msg) => write!(f, "manifest parse error: {msg}"),
+            ManifestError::Missing(field) => write!(f, "manifest missing field {field}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
 
 impl ArtifactManifest {
     pub fn load(dir: &Path) -> Result<Self, ManifestError> {

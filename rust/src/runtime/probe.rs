@@ -23,16 +23,33 @@ use crate::joins::bloom_cascade::BatchProbe;
 
 use super::artifacts::ArtifactManifest;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("artifact error: {0}")]
-    Artifacts(#[from] super::artifacts::ManifestError),
-    #[error("xla server thread died")]
+    Artifacts(super::artifacts::ManifestError),
     ServerGone,
 }
 
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(msg) => write!(f, "xla error: {msg}"),
+            RuntimeError::Artifacts(err) => write!(f, "artifact error: {err}"),
+            RuntimeError::ServerGone => write!(f, "xla server thread died"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<super::artifacts::ManifestError> for RuntimeError {
+    fn from(err: super::artifacts::ManifestError) -> Self {
+        RuntimeError::Artifacts(err)
+    }
+}
+
+// without the xla feature the stub server never reads the request fields
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 struct ProbeRequest {
     folded_keys: Vec<u32>, // already padded to the variant batch
     m_bits: u64,
@@ -144,7 +161,11 @@ impl XlaProbe {
     }
 }
 
-/// Server loop: owns the (non-Send) PJRT state.
+/// Server loop: owns the (non-Send) PJRT state.  Only compiled when the
+/// `xla` cargo feature is on (the offline default build has no PJRT
+/// bindings); without it the server reports failure immediately and every
+/// caller falls back to the native probe.
+#[cfg(feature = "xla")]
 fn xla_server(
     variants: Vec<(u64, usize, std::path::PathBuf)>,
     rx: mpsc::Receiver<ProbeRequest>,
@@ -193,6 +214,21 @@ fn xla_server(
         })();
         let _ = req.resp.send(result);
     }
+}
+
+/// Stub server for builds without the `xla` feature: report failure so
+/// `XlaProbe::load` errors cleanly and callers use the native probe.
+#[cfg(not(feature = "xla"))]
+fn xla_server(
+    variants: Vec<(u64, usize, std::path::PathBuf)>,
+    rx: mpsc::Receiver<ProbeRequest>,
+    ready: mpsc::Sender<Result<Vec<u64>, String>>,
+) {
+    let _ = (variants, rx);
+    let _ = ready.send(Err(
+        "bloomjoin was built without the `xla` feature; the PJRT probe path is unavailable"
+            .to_string(),
+    ));
 }
 
 impl BatchProbe for XlaProbe {

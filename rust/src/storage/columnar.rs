@@ -38,13 +38,24 @@ pub trait ColumnarCodec: Sized {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CodecError {
-    #[error("row group truncated (wanted {wanted} more bytes at {at})")]
     Truncated { at: usize, wanted: usize },
-    #[error("invalid utf-8 in string column")]
     BadUtf8,
 }
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { at, wanted } => {
+                write!(f, "row group truncated (wanted {wanted} more bytes at {at})")
+            }
+            CodecError::BadUtf8 => write!(f, "invalid utf-8 in string column"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 // --- primitive writers/readers ---------------------------------------------
 

@@ -43,13 +43,22 @@ pub struct SimDfs {
     next_primary: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DfsError {
-    #[error("no such file: {0}")]
     NotFound(String),
-    #[error("file exists: {0}")]
     Exists(String),
 }
+
+impl std::fmt::Display for DfsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DfsError::NotFound(path) => write!(f, "no such file: {path}"),
+            DfsError::Exists(path) => write!(f, "file exists: {path}"),
+        }
+    }
+}
+
+impl std::error::Error for DfsError {}
 
 impl SimDfs {
     pub fn new(cfg: DfsConfig) -> Self {

@@ -10,13 +10,24 @@ pub struct Args {
     pub flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required option --{0}")]
     Missing(String),
-    #[error("invalid value for --{0}: {1:?} ({2})")]
     Invalid(String, String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(name) => write!(f, "missing required option --{name}"),
+            CliError::Invalid(name, value, why) => {
+                write!(f, "invalid value for --{name}: {value:?} ({why})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv[1..]`. `bool_flags` lists options that take no value.

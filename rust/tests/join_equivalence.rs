@@ -1,14 +1,19 @@
 //! Cross-strategy integration properties: on arbitrary workloads, all
 //! three join strategies return exactly the same multiset as a
 //! nested-loop oracle, and the SBFCJ invariants hold (no lost matches at
-//! any ε, filters monotone in ε).  Uses the in-repo testkit
-//! (property-based, seeded, replayable via TESTKIT_SEED).
+//! any ε, filters monotone in ε).  The multi-way planner gets the same
+//! treatment: 3-way star and chain plans must equal a nested-loop oracle
+//! under **every** per-edge strategy assignment.  Uses the in-repo
+//! testkit (property-based, seeded, replayable via TESTKIT_SEED).
 
 use bloomjoin::cluster::{Cluster, ClusterConfig};
 use bloomjoin::dataset::PartitionedTable;
 use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin, FilterBuildStyle};
+use bloomjoin::plan::{
+    execute, nested_loop_oracle, EdgeStrategy, JoinPlan, PlanInputs, PlanRow, PlanSpec,
+    PlannedEdge, Topology,
+};
 use bloomjoin::testkit::check;
-use bloomjoin::util::Rng;
 
 type Row = (u64, u64);
 
@@ -197,9 +202,113 @@ fn scheduler_conserves_tasks_under_random_costs() {
     );
 }
 
+/// Arbitrary 3-relation workload: key spaces small enough that joins hit.
+struct TriCase {
+    customer: Vec<(u64, i32)>,
+    orders: Vec<(u64, u64, i32)>,
+    lineitem: Vec<(u64, i64)>,
+}
+
+fn gen_tri(g: &mut bloomjoin::testkit::Gen) -> TriCase {
+    let cust_space = 1 + g.u64_below(40);
+    let order_space = 1 + g.u64_below(120);
+    let n_cust = g.size;
+    let n_orders = g.size * 2;
+    let n_lines = g.size * 6;
+    TriCase {
+        customer: (0..n_cust)
+            .map(|_| (g.rng.below(cust_space), g.rng.next_u32() as i32 % 25))
+            .collect(),
+        orders: (0..n_orders)
+            .map(|_| {
+                (g.rng.below(order_space), g.rng.below(cust_space), g.rng.below(2_000) as i32)
+            })
+            .collect(),
+        lineitem: (0..n_lines)
+            .map(|_| (g.rng.below(order_space), g.rng.next_u64() as i64))
+            .collect(),
+    }
+}
+
+fn tri_inputs(case: &TriCase) -> PlanInputs {
+    PlanInputs {
+        customer: PartitionedTable::from_rows(case.customer.clone(), 3),
+        orders: PartitionedTable::from_rows(case.orders.clone(), 4),
+        lineitem: PartitionedTable::from_rows(case.lineitem.clone(), 5),
+    }
+}
+
+/// The engine's shared reference oracle (exact multiset semantics,
+/// independent of any strategy code path).
+fn oracle3(case: &TriCase) -> Vec<PlanRow> {
+    nested_loop_oracle(&case.customer, &case.orders, &case.lineitem)
+}
+
+fn strategies() -> [EdgeStrategy; 3] {
+    [EdgeStrategy::Bloom { eps: 0.05 }, EdgeStrategy::Broadcast, EdgeStrategy::SortMerge]
+}
+
+#[test]
+fn three_way_plans_equal_oracle_for_every_strategy_assignment() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let spec = PlanSpec { partitions: 4, ..Default::default() };
+    check("3-way star/chain ≡ oracle, all 2×9 assignments", 5, gen_tri, |case| {
+        let want = oracle3(case);
+        for topology in [Topology::Star, Topology::Chain] {
+            for s1 in strategies() {
+                for s2 in strategies() {
+                    let plan = JoinPlan {
+                        topology,
+                        edges: vec![
+                            PlannedEdge::forced("e1", s1.clone()),
+                            PlannedEdge::forced("e2", s2.clone()),
+                        ],
+                    };
+                    let mut got = execute(&cluster, &spec, &plan, tri_inputs(case)).rows;
+                    got.sort_unstable();
+                    if got != want {
+                        return Err(format!(
+                            "{} with ({}, {}): got {} rows, want {}",
+                            topology.name(),
+                            s1.label(),
+                            s2.label(),
+                            got.len(),
+                            want.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn three_way_bloom_filters_lose_nothing_at_any_eps() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let spec = PlanSpec { partitions: 4, ..Default::default() };
+    check("3-way all-bloom ≡ oracle across ε", 6, gen_tri, |case| {
+        let want = oracle3(case);
+        for eps in [0.001, 0.5] {
+            let plan = JoinPlan {
+                topology: Topology::Star,
+                edges: vec![
+                    PlannedEdge::forced("e1", EdgeStrategy::Bloom { eps }),
+                    PlannedEdge::forced("e2", EdgeStrategy::Bloom { eps }),
+                ],
+            };
+            let mut got = execute(&cluster, &spec, &plan, tri_inputs(case)).rows;
+            got.sort_unstable();
+            if got != want {
+                return Err(format!("eps {eps}: {} vs {}", got.len(), want.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn dfs_roundtrips_arbitrary_bytes() {
-    let mut rng = Rng::new(123);
     check(
         "dfs put/get identity",
         20,
@@ -220,5 +329,4 @@ fn dfs_roundtrips_arbitrary_bytes() {
             }
         },
     );
-    let _ = rng;
 }

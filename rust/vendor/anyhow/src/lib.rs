@@ -1,0 +1,120 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access (see the workspace
+//! README note in `rust/Cargo.toml`), so this path-dependency provides
+//! the small surface `bloomjoin` actually uses: a dynamic [`Error`] that
+//! any `std::error::Error` converts into via `?`, the [`Result`] alias,
+//! and the [`anyhow!`]/[`bail!`] macros.  No backtraces, no context
+//! chains beyond a single source.
+
+use std::fmt;
+
+/// Dynamic error: a display message plus an optional source.
+///
+/// Deliberately does **not** implement `std::error::Error`, exactly like
+/// the real `anyhow::Error`, so the blanket `From<E: Error>` below does
+/// not overlap with `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything printable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// The underlying error, if this `Error` wraps one.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + Send + Sync + 'static)> {
+        self.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        // the wrapped error's own message is already `self.msg`; print any
+        // deeper causes it carries
+        if let Some(root) = &self.source {
+            let mut cause = root.source();
+            while let Some(e) = cause {
+                write!(f, "\ncaused by: {e}")?;
+                cause = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error { msg: err.to_string(), source: Some(Box::new(err)) }
+    }
+}
+
+/// `Result` defaulted to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        r?;
+        Ok(())
+    }
+
+    fn bails(flag: bool) -> Result<u32> {
+        if flag {
+            bail!("flag was {flag}");
+        }
+        Ok(7)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = fails_io().unwrap_err();
+        assert_eq!(err.to_string(), "gone");
+        assert!(err.source().is_some());
+    }
+
+    #[test]
+    fn bail_formats_and_returns() {
+        assert_eq!(bails(false).unwrap(), 7);
+        let err = bails(true).unwrap_err();
+        assert_eq!(err.to_string(), "flag was true");
+        assert!(err.source().is_none());
+    }
+
+    #[test]
+    fn anyhow_macro_builds_error() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(format!("{e}"), "x = 42");
+        assert_eq!(format!("{e:?}"), "x = 42");
+    }
+}
