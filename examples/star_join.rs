@@ -1,30 +1,48 @@
-//! Multi-way star join with per-filter optimal ε: plan and execute
-//! `(LINEITEM ⋈ ORDERS) ⋈ CUSTOMER`, letting each edge pick its own
-//! strategy from the §7 cost model and each bloom cascade solve its own
-//! ε* from HyperLogLog cardinality estimates.
+//! N-way star joins with ranked filter pushdown and per-filter optimal
+//! ε: plan and execute the 3-relation `(LINEITEM ⋈ ORDERS) ⋈ CUSTOMER`
+//! tree (star and chain) and the full 5-relation star
+//! `LINEITEM ⋈ ORDERS ⋈ CUSTOMER ⋈ PART ⋈ SUPPLIER`, letting the
+//! planner order the dimension filters by (selectivity / probe cost),
+//! pick each edge's strategy from the §7 cost model, and solve each
+//! bloom cascade's own ε* from HyperLogLog cardinality estimates.
 //!
 //!     cargo run --release --example star_join
 
 use bloomjoin::cluster::{Cluster, ClusterConfig};
-use bloomjoin::plan::{execute, plan_edges, prepare, PlanSpec, Topology};
+use bloomjoin::plan::{execute, plan_edges, prepare, PlanSpec, Relation, Topology};
 use bloomjoin::util::fmt::Table;
 
 fn main() {
     let cluster = Cluster::new(ClusterConfig::default());
 
-    for topology in [Topology::Star, Topology::Chain] {
-        let spec = PlanSpec { sf: 0.01, topology, ..Default::default() };
+    let configs: Vec<(&str, PlanSpec)> = vec![
+        ("star, 3 relations", PlanSpec { sf: 0.01, ..Default::default() }),
+        (
+            "chain, 3 relations",
+            PlanSpec { sf: 0.01, topology: Topology::Chain, ..Default::default() },
+        ),
+        (
+            "star, 5 relations (ranked pushdown)",
+            PlanSpec {
+                sf: 0.01,
+                dims: vec![
+                    Relation::Orders,
+                    Relation::Customer,
+                    Relation::Part,
+                    Relation::Supplier,
+                ],
+                part_brand: Some(11),
+                ..Default::default()
+            },
+        ),
+    ];
+
+    for (label, spec) in configs {
         let inputs = prepare(&spec);
         let plan = plan_edges(&cluster, &spec, &inputs);
 
-        println!(
-            "\n=== {} join: SELECT ... FROM lineitem, orders, customer ... ===",
-            topology.name()
-        );
-        println!(
-            "planned (predicted {:.4}s); per-edge decisions:",
-            plan.predicted_total_s()
-        );
+        println!("\n=== {label}: SELECT ... FROM the TPC-H star schema ===");
+        println!("planned (predicted {:.4}s); per-edge decisions:", plan.predicted_total_s());
         let mut t = Table::new(&["edge", "strategy", "own eps*", "bloom_s", "bcast_s", "smj_s"]);
         for e in &plan.edges {
             t.row(vec![

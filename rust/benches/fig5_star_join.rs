@@ -17,36 +17,13 @@
 //! the planned row can undercut per-filter further by swapping a
 //! dimension edge to broadcast.
 
-use bloomjoin::bench_support::{smoke_or, Report};
-use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::bench_support::{forced_plan as forced, paper_scaled_cluster, smoke_or, Report};
 use bloomjoin::plan::costing::edge_cost_model;
-use bloomjoin::plan::{
-    execute, plan_edges, prepare, EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge,
-};
-
-fn forced(base: &JoinPlan, strategies: Vec<EdgeStrategy>) -> JoinPlan {
-    JoinPlan {
-        topology: base.topology,
-        edges: base
-            .edges
-            .iter()
-            .zip(strategies)
-            .map(|(e, s)| PlannedEdge::forced(e.name.clone(), s))
-            .collect(),
-    }
-}
+use bloomjoin::plan::{execute, plan_edges, prepare, EdgeStrategy, JoinPlan, PlanSpec};
 
 fn main() {
     let sf = smoke_or(0.01, 0.05);
-    // DESIGN §3 substitution rule: per-byte channel prices are scaled by
-    // the paper-SF / bench-SF ratio, so the data economics (shuffle ≫
-    // stage barriers ≫ filter shipping) match the paper's SF-100 regime
-    // at an in-process data size.  Simulated seconds are free.
-    let scale = 100.0 / sf;
-    let mut cfg = ClusterConfig::small_cluster();
-    cfg.net_bandwidth /= scale;
-    cfg.disk_bandwidth /= scale;
-    let cluster = Cluster::new(cfg);
+    let cluster = paper_scaled_cluster(sf);
     let spec = PlanSpec { sf, ..Default::default() };
     let inputs = prepare(&spec);
 

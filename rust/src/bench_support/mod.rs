@@ -28,6 +28,36 @@ pub fn smoke_or<T>(small: T, full: T) -> T {
     }
 }
 
+/// DESIGN §3 substitution rule: a small cluster whose per-byte channel
+/// prices are scaled by the paper-SF / bench-SF ratio, so the data
+/// economics (shuffle ≫ stage barriers ≫ filter shipping) match the
+/// paper's SF-100 regime at an in-process data size.  Simulated seconds
+/// are free.  Shared by the multi-way figure benches (fig5/fig6).
+pub fn paper_scaled_cluster(sf: f64) -> crate::cluster::Cluster {
+    let scale = 100.0 / sf;
+    let mut cfg = crate::cluster::ClusterConfig::small_cluster();
+    cfg.net_bandwidth /= scale;
+    cfg.disk_bandwidth /= scale;
+    crate::cluster::Cluster::new(cfg)
+}
+
+/// `base` with every edge's strategy replaced (plan shape preserved) —
+/// how the figure benches force policy comparisons onto one planned tree.
+pub fn forced_plan(
+    base: &crate::plan::JoinPlan,
+    strategies: Vec<crate::plan::EdgeStrategy>,
+) -> crate::plan::JoinPlan {
+    crate::plan::JoinPlan {
+        topology: base.topology,
+        edges: base
+            .edges
+            .iter()
+            .zip(strategies)
+            .map(|(e, s)| crate::plan::PlannedEdge::forced(e.relation, e.name.clone(), s))
+            .collect(),
+    }
+}
+
 /// One measured statistic set, seconds.
 #[derive(Clone, Copy, Debug)]
 pub struct Stats {

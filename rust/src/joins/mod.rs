@@ -41,6 +41,18 @@ impl RowSize for u32 {
     }
 }
 
+impl RowSize for i64 {
+    fn row_bytes(&self) -> u64 {
+        8
+    }
+}
+
+impl RowSize for i32 {
+    fn row_bytes(&self) -> u64 {
+        4
+    }
+}
+
 impl RowSize for () {
     fn row_bytes(&self) -> u64 {
         0

@@ -3,14 +3,17 @@
 //! Subcommands:
 //!   generate   write TPC-H .tbl data onto the simulated DFS and report splits
 //!   query      run the paper's join once with a chosen strategy/ε
-//!   plan       plan + execute a multi-way join (star or chain) over
-//!              CUSTOMER ⋈ ORDERS ⋈ LINEITEM: each edge picks its own
-//!              strategy (bloom cascade / broadcast hash / sort-merge)
-//!              from the §7 cost model, and every bloom edge solves its
-//!              own optimal ε from HLL cardinality estimates —
-//!              `bloomjoin plan --relations customer,orders,lineitem
+//!   plan       plan + execute an n-way join over the TPC-H star schema
+//!              (LINEITEM fact; ORDERS, CUSTOMER, PART, SUPPLIER dims):
+//!              dimension filters are ranked by (selectivity / probe
+//!              cost), each edge picks its own strategy (bloom cascade /
+//!              broadcast hash / sort-merge) from the §7 cost model, and
+//!              every bloom edge solves its own optimal ε from HLL
+//!              cardinality estimates —
+//!              `bloomjoin plan --relations lineitem,orders,part,supplier
 //!              [--topology star|chain] [--eps-mode per-filter|global]
-//!              [--no-execute]`
+//!              [--pushdown ranked|unranked] [--part-brand N]
+//!              [--supp-nation N] [--no-execute]`
 //!   sweep      the paper's §6 experiment series (ε sweep, CSV output)
 //!   calibrate  fit the §7 cost model from a sweep
 //!   optimal    solve for ε* (§7.2) and validate with a run
@@ -158,22 +161,32 @@ fn query(args: &Args) -> anyhow::Result<()> {
 }
 
 fn plan_cmd(args: &Args) -> anyhow::Result<()> {
-    use bloomjoin::plan::{self, EpsMode, PlanSpec, Relation, Topology};
+    use bloomjoin::plan::{self, EpsMode, PlanSpec, PushdownMode, Relation, Topology};
 
     let rels = args.get_or("relations", "customer,orders,lineitem");
-    let mut names: Vec<&'static str> = Vec::new();
+    let mut dims: Vec<Relation> = Vec::new();
+    let mut has_fact = false;
     for r in rels.split(',').filter(|s| !s.is_empty()) {
-        match Relation::parse(r.trim()) {
-            Some(rel) => names.push(rel.name()),
-            None => anyhow::bail!("unknown relation {r:?} (customer|orders|lineitem)"),
+        let rel = match Relation::parse(r.trim()) {
+            Some(rel) => rel,
+            None => {
+                anyhow::bail!("unknown relation {r:?} (customer|orders|lineitem|part|supplier)")
+            }
+        };
+        if rel == Relation::Lineitem {
+            has_fact = true;
+        } else if !dims.contains(&rel) {
+            dims.push(rel);
         }
     }
-    names.sort_unstable();
-    names.dedup();
-    if names != ["customer", "lineitem", "orders"] {
-        anyhow::bail!(
-            "the planner currently supports exactly customer,orders,lineitem (got {rels:?})"
-        );
+    if !has_fact {
+        anyhow::bail!("--relations must include lineitem (the fact table)");
+    }
+    if dims.is_empty() {
+        anyhow::bail!("--relations needs at least one dimension besides lineitem");
+    }
+    if dims.contains(&Relation::Customer) && !dims.contains(&Relation::Orders) {
+        anyhow::bail!("customer joins the fact table through orders — add orders to --relations");
     }
 
     let cluster = cluster_from(args)?;
@@ -181,25 +194,46 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         Some(t) => t,
         None => anyhow::bail!("unknown topology (star|chain)"),
     };
+    if topology == Topology::Chain
+        && !(dims.len() == 2
+            && dims.contains(&Relation::Orders)
+            && dims.contains(&Relation::Customer))
+    {
+        anyhow::bail!("--topology chain supports exactly customer,orders,lineitem");
+    }
     let eps_mode = match args.get_or("eps-mode", "per-filter") {
         "per-filter" => EpsMode::PerFilter,
         "global" => EpsMode::Global(args.parse_or("eps", 0.05)?),
         other => anyhow::bail!("unknown eps-mode {other:?} (per-filter|global)"),
     };
-    let spec = PlanSpec {
+    let pushdown = match PushdownMode::parse(args.get_or("pushdown", "ranked")) {
+        Some(m) => m,
+        None => anyhow::bail!("unknown pushdown mode (ranked|unranked)"),
+    };
+    let mut spec = PlanSpec {
         sf: args.parse_or("sf", 0.01)?,
         seed: args.parse_or("seed", 0xB100_F117u64)?,
         partitions: args.parse_or("partitions", 8)?,
         topology,
+        dims,
         eps_mode,
+        pushdown,
         ..Default::default()
     };
+    if let Some(b) = args.parse_as::<u8>("part-brand")? {
+        spec.part_brand = Some(b);
+    }
+    if let Some(n) = args.parse_as::<i32>("supp-nation")? {
+        spec.supp_nationkey = Some(n);
+    }
 
     let inputs = plan::prepare(&spec);
     let join_plan = plan::plan_edges(&cluster, &spec, &inputs);
     println!(
-        "topology: {}   predicted total: {:.4}s",
+        "topology: {} ({} relations, {} pushdown)   predicted total: {:.4}s",
         join_plan.topology.name(),
+        spec.dims.len() + 1,
+        spec.pushdown.name(),
         join_plan.predicted_total_s()
     );
     let mut t =
@@ -337,10 +371,13 @@ USAGE: bloomjoin <command> [options]
 COMMANDS
   generate   --sf 0.01 --block-mb 128
   query      --sf 0.01 --strategy bloom|broadcast|sortmerge --eps 0.05 [--xla] [--driver-side]
-  plan       --relations customer,orders,lineitem --topology star|chain
-             --eps-mode per-filter|global [--eps 0.05] [--no-execute]
-             (multi-way planner: per-edge strategy from the cost model,
-              per-filter optimal ε from HLL estimates)
+  plan       --relations lineitem,orders,customer,part,supplier (any 2–5
+             incl. lineitem; customer needs orders) --topology star|chain
+             --eps-mode per-filter|global [--eps 0.05]
+             --pushdown ranked|unranked [--part-brand N] [--supp-nation N]
+             [--no-execute]
+             (n-way planner: ranked filter pushdown, per-edge strategy
+              from the cost model, per-filter optimal ε from HLL estimates)
   sweep      --sf 0.01 --runs 69 --eps 0.05           (CSV on stdout — the paper's §6 series)
   calibrate  --sf 0.01 --runs 16                      (fit the §7 cost model)
   optimal    --sf 0.01 --runs 16                      (fit + solve ε*, validate)

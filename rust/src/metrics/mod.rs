@@ -92,6 +92,17 @@ impl QueryMetrics {
         self.stages.iter().map(|s| s.sim_s).sum()
     }
 
+    /// Simulated seconds of the stages absorbed under `prefix` (e.g.
+    /// `"e2"`) — the per-edge slice of a composed multi-way ledger.
+    pub fn prefix_sim_s(&self, prefix: &str) -> f64 {
+        let with_slash = format!("{prefix}/");
+        self.stages
+            .iter()
+            .filter(|s| s.name.starts_with(&with_slash))
+            .map(|s| s.sim_s)
+            .sum()
+    }
+
     pub fn total_wall_s(&self) -> f64 {
         self.stages.iter().map(|s| s.wall_s).sum()
     }

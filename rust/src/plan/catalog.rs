@@ -1,5 +1,5 @@
-//! Relation catalog: generate + predicate-filter the 3-way inputs and
-//! estimate the per-edge workload features the planner prices with.
+//! Relation catalog: generate + predicate-filter the star-schema inputs
+//! and estimate the per-edge workload features the planner prices with.
 //!
 //! Cardinalities come from row counts plus HyperLogLog sketches of each
 //! join-key column ([`crate::approx::HyperLogLog`]); semijoin
@@ -10,16 +10,20 @@
 use crate::approx::HyperLogLog;
 use crate::dataset::PartitionedTable;
 use crate::joins::Keyed;
-use crate::tpch::{Customer, GenConfig, Lineitem, Order, TpchGenerator};
+use crate::tpch::{Customer, GenConfig, Lineitem, Order, Part, Supplier, TpchGenerator};
 
-use super::{PlanSpec, Topology};
+use super::PlanSpec;
 
-/// The three relations the planner knows.
+/// The five relations the planner knows.  LINEITEM is the fact table of
+/// every star plan; the other four are dimensions (CUSTOMER through the
+/// snowflake edge ORDERS attaches).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Relation {
     Customer,
     Orders,
     Lineitem,
+    Part,
+    Supplier,
 }
 
 impl Relation {
@@ -28,6 +32,8 @@ impl Relation {
             Relation::Customer => "customer",
             Relation::Orders => "orders",
             Relation::Lineitem => "lineitem",
+            Relation::Part => "part",
+            Relation::Supplier => "supplier",
         }
     }
 
@@ -36,27 +42,52 @@ impl Relation {
             "customer" => Some(Relation::Customer),
             "orders" => Some(Relation::Orders),
             "lineitem" => Some(Relation::Lineitem),
+            "part" => Some(Relation::Part),
+            "supplier" => Some(Relation::Supplier),
             _ => None,
         }
     }
 }
 
-/// Generated, predicate-filtered, column-pruned inputs.
+/// Predicate-filtered, column-pruned LINEITEM row — the seed of the fact
+/// stream every star edge probes from.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FactRow {
+    pub orderkey: u64,
+    pub partkey: u64,
+    pub suppkey: u64,
+    pub price_cents: i64,
+}
+
+/// Serialized bytes of one fact-stream row in flight.  The executor
+/// ships the full accumulated [`super::executor::PlanRow`] (4 u64 keys
+/// + i64 price + 4 i32 dimension attrs = 56) from the first edge on,
+/// so the planner prices every probe row at the same constant width —
+/// `PlanRow::row_bytes()` returns this value, keeping the cost model
+/// and the simulator's ground truth provably in sync.
+pub const STREAM_ROW_BYTES: f64 = 56.0;
+
+/// Generated, predicate-filtered, column-pruned inputs.  Only the
+/// relations a spec joins are generated; the rest stay empty tables.
 ///
 /// * `customer`: `(c_custkey, c_nationkey)` after the segment predicate;
 /// * `orders`: `(o_orderkey, o_custkey, o_orderdate)` after the date
-///   window — kept as a triple because the two edges key it differently;
-/// * `lineitem`: `(l_orderkey, l_extendedprice_cents)` after the
-///   ship-date predicate.
+///   window — kept as a triple because edges key it differently;
+/// * `lineitem`: [`FactRow`]s after the ship-date predicate (always
+///   generated — the fact table is in every plan);
+/// * `part`: `(p_partkey, p_brand)` after the brand predicate;
+/// * `supplier`: `(s_suppkey, s_nationkey)` after the nation predicate.
 #[derive(Clone, Debug)]
 pub struct PlanInputs {
     pub customer: PartitionedTable<Keyed<i32>>,
     pub orders: PartitionedTable<(u64, u64, i32)>,
-    pub lineitem: PartitionedTable<Keyed<i64>>,
+    pub lineitem: PartitionedTable<FactRow>,
+    pub part: PartitionedTable<Keyed<i32>>,
+    pub supplier: PartitionedTable<Keyed<i32>>,
 }
 
 /// Generate and filter the base relations (the fused-scan analogue of
-/// `JoinQuery::prepare_inputs`, extended to three tables).
+/// `JoinQuery::prepare_inputs`, extended to the 5-relation star schema).
 pub fn prepare(spec: &PlanSpec) -> PlanInputs {
     let gen = TpchGenerator::new(GenConfig {
         sf: spec.sf,
@@ -67,27 +98,72 @@ pub fn prepare(spec: &PlanSpec) -> PlanInputs {
     let (date_lo, date_hi) = spec.order_date_window;
     let ship_max = spec.ship_date_max;
     let segment = spec.mktsegment;
+    let brand = spec.part_brand;
+    let nation = spec.supp_nationkey;
 
     let keep_customer = move |c: &Customer| match segment {
         Some(s) => c.c_mktsegment == s,
         None => true,
     };
-    let customer = PartitionedTable::from_partitions(gen.customers()).map_partitions(|p| {
-        p.into_iter().filter(keep_customer).map(|c| (c.c_custkey, c.c_nationkey)).collect()
-    });
-    let orders = PartitionedTable::from_partitions(gen.orders()).map_partitions(|p| {
-        p.into_iter()
-            .filter(|o: &Order| o.o_orderdate >= date_lo && o.o_orderdate < date_hi)
-            .map(|o| (o.o_orderkey, o.o_custkey, o.o_orderdate))
-            .collect()
-    });
+    let customer = if spec.dims.contains(&Relation::Customer) {
+        PartitionedTable::from_partitions(gen.customers()).map_partitions(|p| {
+            p.into_iter().filter(keep_customer).map(|c| (c.c_custkey, c.c_nationkey)).collect()
+        })
+    } else {
+        PartitionedTable::from_rows(Vec::new(), spec.partitions.max(1))
+    };
+    // the customer edge's selectivity estimate reads order custkeys, so
+    // a customer dim needs the orders scan even before its own edge
+    let orders = if spec.dims.contains(&Relation::Orders)
+        || spec.dims.contains(&Relation::Customer)
+    {
+        PartitionedTable::from_partitions(gen.orders()).map_partitions(|p| {
+            p.into_iter()
+                .filter(|o: &Order| o.o_orderdate >= date_lo && o.o_orderdate < date_hi)
+                .map(|o| (o.o_orderkey, o.o_custkey, o.o_orderdate))
+                .collect()
+        })
+    } else {
+        PartitionedTable::from_rows(Vec::new(), spec.partitions.max(1))
+    };
     let lineitem = PartitionedTable::from_partitions(gen.lineitems()).map_partitions(|p| {
         p.into_iter()
             .filter(|l: &Lineitem| l.l_shipdate < ship_max)
-            .map(|l| (l.l_orderkey, l.l_extendedprice_cents))
+            .map(|l| FactRow {
+                orderkey: l.l_orderkey,
+                partkey: l.l_partkey,
+                suppkey: l.l_suppkey,
+                price_cents: l.l_extendedprice_cents,
+            })
             .collect()
     });
-    PlanInputs { customer, orders, lineitem }
+    let part = if spec.dims.contains(&Relation::Part) {
+        PartitionedTable::from_partitions(gen.parts()).map_partitions(|p| {
+            p.into_iter()
+                .filter(|pt: &Part| match brand {
+                    Some(b) => pt.p_brand == b,
+                    None => true,
+                })
+                .map(|pt| (pt.p_partkey, pt.p_brand as i32))
+                .collect()
+        })
+    } else {
+        PartitionedTable::from_rows(Vec::new(), spec.partitions.max(1))
+    };
+    let supplier = if spec.dims.contains(&Relation::Supplier) {
+        PartitionedTable::from_partitions(gen.suppliers()).map_partitions(|p| {
+            p.into_iter()
+                .filter(|s: &Supplier| match nation {
+                    Some(n) => s.s_nationkey == n,
+                    None => true,
+                })
+                .map(|s| (s.s_suppkey, s.s_nationkey))
+                .collect()
+        })
+    } else {
+        PartitionedTable::from_rows(Vec::new(), spec.partitions.max(1))
+    };
+    PlanInputs { customer, orders, lineitem, part, supplier }
 }
 
 /// Workload features of one join edge, in the cost model's vocabulary:
@@ -121,6 +197,19 @@ impl Default for EdgeStats {
     }
 }
 
+/// Per-dimension semijoin features against the fact stream — the raw
+/// material [`super::costing::star_edge_stats`] ranks and turns into
+/// ordered [`EdgeStats`].
+#[derive(Clone, Debug)]
+pub struct DimStats {
+    pub relation: Relation,
+    pub build_rows: u64,
+    pub build_distinct: u64,
+    pub build_row_bytes: f64,
+    /// Estimated fraction of the fact stream surviving this semijoin.
+    pub match_frac: f64,
+}
+
 fn sketch(keys: impl Iterator<Item = u64>) -> HyperLogLog {
     let mut h = HyperLogLog::new();
     for k in keys {
@@ -137,86 +226,162 @@ fn overlap(a: &HyperLogLog, b: &HyperLogLog) -> u64 {
     (da + db).saturating_sub(union.estimate())
 }
 
-/// Estimate both edges' workloads for `spec.topology`, in execution
-/// order.  Edge-2 features are propagated estimates (its probe side is
-/// edge-1's output), which is exactly the planner's information state —
-/// executed counts land in the metrics, not here.
-pub fn edge_stats(spec: &PlanSpec, inputs: &PlanInputs) -> Vec<(String, EdgeStats)> {
+/// Fraction of `stream`'s distinct keys that appear in `dim`.
+fn survive_frac(stream: &HyperLogLog, dim: &HyperLogLog) -> f64 {
+    (overlap(stream, dim) as f64 / stream.estimate().max(1) as f64).min(1.0)
+}
+
+/// Estimate each dimension's semijoin features for `spec.dims`, in the
+/// spec's (unranked) order.  Panics if `dims` names LINEITEM — the fact
+/// table is not a dimension.
+pub fn star_dim_stats(spec: &PlanSpec, inputs: &PlanInputs) -> Vec<DimStats> {
+    // reject duplicate dims here, where every plan is made, instead of
+    // mid-execution (the executor consumes each dimension table once)
+    for (i, r) in spec.dims.iter().enumerate() {
+        assert!(!spec.dims[..i].contains(r), "duplicate dimension {} in dims", r.name());
+    }
+    // LINEITEM is the largest relation, so sketch each of its key
+    // columns (and each dimension) only when the plan actually joins
+    // that dimension — the default 3-way spec pays no part/supplier
+    // passes.
+    let need = |r: Relation| spec.dims.contains(&r);
+    let empty = HyperLogLog::new;
+    let l_ok = if need(Relation::Orders) {
+        sketch(inputs.lineitem.iter().map(|f| f.orderkey))
+    } else {
+        empty()
+    };
+    let l_pk = if need(Relation::Part) {
+        sketch(inputs.lineitem.iter().map(|f| f.partkey))
+    } else {
+        empty()
+    };
+    let l_sk = if need(Relation::Supplier) {
+        sketch(inputs.lineitem.iter().map(|f| f.suppkey))
+    } else {
+        empty()
+    };
+    let o_ok = if need(Relation::Orders) {
+        sketch(inputs.orders.iter().map(|(ok, _, _)| *ok))
+    } else {
+        empty()
+    };
+    let o_ck = if need(Relation::Customer) {
+        sketch(inputs.orders.iter().map(|(_, ck, _)| *ck))
+    } else {
+        empty()
+    };
+    let c_ck = if need(Relation::Customer) {
+        sketch(inputs.customer.iter().map(|(k, _)| *k))
+    } else {
+        empty()
+    };
+    let p_pk = if need(Relation::Part) {
+        sketch(inputs.part.iter().map(|(k, _)| *k))
+    } else {
+        empty()
+    };
+    let s_sk = if need(Relation::Supplier) {
+        sketch(inputs.supplier.iter().map(|(k, _)| *k))
+    } else {
+        empty()
+    };
+
+    spec.dims
+        .iter()
+        .map(|&rel| match rel {
+            Relation::Orders => DimStats {
+                relation: rel,
+                build_rows: inputs.orders.n_rows() as u64,
+                build_distinct: o_ok.estimate().max(1),
+                build_row_bytes: 8.0 + 12.0, // orderkey + (custkey, orderdate)
+                match_frac: survive_frac(&l_ok, &o_ok),
+            },
+            Relation::Customer => DimStats {
+                relation: rel,
+                build_rows: inputs.customer.n_rows() as u64,
+                build_distinct: c_ck.estimate().max(1),
+                build_row_bytes: 8.0 + 4.0, // custkey + nationkey
+                // probes the custkey the ORDERS edge attached, so the
+                // stream-survival fraction is the fraction of order
+                // custkeys that survive the customer predicate
+                match_frac: survive_frac(&o_ck, &c_ck),
+            },
+            Relation::Part => DimStats {
+                relation: rel,
+                build_rows: inputs.part.n_rows() as u64,
+                build_distinct: p_pk.estimate().max(1),
+                build_row_bytes: 8.0 + 4.0, // partkey + brand
+                match_frac: survive_frac(&l_pk, &p_pk),
+            },
+            Relation::Supplier => DimStats {
+                relation: rel,
+                build_rows: inputs.supplier.n_rows() as u64,
+                build_distinct: s_sk.estimate().max(1),
+                build_row_bytes: 8.0 + 4.0, // suppkey + nationkey
+                match_frac: survive_frac(&l_sk, &s_sk),
+            },
+            Relation::Lineitem => {
+                panic!("lineitem is the fact table of a star plan, not a dimension")
+            }
+        })
+        .collect()
+}
+
+/// Estimate both chain edges' workloads, in execution order (the fixed
+/// 3-relation `LINEITEM ⋈ (ORDERS ⋈ CUSTOMER)` tree).  Edge-2 features
+/// are propagated estimates (its build side is edge-1's output), which
+/// is exactly the planner's information state — executed counts land in
+/// the metrics, not here.
+pub fn chain_edge_stats(
+    _spec: &PlanSpec,
+    inputs: &PlanInputs,
+) -> Vec<(String, Relation, EdgeStats)> {
     let l_rows = inputs.lineitem.n_rows() as u64;
     let o_rows = inputs.orders.n_rows() as u64;
     let c_rows = inputs.customer.n_rows() as u64;
 
-    let l_ok = sketch(inputs.lineitem.iter().map(|(k, _)| *k));
+    let l_ok = sketch(inputs.lineitem.iter().map(|f| f.orderkey));
     let o_ok = sketch(inputs.orders.iter().map(|(ok, _, _)| *ok));
     let o_ck = sketch(inputs.orders.iter().map(|(_, ck, _)| *ck));
     let c_ck = sketch(inputs.customer.iter().map(|(k, _)| *k));
 
-    let d_l_ok = l_ok.estimate().max(1);
     let d_o_ok = o_ok.estimate().max(1);
-    let d_o_ck = o_ck.estimate().max(1);
     let d_c_ck = c_ck.estimate().max(1);
 
     // fraction of lineitem rows whose orderkey survives the date window
-    let ok_frac = (overlap(&l_ok, &o_ok) as f64 / d_l_ok as f64).min(1.0);
-    let matched_l = ((l_rows as f64 * ok_frac).round() as u64).min(l_rows);
+    let ok_frac = survive_frac(&l_ok, &o_ok);
     // fraction of order rows whose custkey is in the filtered customers
-    let ck_frac = (overlap(&o_ck, &c_ck) as f64 / d_o_ck as f64).min(1.0);
+    let ck_frac = survive_frac(&o_ck, &c_ck);
     let matched_o = ((o_rows as f64 * ck_frac).round() as u64).min(o_rows);
 
-    match spec.topology {
-        Topology::Star => vec![
-            (
-                "lineitem⋈orders".to_string(),
-                EdgeStats {
-                    build_rows: o_rows,
-                    build_distinct: d_o_ok,
-                    build_row_bytes: 8.0 + 12.0, // orderkey + (custkey, orderdate)
-                    probe_rows: l_rows,
-                    probe_row_bytes: 8.0 + 8.0, // orderkey + price
-                    matched_rows: matched_l,
-                },
-            ),
-            (
-                "⋈customer".to_string(),
-                EdgeStats {
-                    build_rows: c_rows,
-                    build_distinct: d_c_ck,
-                    build_row_bytes: 8.0 + 4.0, // custkey + nationkey
-                    // probe side is edge 1's output, re-keyed by custkey
-                    probe_rows: matched_l.max(1),
-                    probe_row_bytes: 8.0 + 20.0, // custkey + (orderkey, (price, date))
-                    matched_rows: (((matched_l.max(1)) as f64 * ck_frac).round() as u64)
-                        .min(matched_l.max(1)),
-                },
-            ),
-        ],
-        Topology::Chain => vec![
-            (
-                "orders⋈customer".to_string(),
-                EdgeStats {
-                    build_rows: c_rows,
-                    build_distinct: d_c_ck,
-                    build_row_bytes: 8.0 + 4.0,
-                    probe_rows: o_rows,
-                    probe_row_bytes: 8.0 + 12.0, // custkey + (orderkey, orderdate)
-                    matched_rows: matched_o,
-                },
-            ),
-            (
-                "lineitem⋈orders'".to_string(),
-                EdgeStats {
-                    // build side is the customer-reduced orders
-                    build_rows: matched_o.max(1),
-                    build_distinct: ((d_o_ok as f64 * ck_frac).round() as u64).max(1),
-                    build_row_bytes: 8.0 + 16.0, // orderkey + (custkey, (date, nation))
-                    probe_rows: l_rows,
-                    probe_row_bytes: 8.0 + 8.0,
-                    matched_rows: (((l_rows as f64) * ok_frac * ck_frac).round() as u64)
-                        .min(l_rows),
-                },
-            ),
-        ],
-    }
+    vec![
+        (
+            "orders⋈customer".to_string(),
+            Relation::Customer,
+            EdgeStats {
+                build_rows: c_rows,
+                build_distinct: d_c_ck,
+                build_row_bytes: 8.0 + 4.0,
+                probe_rows: o_rows,
+                probe_row_bytes: 8.0 + 12.0, // custkey + (orderkey, orderdate)
+                matched_rows: matched_o,
+            },
+        ),
+        (
+            "lineitem⋈orders'".to_string(),
+            Relation::Orders,
+            EdgeStats {
+                // build side is the customer-reduced orders
+                build_rows: matched_o.max(1),
+                build_distinct: ((d_o_ok as f64 * ck_frac).round() as u64).max(1),
+                build_row_bytes: 8.0 + 16.0, // orderkey + (custkey, (date, nation))
+                probe_rows: l_rows,
+                probe_row_bytes: STREAM_ROW_BYTES,
+                matched_rows: (((l_rows as f64) * ok_frac * ck_frac).round() as u64).min(l_rows),
+            },
+        ),
+    ]
 }
 
 #[cfg(test)]
@@ -227,13 +392,26 @@ mod tests {
         PlanSpec { sf: 0.002, partitions: 4, ..Default::default() }
     }
 
+    fn wide_spec() -> PlanSpec {
+        PlanSpec {
+            dims: vec![Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier],
+            ..tiny_spec()
+        }
+    }
+
     #[test]
     fn relation_parse_roundtrips() {
-        for r in [Relation::Customer, Relation::Orders, Relation::Lineitem] {
+        for r in [
+            Relation::Customer,
+            Relation::Orders,
+            Relation::Lineitem,
+            Relation::Part,
+            Relation::Supplier,
+        ] {
             assert_eq!(Relation::parse(r.name()), Some(r));
         }
         assert_eq!(Relation::parse("ORDERS"), Some(Relation::Orders));
-        assert_eq!(Relation::parse("part"), None);
+        assert_eq!(Relation::parse("region"), None);
     }
 
     #[test]
@@ -250,6 +428,31 @@ mod tests {
         // one of five segments keeps a strict subset of customers
         let all = prepare(&PlanSpec { mktsegment: None, ..spec.clone() });
         assert!(inputs.customer.n_rows() < all.customer.n_rows());
+        // part/supplier are generated only for specs that join them
+        assert_eq!(inputs.part.n_rows(), 0);
+        assert_eq!(inputs.supplier.n_rows(), 0);
+    }
+
+    #[test]
+    fn prepare_filters_part_and_supplier() {
+        let spec = wide_spec();
+        let open = prepare(&spec);
+        assert!(open.part.n_rows() > 0);
+        assert!(open.supplier.n_rows() > 0);
+        let narrowed = prepare(&PlanSpec {
+            part_brand: Some(11),
+            supp_nationkey: Some(0),
+            ..spec.clone()
+        });
+        assert!(narrowed.part.n_rows() > 0);
+        assert!(narrowed.part.n_rows() < open.part.n_rows());
+        for (_, b) in narrowed.part.iter() {
+            assert_eq!(*b, 11);
+        }
+        assert!(narrowed.supplier.n_rows() < open.supplier.n_rows());
+        for (_, n) in narrowed.supplier.iter() {
+            assert_eq!(*n, 0);
+        }
     }
 
     #[test]
@@ -261,20 +464,32 @@ mod tests {
     }
 
     #[test]
-    fn star_and_chain_stats_are_consistent() {
-        let spec = tiny_spec();
+    fn star_dim_stats_cover_all_dimensions() {
+        let spec = wide_spec();
         let inputs = prepare(&spec);
-        let star = edge_stats(&spec, &inputs);
-        let chain = edge_stats(&PlanSpec { topology: Topology::Chain, ..spec }, &inputs);
-        assert_eq!(star.len(), 2);
+        let dims = star_dim_stats(&spec, &inputs);
+        assert_eq!(dims.len(), 4);
+        for d in &dims {
+            assert!(d.build_distinct > 0, "{:?}", d.relation);
+            assert!((0.0..=1.0).contains(&d.match_frac), "{:?}", d.relation);
+        }
+        // a ~10 % date window filters most of the fact stream at the
+        // orders edge; the unfiltered part/supplier dims pass ~all rows
+        let orders = dims.iter().find(|d| d.relation == Relation::Orders).unwrap();
+        let part = dims.iter().find(|d| d.relation == Relation::Part).unwrap();
+        assert!(orders.match_frac < 0.5, "orders frac {}", orders.match_frac);
+        assert!(part.match_frac > 0.9, "part frac {}", part.match_frac);
+    }
+
+    #[test]
+    fn chain_stats_are_consistent() {
+        let spec = PlanSpec { topology: super::super::Topology::Chain, ..tiny_spec() };
+        let inputs = prepare(&spec);
+        let chain = chain_edge_stats(&spec, &inputs);
         assert_eq!(chain.len(), 2);
-        // star edge 1 probes the full lineitem table
-        assert_eq!(star[0].1.probe_rows, inputs.lineitem.n_rows() as u64);
-        // a ~10 % date window leaves most lineitems filterable
-        assert!(star[0].1.matched_rows < star[0].1.probe_rows / 2);
         // chain edge 2 builds from the customer-reduced orders
-        assert!(chain[1].1.build_rows <= chain[0].1.probe_rows);
-        for (_, e) in star.iter().chain(chain.iter()) {
+        assert!(chain[1].2.build_rows <= chain[0].2.probe_rows);
+        for (_, _, e) in &chain {
             assert!(e.matched_rows <= e.probe_rows);
             assert!(e.build_distinct > 0);
         }

@@ -1,23 +1,39 @@
-//! A-priori edge costing: price each edge under all three strategies
-//! from the cluster's cost constants and the catalog's estimates, and
-//! solve each bloom edge's own optimal ε.
+//! A-priori edge costing: order the same-fact dimension filters, price
+//! each edge under all three strategies from the cluster's cost constants
+//! and the catalog's estimates, and solve each bloom edge's own optimal ε.
 //!
-//! This is the §7 cost model *constructed* instead of fitted: the
-//! calibrated form `model_bloom(ε) = K1 + K2·log(1/ε)`,
-//! `model_join(ε) = L1 + L2·ε + C·(Aε+B)·log(Aε+B)` has every
-//! coefficient derivable from [`ClusterConfig`] when the simulator's own
-//! constants are the ground truth — the same derivation the paper does
-//! from its measured fits, run in reverse.  Only the ε-dependent terms
-//! (K2, L2, C, A, B) matter for ε*; the constant terms matter for the
-//! cross-strategy comparison, so both are kept honest about stage
-//! structure (SBFCJ pays six stage barriers, broadcast two, sort-merge
-//! three).
+//! Two planning decisions live here:
+//!
+//! 1. **Filter pushdown ordering** ([`star_edge_stats`]): when several
+//!    dimension filters apply to the same fact scan, rank them by
+//!    (selectivity / probe cost) — rows removed per unit of probe work —
+//!    and derive each subsequent edge's workload (the cost model's
+//!    `A = N_filtrable/P`, `B = N_matched/P` inputs) from the
+//!    **residual-stream estimate** left by the filters ahead of it.
+//!    [`PushdownMode::Unranked`] keeps the spec's order and prices every
+//!    edge against the full scan — the static-propagation baseline
+//!    `benches/fig6_wide_star.rs` compares.
+//! 2. **Per-edge strategy + ε** ([`plan_edges`]): the §7 cost model
+//!    *constructed* instead of fitted — the calibrated form
+//!    `model_bloom(ε) = K1 + K2·log(1/ε)`,
+//!    `model_join(ε) = L1 + L2·ε + C·(Aε+B)·log(Aε+B)` has every
+//!    coefficient derivable from [`ClusterConfig`] when the simulator's
+//!    own constants are the ground truth — the same derivation the paper
+//!    does from its measured fits, run in reverse.  Only the ε-dependent
+//!    terms (K2, L2, C, A, B) matter for ε*; the constant terms matter
+//!    for the cross-strategy comparison, so both are kept honest about
+//!    stage structure (SBFCJ pays six stage barriers, broadcast two,
+//!    sort-merge three).
 
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::model::{newton, CostModel};
 
-use super::catalog::{edge_stats, EdgeStats, PlanInputs};
-use super::{EdgeStrategy, EpsMode, JoinPlan, PlanSpec, PlannedEdge};
+use super::catalog::{
+    chain_edge_stats, star_dim_stats, DimStats, EdgeStats, PlanInputs, STREAM_ROW_BYTES,
+};
+use super::{
+    EdgeStrategy, EpsMode, JoinPlan, PlanSpec, PlannedEdge, PushdownMode, Relation, Topology,
+};
 
 /// Predicted per-strategy costs for one edge.
 #[derive(Clone, Copy, Debug)]
@@ -64,6 +80,79 @@ fn waves_s(cfg: &ClusterConfig, tasks: f64, per_task_s: f64) -> f64 {
 fn shuffle_per_byte(cfg: &ClusterConfig) -> f64 {
     let nodes = cfg.n_nodes.max(1) as f64;
     (1.0 / cfg.net_bandwidth + 2.0 / cfg.disk_bandwidth) / nodes
+}
+
+/// The (selectivity / probe cost) pushdown score: fraction of the stream
+/// a filter removes, per filter lookup it costs.  Probe cost is one
+/// lookup per stream row plus the build amortised over the stream — the
+/// cluster's per-lookup constants scale every candidate equally, so they
+/// cancel out of the ranking.
+fn pushdown_score(fact_rows: f64, d: &DimStats) -> f64 {
+    let per_row_lookups = 1.0 + d.build_rows as f64 / fact_rows.max(1.0);
+    (1.0 - d.match_frac).max(0.0) / per_row_lookups
+}
+
+/// Order `spec.dims` and derive each edge's [`EdgeStats`].
+///
+/// * [`PushdownMode::Ranked`] — sort by [`pushdown_score`] descending;
+///   edge `i+1`'s probe side is the **residual stream** estimate after
+///   edges `1..=i`.
+/// * [`PushdownMode::Unranked`] — keep the spec's order; every edge's
+///   probe side is the full fact scan (static propagation).
+///
+/// In both modes the snowflake dependency holds: ORDERS precedes
+/// CUSTOMER, because the customer edge probes the custkey the orders
+/// edge attaches.
+pub fn star_edge_stats(
+    spec: &PlanSpec,
+    inputs: &PlanInputs,
+    mode: PushdownMode,
+) -> Vec<(String, Relation, EdgeStats)> {
+    let fact_rows = inputs.lineitem.n_rows().max(1) as f64;
+    let mut dims = star_dim_stats(spec, inputs);
+    if mode == PushdownMode::Ranked {
+        dims.sort_by(|x, y| {
+            pushdown_score(fact_rows, y)
+                .partial_cmp(&pushdown_score(fact_rows, x))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| x.relation.name().cmp(y.relation.name()))
+        });
+    }
+    let customer = dims.iter().position(|d| d.relation == Relation::Customer);
+    let orders = dims.iter().position(|d| d.relation == Relation::Orders);
+    if let (Some(ci), Some(oi)) = (customer, orders) {
+        if ci < oi {
+            let o = dims.remove(oi);
+            dims.insert(ci, o);
+        }
+    }
+
+    let mut residual = fact_rows;
+    let mut out = Vec::with_capacity(dims.len());
+    for d in dims {
+        let probe_rows = match mode {
+            PushdownMode::Ranked => residual,
+            PushdownMode::Unranked => fact_rows,
+        };
+        let probe_rows_u = (probe_rows.round() as u64).max(1);
+        let matched = ((probe_rows * d.match_frac).round() as u64).min(probe_rows_u);
+        out.push((
+            format!("⋈{}", d.relation.name()),
+            d.relation,
+            EdgeStats {
+                build_rows: d.build_rows,
+                build_distinct: d.build_distinct,
+                build_row_bytes: d.build_row_bytes,
+                probe_rows: probe_rows_u,
+                // the executor ships the full accumulated PlanRow at
+                // every edge, so the priced width is constant
+                probe_row_bytes: STREAM_ROW_BYTES,
+                matched_rows: matched,
+            },
+        ));
+        residual *= d.match_frac;
+    }
+    out
 }
 
 /// Build this edge's instance of the §7 cost model.
@@ -121,13 +210,25 @@ pub fn predict_sortmerge_s(cfg: &ClusterConfig, e: &EdgeStats) -> f64 {
     3.0 * cfg.stage_overhead + scan + shuffled + waves_s(cfg, p, per_task)
 }
 
-/// Decide both edges: per-edge optimal ε (or the global ε) and the
-/// cheapest predicted strategy.
+/// Decide every edge: probe order (star topologies), per-edge optimal ε
+/// (or the global ε), and the cheapest predicted strategy.
 pub fn plan_edges(cluster: &Cluster, spec: &PlanSpec, inputs: &PlanInputs) -> JoinPlan {
     let cfg = cluster.config();
-    let edges = edge_stats(spec, inputs)
+    let edge_list = match spec.topology {
+        Topology::Star => star_edge_stats(spec, inputs, spec.pushdown),
+        Topology::Chain => {
+            assert!(
+                spec.dims.len() == 2
+                    && spec.dims.contains(&Relation::Orders)
+                    && spec.dims.contains(&Relation::Customer),
+                "chain topology supports only the CUSTOMER ⋈ ORDERS ⋈ LINEITEM tree"
+            );
+            chain_edge_stats(spec, inputs)
+        }
+    };
+    let edges = edge_list
         .into_iter()
-        .map(|(name, stats)| {
+        .map(|(name, relation, stats)| {
             let model = edge_cost_model(cfg, &stats);
             let opt = newton::optimal_epsilon(&model);
             let eps = match spec.eps_mode {
@@ -150,7 +251,7 @@ pub fn plan_edges(cluster: &Cluster, spec: &PlanSpec, inputs: &PlanInputs) -> Jo
             } else {
                 EdgeStrategy::SortMerge
             };
-            PlannedEdge { name, strategy, stats, prediction }
+            PlannedEdge { name, relation, strategy, stats, prediction }
         })
         .collect();
     JoinPlan { topology: spec.topology, edges }
@@ -160,6 +261,8 @@ pub fn plan_edges(cluster: &Cluster, spec: &PlanSpec, inputs: &PlanInputs) -> Jo
 mod tests {
     use super::*;
     use crate::cluster::ClusterConfig;
+    use crate::dataset::PartitionedTable;
+    use crate::plan::catalog::FactRow;
 
     fn edge(probe_rows: u64, matched: u64, build: u64) -> EdgeStats {
         EdgeStats {
@@ -212,5 +315,92 @@ mod tests {
         let bloom = model.total(newton::optimal_epsilon(&model).eps);
         let smj = predict_sortmerge_s(&cfg, &e);
         assert!(bloom < smj, "bloom {bloom} vs smj {smj}");
+    }
+
+    /// Synthetic workload with one highly selective dimension (PART
+    /// keeps ~2 % of the stream) and one mildly selective dimension
+    /// (ORDERS keeps ~50 %).
+    fn selective_part_inputs() -> (PlanSpec, PlanInputs) {
+        let spec = PlanSpec {
+            dims: vec![Relation::Orders, Relation::Part],
+            ..Default::default()
+        };
+        let lineitem: Vec<FactRow> = (0..4000u64)
+            .map(|i| FactRow {
+                orderkey: (i % 200) + 1,
+                partkey: (i % 1000) + 1,
+                suppkey: (i % 50) + 1,
+                price_cents: i as i64,
+            })
+            .collect();
+        // orders cover only half the orderkey space; part keys cover 2 %
+        let orders: Vec<(u64, u64, i32)> =
+            (1..=100u64).map(|ok| (ok, ok % 40 + 1, 0)).collect();
+        let part: Vec<(u64, i32)> = (1..=20u64).map(|pk| (pk, 11)).collect();
+        let inputs = PlanInputs {
+            customer: PartitionedTable::from_rows(Vec::new(), 2),
+            orders: PartitionedTable::from_rows(orders, 2),
+            lineitem: PartitionedTable::from_rows(lineitem, 4),
+            part: PartitionedTable::from_rows(part, 2),
+            supplier: PartitionedTable::from_rows(Vec::new(), 2),
+        };
+        (spec, inputs)
+    }
+
+    #[test]
+    fn ranked_pushdown_probes_selective_filter_first_and_shrinks_downstream_a() {
+        let (spec, inputs) = selective_part_inputs();
+        let ranked = star_edge_stats(&spec, &inputs, PushdownMode::Ranked);
+        let unranked = star_edge_stats(&spec, &inputs, PushdownMode::Unranked);
+        assert_eq!(ranked.len(), 2);
+        // the 2 % part filter outranks the 50 % orders filter...
+        assert_eq!(ranked[0].1, Relation::Part);
+        // ...while the unranked baseline keeps the spec's order
+        assert_eq!(unranked[0].1, Relation::Orders);
+
+        let ranked_orders = ranked.iter().find(|(_, r, _)| *r == Relation::Orders).unwrap();
+        let unranked_orders = unranked.iter().find(|(_, r, _)| *r == Relation::Orders).unwrap();
+        // residual re-derivation shrinks the downstream edge's probe
+        // stream — and with it the cost model's A input (filtrable rows)
+        assert!(
+            ranked_orders.2.probe_rows * 10 < unranked_orders.2.probe_rows,
+            "residual probe {} vs static {}",
+            ranked_orders.2.probe_rows,
+            unranked_orders.2.probe_rows
+        );
+        let a_ranked = ranked_orders.2.probe_rows - ranked_orders.2.matched_rows;
+        let a_static = unranked_orders.2.probe_rows - unranked_orders.2.matched_rows;
+        assert!(a_ranked * 10 < a_static.max(1), "A {a_ranked} vs {a_static}");
+    }
+
+    #[test]
+    fn plan_edges_respects_pushdown_mode_and_snowflake_dependency() {
+        use crate::cluster::Cluster;
+        let (spec, inputs) = selective_part_inputs();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        assert_eq!(plan.edges.len(), 2);
+        assert_eq!(plan.edges[0].relation, Relation::Part);
+        for e in &plan.edges {
+            assert!(e.prediction.eps_star > 0.0 && e.prediction.eps_star < 1.0);
+        }
+
+        // customer may rank arbitrarily but always runs after orders
+        let spec5 = PlanSpec {
+            dims: vec![
+                Relation::Customer,
+                Relation::Supplier,
+                Relation::Orders,
+                Relation::Part,
+            ],
+            ..Default::default()
+        };
+        let (_, inputs5) = selective_part_inputs();
+        for mode in [PushdownMode::Ranked, PushdownMode::Unranked] {
+            let edges = star_edge_stats(&spec5, &inputs5, mode);
+            let oi = edges.iter().position(|(_, r, _)| *r == Relation::Orders).unwrap();
+            let ci = edges.iter().position(|(_, r, _)| *r == Relation::Customer).unwrap();
+            assert!(oi < ci, "orders must precede customer ({mode:?})");
+        }
     }
 }

@@ -1,11 +1,14 @@
-//! Plan execution: run the two planned edges with their chosen
-//! strategies and compose the per-edge stage accounting into one ledger.
+//! Plan execution: run the planned edges with their chosen strategies
+//! and compose the per-edge stage accounting into one ledger.
 //!
-//! Both topologies produce the same logical result set (the equivalence
-//! property `rust/tests/join_equivalence.rs` checks against a
-//! nested-loop oracle for every per-edge strategy assignment); what
-//! differs is the simulated cost of the composition — which is the
-//! planner's whole subject.
+//! A star plan is executed as a **loop over the planned edge list**: the
+//! fact stream starts as the filtered LINEITEM scan and each edge re-keys
+//! it by that dimension's FK, runs the edge's strategy, and folds the
+//! dimension's payload into the accumulated [`PlanRow`].  Every edge
+//! order and strategy assignment produces the same logical multiset (the
+//! equivalence property `rust/tests/join_equivalence.rs` checks against
+//! [`nested_loop_oracle`]); what differs is the simulated cost of the
+//! composition — which is the planner's whole subject.
 
 use crate::cluster::Cluster;
 use crate::dataset::PartitionedTable;
@@ -13,18 +16,47 @@ use crate::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
 use crate::joins::{exec, JoinedRow, Keyed, RowSize};
 use crate::metrics::QueryMetrics;
 
-use super::catalog::PlanInputs;
-use super::{EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, Topology};
+use super::catalog::{FactRow, PlanInputs, STREAM_ROW_BYTES};
+use super::{EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, Relation, Topology};
 
-/// One row of the 3-way join result:
-/// `(orderkey, custkey, l_extendedprice, o_orderdate, c_nationkey)`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+/// One row of the n-way join result: the fact columns plus every joined
+/// dimension's payload.  Dimensions a plan does not join stay at their
+/// `Default` (0) in both the executor and the oracle, so row equality is
+/// exact for any tree width.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
 pub struct PlanRow {
     pub orderkey: u64,
+    pub partkey: u64,
+    pub suppkey: u64,
+    /// Attached by the ORDERS edge.
     pub custkey: u64,
     pub price_cents: i64,
+    /// Attached by the ORDERS edge.
     pub orderdate: i32,
+    /// Attached by the CUSTOMER edge.
     pub nationkey: i32,
+    /// Attached by the PART edge.
+    pub p_brand: i32,
+    /// Attached by the SUPPLIER edge.
+    pub s_nationkey: i32,
+}
+
+impl RowSize for PlanRow {
+    fn row_bytes(&self) -> u64 {
+        // 4 keys + price + 4 attrs — the same width the planner prices
+        // probe rows at, so predicted and simulated bytes agree
+        STREAM_ROW_BYTES as u64
+    }
+}
+
+fn seed_row(f: &FactRow) -> PlanRow {
+    PlanRow {
+        orderkey: f.orderkey,
+        partkey: f.partkey,
+        suppkey: f.suppkey,
+        price_cents: f.price_cents,
+        ..Default::default()
+    }
 }
 
 /// Measured summary of one executed edge.
@@ -49,40 +81,85 @@ impl PlanOutput {
     }
 }
 
-/// Reference semantics of the 3-way join: an index-nested-loop over
-/// plain row slices, emitting the same [`PlanRow`]s every plan must
-/// produce.  This is the single oracle both the executor's unit tests
-/// and `rust/tests/join_equivalence.rs` compare strategy assignments
-/// against — one copy, so the reference cannot drift between suites.
-pub fn nested_loop_oracle(
-    customer: &[(u64, i32)],
-    orders: &[(u64, u64, i32)],
-    lineitem: &[(u64, i64)],
-) -> Vec<PlanRow> {
+/// Reference semantics of the n-way star join: an index-nested-loop over
+/// plain row slices, expanding the fact stream through `dims` one
+/// dimension at a time under exact multiset semantics.  `dims` must list
+/// ORDERS before CUSTOMER (the custkey a customer edge probes comes from
+/// orders).  This is the single oracle the executor's unit tests and
+/// `rust/tests/join_equivalence.rs` compare every plan against — one
+/// copy, so the reference cannot drift between suites.
+pub fn nested_loop_oracle(inputs: &PlanInputs, dims: &[Relation]) -> Vec<PlanRow> {
     use std::collections::HashMap;
-    let mut orders_by_key: HashMap<u64, Vec<(u64, i32)>> = HashMap::new();
-    for &(ok, ck, od) in orders {
-        orders_by_key.entry(ok).or_default().push((ck, od));
+    let mut orders_by: HashMap<u64, Vec<(u64, i32)>> = HashMap::new();
+    for (ok, ck, od) in inputs.orders.iter() {
+        orders_by.entry(*ok).or_default().push((*ck, *od));
     }
-    let mut cust_by_key: HashMap<u64, Vec<i32>> = HashMap::new();
-    for &(ck, nk) in customer {
-        cust_by_key.entry(ck).or_default().push(nk);
-    }
-    let mut out = Vec::new();
-    for &(l_ok, price) in lineitem {
-        let Some(os) = orders_by_key.get(&l_ok) else { continue };
-        for &(ck, od) in os {
-            let Some(nks) = cust_by_key.get(&ck) else { continue };
-            for &nk in nks {
-                out.push(PlanRow {
-                    orderkey: l_ok,
-                    custkey: ck,
-                    price_cents: price,
-                    orderdate: od,
-                    nationkey: nk,
-                });
-            }
+    let index = |t: &PartitionedTable<Keyed<i32>>| {
+        let mut m: HashMap<u64, Vec<i32>> = HashMap::new();
+        for (k, v) in t.iter() {
+            m.entry(*k).or_default().push(*v);
         }
+        m
+    };
+    let cust_by = index(&inputs.customer);
+    let part_by = index(&inputs.part);
+    let supp_by = index(&inputs.supplier);
+
+    let mut out: Vec<PlanRow> = inputs.lineitem.iter().map(seed_row).collect();
+    let mut seen_orders = false;
+    for dim in dims {
+        let mut next = Vec::new();
+        match dim {
+            Relation::Orders => {
+                seen_orders = true;
+                for r in &out {
+                    if let Some(ms) = orders_by.get(&r.orderkey) {
+                        for &(ck, od) in ms {
+                            let mut r2 = *r;
+                            r2.custkey = ck;
+                            r2.orderdate = od;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            Relation::Customer => {
+                assert!(seen_orders, "oracle dims must list orders before customer");
+                for r in &out {
+                    if let Some(ms) = cust_by.get(&r.custkey) {
+                        for &nk in ms {
+                            let mut r2 = *r;
+                            r2.nationkey = nk;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            Relation::Part => {
+                for r in &out {
+                    if let Some(ms) = part_by.get(&r.partkey) {
+                        for &b in ms {
+                            let mut r2 = *r;
+                            r2.p_brand = b;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            Relation::Supplier => {
+                for r in &out {
+                    if let Some(ms) = supp_by.get(&r.suppkey) {
+                        for &nk in ms {
+                            let mut r2 = *r;
+                            r2.s_nationkey = nk;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            Relation::Lineitem => panic!("lineitem is the fact table, not a dimension"),
+        }
+        out = next;
     }
     out.sort_unstable();
     out
@@ -110,22 +187,45 @@ where
     }
 }
 
+/// Re-key the fact stream by one dimension's FK.
+fn keyed_by(
+    stream: PartitionedTable<PlanRow>,
+    key: impl Fn(&PlanRow) -> u64,
+) -> PartitionedTable<Keyed<PlanRow>> {
+    stream.map_partitions(|p| p.into_iter().map(|r| (key(&r), r)).collect())
+}
+
+/// Fold each joined dimension payload back into its fact row.
+fn fold<P>(
+    joined: Vec<JoinedRow<PlanRow, P>>,
+    apply: impl Fn(&mut PlanRow, P),
+) -> Vec<PlanRow> {
+    joined
+        .into_iter()
+        .map(|(_, mut row, payload)| {
+            apply(&mut row, payload);
+            row
+        })
+        .collect()
+}
+
 /// Execute `plan` over `inputs` on `cluster`.
 ///
-/// Panics if the plan does not have exactly two edges (the supported
-/// 3-relation trees).
+/// Star plans run any number of dimension edges (a CUSTOMER edge must
+/// come after an ORDERS edge); chain plans are the fixed two-edge
+/// 3-relation tree.
 pub fn execute(
     cluster: &Cluster,
     spec: &PlanSpec,
     plan: &JoinPlan,
     inputs: PlanInputs,
 ) -> PlanOutput {
-    assert_eq!(plan.edges.len(), 2, "3-way plans have exactly two edges");
+    assert!(!plan.edges.is_empty(), "a plan needs at least one edge");
     let parts = spec.partitions.max(1);
-    let PlanInputs { customer, orders, lineitem } = inputs;
+    let PlanInputs { customer, orders, lineitem, part, supplier } = inputs;
 
     let mut metrics = QueryMetrics::default();
-    let mut edge_reports = Vec::with_capacity(2);
+    let mut edge_reports = Vec::with_capacity(plan.edges.len());
     let report = |edge: &PlannedEdge, m: &QueryMetrics| EdgeReport {
         name: edge.name.clone(),
         strategy: edge.strategy.label(),
@@ -135,38 +235,71 @@ pub fn execute(
 
     let rows: Vec<PlanRow> = match plan.topology {
         Topology::Star => {
-            // edge 1: LINEITEM ⋈ ORDERS on orderkey (orders build side)
-            let small1: PartitionedTable<Keyed<(u64, i32)>> =
-                orders.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect());
-            let (j1, m1) = run_edge(cluster, &plan.edges[0], lineitem, small1);
-            edge_reports.push(report(&plan.edges[0], &m1));
-            metrics.absorb("e1", m1);
-
-            // re-key the join output by custkey for the customer edge
-            let inter: PartitionedTable<Keyed<(u64, (i64, i32))>> = PartitionedTable::from_rows(
-                j1.into_iter().map(|(ok, price, (ck, od))| (ck, (ok, (price, od)))).collect(),
-                parts,
-            );
-
-            // edge 2: (L⋈O) ⋈ CUSTOMER on custkey (customer build side)
-            let (j2, m2) = run_edge(cluster, &plan.edges[1], inter, customer);
-            edge_reports.push(report(&plan.edges[1], &m2));
-            metrics.absorb("e2", m2);
-
-            j2.into_iter()
-                .map(|(ck, (ok, (price, od)), nk)| PlanRow {
-                    orderkey: ok,
-                    custkey: ck,
-                    price_cents: price,
-                    orderdate: od,
-                    nationkey: nk,
-                })
-                .collect()
+            let mut stream: Vec<PlanRow> = lineitem.iter().map(seed_row).collect();
+            // each relation is joined at most once per star plan, so the
+            // edges take the dimension tables by value (no deep clones)
+            let mut orders = Some(orders);
+            let mut customer = Some(customer);
+            let mut part = Some(part);
+            let mut supplier = Some(supplier);
+            let mut orders_joined = false;
+            for (i, edge) in plan.edges.iter().enumerate() {
+                let table = PartitionedTable::from_rows(stream, parts);
+                let (next, m): (Vec<PlanRow>, QueryMetrics) = match edge.relation {
+                    Relation::Orders => {
+                        let dim = orders.take().expect("star plans join orders at most once");
+                        let small: PartitionedTable<Keyed<(u64, i32)>> = dim.map_partitions(
+                            |p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect(),
+                        );
+                        let big = keyed_by(table, |r| r.orderkey);
+                        let (j, m) = run_edge(cluster, edge, big, small);
+                        orders_joined = true;
+                        (
+                            fold(j, |r, (ck, od)| {
+                                r.custkey = ck;
+                                r.orderdate = od;
+                            }),
+                            m,
+                        )
+                    }
+                    Relation::Customer => {
+                        assert!(
+                            orders_joined,
+                            "a customer edge requires an orders edge upstream (custkey comes \
+                             from ORDERS)"
+                        );
+                        let dim = customer.take().expect("star plans join customer at most once");
+                        let big = keyed_by(table, |r| r.custkey);
+                        let (j, m) = run_edge(cluster, edge, big, dim);
+                        (fold(j, |r, nk| r.nationkey = nk), m)
+                    }
+                    Relation::Part => {
+                        let dim = part.take().expect("star plans join part at most once");
+                        let big = keyed_by(table, |r| r.partkey);
+                        let (j, m) = run_edge(cluster, edge, big, dim);
+                        (fold(j, |r, b| r.p_brand = b), m)
+                    }
+                    Relation::Supplier => {
+                        let dim = supplier.take().expect("star plans join supplier at most once");
+                        let big = keyed_by(table, |r| r.suppkey);
+                        let (j, m) = run_edge(cluster, edge, big, dim);
+                        (fold(j, |r, nk| r.s_nationkey = nk), m)
+                    }
+                    Relation::Lineitem => {
+                        panic!("lineitem is the fact side of a star plan, not a dimension")
+                    }
+                };
+                edge_reports.push(report(edge, &m));
+                metrics.absorb(&format!("e{}", i + 1), m);
+                stream = next;
+            }
+            stream
         }
         Topology::Chain => {
+            assert_eq!(plan.edges.len(), 2, "chain plans are the 3-relation tree");
             // edge 1: ORDERS ⋈ CUSTOMER on custkey (customer build side)
-            let big1: PartitionedTable<Keyed<(u64, i32)>> =
-                orders.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect());
+            let big1: PartitionedTable<Keyed<(u64, i32)>> = orders
+                .map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect());
             let (j1, m1) = run_edge(cluster, &plan.edges[0], big1, customer);
             edge_reports.push(report(&plan.edges[0], &m1));
             metrics.absorb("e1", m1);
@@ -179,17 +312,18 @@ pub fn execute(
                 );
 
             // edge 2: LINEITEM ⋈ ORDERS' on orderkey
-            let (j2, m2) = run_edge(cluster, &plan.edges[1], lineitem, small2);
+            let big2: PartitionedTable<Keyed<PlanRow>> = lineitem
+                .map_partitions(|p| p.iter().map(|f| (f.orderkey, seed_row(f))).collect());
+            let (j2, m2) = run_edge(cluster, &plan.edges[1], big2, small2);
             edge_reports.push(report(&plan.edges[1], &m2));
             metrics.absorb("e2", m2);
 
             j2.into_iter()
-                .map(|(ok, price, (ck, (od, nk)))| PlanRow {
-                    orderkey: ok,
-                    custkey: ck,
-                    price_cents: price,
-                    orderdate: od,
-                    nationkey: nk,
+                .map(|(_, mut row, (ck, (od, nk)))| {
+                    row.custkey = ck;
+                    row.orderdate = od;
+                    row.nationkey = nk;
+                    row
                 })
                 .collect()
         }
@@ -209,13 +343,11 @@ mod tests {
         PlanSpec { sf: 0.002, partitions: 4, ..Default::default() }
     }
 
-    /// The shared oracle, applied to prepared inputs.
-    fn oracle(inputs: &PlanInputs) -> Vec<PlanRow> {
-        nested_loop_oracle(
-            &inputs.customer.iter().copied().collect::<Vec<_>>(),
-            &inputs.orders.iter().copied().collect::<Vec<_>>(),
-            &inputs.lineitem.iter().copied().collect::<Vec<_>>(),
-        )
+    fn wide_spec() -> PlanSpec {
+        PlanSpec {
+            dims: vec![Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier],
+            ..tiny_spec()
+        }
     }
 
     #[test]
@@ -223,7 +355,7 @@ mod tests {
         let spec = tiny_spec();
         let cluster = Cluster::new(ClusterConfig::local());
         let inputs = prepare(&spec);
-        let want = oracle(&inputs);
+        let want = nested_loop_oracle(&inputs, &spec.dims);
         let plan = plan_edges(&cluster, &spec, &inputs);
         let mut out = execute(&cluster, &spec, &plan, inputs);
         out.rows.sort_unstable();
@@ -231,6 +363,23 @@ mod tests {
         assert_eq!(out.rows, want);
         assert_eq!(out.edge_reports.len(), 2);
         assert!(out.total_sim_s() > 0.0);
+    }
+
+    #[test]
+    fn planned_five_relation_star_matches_oracle() {
+        let spec = wide_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&spec);
+        let want = nested_loop_oracle(&inputs, &spec.dims);
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        assert_eq!(plan.edges.len(), 4);
+        let mut out = execute(&cluster, &spec, &plan, inputs);
+        out.rows.sort_unstable();
+        assert!(!out.rows.is_empty(), "widen the predicates");
+        assert_eq!(out.rows, want);
+        assert_eq!(out.edge_reports.len(), 4);
+        // unfiltered PART attaches a brand to every surviving row
+        assert!(out.rows.iter().all(|r| r.p_brand > 0));
     }
 
     #[test]
@@ -253,7 +402,7 @@ mod tests {
 
     #[test]
     fn global_eps_mode_pins_every_filter() {
-        let spec = PlanSpec { eps_mode: EpsMode::Global(0.2), ..tiny_spec() };
+        let spec = PlanSpec { eps_mode: EpsMode::Global(0.2), ..wide_spec() };
         let cluster = Cluster::new(ClusterConfig::local());
         let inputs = prepare(&spec);
         let plan = plan_edges(&cluster, &spec, &inputs);
@@ -266,15 +415,23 @@ mod tests {
 
     #[test]
     fn composed_metrics_prefix_stages_per_edge() {
-        let spec = tiny_spec();
+        let spec = wide_spec();
         let cluster = Cluster::new(ClusterConfig::local());
         let inputs = prepare(&spec);
         let plan = plan_edges(&cluster, &spec, &inputs);
+        let n_edges = plan.edges.len();
         let out = execute(&cluster, &spec, &plan, inputs);
-        assert!(out.metrics.stages.iter().all(|s| {
-            s.name.starts_with("e1/") || s.name.starts_with("e2/")
-        }));
-        // the composition is the sum of the edge totals
+        let prefixes: Vec<String> = (1..=n_edges).map(|i| format!("e{i}/")).collect();
+        assert!(out
+            .metrics
+            .stages
+            .iter()
+            .all(|s| prefixes.iter().any(|p| s.name.starts_with(p.as_str()))));
+        // the composition is the sum of the edge totals, edge by edge
+        for (i, r) in out.edge_reports.iter().enumerate() {
+            let slice = out.metrics.prefix_sim_s(&format!("e{}", i + 1));
+            assert!((slice - r.sim_s).abs() < 1e-9, "edge {i}: {slice} vs {}", r.sim_s);
+        }
         let edge_sum: f64 = out.edge_reports.iter().map(|r| r.sim_s).sum();
         assert!((out.total_sim_s() - edge_sum).abs() < 1e-9);
     }

@@ -1,43 +1,58 @@
-//! Multi-way join planner: star and chain join trees over TPC-H
-//! CUSTOMER ⋈ ORDERS ⋈ LINEITEM with **per-edge strategy choice and
-//! per-filter optimal ε**.
+//! N-ary join planner: star and chain join trees over the TPC-H schema
+//! with **per-edge strategy choice, per-filter optimal ε, and ranked
+//! filter pushdown**.
 //!
 //! The paper's headline claim is that optimally-sized bloom filters win
 //! "not only on star-joins, but also on traditional database schema";
-//! this module reproduces the star-join half.  A [`JoinPlan`] is a
-//! sequence of binary join edges over a [`Topology`]:
+//! this module reproduces the star-join half at full width.  A
+//! [`JoinPlan`] is a sequence of binary join edges over a [`Topology`]:
 //!
-//! * **Star** — LINEITEM is the fact table:
-//!   `(LINEITEM ⋈ ORDERS) ⋈ CUSTOMER`;
-//! * **Chain** — dimensions reduce upstream first:
-//!   `LINEITEM ⋈ (ORDERS ⋈ CUSTOMER)`.
+//! * **Star** — LINEITEM is the fact table and each planned edge joins
+//!   the accumulated fact stream to one dimension ([`Relation`]):
+//!   ORDERS (on `l_orderkey`), PART (on `l_partkey`), SUPPLIER (on
+//!   `l_suppkey`), and CUSTOMER (a snowflake edge on the `o_custkey`
+//!   the ORDERS edge attaches, so it must run after ORDERS).  Any
+//!   subset of `{orders, customer, part, supplier}` makes a 2–5
+//!   relation tree — the executor is a loop over the edge list, not a
+//!   fixed-arity match.
+//! * **Chain** — the classic 3-relation dimension reduction
+//!   `LINEITEM ⋈ (ORDERS ⋈ CUSTOMER)`, kept as the planning baseline.
 //!
 //! Planning works from per-relation cardinality estimates ([`catalog`]:
-//! row counts + HyperLogLog distinct-key sketches from [`crate::approx`]),
-//! prices each edge under all three strategies with an a-priori instance
-//! of the §7 cost model ([`costing`]), and — when an edge takes the
-//! bloom-cascade — solves that edge's **own** optimal ε with
-//! [`crate::model::newton`] instead of one global ε.  Execution
-//! ([`executor`]) composes the per-edge stage accounting into a single
-//! [`crate::metrics::QueryMetrics`] ledger, so a plan's simulated cost is
-//! the composition of its stages.
+//! row counts + HyperLogLog distinct-key sketches from [`crate::approx`]).
+//! When several dimension filters apply to the same fact scan,
+//! [`costing`] orders them by a (selectivity / probe cost) ranking and
+//! re-derives each subsequent edge's workload — the cost model's
+//! `A`/`B` inputs — from the **residual-stream estimate** left by the
+//! filters ahead of it ([`PushdownMode::Ranked`]), rather than pricing
+//! every edge against the full scan ([`PushdownMode::Unranked`], the
+//! static-propagation baseline the benches compare).  Each edge is then
+//! priced under all three strategies with an a-priori instance of the §7
+//! cost model, and — when an edge takes the bloom-cascade — solves that
+//! edge's **own** optimal ε with [`crate::model::newton`] instead of one
+//! global ε.  Execution ([`executor`]) composes the per-edge stage
+//! accounting into a single [`crate::metrics::QueryMetrics`] ledger, so
+//! a plan's simulated cost is the composition of its stages.
 
 pub mod catalog;
 pub mod costing;
 pub mod executor;
 
-pub use catalog::{edge_stats, prepare, EdgeStats, PlanInputs, Relation};
-pub use costing::{plan_edges, EdgePrediction};
+pub use catalog::{
+    chain_edge_stats, prepare, star_dim_stats, DimStats, EdgeStats, FactRow, PlanInputs, Relation,
+};
+pub use costing::{plan_edges, star_edge_stats, EdgePrediction};
 pub use executor::{execute, nested_loop_oracle, EdgeReport, PlanOutput, PlanRow};
 
 use crate::tpch::ORDERDATE_RANGE_DAYS;
 
-/// Shape of the 3-way join tree.
+/// Shape of the join tree.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Topology {
-    /// `(LINEITEM ⋈ ORDERS) ⋈ CUSTOMER` — the fact table first.
+    /// Fact-first: LINEITEM probes each dimension in planned order.
     Star,
-    /// `LINEITEM ⋈ (ORDERS ⋈ CUSTOMER)` — dimension reduction first.
+    /// `LINEITEM ⋈ (ORDERS ⋈ CUSTOMER)` — dimension reduction first
+    /// (3-relation trees only).
     Chain,
 }
 
@@ -67,20 +82,57 @@ pub enum EpsMode {
     Global(f64),
 }
 
-/// The parameterised 3-way query (predicates mirror `query::JoinQuery`).
+/// How same-fact dimension filters are ordered in a star plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushdownMode {
+    /// Rank dimensions by (selectivity / probe cost) and derive each
+    /// subsequent edge's workload from the residual-stream estimate.
+    Ranked,
+    /// Probe in [`PlanSpec::dims`] order with every edge's workload
+    /// derived from the full fact scan (static propagation).
+    Unranked,
+}
+
+impl PushdownMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PushdownMode::Ranked => "ranked",
+            PushdownMode::Unranked => "unranked",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PushdownMode> {
+        match s {
+            "ranked" => Some(PushdownMode::Ranked),
+            "unranked" => Some(PushdownMode::Unranked),
+            _ => None,
+        }
+    }
+}
+
+/// The parameterised n-way query (predicates mirror `query::JoinQuery`).
 #[derive(Clone, Debug)]
 pub struct PlanSpec {
     pub sf: f64,
     pub seed: u64,
     pub partitions: usize,
     pub topology: Topology,
+    /// Dimensions joined to the LINEITEM fact.  The listed order is the
+    /// unranked probe order; [`PushdownMode::Ranked`] reorders it.
+    /// CUSTOMER requires ORDERS in the set (snowflake dependency).
+    pub dims: Vec<Relation>,
     /// cond on ORDERS: keep `o_orderdate ∈ [lo, hi)`.
     pub order_date_window: (i32, i32),
     /// cond on LINEITEM: keep `l_shipdate < max`.
     pub ship_date_max: i32,
     /// cond on CUSTOMER: keep `c_mktsegment == seg` (None = all).
     pub mktsegment: Option<u8>,
+    /// cond on PART: keep `p_brand == b` (None = all; 25 brands).
+    pub part_brand: Option<u8>,
+    /// cond on SUPPLIER: keep `s_nationkey == n` (None = all; 25 nations).
+    pub supp_nationkey: Option<i32>,
     pub eps_mode: EpsMode,
+    pub pushdown: PushdownMode,
 }
 
 impl Default for PlanSpec {
@@ -90,12 +142,16 @@ impl Default for PlanSpec {
             seed: 0xB100_F117,
             partitions: 8,
             topology: Topology::Star,
+            dims: vec![Relation::Orders, Relation::Customer],
             // ~10 % of the order-date range, like the paper's query
             order_date_window: (400, 400 + ORDERDATE_RANGE_DAYS / 10),
             ship_date_max: ORDERDATE_RANGE_DAYS + 121,
             // one of five segments: ~20 % of customers
             mktsegment: Some(0),
+            part_brand: None,
+            supp_nationkey: None,
             eps_mode: EpsMode::PerFilter,
+            pushdown: PushdownMode::Ranked,
         }
     }
 }
@@ -125,6 +181,8 @@ impl EdgeStrategy {
 #[derive(Clone, Debug)]
 pub struct PlannedEdge {
     pub name: String,
+    /// The dimension this edge joins into the fact stream.
+    pub relation: Relation,
     pub strategy: EdgeStrategy,
     pub stats: EdgeStats,
     pub prediction: EdgePrediction,
@@ -133,9 +191,14 @@ pub struct PlannedEdge {
 impl PlannedEdge {
     /// An edge with a caller-forced strategy and no planning stats —
     /// what the equivalence tests use to enumerate strategy assignments.
-    pub fn forced(name: impl Into<String>, strategy: EdgeStrategy) -> PlannedEdge {
+    pub fn forced(
+        relation: Relation,
+        name: impl Into<String>,
+        strategy: EdgeStrategy,
+    ) -> PlannedEdge {
         PlannedEdge {
             name: name.into(),
+            relation,
             strategy,
             stats: EdgeStats::default(),
             prediction: EdgePrediction::default(),
@@ -178,9 +241,18 @@ mod tests {
     }
 
     #[test]
+    fn pushdown_parse_roundtrips() {
+        for m in [PushdownMode::Ranked, PushdownMode::Unranked] {
+            assert_eq!(PushdownMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PushdownMode::parse("random"), None);
+    }
+
+    #[test]
     fn forced_edge_carries_strategy() {
-        let e = PlannedEdge::forced("x", EdgeStrategy::Broadcast);
+        let e = PlannedEdge::forced(Relation::Customer, "x", EdgeStrategy::Broadcast);
         assert_eq!(e.name, "x");
+        assert_eq!(e.relation, Relation::Customer);
         assert!(matches!(e.strategy, EdgeStrategy::Broadcast));
     }
 

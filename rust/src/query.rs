@@ -16,7 +16,7 @@ use crate::cluster::Cluster;
 use crate::dataset::{Op, PartitionedTable, Pipeline};
 use crate::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
 use crate::joins::exec;
-use crate::joins::{JoinedRow, Keyed, RowSize};
+use crate::joins::{JoinedRow, Keyed};
 use crate::metrics::QueryMetrics;
 use crate::tpch::{GenConfig, Lineitem, Order, TpchGenerator, ORDERDATE_RANGE_DAYS};
 
@@ -24,18 +24,6 @@ use crate::tpch::{GenConfig, Lineitem, Order, TpchGenerator, ORDERDATE_RANGE_DAY
 pub type BigRow = i64;
 /// Projected small-side payload: `o_orderdate` (SMALL.attr2).
 pub type SmallRow = i32;
-
-impl RowSize for i64 {
-    fn row_bytes(&self) -> u64 {
-        8
-    }
-}
-
-impl RowSize for i32 {
-    fn row_bytes(&self) -> u64 {
-        4
-    }
-}
 
 /// Which join algorithm runs step 5.
 #[derive(Clone, Debug)]

@@ -7,8 +7,8 @@
 
 use super::text;
 use super::{
-    orderkey_at, Customer, Lineitem, Order, CUSTOMERS_PER_SF, ORDERDATE_RANGE_DAYS,
-    ORDERS_PER_SF, PARTS_PER_SF, SUPPLIERS_PER_SF,
+    orderkey_at, Customer, Lineitem, Order, Part, Supplier, CUSTOMERS_PER_SF,
+    ORDERDATE_RANGE_DAYS, ORDERS_PER_SF, PARTS_PER_SF, SUPPLIERS_PER_SF,
 };
 use crate::util::Rng;
 
@@ -115,7 +115,53 @@ impl TpchGenerator {
             .collect()
     }
 
-    /// All orders / lineitems / customers as partitioned tables.
+    /// Generate partition `p` of PART.  Keys are dense `1..=n_parts`, so
+    /// every `l_partkey` (drawn in that range) FKs to exactly one row.
+    pub fn parts_partition(&self, p: usize) -> Vec<Part> {
+        let (start, end) = Self::slice(self.cfg.n_parts(), self.cfg.partitions, p);
+        (start..end)
+            .map(|i| {
+                let partkey = i + 1;
+                let mut rng = self.stream(3, i);
+                let mfgr = rng.range(1, 5) as u8;
+                Part {
+                    p_partkey: partkey,
+                    p_name: text::part_name(&mut rng),
+                    p_mfgr: mfgr,
+                    p_brand: mfgr * 10 + rng.range(1, 5) as u8,
+                    p_size: rng.range(1, 50) as i32,
+                    p_container: rng.below(40) as u8,
+                    // spec 4.2.3 retailprice(partkey) shape, in cents
+                    p_retailprice_cents: (90_000
+                        + (partkey / 10) % 20_001
+                        + 100 * (partkey % 1_000)) as i64,
+                    p_comment: text::comment(&mut rng, self.cfg.comment_len.min(14)),
+                }
+            })
+            .collect()
+    }
+
+    /// Generate partition `p` of SUPPLIER (dense keys `1..=n_suppliers`).
+    pub fn suppliers_partition(&self, p: usize) -> Vec<Supplier> {
+        let (start, end) = Self::slice(self.cfg.n_suppliers(), self.cfg.partitions, p);
+        (start..end)
+            .map(|i| {
+                let suppkey = i + 1;
+                let mut rng = self.stream(4, i);
+                Supplier {
+                    s_suppkey: suppkey,
+                    s_name: text::supplier_name(suppkey),
+                    s_nationkey: rng.below(25) as i32,
+                    // spec 4.2.3: acctbal ∈ [-999.99, 9999.99] dollars
+                    s_acctbal_cents: rng.range(0, 1_099_998) as i64 - 99_999,
+                    s_comment: text::comment(&mut rng, self.cfg.comment_len),
+                }
+            })
+            .collect()
+    }
+
+    /// All orders / lineitems / customers / parts / suppliers as
+    /// partitioned tables.
     pub fn orders(&self) -> Vec<Vec<Order>> {
         (0..self.cfg.partitions).map(|p| self.orders_partition(p)).collect()
     }
@@ -126,6 +172,14 @@ impl TpchGenerator {
 
     pub fn customers(&self) -> Vec<Vec<Customer>> {
         (0..self.cfg.partitions).map(|p| self.customers_partition(p)).collect()
+    }
+
+    pub fn parts(&self) -> Vec<Vec<Part>> {
+        (0..self.cfg.partitions).map(|p| self.parts_partition(p)).collect()
+    }
+
+    pub fn suppliers(&self) -> Vec<Vec<Supplier>> {
+        (0..self.cfg.partitions).map(|p| self.suppliers_partition(p)).collect()
     }
 
     // -- per-row generation --------------------------------------------------
@@ -332,6 +386,68 @@ mod tests {
                 }
                 assert_eq!(covered, total);
             }
+        }
+    }
+
+    #[test]
+    fn part_supplier_regeneration_is_identical() {
+        let g = tiny();
+        for p in 0..g.config().partitions {
+            assert_eq!(g.parts_partition(p), g.parts_partition(p));
+            assert_eq!(g.suppliers_partition(p), g.suppliers_partition(p));
+        }
+        // a second generator with the same config agrees partition-wise
+        let h = TpchGenerator::new(GenConfig { sf: 0.001, ..Default::default() });
+        assert_eq!(g.parts(), h.parts());
+        assert_eq!(g.suppliers(), h.suppliers());
+    }
+
+    #[test]
+    fn part_supplier_union_independent_of_partitioning() {
+        let a_cfg = GenConfig { sf: 0.001, partitions: 3, ..Default::default() };
+        let b_cfg = GenConfig { sf: 0.001, partitions: 7, ..Default::default() };
+        let pa: Vec<Part> =
+            TpchGenerator::new(a_cfg.clone()).parts().into_iter().flatten().collect();
+        let pb: Vec<Part> =
+            TpchGenerator::new(b_cfg.clone()).parts().into_iter().flatten().collect();
+        assert_eq!(pa, pb);
+        let sa: Vec<Supplier> =
+            TpchGenerator::new(a_cfg).suppliers().into_iter().flatten().collect();
+        let sb: Vec<Supplier> =
+            TpchGenerator::new(b_cfg).suppliers().into_iter().flatten().collect();
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn part_supplier_keys_dense_and_fields_in_range() {
+        let g = tiny();
+        let parts: Vec<Part> = g.parts().into_iter().flatten().collect();
+        assert_eq!(parts.len() as u64, g.config().n_parts());
+        for (i, pt) in parts.iter().enumerate() {
+            assert_eq!(pt.p_partkey, i as u64 + 1);
+            assert!((1..=5).contains(&pt.p_mfgr));
+            let brand_minor = pt.p_brand - pt.p_mfgr * 10;
+            assert!((1..=5).contains(&brand_minor), "brand {}", pt.p_brand);
+            assert!((1..=50).contains(&pt.p_size));
+            assert!(pt.p_retailprice_cents >= 90_000);
+        }
+        let supps: Vec<Supplier> = g.suppliers().into_iter().flatten().collect();
+        assert_eq!(supps.len() as u64, g.config().n_suppliers());
+        for (i, s) in supps.iter().enumerate() {
+            assert_eq!(s.s_suppkey, i as u64 + 1);
+            assert!((0..25).contains(&s.s_nationkey));
+            assert!((-99_999..=999_999).contains(&s.s_acctbal_cents));
+        }
+    }
+
+    #[test]
+    fn lineitem_fks_fall_in_generated_ranges() {
+        let g = tiny();
+        let n_parts = g.config().n_parts();
+        let n_supp = g.config().n_suppliers();
+        for l in g.lineitems().into_iter().flatten() {
+            assert!((1..=n_parts).contains(&l.l_partkey), "partkey {}", l.l_partkey);
+            assert!((1..=n_supp).contains(&l.l_suppkey), "suppkey {}", l.l_suppkey);
         }
     }
 

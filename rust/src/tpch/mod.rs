@@ -84,6 +84,31 @@ pub struct Customer {
     pub c_comment: String,
 }
 
+/// PART row (dimension for the wide star joins; LINEITEM FKs into it via
+/// `l_partkey`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Part {
+    pub p_partkey: u64,
+    pub p_name: String,
+    pub p_mfgr: u8, // 1..=5
+    /// `mfgr·10 + 1..=5` — 25 distinct values, the spec's `Brand#MN`.
+    pub p_brand: u8,
+    pub p_size: i32, // 1..=50
+    pub p_container: u8,
+    pub p_retailprice_cents: i64,
+    pub p_comment: String,
+}
+
+/// SUPPLIER row (dimension; LINEITEM FKs into it via `l_suppkey`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Supplier {
+    pub s_suppkey: u64,
+    pub s_name: String,
+    pub s_nationkey: i32, // 0..25
+    pub s_acctbal_cents: i64,
+    pub s_comment: String,
+}
+
 pub const SHIP_MODES: [&str; 7] = ["REG AIR", "AIR", "RAIL", "SHIP", "TRUCK", "MAIL", "FOB"];
 pub const MKT_SEGMENTS: [&str; 5] =
     ["AUTOMOBILE", "BUILDING", "FURNITURE", "MACHINERY", "HOUSEHOLD"];
@@ -116,6 +141,18 @@ impl Lineitem {
 impl Customer {
     pub fn ser_bytes(&self) -> u64 {
         8 + self.c_name.len() as u64 + 4 + 8 + 1 + self.c_comment.len() as u64 + 6
+    }
+}
+
+impl Part {
+    pub fn ser_bytes(&self) -> u64 {
+        8 + self.p_name.len() as u64 + 1 + 1 + 4 + 1 + 8 + self.p_comment.len() as u64 + 8
+    }
+}
+
+impl Supplier {
+    pub fn ser_bytes(&self) -> u64 {
+        8 + self.s_name.len() as u64 + 4 + 8 + self.s_comment.len() as u64 + 5
     }
 }
 

@@ -50,6 +50,21 @@ pub fn customer_name(custkey: u64) -> String {
     format!("Customer#{custkey:09}")
 }
 
+/// Supplier name in the spec's `Supplier#000000042` shape.
+pub fn supplier_name(suppkey: u64) -> String {
+    format!("Supplier#{suppkey:09}")
+}
+
+/// Part name: a few descriptive words (stand-in for dbgen's colour list).
+pub fn part_name(rng: &mut Rng) -> String {
+    format!(
+        "{} {} {}",
+        ADJS[rng.below(ADJS.len() as u64) as usize],
+        ADVERBS[rng.below(ADVERBS.len() as u64) as usize],
+        NOUNS[rng.below(NOUNS.len() as u64) as usize],
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +89,14 @@ mod tests {
     #[test]
     fn name_shape() {
         assert_eq!(customer_name(42), "Customer#000000042");
+        assert_eq!(supplier_name(7), "Supplier#000000007");
+    }
+
+    #[test]
+    fn part_name_deterministic_and_nonempty() {
+        let a = part_name(&mut Rng::new(11));
+        let b = part_name(&mut Rng::new(11));
+        assert_eq!(a, b);
+        assert!(a.split(' ').count() >= 3);
     }
 }

@@ -1,0 +1,63 @@
+//! Catalog accuracy: the planner's per-filter ε* solutions are only as
+//! good as its cardinality inputs, so the HyperLogLog distinct-key
+//! estimates for all five TPC-H relations must stay within the sketch's
+//! stated relative-error bound of exact counts — at sf 0.01 and sf 0.1,
+//! which straddle the estimator's linear-counting handoff (the
+//! ~15 k-key sets land right in the raw-estimator transition region).
+
+use std::collections::HashSet;
+
+use bloomjoin::approx::HyperLogLog;
+use bloomjoin::tpch::{GenConfig, TpchGenerator};
+
+fn assert_within_bound(name: &str, keys: impl Iterator<Item = u64>) {
+    let mut sketch = HyperLogLog::new();
+    let mut exact: HashSet<u64> = HashSet::new();
+    for k in keys {
+        sketch.insert(k);
+        exact.insert(k);
+    }
+    let n = exact.len() as f64;
+    assert!(n > 0.0, "{name}: empty key set");
+    let est = sketch.estimate() as f64;
+    let bound = HyperLogLog::relative_error_bound();
+    let err = (est - n).abs() / n;
+    assert!(
+        err <= bound,
+        "{name}: exact {n} est {est} rel err {err:.4} exceeds stated bound {bound:.4}"
+    );
+}
+
+fn check_all_relations(sf: f64) {
+    let gen = TpchGenerator::new(GenConfig { sf, ..Default::default() });
+    assert_within_bound(
+        &format!("customer.c_custkey @ sf {sf}"),
+        gen.customers().into_iter().flatten().map(|c| c.c_custkey),
+    );
+    assert_within_bound(
+        &format!("orders.o_orderkey @ sf {sf}"),
+        gen.orders().into_iter().flatten().map(|o| o.o_orderkey),
+    );
+    assert_within_bound(
+        &format!("lineitem.l_orderkey @ sf {sf}"),
+        gen.lineitems().into_iter().flatten().map(|l| l.l_orderkey),
+    );
+    assert_within_bound(
+        &format!("part.p_partkey @ sf {sf}"),
+        gen.parts().into_iter().flatten().map(|p| p.p_partkey),
+    );
+    assert_within_bound(
+        &format!("supplier.s_suppkey @ sf {sf}"),
+        gen.suppliers().into_iter().flatten().map(|s| s.s_suppkey),
+    );
+}
+
+#[test]
+fn hll_estimates_within_stated_bound_at_sf_001() {
+    check_all_relations(0.01);
+}
+
+#[test]
+fn hll_estimates_within_stated_bound_at_sf_01() {
+    check_all_relations(0.1);
+}

@@ -1,19 +1,22 @@
 //! Cross-strategy integration properties: on arbitrary workloads, all
 //! three join strategies return exactly the same multiset as a
 //! nested-loop oracle, and the SBFCJ invariants hold (no lost matches at
-//! any ε, filters monotone in ε).  The multi-way planner gets the same
-//! treatment: 3-way star and chain plans must equal a nested-loop oracle
-//! under **every** per-edge strategy assignment.  Uses the in-repo
-//! testkit (property-based, seeded, replayable via TESTKIT_SEED).
+//! any ε, filters monotone in ε).  The n-way planner gets the same
+//! treatment: 3-way star and chain plans must equal the nested-loop
+//! oracle under **every** per-edge strategy assignment, and 4-way /
+//! 5-way star plans under sampled assignments, several edge orders, and
+//! pathological ε values.  Uses the in-repo testkit (property-based,
+//! seeded, replayable via TESTKIT_SEED).
 
 use bloomjoin::cluster::{Cluster, ClusterConfig};
 use bloomjoin::dataset::PartitionedTable;
 use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin, FilterBuildStyle};
 use bloomjoin::plan::{
-    execute, nested_loop_oracle, EdgeStrategy, JoinPlan, PlanInputs, PlanRow, PlanSpec,
-    PlannedEdge, Topology,
+    execute, nested_loop_oracle, EdgeStrategy, FactRow, JoinPlan, PlanInputs, PlanRow, PlanSpec,
+    PlannedEdge, Relation, Topology,
 };
 use bloomjoin::testkit::check;
+use bloomjoin::util::Rng;
 
 type Row = (u64, u64);
 
@@ -202,20 +205,28 @@ fn scheduler_conserves_tasks_under_random_costs() {
     );
 }
 
-/// Arbitrary 3-relation workload: key spaces small enough that joins hit.
-struct TriCase {
+/// Arbitrary star-schema workload: key spaces small enough that joins
+/// hit.  The 3-way tests use the customer/orders/lineitem slice; the
+/// 4-way and 5-way tests join part/supplier too.
+struct StarCase {
     customer: Vec<(u64, i32)>,
     orders: Vec<(u64, u64, i32)>,
-    lineitem: Vec<(u64, i64)>,
+    lineitem: Vec<FactRow>,
+    part: Vec<(u64, i32)>,
+    supplier: Vec<(u64, i32)>,
+    /// Seed for sampling strategy assignments inside the property.
+    assign_seed: u64,
 }
 
-fn gen_tri(g: &mut bloomjoin::testkit::Gen) -> TriCase {
+fn gen_star(g: &mut bloomjoin::testkit::Gen) -> StarCase {
     let cust_space = 1 + g.u64_below(40);
     let order_space = 1 + g.u64_below(120);
+    let part_space = 1 + g.u64_below(30);
+    let supp_space = 1 + g.u64_below(15);
     let n_cust = g.size;
     let n_orders = g.size * 2;
-    let n_lines = g.size * 6;
-    TriCase {
+    let n_lines = g.size * 5;
+    StarCase {
         customer: (0..n_cust)
             .map(|_| (g.rng.below(cust_space), g.rng.next_u32() as i32 % 25))
             .collect(),
@@ -225,46 +236,76 @@ fn gen_tri(g: &mut bloomjoin::testkit::Gen) -> TriCase {
             })
             .collect(),
         lineitem: (0..n_lines)
-            .map(|_| (g.rng.below(order_space), g.rng.next_u64() as i64))
+            .map(|_| FactRow {
+                orderkey: g.rng.below(order_space),
+                partkey: g.rng.below(part_space),
+                suppkey: g.rng.below(supp_space),
+                price_cents: g.rng.next_u64() as i64,
+            })
             .collect(),
+        part: (0..g.size / 2 + 1)
+            .map(|_| (g.rng.below(part_space), g.rng.next_u32() as i32 % 25))
+            .collect(),
+        supplier: (0..g.size / 3 + 1)
+            .map(|_| (g.rng.below(supp_space), g.rng.next_u32() as i32 % 25))
+            .collect(),
+        assign_seed: g.rng.next_u64(),
     }
 }
 
-fn tri_inputs(case: &TriCase) -> PlanInputs {
+fn star_inputs(case: &StarCase) -> PlanInputs {
     PlanInputs {
         customer: PartitionedTable::from_rows(case.customer.clone(), 3),
         orders: PartitionedTable::from_rows(case.orders.clone(), 4),
         lineitem: PartitionedTable::from_rows(case.lineitem.clone(), 5),
+        part: PartitionedTable::from_rows(case.part.clone(), 2),
+        supplier: PartitionedTable::from_rows(case.supplier.clone(), 2),
     }
 }
 
 /// The engine's shared reference oracle (exact multiset semantics,
 /// independent of any strategy code path).
-fn oracle3(case: &TriCase) -> Vec<PlanRow> {
-    nested_loop_oracle(&case.customer, &case.orders, &case.lineitem)
+fn oracle_for(case: &StarCase, dims: &[Relation]) -> Vec<PlanRow> {
+    nested_loop_oracle(&star_inputs(case), dims)
 }
 
 fn strategies() -> [EdgeStrategy; 3] {
     [EdgeStrategy::Bloom { eps: 0.05 }, EdgeStrategy::Broadcast, EdgeStrategy::SortMerge]
 }
 
+fn star_plan(dims: &[Relation], strats: &[EdgeStrategy]) -> JoinPlan {
+    JoinPlan {
+        topology: Topology::Star,
+        edges: dims
+            .iter()
+            .zip(strats)
+            .enumerate()
+            .map(|(i, (&rel, s))| PlannedEdge::forced(rel, format!("e{}", i + 1), s.clone()))
+            .collect(),
+    }
+}
+
 #[test]
 fn three_way_plans_equal_oracle_for_every_strategy_assignment() {
     let cluster = Cluster::new(ClusterConfig::local());
     let spec = PlanSpec { partitions: 4, ..Default::default() };
-    check("3-way star/chain ≡ oracle, all 2×9 assignments", 5, gen_tri, |case| {
-        let want = oracle3(case);
+    let dims3 = [Relation::Orders, Relation::Customer];
+    check("3-way star/chain ≡ oracle, all 2×9 assignments", 5, gen_star, |case| {
+        let want = oracle_for(case, &dims3);
         for topology in [Topology::Star, Topology::Chain] {
             for s1 in strategies() {
                 for s2 in strategies() {
-                    let plan = JoinPlan {
-                        topology,
-                        edges: vec![
-                            PlannedEdge::forced("e1", s1.clone()),
-                            PlannedEdge::forced("e2", s2.clone()),
-                        ],
+                    let plan = match topology {
+                        Topology::Star => star_plan(&dims3, &[s1.clone(), s2.clone()]),
+                        Topology::Chain => JoinPlan {
+                            topology,
+                            edges: vec![
+                                PlannedEdge::forced(Relation::Customer, "e1", s1.clone()),
+                                PlannedEdge::forced(Relation::Orders, "e2", s2.clone()),
+                            ],
+                        },
                     };
-                    let mut got = execute(&cluster, &spec, &plan, tri_inputs(case)).rows;
+                    let mut got = execute(&cluster, &spec, &plan, star_inputs(case)).rows;
                     got.sort_unstable();
                     if got != want {
                         return Err(format!(
@@ -284,20 +325,93 @@ fn three_way_plans_equal_oracle_for_every_strategy_assignment() {
 }
 
 #[test]
-fn three_way_bloom_filters_lose_nothing_at_any_eps() {
+fn four_way_star_plans_equal_oracle_under_sampled_assignments() {
     let cluster = Cluster::new(ClusterConfig::local());
     let spec = PlanSpec { partitions: 4, ..Default::default() };
-    check("3-way all-bloom ≡ oracle across ε", 6, gen_tri, |case| {
-        let want = oracle3(case);
-        for eps in [0.001, 0.5] {
-            let plan = JoinPlan {
-                topology: Topology::Star,
-                edges: vec![
-                    PlannedEdge::forced("e1", EdgeStrategy::Bloom { eps }),
-                    PlannedEdge::forced("e2", EdgeStrategy::Bloom { eps }),
-                ],
-            };
-            let mut got = execute(&cluster, &spec, &plan, tri_inputs(case)).rows;
+    let dims4 = [Relation::Orders, Relation::Part, Relation::Supplier];
+    check("4-way star ≡ oracle, sampled strategy assignments", 4, gen_star, |case| {
+        let want = oracle_for(case, &dims4);
+        let menu = strategies();
+        let mut arng = Rng::new(case.assign_seed);
+        for sample in 0..6 {
+            // sample 0 forces one of each strategy; the rest are random
+            let strats: Vec<EdgeStrategy> = (0..dims4.len())
+                .map(|j| {
+                    if sample == 0 {
+                        menu[j % menu.len()].clone()
+                    } else {
+                        menu[arng.below(menu.len() as u64) as usize].clone()
+                    }
+                })
+                .collect();
+            let plan = star_plan(&dims4, &strats);
+            let mut got = execute(&cluster, &spec, &plan, star_inputs(case)).rows;
+            got.sort_unstable();
+            if got != want {
+                let labels: Vec<String> = strats.iter().map(|s| s.label()).collect();
+                return Err(format!(
+                    "assignment {labels:?}: got {} rows, want {}",
+                    got.len(),
+                    want.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn five_way_star_plans_equal_oracle_across_orders_and_assignments() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let spec = PlanSpec { partitions: 4, ..Default::default() };
+    // every probe order is legal as long as ORDERS precedes CUSTOMER
+    let orderings: [[Relation; 4]; 3] = [
+        [Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier],
+        [Relation::Part, Relation::Orders, Relation::Supplier, Relation::Customer],
+        [Relation::Supplier, Relation::Orders, Relation::Customer, Relation::Part],
+    ];
+    check("5-way star ≡ oracle across edge orders + assignments", 3, gen_star, |case| {
+        let want = oracle_for(case, &orderings[0]);
+        let menu = strategies();
+        let mut arng = Rng::new(case.assign_seed);
+        for dims in &orderings {
+            // the oracle itself is order-invariant
+            let reordered = oracle_for(case, dims);
+            if reordered != want {
+                return Err("oracle not order-invariant".into());
+            }
+            for _sample in 0..3 {
+                let strats: Vec<EdgeStrategy> = (0..dims.len())
+                    .map(|_| menu[arng.below(menu.len() as u64) as usize].clone())
+                    .collect();
+                let plan = star_plan(dims, &strats);
+                let mut got = execute(&cluster, &spec, &plan, star_inputs(case)).rows;
+                got.sort_unstable();
+                if got != want {
+                    let labels: Vec<String> = strats.iter().map(|s| s.label()).collect();
+                    return Err(format!(
+                        "{dims:?} with {labels:?}: got {} rows, want {}",
+                        got.len(),
+                        want.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wide_star_bloom_filters_lose_nothing_at_any_eps() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let spec = PlanSpec { partitions: 4, ..Default::default() };
+    let dims = [Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier];
+    check("5-way all-bloom ≡ oracle across pathological ε", 4, gen_star, |case| {
+        let want = oracle_for(case, &dims);
+        for eps in [1e-6, 0.05, 0.5] {
+            let strats = vec![EdgeStrategy::Bloom { eps }; dims.len()];
+            let plan = star_plan(&dims, &strats);
+            let mut got = execute(&cluster, &spec, &plan, star_inputs(case)).rows;
             got.sort_unstable();
             if got != want {
                 return Err(format!("eps {eps}: {} vs {}", got.len(), want.len()));
