@@ -99,3 +99,14 @@ def splitmix64_py(x: int) -> int:
 
 def fold64_py(key: int) -> int:
     return splitmix64_py(key) >> 32
+
+
+def wide64_py(key: int) -> int:
+    """Packed 64-bit hash word for quotienting structures: the double-hash
+    pair of the folded key with ``h1`` in the high word and the odd ``h2``
+    low.  Mirrors ``wide64`` in ``rust/src/bloom/hash.rs`` (used by the
+    Pagh filter), pinned by ``tests/test_golden.py::GOLDEN_WIDE64``."""
+    kf = fold64_py(key)
+    h1 = _mix32_py((kf ^ C1) & 0xFFFFFFFF)
+    h2 = _mix32_py((kf ^ C2) & 0xFFFFFFFF) | 1
+    return (h1 << 32) | h2

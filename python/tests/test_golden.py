@@ -8,7 +8,7 @@ with::
 """
 from __future__ import annotations
 
-from compile.kernels.hashing import fold64_py, probe_positions_py
+from compile.kernels.hashing import fold64_py, probe_positions_py, wide64_py
 
 # (key_u32, m_bits, k) -> positions
 GOLDEN_POSITIONS = {
@@ -30,6 +30,19 @@ GOLDEN_FOLD64 = {
 }
 
 
+# key_u64 -> wide64(key): (h1 << 32) | (h2 | 1) of the folded key — the
+# shared quotienting hash (Pagh filter); rust/src/bloom/hash.rs pins the
+# same table in golden_wide64_match_python.
+GOLDEN_WIDE64 = {
+    0: 0x6E7B9CBBFC9FF8FF,
+    1: 0xDC725748FE6AB465,
+    42: 0x2119E8C3B6ED9779,
+    6000000: 0xA76AAA86A693F51F,
+    0xDEADBEEF: 0xA613392890A569E1,
+    0xFFFFFFFFFFFFFFFF: 0x16F2A371CDF4283B,
+}
+
+
 def test_probe_positions_golden() -> None:
     for (key, m_bits, k), want in GOLDEN_POSITIONS.items():
         assert probe_positions_py(key, m_bits, k) == want, (key, m_bits, k)
@@ -40,8 +53,16 @@ def test_fold64_golden() -> None:
         assert fold64_py(key) == want, hex(key)
 
 
+def test_wide64_golden() -> None:
+    for key, want in GOLDEN_WIDE64.items():
+        assert wide64_py(key) == want, hex(key)
+        assert wide64_py(key) & 1 == 1, "low word must be the odd h2"
+
+
 if __name__ == "__main__":
     for (key, m_bits, k) in GOLDEN_POSITIONS:
         print((key, m_bits, k), probe_positions_py(key, m_bits, k))
     for key in GOLDEN_FOLD64:
         print(hex(key), hex(fold64_py(key)))
+    for key in GOLDEN_WIDE64:
+        print(hex(key), hex(wide64_py(key)))

@@ -1,0 +1,165 @@
+//! F7 — probe-path throughput trajectory: scalar `contains_key` vs the
+//! batched `probe_batch` selection-vector probe vs batched + parallel
+//! per-partition execution, in keys/sec over the 5-relation star's
+//! per-edge probe workloads (each dimension's optimal filter probed by
+//! the fact stream's FK column, exactly the executor's hot path).
+//!
+//! Reports a per-edge table plus the aggregate, appends the JSON rows
+//! under `target/bench_results/`, and writes the repo's first
+//! `BENCH_*.json` trajectory point (aggregate keys/sec per mode + the
+//! thread count) so successive PRs can chart the executor's speed.
+//!
+//! Invariant asserted here and in CI smoke: the batched probe never
+//! loses to the scalar loop, and neither does batched + parallel (smoke
+//! shapes get a noise allowance — sub-second runs on shared runners).
+
+use std::sync::Arc;
+
+use bloomjoin::bench_support::{measure, smoke, smoke_or, trajectory_point, Report};
+use bloomjoin::bloom::{BloomFilter, KeyFilter, SelectionVector};
+use bloomjoin::cluster::pool::{configured_workers, ThreadPool};
+use bloomjoin::plan::{prepare, PlanSpec, Relation};
+use bloomjoin::util::Json;
+
+struct EdgeWorkload {
+    name: &'static str,
+    /// Arc so the parallel arm can share the column with pool tasks.
+    probe: Arc<Vec<u64>>,
+    build: Vec<u64>,
+}
+
+fn main() {
+    let sf = smoke_or(0.01, 0.05);
+    let spec = PlanSpec {
+        sf,
+        dims: vec![Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier],
+        ..Default::default()
+    };
+    let inputs = prepare(&spec);
+
+    let edges = vec![
+        EdgeWorkload {
+            name: "lineitem⋈orders",
+            probe: Arc::new(inputs.lineitem.iter().map(|f| f.orderkey).collect()),
+            build: inputs.orders.iter().map(|(ok, _, _)| *ok).collect(),
+        },
+        EdgeWorkload {
+            name: "orders⋈customer",
+            probe: Arc::new(inputs.orders.iter().map(|(_, ck, _)| *ck).collect()),
+            build: inputs.customer.iter().map(|(k, _)| *k).collect(),
+        },
+        EdgeWorkload {
+            name: "lineitem⋈part",
+            probe: Arc::new(inputs.lineitem.iter().map(|f| f.partkey).collect()),
+            build: inputs.part.iter().map(|(k, _)| *k).collect(),
+        },
+        EdgeWorkload {
+            name: "lineitem⋈supplier",
+            probe: Arc::new(inputs.lineitem.iter().map(|f| f.suppkey).collect()),
+            build: inputs.supplier.iter().map(|(k, _)| *k).collect(),
+        },
+    ];
+
+    let workers = configured_workers();
+    let pool = ThreadPool::new(workers);
+    let (warmup, iters) = smoke_or((1, 3), (2, 7));
+
+    let mut report = Report::new(
+        "fig7_throughput",
+        &["edge", "keys", "scalar_kps", "batched_kps", "parallel_kps"],
+    );
+    // best-iteration seconds per mode, summed over edges
+    let (mut t_scalar, mut t_batched, mut t_parallel) = (0.0f64, 0.0f64, 0.0f64);
+    let mut total_keys = 0u64;
+
+    for edge in &edges {
+        let mut filter = BloomFilter::with_optimal(edge.build.len().max(1) as u64, 0.01);
+        for &k in &edge.build {
+            filter.insert(k);
+        }
+        let filter = Arc::new(filter);
+        let n = edge.probe.len().max(1);
+
+        let s_scalar = measure(warmup, iters, || {
+            edge.probe.iter().filter(|&&k| filter.contains_key(k)).count()
+        });
+
+        let mut sel = SelectionVector::with_capacity(n);
+        let s_batched = measure(warmup, iters, || {
+            filter.probe_batch(&edge.probe, &mut sel);
+            sel.len()
+        });
+
+        // parallel: the executor's own chunk-splitting + task-order
+        // concatenation (`ThreadPool::run_chunked`), probing subranges
+        // of the shared key column
+        let s_parallel = measure(warmup, iters, || {
+            let filter = Arc::clone(&filter);
+            let probe = Arc::clone(&edge.probe);
+            pool.run_chunked(probe.len(), move |range| {
+                let mut sel = SelectionVector::with_capacity(range.len());
+                filter.probe_batch(&probe[range], &mut sel);
+                vec![sel.len()]
+            })
+            .into_iter()
+            .sum::<usize>()
+        });
+
+        let kps = |t: f64| n as f64 / t.max(1e-12);
+        report.row(vec![
+            edge.name.to_string(),
+            n.to_string(),
+            format!("{:.0}", kps(s_scalar.min)),
+            format!("{:.0}", kps(s_batched.min)),
+            format!("{:.0}", kps(s_parallel.min)),
+        ]);
+        total_keys += n as u64;
+        t_scalar += s_scalar.min;
+        t_batched += s_batched.min;
+        t_parallel += s_parallel.min;
+    }
+
+    let scalar_kps = total_keys as f64 / t_scalar.max(1e-12);
+    let batched_kps = total_keys as f64 / t_batched.max(1e-12);
+    let parallel_kps = total_keys as f64 / t_parallel.max(1e-12);
+    report.row(vec![
+        "TOTAL".to_string(),
+        total_keys.to_string(),
+        format!("{scalar_kps:.0}"),
+        format!("{batched_kps:.0}"),
+        format!("{parallel_kps:.0}"),
+    ]);
+    report.finish();
+    println!(
+        "threads: {workers}   batched speedup: {:.2}x   batched+parallel speedup: {:.2}x",
+        batched_kps / scalar_kps,
+        parallel_kps / scalar_kps
+    );
+
+    trajectory_point(
+        "fig7_throughput",
+        Json::obj([
+            ("bench", Json::str("fig7_throughput")),
+            ("sf", Json::num(sf)),
+            ("threads", Json::num(workers as f64)),
+            ("total_keys", Json::num(total_keys as f64)),
+            ("scalar_keys_per_s", Json::num(scalar_kps)),
+            ("batched_keys_per_s", Json::num(batched_kps)),
+            ("parallel_keys_per_s", Json::num(parallel_kps)),
+        ]),
+    );
+
+    // the acceptance claim: the vectorized probe never loses to the
+    // scalar loop (smoke shapes run sub-second on shared CI runners, so
+    // allow measurement noise there; full shapes must hold outright)
+    let slack = if smoke() { 0.70 } else { 0.97 };
+    assert!(
+        batched_kps >= scalar_kps * slack,
+        "batched probe ({batched_kps:.0} keys/s) must not lose to scalar ({scalar_kps:.0} keys/s)"
+    );
+    assert!(
+        parallel_kps >= scalar_kps * slack,
+        "batched+parallel ({parallel_kps:.0} keys/s) must not lose to scalar \
+         ({scalar_kps:.0} keys/s)"
+    );
+}

@@ -140,6 +140,19 @@ impl Report {
     }
 }
 
+/// Write a `BENCH_<name>.json` trajectory point under
+/// `target/bench_results/` — the one-object-per-PR series tracking
+/// headline throughput numbers across the repo's history (CI uploads the
+/// directory as a workflow artifact).
+pub fn trajectory_point(name: &str, payload: Json) {
+    let dir = std::path::Path::new("target/bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("BENCH_{name}.json"));
+    if std::fs::write(&path, payload.to_string()).is_ok() {
+        println!("(trajectory: {})", path.display());
+    }
+}
+
 /// Format seconds for bench tables.
 pub fn secs(s: f64) -> String {
     duration(std::time::Duration::from_secs_f64(s.max(0.0)))

@@ -1,0 +1,149 @@
+//! Batched membership probing: the selection-vector half of the
+//! vectorized probe pipeline.
+//!
+//! The scalar probe path (`contains_key` in a per-row loop) recomputes
+//! the hash pair, branches, and bumps an output vector one key at a
+//! time.  The batched path hashes a whole chunk of [`PROBE_CHUNK`] keys
+//! up front, keeps the chunk's survivors in one `u64` bitmask while the
+//! `k` bit tests run position-major over the chunk, and only then spills
+//! the surviving **row indices** into a reusable [`SelectionVector`] —
+//! no per-key allocation, no cloned rows.  Downstream operators gather
+//! through the selection instead of materialising survivor rows, which
+//! is what makes the plan executor's hot path allocation-light.
+//!
+//! Every [`super::KeyFilter`] gets a default scalar `probe_batch`; the
+//! three concrete filters override it with the chunked implementation
+//! (see `filter.rs`, `blocked.rs`, `pagh.rs`).  The equivalence property
+//! — `probe_batch` selects exactly the keys `contains` accepts — is
+//! pinned by `rust/tests/probe_batch_equivalence.rs`.
+
+/// Keys hashed per chunk: one `u64` survivor mask covers the chunk, so
+/// the inner bit-test loop is branch-light and the mask early-exits as
+/// soon as a chunk has no survivors left.
+pub const PROBE_CHUNK: usize = 64;
+
+/// Indices of surviving rows, in ascending order — the unit every stage
+/// of the vectorized pipeline passes downstream instead of cloned rows.
+///
+/// A probe fills it with the positions (into the probed key slice) that
+/// *may* be members; the executor composes selections by gathering, so
+/// repeated indices (one-to-many joins) are legal there even though a
+/// filter probe never produces them.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SelectionVector {
+    idx: Vec<u32>,
+}
+
+impl SelectionVector {
+    pub fn new() -> Self {
+        SelectionVector { idx: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        SelectionVector { idx: Vec::with_capacity(n) }
+    }
+
+    /// Reset to empty, keeping the allocation (probes reuse one buffer
+    /// across partitions).
+    pub fn clear(&mut self) {
+        self.idx.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, i: u32) {
+        self.idx.push(i);
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// Keep only the selected rows of an owned vector, in order — the
+    /// zero-copy way to apply a probe result to the rows it was probed
+    /// from.  Requires strictly ascending indices (what probes produce).
+    pub fn gather_owned<T>(&self, rows: Vec<T>) -> Vec<T> {
+        debug_assert!(self.idx.windows(2).all(|w| w[0] < w[1]), "selection not ascending");
+        let mut out = Vec::with_capacity(self.idx.len());
+        let mut want = self.idx.iter().copied();
+        let mut next = want.next();
+        for (i, row) in rows.into_iter().enumerate() {
+            if next == Some(i as u32) {
+                out.push(row);
+                next = want.next();
+            }
+        }
+        out
+    }
+}
+
+/// Survivor mask with the low `len` bits set (a partial trailing chunk
+/// starts with only its real lanes live).
+#[inline]
+pub(crate) fn live_mask(len: usize) -> u64 {
+    if len >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << len) - 1
+    }
+}
+
+/// Spill a chunk's survivor mask into the selection as absolute indices.
+#[inline]
+pub(crate) fn push_live(sel: &mut SelectionVector, chunk_no: usize, mut live: u64) {
+    let base = (chunk_no * PROBE_CHUNK) as u32;
+    while live != 0 {
+        let i = live.trailing_zeros();
+        live &= live - 1;
+        sel.push(base + i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_basics() {
+        let mut s = SelectionVector::new();
+        assert!(s.is_empty());
+        s.push(0);
+        s.push(5);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.indices(), &[0, 5]);
+        s.clear();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn gather_owned_keeps_selected_rows_in_order() {
+        let mut s = SelectionVector::new();
+        for i in [1u32, 3, 4] {
+            s.push(i);
+        }
+        assert_eq!(s.gather_owned(vec!["a", "b", "c", "d", "e"]), vec!["b", "d", "e"]);
+        let empty = SelectionVector::new();
+        assert!(empty.gather_owned(vec![1, 2, 3]).is_empty());
+    }
+
+    #[test]
+    fn live_mask_shapes() {
+        assert_eq!(live_mask(0), 0);
+        assert_eq!(live_mask(3), 0b111);
+        assert_eq!(live_mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn push_live_offsets_by_chunk() {
+        let mut s = SelectionVector::new();
+        push_live(&mut s, 1, 0b101);
+        assert_eq!(s.indices(), &[64, 66]);
+    }
+}

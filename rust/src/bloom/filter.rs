@@ -2,6 +2,7 @@
 //! OR-merge, and a fast native probe (the XLA-kernel probe path lives in
 //! `runtime::probe`; both share `bloom::hash`).
 
+use super::batch::{live_mask, push_live, SelectionVector, PROBE_CHUNK};
 use super::hash::{HashPair, K_MAX};
 use super::KeyFilter;
 
@@ -191,6 +192,36 @@ impl KeyFilter for BloomFilter {
     fn size_bits(&self) -> u64 {
         self.params.m_bits
     }
+
+    /// Chunked probe: hash [`PROBE_CHUNK`] keys up front, then run the
+    /// `k` bit tests position-major over the chunk with one survivor
+    /// bitmask — the mask early-exits dead lanes and whole dead chunks,
+    /// and the selection is filled without any per-key allocation.
+    fn probe_batch(&self, keys: &[u64], sel: &mut SelectionVector) {
+        sel.clear();
+        let mut hp = [HashPair { h1: 0, h2: 1 }; PROBE_CHUNK];
+        for (chunk_no, chunk) in keys.chunks(PROBE_CHUNK).enumerate() {
+            for (slot, &key) in hp.iter_mut().zip(chunk) {
+                *slot = HashPair::of_key(key);
+            }
+            let mut live = live_mask(chunk.len());
+            for j in 0..self.params.k {
+                if live == 0 {
+                    break;
+                }
+                let mut m = live;
+                while m != 0 {
+                    let i = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let p = hp[i].position(j, self.mask);
+                    if self.words[(p >> 5) as usize] & (1 << (p & 31)) == 0 {
+                        live &= !(1u64 << i);
+                    }
+                }
+            }
+            push_live(sel, chunk_no, live);
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -348,6 +379,26 @@ mod tests {
         let r = f.fill_ratio();
         // pow-2 rounding over-allocates, so fill <= 0.5; must be substantial
         assert!(r > 0.15 && r <= 0.55, "fill {r}");
+    }
+
+    #[test]
+    fn probe_batch_matches_scalar_including_partial_chunk() {
+        let mut f = BloomFilter::with_optimal(5_000, 0.02);
+        let mut rng = Rng::new(9);
+        for _ in 0..5_000 {
+            f.insert(rng.next_u64());
+        }
+        // 1_037 is deliberately not a multiple of PROBE_CHUNK
+        let keys: Vec<u64> = (0..1_037).map(|_| rng.next_u64()).collect();
+        let mut sel = SelectionVector::new();
+        f.probe_batch(&keys, &mut sel);
+        let want: Vec<u32> = keys
+            .iter()
+            .enumerate()
+            .filter(|(_, &k)| f.contains_key(k))
+            .map(|(i, _)| i as u32)
+            .collect();
+        assert_eq!(sel.indices(), want.as_slice());
     }
 
     #[test]

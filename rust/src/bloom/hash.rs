@@ -62,6 +62,17 @@ impl HashPair {
     }
 }
 
+/// The packed 64-bit hash word for quotienting structures
+/// ([`crate::bloom::pagh`]): the double-hash pair with `h1` in the high
+/// word and the odd `h2` low.  Same algebra as the kernels (mirrored by
+/// `wide64_py` in `python/compile/kernels/hashing.py`), pinned by the
+/// golden vectors below — one hash source of truth across every filter.
+#[inline(always)]
+pub fn wide64(key: u64) -> u64 {
+    let hp = HashPair::of_key(key);
+    ((hp.h1 as u64) << 32) | hp.h2 as u64
+}
+
 /// All `k` probe positions for a folded key (test/reference helper).
 pub fn probe_positions(kf: u32, m_bits: u64, k: usize) -> Vec<u32> {
     debug_assert!(m_bits.is_power_of_two());
@@ -100,6 +111,28 @@ mod tests {
         assert_eq!(fold64(1), 0x910A_2DEC);
         assert_eq!(fold64(6_000_000), 0x810B_E29C);
         assert_eq!(fold64(u64::MAX), 0xE4D9_7177);
+    }
+
+    /// Mirrors python/tests/test_golden.py::GOLDEN_WIDE64 exactly.
+    #[test]
+    fn golden_wide64_match_python() {
+        assert_eq!(wide64(0), 0x6E7B_9CBB_FC9F_F8FF);
+        assert_eq!(wide64(1), 0xDC72_5748_FE6A_B465);
+        assert_eq!(wide64(42), 0x2119_E8C3_B6ED_9779);
+        assert_eq!(wide64(6_000_000), 0xA76A_AA86_A693_F51F);
+        assert_eq!(wide64(0xDEAD_BEEF), 0xA613_3928_90A5_69E1);
+        assert_eq!(wide64(u64::MAX), 0x16F2_A371_CDF4_283B);
+    }
+
+    #[test]
+    fn wide64_packs_the_hash_pair() {
+        for key in [0u64, 7, 0xDEAD_BEEF, u64::MAX] {
+            let hp = HashPair::of_key(key);
+            let w = wide64(key);
+            assert_eq!((w >> 32) as u32, hp.h1);
+            assert_eq!(w as u32, hp.h2);
+            assert_eq!(w & 1, 1, "low word is the odd h2");
+        }
     }
 
     #[test]

@@ -9,19 +9,42 @@
 //! * [`pagh`] — a compact single-hash-function filter after Pagh, Pagh &
 //!   Rao 2005, the "possible optimisation we did not explore" the paper
 //!   cites (space factor ~1 instead of 1.44).
+//! * [`batch`] — the batched probe API ([`SelectionVector`] +
+//!   `probe_batch`): chunk-at-a-time membership tests that feed the
+//!   vectorized plan executor instead of per-key `contains_key` loops.
 
+pub mod batch;
 pub mod blocked;
 pub mod filter;
 pub mod hash;
 pub mod pagh;
 
+pub use batch::{SelectionVector, PROBE_CHUNK};
+pub use blocked::BlockedBloomFilter;
 pub use filter::{BloomFilter, BloomParams};
-pub use hash::{fold64, probe_positions, HashPair};
+pub use hash::{fold64, probe_positions, wide64, HashPair};
+pub use pagh::PaghFilter;
 
 /// Common probe interface so joins and benches can swap filter kinds.
 pub trait KeyFilter {
     /// May return false positives, never false negatives.
     fn contains(&self, key: u64) -> bool;
+
     /// Size of the structure in bits (for the cost model / metrics).
     fn size_bits(&self) -> u64;
+
+    /// Batched membership: overwrite `sel` with the (ascending) indices
+    /// of the keys that may be members.  The default is the scalar loop;
+    /// every concrete filter overrides it with a chunked implementation
+    /// that hashes [`PROBE_CHUNK`] keys up front and tests positions
+    /// chunk-at-a-time.  Must select exactly the keys [`Self::contains`]
+    /// accepts (property-tested in `rust/tests/probe_batch_equivalence.rs`).
+    fn probe_batch(&self, keys: &[u64], sel: &mut SelectionVector) {
+        sel.clear();
+        for (i, &k) in keys.iter().enumerate() {
+            if self.contains(k) {
+                sel.push(i as u32);
+            }
+        }
+    }
 }

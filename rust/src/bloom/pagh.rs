@@ -11,7 +11,8 @@
 //! (bucket binary search instead of k bit tests).  Like a Bloom filter it
 //! has one-sided error: false positives only.
 
-use super::hash::{fold64, mix32};
+use super::batch::{SelectionVector, PROBE_CHUNK};
+use super::hash::wide64;
 use super::KeyFilter;
 
 #[derive(Clone, Debug)]
@@ -44,7 +45,7 @@ impl PaghFilter {
         let mut slots: Vec<(u32, u16)> = keys
             .iter()
             .map(|&k| {
-                let h = hash64(k);
+                let h = wide64(k);
                 let bucket = (h >> (64 - q_bits)) as u32;
                 let rem = (h >> (64 - q_bits - r_bits as u32)) as u16 & r_mask(r_bits);
                 (bucket, rem)
@@ -65,7 +66,13 @@ impl PaghFilter {
     }
 
     pub fn contains_key(&self, key: u64) -> bool {
-        let h = hash64(key);
+        self.lookup(wide64(key))
+    }
+
+    /// Bucket + remainder lookup for an already-computed [`wide64`] hash
+    /// (shared by the scalar and the batched probe paths).
+    #[inline]
+    fn lookup(&self, h: u64) -> bool {
         let bucket = (h >> (64 - self.q_bits)) as usize;
         let rem = (h >> (64 - self.q_bits - self.r_bits)) as u16 & r_mask(self.r_bits);
         let lo = self.offsets[bucket] as usize;
@@ -93,13 +100,6 @@ fn r_mask(r_bits: u32) -> u16 {
     }
 }
 
-#[inline]
-fn hash64(key: u64) -> u64 {
-    // two independent 32-bit mixes concatenated — plenty for q+r <= 48
-    let kf = fold64(key);
-    ((mix32(kf ^ 0x9E37_79B9) as u64) << 32) | mix32(kf ^ 0x85EB_CA77) as u64
-}
-
 impl KeyFilter for PaghFilter {
     fn contains(&self, key: u64) -> bool {
         self.contains_key(key)
@@ -107,6 +107,25 @@ impl KeyFilter for PaghFilter {
 
     fn size_bits(&self) -> u64 {
         self.storage_bits()
+    }
+
+    /// Chunked probe: [`wide64`]-hash a whole chunk up front, then run
+    /// the bucket lookups over the hashed chunk — the hash loop and the
+    /// (cache-missing) bucket walk stop fighting over the same registers.
+    fn probe_batch(&self, keys: &[u64], sel: &mut SelectionVector) {
+        sel.clear();
+        let mut hashes = [0u64; PROBE_CHUNK];
+        for (chunk_no, chunk) in keys.chunks(PROBE_CHUNK).enumerate() {
+            for (slot, &key) in hashes.iter_mut().zip(chunk) {
+                *slot = wide64(key);
+            }
+            let base = (chunk_no * PROBE_CHUNK) as u32;
+            for (i, &h) in hashes[..chunk.len()].iter().enumerate() {
+                if self.lookup(h) {
+                    sel.push(base + i as u32);
+                }
+            }
+        }
     }
 }
 
@@ -149,6 +168,24 @@ mod tests {
             pagh_bits_per_key < bloom_bits_per_key,
             "pagh {pagh_bits_per_key} vs bloom {bloom_bits_per_key}"
         );
+    }
+
+    #[test]
+    fn probe_batch_matches_scalar() {
+        let mut rng = Rng::new(24);
+        let keys: Vec<u64> = (0..6_000).map(|_| rng.next_u64()).collect();
+        let f = PaghFilter::build(&keys, 0.01);
+        let probe: Vec<u64> =
+            keys.iter().copied().take(300).chain((0..700).map(|_| rng.next_u64())).collect();
+        let mut sel = SelectionVector::new();
+        f.probe_batch(&probe, &mut sel);
+        let want: Vec<u32> = probe
+            .iter()
+            .enumerate()
+            .filter(|(_, &k)| f.contains_key(k))
+            .map(|(i, _)| i as u32)
+            .collect();
+        assert_eq!(sel.indices(), want.as_slice());
     }
 
     #[test]

@@ -38,13 +38,27 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Worker count comes from `BLOOMJOIN_THREADS` when set, otherwise
+    /// the machine's available parallelism; either way it is capped at
+    /// the simulated slot count (more real threads than simulated slots
+    /// cannot change any stage's simulated time).
     pub fn new(cfg: ClusterConfig) -> Self {
-        let threads = cfg.total_slots().min(
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) * 2,
-        );
+        let workers = pool::configured_workers();
+        Self::with_workers(cfg, workers)
+    }
+
+    /// A cluster with an explicit worker count — tests pin 1 vs N to
+    /// prove the executors are thread-count invariant.
+    pub fn with_workers(cfg: ClusterConfig, workers: usize) -> Self {
+        let threads = cfg.total_slots().min(workers).max(1);
         let block_managers =
             (0..cfg.n_nodes).map(|n| BlockManager::new(n, cfg.executor_mem_bytes)).collect();
-        Cluster { pool: ThreadPool::new(threads.max(1)), cfg, block_managers }
+        Cluster { pool: ThreadPool::new(threads), cfg, block_managers }
+    }
+
+    /// Real worker threads backing per-partition build/probe execution.
+    pub fn workers(&self) -> usize {
+        self.pool.size()
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -86,6 +100,17 @@ mod tests {
     fn cluster_builds_with_defaults() {
         let c = Cluster::new(ClusterConfig::default());
         assert!(c.config().total_slots() >= 1);
+        assert!(c.workers() >= 1);
+    }
+
+    #[test]
+    fn explicit_workers_capped_at_slots() {
+        let cfg = ClusterConfig::local();
+        let slots = cfg.total_slots();
+        let c = Cluster::with_workers(cfg.clone(), slots + 100);
+        assert_eq!(c.workers(), slots);
+        let c1 = Cluster::with_workers(cfg, 1);
+        assert_eq!(c1.workers(), 1);
     }
 
     #[test]

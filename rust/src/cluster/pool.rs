@@ -11,6 +11,21 @@ use std::time::Instant;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Worker count for per-partition build/probe work: the
+/// `BLOOMJOIN_THREADS` env var when set to a positive integer, otherwise
+/// the machine's available parallelism.
+pub fn configured_workers() -> usize {
+    workers_from(std::env::var("BLOOMJOIN_THREADS").ok().as_deref())
+}
+
+/// Parse rule behind [`configured_workers`] (pure, unit-testable).
+pub fn workers_from(env: Option<&str>) -> usize {
+    match env.map(str::trim).and_then(|s| s.parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
 pub struct ThreadPool {
     workers: Vec<JoinHandle<()>>,
     tx: Option<mpsc::Sender<Job>>,
@@ -69,6 +84,33 @@ impl ThreadPool {
         }
         slots.into_iter().map(|s| s.expect("all tasks reported")).collect()
     }
+
+    /// Run `f` over `0..n` split into ~4 chunks per worker, concatenating
+    /// the chunk outputs **in chunk order** — the result is identical for
+    /// any worker count, which is what keeps the vectorized executor's
+    /// row order (and therefore its ledgers) reproducible under
+    /// `BLOOMJOIN_THREADS`.
+    pub fn run_chunked<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(std::ops::Range<usize>) -> Vec<T> + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let n_chunks = (self.size() * 4).min(n).max(1);
+        let chunk = n.div_ceil(n_chunks);
+        let f = Arc::new(f);
+        let tasks: Vec<_> = (0..n)
+            .step_by(chunk)
+            .map(|start| {
+                let f = Arc::clone(&f);
+                let end = (start + chunk).min(n);
+                move || f(start..end)
+            })
+            .collect();
+        self.run_tasks(tasks).into_iter().flat_map(|(v, _)| v).collect()
+    }
 }
 
 impl Drop for ThreadPool {
@@ -98,6 +140,30 @@ mod tests {
         let pool = ThreadPool::new(2);
         let results: Vec<((), f64)> = pool.run_tasks(Vec::<fn()>::new());
         assert!(results.is_empty());
+    }
+
+    #[test]
+    fn workers_from_parses_override_and_defaults() {
+        assert_eq!(workers_from(Some("3")), 3);
+        assert_eq!(workers_from(Some(" 12 ")), 12);
+        let default = workers_from(None);
+        assert!(default >= 1);
+        // garbage and zero fall back to the default
+        assert_eq!(workers_from(Some("0")), default);
+        assert_eq!(workers_from(Some("lots")), default);
+        assert_eq!(workers_from(Some("")), default);
+    }
+
+    #[test]
+    fn run_chunked_is_worker_count_invariant() {
+        let want: Vec<usize> = (0..997).map(|i| i * 3).collect();
+        for workers in [1, 2, 7] {
+            let pool = ThreadPool::new(workers);
+            let got = pool.run_chunked(997, |range| range.map(|i| i * 3).collect());
+            assert_eq!(got, want, "workers={workers}");
+        }
+        let pool = ThreadPool::new(2);
+        assert!(pool.run_chunked(0, |r| r.collect::<Vec<usize>>()).is_empty());
     }
 
     #[test]

@@ -20,7 +20,7 @@
 use std::sync::Arc;
 
 use crate::approx::approx_count;
-use crate::bloom::{BloomFilter, BloomParams};
+use crate::bloom::{BloomFilter, BloomParams, KeyFilter, SelectionVector};
 use crate::cluster::shuffle::{repartition, ShuffleCodec};
 use crate::cluster::{broadcast, Cluster, Cost, Stage, Task};
 use crate::dataset::PartitionedTable;
@@ -180,10 +180,15 @@ impl BloomCascadeJoin {
                 let cpu_s = part.len() as f64 * cfg.scan_record_cost;
                 Task::new(move || {
                     let survivors = match &probe {
-                        ProbePath::Native => part
-                            .into_iter()
-                            .filter(|(k, _)| filter.contains_key(*k))
-                            .collect::<Vec<_>>(),
+                        // vectorized native path: hash a chunk of keys up
+                        // front, keep survivors as a selection vector,
+                        // materialise only the surviving rows
+                        ProbePath::Native => {
+                            let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
+                            let mut sel = SelectionVector::with_capacity(keys.len());
+                            filter.probe_batch(&keys, &mut sel);
+                            sel.gather_owned(part)
+                        }
                         ProbePath::Batch(engine) => {
                             let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
                             let mask = engine.probe(&keys, &filter);

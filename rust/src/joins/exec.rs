@@ -22,6 +22,16 @@ use super::sort_merge::sort_merge_join_partition;
 use super::{JoinedRow, Keyed, RowSize};
 use crate::dataset::PartitionedTable;
 
+/// Gather a column through a selection (survivor indices, repeats legal
+/// for one-to-many joins) — the building block of the plan executor's
+/// selection-vector stream representation: edges pass indices + appended
+/// payload columns downstream instead of cloned rows, and composing two
+/// selections is just gathering the outer one through the inner.
+#[inline]
+pub fn gather<T: Copy>(col: &[T], sel: &[u32]) -> Vec<T> {
+    sel.iter().map(|&i| col[i as usize]).collect()
+}
+
 /// Spark's `BroadcastHashJoin` (SBJ): collect + broadcast the small side,
 /// build a hash table per executor, stream the big side through it.
 pub fn broadcast_hash_join<B, S>(
@@ -184,6 +194,19 @@ mod tests {
         let big: Vec<Keyed<u64>> = (0..3_000).map(|_| (rng.below(900), rng.next_u64())).collect();
         let small: Vec<Keyed<u32>> = (0..400).map(|_| (rng.below(900), rng.next_u32())).collect();
         (PartitionedTable::from_rows(big, 5), PartitionedTable::from_rows(small, 3))
+    }
+
+    #[test]
+    fn gather_composes_selections() {
+        let col = [10u64, 20, 30, 40];
+        // one-to-many edges may select an index twice
+        let sel1 = [0u32, 2, 2, 3];
+        let stage1 = gather(&col, &sel1);
+        assert_eq!(stage1, vec![10, 30, 30, 40]);
+        // composing selections == gathering the outer through the inner
+        let sel2 = [1u32, 3];
+        let composed = gather(&sel1, &sel2);
+        assert_eq!(gather(&col, &composed), gather(&stage1, &sel2));
     }
 
     #[test]

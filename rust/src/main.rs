@@ -254,8 +254,21 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     let out = plan::execute(&cluster, &spec, &join_plan, inputs);
+    println!(
+        "probe threads: {} (set BLOOMJOIN_THREADS to override; default = available \
+         parallelism, capped at cluster slots)",
+        cluster.workers()
+    );
     for r in &out.edge_reports {
-        println!("{}: {} -> {} rows in {:.4}s", r.name, r.strategy, r.output_rows, r.sim_s);
+        println!(
+            "{}: {} -> {} rows in {:.4}s  ({} keys probed, {:.0} keys/sec)",
+            r.name,
+            r.strategy,
+            r.output_rows,
+            r.sim_s,
+            r.probe_rows,
+            r.probe_keys_per_s()
+        );
     }
     println!("\nrows: {}\n", out.rows.len());
     println!("{}", out.metrics.markdown());
@@ -385,6 +398,12 @@ COMMANDS
 
 CLUSTER OPTIONS (all commands)
   --cluster default|grid5000|small|local   --nodes N --executors E --cores C
-  --shuffle-partitions P"
+  --shuffle-partitions P
+
+ENVIRONMENT
+  BLOOMJOIN_THREADS       worker threads for parallel per-partition
+                          build/probe (default: available parallelism,
+                          capped at the cluster's slot count)
+  BLOOMJOIN_BENCH_SMOKE   =1 shrinks every bench target to CI smoke shapes"
     );
 }

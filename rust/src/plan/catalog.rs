@@ -59,12 +59,13 @@ pub struct FactRow {
     pub price_cents: i64,
 }
 
-/// Serialized bytes of one fact-stream row in flight.  The executor
-/// ships the full accumulated [`super::executor::PlanRow`] (4 u64 keys
-/// + i64 price + 4 i32 dimension attrs = 56) from the first edge on,
-/// so the planner prices every probe row at the same constant width —
-/// `PlanRow::row_bytes()` returns this value, keeping the cost model
-/// and the simulator's ground truth provably in sync.
+/// Serialized bytes of one fact-stream row in flight.  What each
+/// survivor the executor ships *stands for* is the full accumulated
+/// [`super::executor::PlanRow`] (4 u64 keys + i64 price + 4 i32
+/// dimension attrs = 56) — physically the vectorized executor passes a
+/// [`super::executor::StreamIdx`] + payload columns, but both it and
+/// `PlanRow` price `row_bytes()` at this constant width, keeping the
+/// cost model and the simulator's ground truth provably in sync.
 pub const STREAM_ROW_BYTES: f64 = 56.0;
 
 /// Generated, predicate-filtered, column-pruned inputs.  Only the

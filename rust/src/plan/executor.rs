@@ -1,15 +1,22 @@
 //! Plan execution: run the planned edges with their chosen strategies
 //! and compose the per-edge stage accounting into one ledger.
 //!
-//! A star plan is executed as a **loop over the planned edge list**: the
-//! fact stream starts as the filtered LINEITEM scan and each edge re-keys
-//! it by that dimension's FK, runs the edge's strategy, and folds the
-//! dimension's payload into the accumulated [`PlanRow`].  Every edge
-//! order and strategy assignment produces the same logical multiset (the
+//! A star plan is executed as a **loop over the planned edge list** on a
+//! vectorized fact stream: the LINEITEM scan is held as column batches
+//! ([`FactStream`]), each edge probes a gathered key column and ships
+//! only **survivor indices + appended payload columns** downstream (a
+//! selection-vector pipeline — no per-edge `Vec<PlanRow>` clones), and
+//! the final [`PlanRow`]s are assembled exactly once, in parallel chunks
+//! on the cluster's worker pool.  Per-edge [`crate::metrics::QueryMetrics`]
+//! are absorbed deterministically in edge order and every stage collects
+//! its per-partition outputs in task order, so ledgers and row order are
+//! identical for any `BLOOMJOIN_THREADS` worker count.  Every edge order
+//! and strategy assignment produces the same logical multiset (the
 //! equivalence property `rust/tests/join_equivalence.rs` checks against
 //! [`nested_loop_oracle`]); what differs is the simulated cost of the
 //! composition — which is the planner's whole subject.
 
+use crate::cluster::pool::ThreadPool;
 use crate::cluster::Cluster;
 use crate::dataset::PartitionedTable;
 use crate::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
@@ -49,6 +56,22 @@ impl RowSize for PlanRow {
     }
 }
 
+/// The physical unit a star edge ships through a join strategy: an index
+/// into the current fact stream.  Priced at the accumulated logical row
+/// width — the selection-vector representation is an engine
+/// optimisation, but what each survivor *stands for* (and what the
+/// assembled [`PlanRow`] will carry) is the full accumulated row, so the
+/// simulated byte ledgers stay equal to the planner's
+/// [`STREAM_ROW_BYTES`] pricing and to the pre-vectorized executor.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamIdx(pub u32);
+
+impl RowSize for StreamIdx {
+    fn row_bytes(&self) -> u64 {
+        STREAM_ROW_BYTES as u64
+    }
+}
+
 fn seed_row(f: &FactRow) -> PlanRow {
     PlanRow {
         orderkey: f.orderkey,
@@ -59,6 +82,119 @@ fn seed_row(f: &FactRow) -> PlanRow {
     }
 }
 
+/// Columnar fact stream: the base LINEITEM columns are written once;
+/// edges only rewrite the survivor selection (indices into the base
+/// columns, with multiplicity for one-to-many matches) and the appended
+/// dimension columns aligned to it.  `PlanRow`s materialise exactly once,
+/// in [`FactStream::assemble`].
+struct FactStream {
+    orderkey: Vec<u64>,
+    partkey: Vec<u64>,
+    suppkey: Vec<u64>,
+    price_cents: Vec<i64>,
+    /// Survivor selection into the base columns (current stream order).
+    sel: Vec<u32>,
+    /// Appended columns, aligned with `sel`.
+    custkey: Option<Vec<u64>>,
+    orderdate: Option<Vec<i32>>,
+    nationkey: Option<Vec<i32>>,
+    p_brand: Option<Vec<i32>>,
+    s_nationkey: Option<Vec<i32>>,
+}
+
+impl FactStream {
+    fn seed(lineitem: &PartitionedTable<FactRow>) -> FactStream {
+        let n = lineitem.n_rows();
+        assert!(n <= u32::MAX as usize, "fact stream indices are u32");
+        let mut s = FactStream {
+            orderkey: Vec::with_capacity(n),
+            partkey: Vec::with_capacity(n),
+            suppkey: Vec::with_capacity(n),
+            price_cents: Vec::with_capacity(n),
+            sel: (0..n as u32).collect(),
+            custkey: None,
+            orderdate: None,
+            nationkey: None,
+            p_brand: None,
+            s_nationkey: None,
+        };
+        for f in lineitem.iter() {
+            s.orderkey.push(f.orderkey);
+            s.partkey.push(f.partkey);
+            s.suppkey.push(f.suppkey);
+            s.price_cents.push(f.price_cents);
+        }
+        s
+    }
+
+    fn len(&self) -> usize {
+        self.sel.len()
+    }
+
+    /// The probe-key column for `rel`, gathered from the current stream.
+    fn keys_for(&self, rel: Relation) -> Vec<u64> {
+        match rel {
+            Relation::Orders => exec::gather(&self.orderkey, &self.sel),
+            Relation::Part => exec::gather(&self.partkey, &self.sel),
+            Relation::Supplier => exec::gather(&self.suppkey, &self.sel),
+            Relation::Customer => self
+                .custkey
+                .clone()
+                .expect("a customer edge requires an orders edge upstream"),
+            Relation::Lineitem => {
+                panic!("lineitem is the fact side of a star plan, not a dimension")
+            }
+        }
+    }
+
+    /// Contract the stream through one edge's survivor selection
+    /// (indices into the *current* stream, repeats legal): the base
+    /// selection and every appended column are gathered; base columns
+    /// never move.
+    fn contract(&mut self, inner: &[u32]) {
+        self.sel = exec::gather(&self.sel, inner);
+        if let Some(c) = &mut self.custkey {
+            *c = exec::gather(c.as_slice(), inner);
+        }
+        if let Some(c) = &mut self.orderdate {
+            *c = exec::gather(c.as_slice(), inner);
+        }
+        if let Some(c) = &mut self.nationkey {
+            *c = exec::gather(c.as_slice(), inner);
+        }
+        if let Some(c) = &mut self.p_brand {
+            *c = exec::gather(c.as_slice(), inner);
+        }
+        if let Some(c) = &mut self.s_nationkey {
+            *c = exec::gather(c.as_slice(), inner);
+        }
+    }
+
+    fn row_at(&self, j: usize) -> PlanRow {
+        let b = self.sel[j] as usize;
+        PlanRow {
+            orderkey: self.orderkey[b],
+            partkey: self.partkey[b],
+            suppkey: self.suppkey[b],
+            price_cents: self.price_cents[b],
+            custkey: self.custkey.as_ref().map_or(0, |c| c[j]),
+            orderdate: self.orderdate.as_ref().map_or(0, |c| c[j]),
+            nationkey: self.nationkey.as_ref().map_or(0, |c| c[j]),
+            p_brand: self.p_brand.as_ref().map_or(0, |c| c[j]),
+            s_nationkey: self.s_nationkey.as_ref().map_or(0, |c| c[j]),
+        }
+    }
+
+    /// Assemble the final rows — the only point `PlanRow`s materialise —
+    /// in parallel chunks on the worker pool (chunk-order concatenation
+    /// keeps the result identical for any worker count).
+    fn assemble(self, pool: &ThreadPool) -> Vec<PlanRow> {
+        let n = self.sel.len();
+        let s = std::sync::Arc::new(self);
+        pool.run_chunked(n, move |range| range.map(|j| s.row_at(j)).collect())
+    }
+}
+
 /// Measured summary of one executed edge.
 #[derive(Clone, Debug)]
 pub struct EdgeReport {
@@ -66,6 +202,38 @@ pub struct EdgeReport {
     pub strategy: String,
     pub sim_s: f64,
     pub output_rows: u64,
+    /// Stream rows probed at this edge (the big side of the edge join).
+    pub probe_rows: u64,
+    /// Real wall seconds of the edge's probe-side stage (`filter_scan`
+    /// for bloom edges, the `join` stage otherwise).
+    pub probe_wall_s: f64,
+}
+
+impl EdgeReport {
+    /// Measured probe throughput of this edge's hot path, keys/sec
+    /// (0 when the stage wall time is below timer resolution).
+    pub fn probe_keys_per_s(&self) -> f64 {
+        if self.probe_wall_s > 0.0 {
+            self.probe_rows as f64 / self.probe_wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+fn edge_report(edge: &PlannedEdge, m: &QueryMetrics, probe_rows: u64) -> EdgeReport {
+    let probe_stage = match edge.strategy {
+        EdgeStrategy::Bloom { .. } => "filter_scan",
+        _ => "join",
+    };
+    EdgeReport {
+        name: edge.name.clone(),
+        strategy: edge.strategy.label(),
+        sim_s: m.total_sim_s(),
+        output_rows: m.output_rows,
+        probe_rows,
+        probe_wall_s: m.stage(probe_stage).map_or(0.0, |s| s.wall_s),
+    }
 }
 
 /// Execution result: rows + composed metrics + per-edge breakdown.
@@ -187,33 +355,11 @@ where
     }
 }
 
-/// Re-key the fact stream by one dimension's FK.
-fn keyed_by(
-    stream: PartitionedTable<PlanRow>,
-    key: impl Fn(&PlanRow) -> u64,
-) -> PartitionedTable<Keyed<PlanRow>> {
-    stream.map_partitions(|p| p.into_iter().map(|r| (key(&r), r)).collect())
-}
-
-/// Fold each joined dimension payload back into its fact row.
-fn fold<P>(
-    joined: Vec<JoinedRow<PlanRow, P>>,
-    apply: impl Fn(&mut PlanRow, P),
-) -> Vec<PlanRow> {
-    joined
-        .into_iter()
-        .map(|(_, mut row, payload)| {
-            apply(&mut row, payload);
-            row
-        })
-        .collect()
-}
-
 /// Execute `plan` over `inputs` on `cluster`.
 ///
 /// Star plans run any number of dimension edges (a CUSTOMER edge must
-/// come after an ORDERS edge); chain plans are the fixed two-edge
-/// 3-relation tree.
+/// come after an ORDERS edge) over the vectorized [`FactStream`]; chain
+/// plans are the fixed two-edge 3-relation tree.
 pub fn execute(
     cluster: &Cluster,
     spec: &PlanSpec,
@@ -226,16 +372,10 @@ pub fn execute(
 
     let mut metrics = QueryMetrics::default();
     let mut edge_reports = Vec::with_capacity(plan.edges.len());
-    let report = |edge: &PlannedEdge, m: &QueryMetrics| EdgeReport {
-        name: edge.name.clone(),
-        strategy: edge.strategy.label(),
-        sim_s: m.total_sim_s(),
-        output_rows: m.output_rows,
-    };
 
     let rows: Vec<PlanRow> = match plan.topology {
         Topology::Star => {
-            let mut stream: Vec<PlanRow> = lineitem.iter().map(seed_row).collect();
+            let mut stream = FactStream::seed(&lineitem);
             // each relation is joined at most once per star plan, so the
             // edges take the dimension tables by value (no deep clones)
             let mut orders = Some(orders);
@@ -244,23 +384,38 @@ pub fn execute(
             let mut supplier = Some(supplier);
             let mut orders_joined = false;
             for (i, edge) in plan.edges.iter().enumerate() {
-                let table = PartitionedTable::from_rows(stream, parts);
-                let (next, m): (Vec<PlanRow>, QueryMetrics) = match edge.relation {
+                let probe_rows = stream.len() as u64;
+                // the edge's big side: the gathered key column + stream
+                // indices — survivors come back as indices + payloads
+                let big: PartitionedTable<Keyed<StreamIdx>> = PartitionedTable::from_rows(
+                    stream
+                        .keys_for(edge.relation)
+                        .into_iter()
+                        .enumerate()
+                        .map(|(j, k)| (k, StreamIdx(j as u32)))
+                        .collect(),
+                    parts,
+                );
+                let m: QueryMetrics = match edge.relation {
                     Relation::Orders => {
                         let dim = orders.take().expect("star plans join orders at most once");
                         let small: PartitionedTable<Keyed<(u64, i32)>> = dim.map_partitions(
                             |p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect(),
                         );
-                        let big = keyed_by(table, |r| r.orderkey);
-                        let (j, m) = run_edge(cluster, edge, big, small);
+                        let (joined, m) = run_edge(cluster, edge, big, small);
                         orders_joined = true;
-                        (
-                            fold(j, |r, (ck, od)| {
-                                r.custkey = ck;
-                                r.orderdate = od;
-                            }),
-                            m,
-                        )
+                        let mut inner = Vec::with_capacity(joined.len());
+                        let mut ck = Vec::with_capacity(joined.len());
+                        let mut od = Vec::with_capacity(joined.len());
+                        for (_, idx, (c, d)) in joined {
+                            inner.push(idx.0);
+                            ck.push(c);
+                            od.push(d);
+                        }
+                        stream.contract(&inner);
+                        stream.custkey = Some(ck);
+                        stream.orderdate = Some(od);
+                        m
                     }
                     Relation::Customer => {
                         assert!(
@@ -269,39 +424,60 @@ pub fn execute(
                              from ORDERS)"
                         );
                         let dim = customer.take().expect("star plans join customer at most once");
-                        let big = keyed_by(table, |r| r.custkey);
-                        let (j, m) = run_edge(cluster, edge, big, dim);
-                        (fold(j, |r, nk| r.nationkey = nk), m)
+                        let (joined, m) = run_edge(cluster, edge, big, dim);
+                        let mut inner = Vec::with_capacity(joined.len());
+                        let mut nk = Vec::with_capacity(joined.len());
+                        for (_, idx, n) in joined {
+                            inner.push(idx.0);
+                            nk.push(n);
+                        }
+                        stream.contract(&inner);
+                        stream.nationkey = Some(nk);
+                        m
                     }
                     Relation::Part => {
                         let dim = part.take().expect("star plans join part at most once");
-                        let big = keyed_by(table, |r| r.partkey);
-                        let (j, m) = run_edge(cluster, edge, big, dim);
-                        (fold(j, |r, b| r.p_brand = b), m)
+                        let (joined, m) = run_edge(cluster, edge, big, dim);
+                        let mut inner = Vec::with_capacity(joined.len());
+                        let mut brand = Vec::with_capacity(joined.len());
+                        for (_, idx, b) in joined {
+                            inner.push(idx.0);
+                            brand.push(b);
+                        }
+                        stream.contract(&inner);
+                        stream.p_brand = Some(brand);
+                        m
                     }
                     Relation::Supplier => {
                         let dim = supplier.take().expect("star plans join supplier at most once");
-                        let big = keyed_by(table, |r| r.suppkey);
-                        let (j, m) = run_edge(cluster, edge, big, dim);
-                        (fold(j, |r, nk| r.s_nationkey = nk), m)
+                        let (joined, m) = run_edge(cluster, edge, big, dim);
+                        let mut inner = Vec::with_capacity(joined.len());
+                        let mut nk = Vec::with_capacity(joined.len());
+                        for (_, idx, n) in joined {
+                            inner.push(idx.0);
+                            nk.push(n);
+                        }
+                        stream.contract(&inner);
+                        stream.s_nationkey = Some(nk);
+                        m
                     }
                     Relation::Lineitem => {
                         panic!("lineitem is the fact side of a star plan, not a dimension")
                     }
                 };
-                edge_reports.push(report(edge, &m));
+                edge_reports.push(edge_report(edge, &m, probe_rows));
                 metrics.absorb(&format!("e{}", i + 1), m);
-                stream = next;
             }
-            stream
+            stream.assemble(cluster.pool())
         }
         Topology::Chain => {
             assert_eq!(plan.edges.len(), 2, "chain plans are the 3-relation tree");
             // edge 1: ORDERS ⋈ CUSTOMER on custkey (customer build side)
             let big1: PartitionedTable<Keyed<(u64, i32)>> = orders
                 .map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect());
+            let probe1 = big1.n_rows() as u64;
             let (j1, m1) = run_edge(cluster, &plan.edges[0], big1, customer);
-            edge_reports.push(report(&plan.edges[0], &m1));
+            edge_reports.push(edge_report(&plan.edges[0], &m1, probe1));
             metrics.absorb("e1", m1);
 
             // re-key the reduced orders by orderkey for the fact edge
@@ -314,8 +490,9 @@ pub fn execute(
             // edge 2: LINEITEM ⋈ ORDERS' on orderkey
             let big2: PartitionedTable<Keyed<PlanRow>> = lineitem
                 .map_partitions(|p| p.iter().map(|f| (f.orderkey, seed_row(f))).collect());
+            let probe2 = big2.n_rows() as u64;
             let (j2, m2) = run_edge(cluster, &plan.edges[1], big2, small2);
-            edge_reports.push(report(&plan.edges[1], &m2));
+            edge_reports.push(edge_report(&plan.edges[1], &m2, probe2));
             metrics.absorb("e2", m2);
 
             j2.into_iter()
@@ -434,5 +611,42 @@ mod tests {
         }
         let edge_sum: f64 = out.edge_reports.iter().map(|r| r.sim_s).sum();
         assert!((out.total_sim_s() - edge_sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vectorized_star_is_thread_count_invariant() {
+        let spec = wide_spec();
+        let inputs = prepare(&spec);
+        let c1 = Cluster::with_workers(ClusterConfig::local(), 1);
+        let c4 = Cluster::with_workers(ClusterConfig::local(), 4);
+        let plan = plan_edges(&c1, &spec, &inputs);
+        let a = execute(&c1, &spec, &plan, inputs.clone());
+        let b = execute(&c4, &spec, &plan, inputs);
+        // exact row order, not just multiset equality: downstream
+        // consumers and ledgers must not depend on the worker count
+        assert_eq!(a.rows, b.rows);
+        let names = |o: &PlanOutput| {
+            o.metrics.stages.iter().map(|s| s.name.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(names(&a), names(&b));
+        assert_eq!(a.metrics.output_rows, b.metrics.output_rows);
+        assert_eq!(a.metrics.big_rows_scanned, b.metrics.big_rows_scanned);
+        assert_eq!(a.metrics.big_rows_after_filter, b.metrics.big_rows_after_filter);
+    }
+
+    #[test]
+    fn edge_reports_carry_probe_throughput() {
+        let spec = wide_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&spec);
+        let fact_rows = inputs.lineitem.n_rows() as u64;
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        let out = execute(&cluster, &spec, &plan, inputs);
+        // the first edge probes the full fact stream
+        assert_eq!(out.edge_reports[0].probe_rows, fact_rows);
+        for r in &out.edge_reports {
+            assert!(r.probe_rows > 0, "{} probed nothing", r.name);
+            assert!(r.probe_keys_per_s() >= 0.0);
+        }
     }
 }

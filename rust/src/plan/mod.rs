@@ -30,9 +30,13 @@
 //! priced under all three strategies with an a-priori instance of the §7
 //! cost model, and — when an edge takes the bloom-cascade — solves that
 //! edge's **own** optimal ε with [`crate::model::newton`] instead of one
-//! global ε.  Execution ([`executor`]) composes the per-edge stage
-//! accounting into a single [`crate::metrics::QueryMetrics`] ledger, so
-//! a plan's simulated cost is the composition of its stages.
+//! global ε.  Execution ([`executor`]) runs a **vectorized selection-
+//! vector pipeline** over columnar fact batches (edges ship survivor
+//! indices + payload columns, bloom probes are batched, per-partition
+//! work runs in parallel on the `BLOOMJOIN_THREADS`-sized pool) and
+//! composes the per-edge stage accounting into a single
+//! [`crate::metrics::QueryMetrics`] ledger, so a plan's simulated cost
+//! is the composition of its stages.
 
 pub mod catalog;
 pub mod costing;
@@ -42,7 +46,7 @@ pub use catalog::{
     chain_edge_stats, prepare, star_dim_stats, DimStats, EdgeStats, FactRow, PlanInputs, Relation,
 };
 pub use costing::{plan_edges, star_edge_stats, EdgePrediction};
-pub use executor::{execute, nested_loop_oracle, EdgeReport, PlanOutput, PlanRow};
+pub use executor::{execute, nested_loop_oracle, EdgeReport, PlanOutput, PlanRow, StreamIdx};
 
 use crate::tpch::ORDERDATE_RANGE_DAYS;
 

@@ -1,0 +1,112 @@
+//! Batched-probe equivalence: for arbitrary key sets and all three
+//! filter types, `probe_batch` selects **exactly** the keys the scalar
+//! `contains_key` path accepts — same indices, same order — including
+//! the empty batch, the all-pass batch (probing the inserted keys
+//! themselves), and batch lengths straddling the chunk boundary.  This
+//! is the property that lets the executor swap the per-key loop for the
+//! vectorized pipeline without touching any join-equivalence oracle.
+
+use bloomjoin::bloom::{
+    BlockedBloomFilter, BloomFilter, KeyFilter, PaghFilter, SelectionVector, PROBE_CHUNK,
+};
+use bloomjoin::testkit::check;
+
+struct Case {
+    members: Vec<u64>,
+    probe: Vec<u64>,
+    eps: f64,
+}
+
+fn gen_case(g: &mut bloomjoin::testkit::Gen) -> Case {
+    let n_members = 1 + g.size * 4;
+    let members: Vec<u64> = (0..n_members).map(|_| g.rng.next_u64()).collect();
+    // probe mixes members, misses, and straddles the chunk boundary:
+    // lengths land in [0, ~5·size + chunk slop] across cases
+    let n_probe = g.u64_below((g.size as u64 * 5).max(1) + PROBE_CHUNK as u64 + 2) as usize;
+    let probe: Vec<u64> = (0..n_probe)
+        .map(|i| {
+            if i % 3 == 0 {
+                members[g.u64_below(members.len() as u64) as usize]
+            } else {
+                g.rng.next_u64()
+            }
+        })
+        .collect();
+    let eps = [0.001, 0.05, 0.3][g.u64_below(3) as usize];
+    Case { members, probe, eps }
+}
+
+/// probe_batch == scalar loop, index for index.
+fn assert_equivalent(f: &dyn KeyFilter, probe: &[u64], label: &str) -> Result<(), String> {
+    let mut sel = SelectionVector::new();
+    f.probe_batch(probe, &mut sel);
+    let want: Vec<u32> = probe
+        .iter()
+        .enumerate()
+        .filter(|(_, &k)| f.contains(k))
+        .map(|(i, _)| i as u32)
+        .collect();
+    if sel.indices() == want.as_slice() {
+        Ok(())
+    } else {
+        Err(format!(
+            "{label}: batched selected {} of {} keys, scalar {}",
+            sel.len(),
+            probe.len(),
+            want.len()
+        ))
+    }
+}
+
+fn filters_for(case: &Case) -> Vec<(&'static str, Box<dyn KeyFilter>)> {
+    let n = case.members.len() as u64;
+    let mut bloom = BloomFilter::with_optimal(n, case.eps);
+    let mut blocked = BlockedBloomFilter::with_optimal(n, case.eps);
+    for &k in &case.members {
+        bloom.insert(k);
+        blocked.insert(k);
+    }
+    let pagh = PaghFilter::build(&case.members, case.eps);
+    vec![
+        ("bloom", Box::new(bloom)),
+        ("blocked", Box::new(blocked)),
+        ("pagh", Box::new(pagh)),
+    ]
+}
+
+#[test]
+fn probe_batch_equals_scalar_for_every_filter_type() {
+    check("probe_batch ≡ contains, all filters", 24, gen_case, |case| {
+        for (label, f) in filters_for(case) {
+            assert_equivalent(f.as_ref(), &case.probe, label)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn probe_batch_empty_and_all_pass_batches() {
+    check("probe_batch edge batches", 10, gen_case, |case| {
+        for (label, f) in filters_for(case) {
+            // empty batch selects nothing
+            assert_equivalent(f.as_ref(), &[], &format!("{label}/empty"))?;
+            let mut sel = SelectionVector::new();
+            f.probe_batch(&[], &mut sel);
+            if !sel.is_empty() {
+                return Err(format!("{label}: empty batch selected {}", sel.len()));
+            }
+            // all-pass batch: probing the members themselves keeps every
+            // index (no false negatives, batched or scalar)
+            f.probe_batch(&case.members, &mut sel);
+            let want: Vec<u32> = (0..case.members.len() as u32).collect();
+            if sel.indices() != want.as_slice() {
+                return Err(format!(
+                    "{label}: all-pass batch kept {} of {}",
+                    sel.len(),
+                    case.members.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
