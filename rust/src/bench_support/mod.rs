@@ -43,6 +43,8 @@ pub fn paper_scaled_cluster(sf: f64) -> crate::cluster::Cluster {
 
 /// `base` with every edge's strategy replaced (plan shape preserved) —
 /// how the figure benches force policy comparisons onto one planned tree.
+/// Forced plans carry no dimension sketch features, so the adaptive
+/// re-planner cannot undo the forced assignment.
 pub fn forced_plan(
     base: &crate::plan::JoinPlan,
     strategies: Vec<crate::plan::EdgeStrategy>,
@@ -55,6 +57,7 @@ pub fn forced_plan(
             .zip(strategies)
             .map(|(e, s)| crate::plan::PlannedEdge::forced(e.relation, e.name.clone(), s))
             .collect(),
+        dim_stats: Vec::new(),
     }
 }
 

@@ -31,7 +31,7 @@ use bloomjoin::util::fmt::Table;
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["xla", "driver-side", "verbose", "no-execute"]);
+    let args = Args::parse(argv, &["xla", "driver-side", "verbose", "no-execute", "json"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match run(cmd, &args) {
         Ok(()) => ExitCode::SUCCESS,
@@ -210,6 +210,11 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         Some(m) => m,
         None => anyhow::bail!("unknown pushdown mode (ranked|unranked)"),
     };
+    let replan = match plan::ReplanPolicy::parse(args.get_or("replan", "static")) {
+        Some(p) => p,
+        None => anyhow::bail!("unknown replan policy (static|adaptive)"),
+    };
+    let json_mode = args.flag("json");
     let mut spec = PlanSpec {
         sf: args.parse_or("sf", 0.01)?,
         seed: args.parse_or("seed", 0xB100_F117u64)?,
@@ -218,6 +223,7 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         dims,
         eps_mode,
         pushdown,
+        replan,
         ..Default::default()
     };
     if let Some(b) = args.parse_as::<u8>("part-brand")? {
@@ -227,33 +233,81 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         spec.supp_nationkey = Some(n);
     }
 
-    let inputs = plan::prepare(&spec);
-    let join_plan = plan::plan_edges(&cluster, &spec, &inputs);
-    println!(
-        "topology: {} ({} relations, {} pushdown)   predicted total: {:.4}s",
-        join_plan.topology.name(),
-        spec.dims.len() + 1,
-        spec.pushdown.name(),
-        join_plan.predicted_total_s()
-    );
-    let mut t =
-        Table::new(&["edge", "strategy", "eps*", "bloom_s", "broadcast_s", "sortmerge_s"]);
-    for e in &join_plan.edges {
-        t.row(vec![
-            e.name.clone(),
-            e.strategy.label(),
-            format!("{:.5}", e.prediction.eps_star),
-            format!("{:.4}", e.prediction.bloom_s),
-            format!("{:.4}", e.prediction.broadcast_s),
-            format!("{:.4}", e.prediction.sortmerge_s),
-        ]);
+    // per-cluster calibration store (§7 constants refined from observed
+    // runs) — "auto" keys the file on the cluster topology under target/
+    let calib_path = match args.get_or("calibration", "auto") {
+        "off" => None,
+        "auto" => Some(plan::CostCalibration::default_path(cluster.config())),
+        p => Some(std::path::PathBuf::from(p)),
+    };
+    let mut calibration = plan::CostCalibration::default();
+    if let Some(p) = &calib_path {
+        if let Some(c) = plan::CostCalibration::load(p) {
+            calibration = c;
+        } else if p.exists() {
+            // don't silently reset an unreadable store — it will be
+            // overwritten on save below
+            eprintln!("warning: ignoring unreadable calibration store {}", p.display());
+        }
     }
-    println!("{}", t.render());
+
+    let inputs = plan::prepare(&spec);
+    let calib_ref = calib_path.is_some().then_some(&calibration);
+    let join_plan = plan::plan_edges_calibrated(&cluster, &spec, &inputs, calib_ref);
+    if !json_mode {
+        println!(
+            "topology: {} ({} relations, {} pushdown, {} re-planning)   predicted total: {:.4}s",
+            join_plan.topology.name(),
+            spec.dims.len() + 1,
+            spec.pushdown.name(),
+            spec.replan.name(),
+            join_plan.predicted_total_s()
+        );
+        if let Some((alpha, beta)) = calibration.factors() {
+            println!(
+                "calibration: {} samples, stage factors α={alpha:.3} β={beta:.3}",
+                calibration.samples.len()
+            );
+        }
+        let mut t =
+            Table::new(&["edge", "strategy", "eps*", "bloom_s", "broadcast_s", "sortmerge_s"]);
+        for e in &join_plan.edges {
+            t.row(vec![
+                e.name.clone(),
+                e.strategy.label(),
+                format!("{:.5}", e.prediction.eps_star),
+                format!("{:.4}", e.prediction.bloom_s),
+                format!("{:.4}", e.prediction.broadcast_s),
+                format!("{:.4}", e.prediction.sortmerge_s),
+            ]);
+        }
+        println!("{}", t.render());
+    }
 
     if args.flag("no-execute") {
+        if json_mode {
+            println!("{}", plan_to_json(&spec, &join_plan, &calibration, None));
+        }
         return Ok(());
     }
-    let out = plan::execute(&cluster, &spec, &join_plan, inputs);
+    let out = plan::execute_with(&cluster, &spec, &join_plan, inputs, calib_ref);
+
+    // close the loop: fold this run's observations into the store
+    // (unless calibration is off — then the run must stay uncalibrated
+    // in the report too)
+    if let Some(p) = &calib_path {
+        for obs in &out.ledger.observations {
+            calibration.record(obs);
+        }
+        if let Err(e) = calibration.save(p) {
+            eprintln!("warning: could not save calibration store {}: {e}", p.display());
+        }
+    }
+
+    if json_mode {
+        println!("{}", plan_to_json(&spec, &join_plan, &calibration, Some(&out)));
+        return Ok(());
+    }
     println!(
         "probe threads: {} (set BLOOMJOIN_THREADS to override; default = available \
          parallelism, capped at cluster slots)",
@@ -270,10 +324,103 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
             r.probe_keys_per_s()
         );
     }
+    if !out.ledger.events.is_empty() {
+        println!(
+            "\nre-plan ledger ({} event(s), 3σ trigger bound {:.2}%):",
+            out.ledger.events.len(),
+            100.0 * out.ledger.bound
+        );
+        for ev in &out.ledger.events {
+            println!(
+                "  after {}: estimated {} survivors, measured {} (err {:.1}%) — \
+                 re-planned [{}] -> [{}]",
+                ev.after_edge,
+                ev.estimated_survivors,
+                ev.measured_survivors,
+                100.0 * ev.relative_error,
+                ev.old_tail.join(", "),
+                ev.new_tail.join(", ")
+            );
+        }
+    } else if matches!(spec.replan, plan::ReplanPolicy::Adaptive) {
+        println!("\nre-plan ledger: no events");
+    }
     println!("\nrows: {}\n", out.rows.len());
     println!("{}", out.metrics.markdown());
     println!("plan total (simulated): {:.4}s", out.total_sim_s());
     Ok(())
+}
+
+/// The `plan --json` payload: spec + decided plan + calibration state,
+/// and (when executed) metrics, per-edge reports and the adaptive
+/// ledger.  CI cross-checks the ledger against the metrics ledger.
+fn planned_edge_json(e: &bloomjoin::plan::PlannedEdge) -> bloomjoin::util::Json {
+    use bloomjoin::util::Json;
+    Json::obj([
+        ("name", Json::str(e.name.clone())),
+        ("relation", Json::str(e.relation.name())),
+        ("strategy", Json::str(e.strategy.label())),
+        ("eps_star", Json::num(e.prediction.eps_star)),
+        ("interior", Json::Bool(e.prediction.interior)),
+        ("bloom_s", Json::num(e.prediction.bloom_s)),
+        ("broadcast_s", Json::num(e.prediction.broadcast_s)),
+        ("sortmerge_s", Json::num(e.prediction.sortmerge_s)),
+        ("est_probe_rows", Json::num(e.stats.probe_rows as f64)),
+        ("est_survivors", Json::num(e.stats.matched_rows as f64)),
+    ])
+}
+
+fn edge_report_json(r: &bloomjoin::plan::EdgeReport) -> bloomjoin::util::Json {
+    use bloomjoin::util::Json;
+    Json::obj([
+        ("name", Json::str(r.name.clone())),
+        ("strategy", Json::str(r.strategy.clone())),
+        ("sim_s", Json::num(r.sim_s)),
+        ("output_rows", Json::num(r.output_rows as f64)),
+        ("probe_rows", Json::num(r.probe_rows as f64)),
+        ("probe_keys_per_s", Json::num(r.probe_keys_per_s())),
+    ])
+}
+
+fn plan_to_json(
+    spec: &bloomjoin::plan::PlanSpec,
+    join_plan: &bloomjoin::plan::JoinPlan,
+    calibration: &bloomjoin::plan::CostCalibration,
+    out: Option<&bloomjoin::plan::PlanOutput>,
+) -> bloomjoin::util::Json {
+    use bloomjoin::util::Json;
+
+    let dims: Vec<Json> = spec.dims.iter().map(|r| Json::str(r.name())).collect();
+    let spec_json = Json::obj([
+        ("topology", Json::str(spec.topology.name())),
+        ("pushdown", Json::str(spec.pushdown.name())),
+        ("replan", Json::str(spec.replan.name())),
+        ("sf", Json::num(spec.sf)),
+        ("partitions", Json::num(spec.partitions as f64)),
+        ("dims", Json::Arr(dims)),
+    ]);
+    let edges: Vec<Json> = join_plan.edges.iter().map(planned_edge_json).collect();
+    let mut calib_fields = vec![("samples", Json::num(calibration.samples.len() as f64))];
+    if let Some((alpha, beta)) = calibration.factors() {
+        calib_fields.push(("alpha", Json::num(alpha)));
+        calib_fields.push(("beta", Json::num(beta)));
+    }
+    let calib_json = Json::obj(calib_fields);
+    let mut fields = vec![
+        ("spec", spec_json),
+        ("predicted_total_s", Json::num(join_plan.predicted_total_s())),
+        ("edges", Json::Arr(edges)),
+        ("calibration", calib_json),
+        ("executed", Json::Bool(out.is_some())),
+    ];
+    if let Some(out) = out {
+        let reports: Vec<Json> = out.edge_reports.iter().map(edge_report_json).collect();
+        fields.push(("rows", Json::num(out.rows.len() as f64)));
+        fields.push(("metrics", out.metrics.to_json()));
+        fields.push(("ledger", out.ledger.to_json()));
+        fields.push(("edge_reports", Json::Arr(reports)));
+    }
+    Json::obj(fields)
 }
 
 fn eps_series(n: usize) -> Vec<f64> {
@@ -388,6 +535,12 @@ COMMANDS
              incl. lineitem; customer needs orders) --topology star|chain
              --eps-mode per-filter|global [--eps 0.05]
              --pushdown ranked|unranked [--part-brand N] [--supp-nation N]
+             --replan static|adaptive (adaptive re-plans the remaining
+              edges when a measured survivor count breaks the HLL 3σ
+              bound, and prints the re-plan ledger)
+             --calibration auto|off|<path> (per-cluster K/L/C store under
+              target/calibration/, refined from observed runs)
+             [--json] (machine-readable plan + metrics + ledger)
              [--no-execute]
              (n-way planner: ranked filter pushdown, per-edge strategy
               from the cost model, per-filter optimal ε from HLL estimates)

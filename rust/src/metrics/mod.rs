@@ -61,6 +61,12 @@ fn base_name(name: &str) -> &str {
     name.rsplit('/').next().unwrap_or(name)
 }
 
+/// The paper's "stage 1" (build-side) stages — one predicate shared by
+/// the sim- and wall-time accessors so they can never desynchronize.
+fn is_stage1(name: &str) -> bool {
+    matches!(base_name(name), "approx_count" | "bloom_build" | "broadcast")
+}
+
 impl QueryMetrics {
     pub fn push(&mut self, s: StageTiming) {
         self.stages.push(s);
@@ -107,14 +113,16 @@ impl QueryMetrics {
         self.stages.iter().map(|s| s.wall_s).sum()
     }
 
+    /// Simulated network bytes across all stages — what an edge
+    /// observation reports as "shipped bytes".
+    pub fn total_net_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.net_bytes).sum()
+    }
+
     /// The paper's "stage 1": everything before the big-table scan
     /// (approximate count + distributed filter build + broadcast).
     pub fn bloom_creation_s(&self) -> f64 {
-        self.stages
-            .iter()
-            .filter(|s| matches!(base_name(&s.name), "approx_count" | "bloom_build" | "broadcast"))
-            .map(|s| s.sim_s)
-            .sum()
+        self.stages.iter().filter(|s| is_stage1(&s.name)).map(|s| s.sim_s).sum()
     }
 
     /// The paper's "stage 2": filter + shuffle + sort-merge join + write.
@@ -124,6 +132,12 @@ impl QueryMetrics {
             .filter(|s| matches!(base_name(&s.name), "filter_scan" | "shuffle" | "join" | "write"))
             .map(|s| s.sim_s)
             .sum()
+    }
+
+    /// Real wall seconds of the "stage 1" (build-side) stages — the
+    /// executor's per-edge build time observation.
+    pub fn bloom_creation_wall_s(&self) -> f64 {
+        self.stages.iter().filter(|s| is_stage1(&s.name)).map(|s| s.wall_s).sum()
     }
 
     pub fn markdown(&self) -> String {

@@ -76,6 +76,14 @@ fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>, FitError> {
     Ok(x)
 }
 
+/// Least-squares scale through the origin: the α minimising ‖α·x − y‖²
+/// (a one-feature [`fit_linear`]).  The calibration store uses this to
+/// fit measured stage seconds against model predictions.
+pub fn fit_scale(x: &[f64], y: &[f64]) -> Result<f64, FitError> {
+    let rows: Vec<Vec<f64>> = x.iter().map(|&v| vec![v]).collect();
+    Ok(fit_linear(&rows, y)?[0])
+}
+
 /// Observations from one sweep run, in the model's coordinates.
 #[derive(Clone, Copy, Debug)]
 pub struct SweepPoint {
@@ -154,6 +162,16 @@ mod tests {
         let beta = fit_linear(&rows, &y).unwrap();
         assert!((beta[0] - 1.5).abs() < 0.01);
         assert!((beta[1] - 0.7).abs() < 0.01);
+    }
+
+    #[test]
+    fn fit_scale_recovers_factor() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| v * 2.5).collect();
+        let a = fit_scale(&x, &y).unwrap();
+        assert!((a - 2.5).abs() < 1e-9, "{a}");
+        // all-zero features are singular, not a crash
+        assert!(matches!(fit_scale(&[0.0, 0.0, 0.0], &[1.0, 2.0, 3.0]), Err(FitError::Singular)));
     }
 
     #[test]

@@ -1,0 +1,335 @@
+//! Adaptive re-planning: the runtime feedback loop from executor to
+//! planner (Spark-AQE-style, specialised to the paper's bloom math).
+//!
+//! The static planner commits every edge's probe order, strategy and ε
+//! up front, from HLL catalog estimates.  Those estimates carry a stated
+//! error: the P=12 HyperLogLog's 3σ relative bound
+//! ([`HyperLogLog::relative_error_bound`], ≈ 4.9 %).  The executor can
+//! do better than trust them end-to-end — after each edge completes it
+//! *knows* the residual stream, exactly.
+//!
+//! **Trigger math.**  After edge `i` finishes, the executor compares
+//! the edge's estimated survivor count `Ê` against the measured
+//! survivor count `M` (the contracted stream length).  `Ê` is the
+//! planner's `matched_rows` **rescaled to the stream the edge actually
+//! probed** ([`expected_survivors`]) — i.e. the planner's match
+//! *fraction* applied to the measured probe — so the check judges this
+//! edge's own selectivity estimate, not upstream contraction that
+//! earlier checks already judged (in unranked static-propagation mode
+//! the planned probe is always the full scan, so the rescaling is what
+//! makes the comparison meaningful at all).  The estimate is
+//! *consistent* with the sketch error model when the relative error
+//! `|M − Ê| / max(Ê, 1)` is within the 3σ bound; anything larger cannot
+//! be explained by sketch noise and means the catalog's picture of the
+//! remaining workload is wrong too (every downstream edge's
+//! `A = N_filtrable/P`, `B = N_matched/P` was derived from this
+//! residual).  [`should_replan`] fires exactly then.
+//!
+//! **Re-plan.**  On a trigger, [`replan_remaining`] re-runs the planning
+//! pipeline for the not-yet-executed tail only: the remaining dimensions
+//! are re-ranked by (selectivity / probe cost) against the *measured*
+//! residual, each tail edge's workload is re-derived from it (the same
+//! single residual-stream derivation the static planner uses —
+//! [`super::costing::derive_edge_stats`]), and every bloom edge's ε* is
+//! re-solved with `model::newton` on the observed residual stream.  The
+//! whole loop is demotable to a no-op with [`ReplanPolicy::Static`], so
+//! the pre-adaptive behaviour stays benchmarkable
+//! (`benches/fig8_adaptive.rs` compares the two).
+//!
+//! Every executed edge also emits an [`EdgeObservation`] (measured
+//! survivors, stage wall times, shipped bytes, and the §7 stage split of
+//! its simulated seconds) — the raw material both for the re-plan ledger
+//! and for the per-cluster [`super::costing::CostCalibration`] store
+//! that refines the cost model's K/L/C constants across runs.
+
+use crate::approx::HyperLogLog;
+use crate::cluster::Cluster;
+use crate::util::Json;
+
+use super::catalog::{DimStats, EdgeStats};
+use super::costing::{derive_edge_stats, price_edges, rank_dims, CostCalibration};
+use super::{PlanSpec, PlannedEdge, Relation};
+
+/// Whether the executor may re-plan the remaining edges mid-query.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReplanPolicy {
+    /// Trust the static plan end-to-end (the pre-adaptive behaviour).
+    #[default]
+    Static,
+    /// Re-rank and re-solve the remaining edges whenever a measured
+    /// survivor count falls outside the estimate's 3σ bound.
+    Adaptive,
+}
+
+impl ReplanPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplanPolicy::Static => "static",
+            ReplanPolicy::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ReplanPolicy> {
+        match s {
+            "static" => Some(ReplanPolicy::Static),
+            "adaptive" => Some(ReplanPolicy::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+/// The trigger threshold: the catalog sketch's stated 3σ relative error.
+/// Estimates off by more than this cannot be explained by sketch noise.
+pub fn trigger_bound() -> f64 {
+    HyperLogLog::relative_error_bound()
+}
+
+/// Relative error of an estimate against the measured truth.
+pub fn estimate_error(estimated: u64, measured: u64) -> f64 {
+    let est = estimated.max(1) as f64;
+    (measured as f64 - estimated as f64).abs() / est
+}
+
+/// True when the measured survivor count is inconsistent with the
+/// estimate under the sketch error `bound` — the re-plan trigger.
+pub fn should_replan(estimated: u64, measured: u64, bound: f64) -> bool {
+    estimate_error(estimated, measured) > bound
+}
+
+/// The planner's survivor estimate for an edge, rescaled to the stream
+/// the executor actually probed: `measured_probe · (matched̂ / probê)`.
+///
+/// The rescaling is what makes the trigger compare like with like.  An
+/// edge's planned `matched_rows` is relative to its planned probe
+/// stream — in unranked (static-propagation) mode that is the full
+/// scan, never the contracted stream, and even in ranked mode the
+/// upstream contraction can drift *within* the bound.  Scaling the
+/// estimate to the measured probe isolates **this edge's own
+/// selectivity error** from upstream effects that earlier trigger
+/// checks already judged.
+pub fn expected_survivors(stats: &EdgeStats, measured_probe: u64) -> u64 {
+    let frac = stats.matched_rows as f64 / stats.probe_rows.max(1) as f64;
+    ((measured_probe as f64 * frac).round() as u64).min(measured_probe)
+}
+
+/// What the executor measured while running one edge.
+#[derive(Clone, Debug)]
+pub struct EdgeObservation {
+    pub edge: String,
+    pub relation: Relation,
+    pub strategy: String,
+    /// The ε the edge executed with (bloom edges only).
+    pub eps: Option<f64>,
+    pub estimated_probe_rows: u64,
+    pub measured_probe_rows: u64,
+    /// The planner's `matched_rows` estimate for this edge.
+    pub estimated_survivors: u64,
+    /// Stream rows actually surviving the edge (with multiplicity).
+    pub measured_survivors: u64,
+    /// Real wall seconds of the build-side stages (approx count +
+    /// filter build + broadcast).
+    pub build_wall_s: f64,
+    /// Real wall seconds of the probe-side hot path.
+    pub probe_wall_s: f64,
+    /// Simulated network bytes the edge shipped.
+    pub shipped_bytes: u64,
+    /// The edge's total simulated seconds.
+    pub sim_s: f64,
+    /// §7 stage split of the measured simulated seconds.
+    pub measured_stage1_s: f64,
+    pub measured_stage2_s: f64,
+    /// The *uncalibrated* §7 model re-evaluated on the measured workload
+    /// at the executed ε (bloom edges; 0 otherwise) — the calibration
+    /// store regresses measured against these to isolate constant error
+    /// from estimate error.
+    pub predicted_stage1_s: f64,
+    pub predicted_stage2_s: f64,
+}
+
+impl EdgeObservation {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("edge", Json::str(self.edge.clone())),
+            ("relation", Json::str(self.relation.name())),
+            ("strategy", Json::str(self.strategy.clone())),
+            ("eps", self.eps.map_or(Json::Null, Json::num)),
+            ("estimated_probe_rows", Json::num(self.estimated_probe_rows as f64)),
+            ("measured_probe_rows", Json::num(self.measured_probe_rows as f64)),
+            ("estimated_survivors", Json::num(self.estimated_survivors as f64)),
+            ("measured_survivors", Json::num(self.measured_survivors as f64)),
+            ("build_wall_s", Json::num(self.build_wall_s)),
+            ("probe_wall_s", Json::num(self.probe_wall_s)),
+            ("shipped_bytes", Json::num(self.shipped_bytes as f64)),
+            ("sim_s", Json::num(self.sim_s)),
+            ("measured_stage1_s", Json::num(self.measured_stage1_s)),
+            ("measured_stage2_s", Json::num(self.measured_stage2_s)),
+            ("predicted_stage1_s", Json::num(self.predicted_stage1_s)),
+            ("predicted_stage2_s", Json::num(self.predicted_stage2_s)),
+        ])
+    }
+}
+
+/// One re-plan decision, for the ledger.
+#[derive(Clone, Debug)]
+pub struct ReplanEvent {
+    /// The edge whose measured survivors broke the bound.
+    pub after_edge: String,
+    pub estimated_survivors: u64,
+    pub measured_survivors: u64,
+    pub relative_error: f64,
+    pub bound: f64,
+    /// `name strategy` labels of the tail before and after the re-plan.
+    pub old_tail: Vec<String>,
+    pub new_tail: Vec<String>,
+}
+
+impl ReplanEvent {
+    pub fn to_json(&self) -> Json {
+        let old: Vec<Json> = self.old_tail.iter().map(|s| Json::str(s.clone())).collect();
+        let new: Vec<Json> = self.new_tail.iter().map(|s| Json::str(s.clone())).collect();
+        Json::obj([
+            ("after_edge", Json::str(self.after_edge.clone())),
+            ("estimated_survivors", Json::num(self.estimated_survivors as f64)),
+            ("measured_survivors", Json::num(self.measured_survivors as f64)),
+            ("relative_error", Json::num(self.relative_error)),
+            ("bound", Json::num(self.bound)),
+            ("old_tail", Json::Arr(old)),
+            ("new_tail", Json::Arr(new)),
+        ])
+    }
+}
+
+/// Everything the adaptive loop recorded during one execution: one
+/// observation per executed edge, one event per re-plan.  Static runs
+/// still fill `observations` (they feed the calibration store); their
+/// `events` are always empty.
+#[derive(Clone, Debug)]
+pub struct ReplanLedger {
+    pub policy: ReplanPolicy,
+    pub bound: f64,
+    pub observations: Vec<EdgeObservation>,
+    pub events: Vec<ReplanEvent>,
+}
+
+impl ReplanLedger {
+    pub fn new(policy: ReplanPolicy) -> ReplanLedger {
+        ReplanLedger {
+            policy,
+            bound: trigger_bound(),
+            observations: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let obs: Vec<Json> = self.observations.iter().map(|o| o.to_json()).collect();
+        let events: Vec<Json> = self.events.iter().map(|e| e.to_json()).collect();
+        Json::obj([
+            ("policy", Json::str(self.policy.name())),
+            ("bound", Json::num(self.bound)),
+            ("observations", Json::Arr(obs)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+}
+
+/// `name strategy` labels of a plan tail (what [`ReplanEvent`] records).
+pub fn tail_labels(edges: &[PlannedEdge]) -> Vec<String> {
+    edges.iter().map(|e| format!("{} {}", e.name, e.strategy.label())).collect()
+}
+
+/// Re-plan the not-yet-executed tail of a star plan against the
+/// *measured* residual stream: re-rank the remaining dimensions, re-derive
+/// each tail edge's workload from `measured_residual`, and re-price every
+/// strategy (re-solving bloom ε* with Newton on the observed residual).
+///
+/// Returns `None` when the plan carries no sketch features for some
+/// remaining relation (e.g. a strategy-forced test plan) — re-planning
+/// needs the catalog's per-dimension estimates to re-derive workloads.
+pub fn replan_remaining(
+    cluster: &Cluster,
+    spec: &PlanSpec,
+    calibration: Option<&CostCalibration>,
+    dim_stats: &[DimStats],
+    remaining: &[PlannedEdge],
+    measured_residual: u64,
+) -> Option<Vec<PlannedEdge>> {
+    let mut dims = Vec::with_capacity(remaining.len());
+    for e in remaining {
+        dims.push(dim_stats.iter().find(|d| d.relation == e.relation)?.clone());
+    }
+    let residual = measured_residual.max(1) as f64;
+    rank_dims(&mut dims, residual, spec.pushdown);
+    let edge_list = derive_edge_stats(&dims, residual, spec.pushdown);
+    Some(price_edges(cluster.config(), spec.eps_mode, calibration, edge_list))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrips() {
+        for p in [ReplanPolicy::Static, ReplanPolicy::Adaptive] {
+            assert_eq!(ReplanPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(ReplanPolicy::parse("aggressive"), None);
+        assert_eq!(ReplanPolicy::default(), ReplanPolicy::Static);
+    }
+
+    #[test]
+    fn bound_matches_hll_three_sigma() {
+        let b = trigger_bound();
+        assert!((b - HyperLogLog::relative_error_bound()).abs() < 1e-15);
+        assert!(b > 0.0 && b < 0.1, "P=12 3σ should be a few percent, got {b}");
+    }
+
+    #[test]
+    fn trigger_fires_only_outside_the_bound() {
+        let bound = trigger_bound();
+        // exactly on the estimate: never
+        assert!(!should_replan(10_000, 10_000, bound));
+        // inside the bound in both directions: never
+        let delta = (10_000.0 * bound * 0.9) as u64;
+        assert!(!should_replan(10_000, 10_000 + delta, bound));
+        assert!(!should_replan(10_000, 10_000 - delta, bound));
+        // outside the bound in both directions: always
+        let delta = (10_000.0 * bound * 1.1).ceil() as u64;
+        assert!(should_replan(10_000, 10_000 + delta, bound));
+        assert!(should_replan(10_000, 10_000 - delta, bound));
+    }
+
+    #[test]
+    fn expected_survivors_rescales_to_the_measured_probe() {
+        let stats = EdgeStats { probe_rows: 1000, matched_rows: 300, ..EdgeStats::default() };
+        assert_eq!(expected_survivors(&stats, 100), 30);
+        assert_eq!(expected_survivors(&stats, 1000), 300);
+        assert_eq!(expected_survivors(&stats, 0), 0);
+    }
+
+    #[test]
+    fn zero_estimate_does_not_divide_by_zero() {
+        assert!(should_replan(0, 100, trigger_bound()));
+        assert!(!should_replan(0, 0, trigger_bound()));
+    }
+
+    #[test]
+    fn ledger_json_has_all_sections() {
+        let mut l = ReplanLedger::new(ReplanPolicy::Adaptive);
+        l.events.push(ReplanEvent {
+            after_edge: "⋈orders".into(),
+            estimated_survivors: 100,
+            measured_survivors: 10,
+            relative_error: 0.9,
+            bound: l.bound,
+            old_tail: vec!["⋈part bloom(eps=0.0100)".into()],
+            new_tail: vec!["⋈part broadcast".into()],
+        });
+        let j = l.to_json();
+        assert_eq!(j.get("policy").unwrap().as_str(), Some("adaptive"));
+        assert_eq!(j.get("events").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.get("observations").unwrap().as_arr().unwrap().is_empty());
+        // the writer emits parseable JSON
+        assert!(crate::util::Json::parse(&j.to_string()).is_ok());
+    }
+}

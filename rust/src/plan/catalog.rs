@@ -6,6 +6,19 @@
 //! selectivities are estimated by sketch inclusion–exclusion
 //! (`|A ∩ B| ≈ d(A) + d(B) − d(A ∪ B)`), the same mergeable-sketch
 //! algebra the distributed bloom build uses.
+//!
+//! The catalog's **error contract** is load-bearing: estimates are
+//! trusted only to the sketch's stated 3σ relative bound
+//! ([`crate::approx::HyperLogLog::relative_error_bound`], held by
+//! `rust/tests/catalog_accuracy.rs`), and the adaptive executor
+//! ([`super::adaptive`]) treats any measured survivor count outside that
+//! bound as proof the catalog's picture of the remaining workload is
+//! wrong — the re-plan trigger.  Note what the contract does *not*
+//! promise: sketches count **distinct keys**, so a skewed fact stream
+//! (hot keys carrying most of the rows) can make the row-level survival
+//! estimate arbitrarily wrong while every sketch stays within its bound
+//! — exactly the case re-planning exists to catch
+//! (`benches/fig8_adaptive.rs` constructs both directions).
 
 use crate::approx::HyperLogLog;
 use crate::dataset::PartitionedTable;
@@ -200,7 +213,9 @@ impl Default for EdgeStats {
 
 /// Per-dimension semijoin features against the fact stream — the raw
 /// material [`super::costing::star_edge_stats`] ranks and turns into
-/// ordered [`EdgeStats`].
+/// ordered [`EdgeStats`], and what [`super::JoinPlan`] carries (as
+/// `dim_stats`) so the adaptive re-planner can re-derive the remaining
+/// edges against a measured residual mid-query.
 #[derive(Clone, Debug)]
 pub struct DimStats {
     pub relation: Relation,

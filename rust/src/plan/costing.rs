@@ -26,8 +26,10 @@
 //!    sort-merge three).
 
 use crate::cluster::{Cluster, ClusterConfig};
-use crate::model::{newton, CostModel};
+use crate::model::{fit, newton, CostModel};
+use crate::util::Json;
 
+use super::adaptive::EdgeObservation;
 use super::catalog::{
     chain_edge_stats, star_dim_stats, DimStats, EdgeStats, PlanInputs, STREAM_ROW_BYTES,
 };
@@ -108,12 +110,37 @@ pub fn star_edge_stats(
     inputs: &PlanInputs,
     mode: PushdownMode,
 ) -> Vec<(String, Relation, EdgeStats)> {
+    star_edge_stats_with_dims(spec, inputs, mode).0
+}
+
+/// [`star_edge_stats`] plus the ranked [`DimStats`] it derived from —
+/// the sketch features a star [`JoinPlan`] carries so the adaptive
+/// re-planner can re-derive its tail.  The one copy of the
+/// rank-then-derive pipeline; [`star_edge_stats`] and the planner both
+/// go through here.
+pub fn star_edge_stats_with_dims(
+    spec: &PlanSpec,
+    inputs: &PlanInputs,
+    mode: PushdownMode,
+) -> (Vec<(String, Relation, EdgeStats)>, Vec<DimStats>) {
     let fact_rows = inputs.lineitem.n_rows().max(1) as f64;
     let mut dims = star_dim_stats(spec, inputs);
+    rank_dims(&mut dims, fact_rows, mode);
+    let list = derive_edge_stats(&dims, fact_rows, mode);
+    (list, dims)
+}
+
+/// Order same-fact dimension filters in place: sort by [`pushdown_score`]
+/// against a stream of `stream_rows` when `mode` is ranked, then enforce
+/// the snowflake dependency (ORDERS before CUSTOMER) in both modes.
+/// Shared by the a-priori planner ([`star_edge_stats`]) and the adaptive
+/// re-planner, which re-ranks the remaining tail against the *measured*
+/// residual.
+pub fn rank_dims(dims: &mut Vec<DimStats>, stream_rows: f64, mode: PushdownMode) {
     if mode == PushdownMode::Ranked {
         dims.sort_by(|x, y| {
-            pushdown_score(fact_rows, y)
-                .partial_cmp(&pushdown_score(fact_rows, x))
+            pushdown_score(stream_rows, y)
+                .partial_cmp(&pushdown_score(stream_rows, x))
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then_with(|| x.relation.name().cmp(y.relation.name()))
         });
@@ -126,13 +153,26 @@ pub fn star_edge_stats(
             dims.insert(ci, o);
         }
     }
+}
 
-    let mut residual = fact_rows;
+/// The residual-stream A/B derivation — the **single source of truth**
+/// for how a stream of `start_rows` turns into per-edge workloads (the
+/// cost model's `A = N_filtrable/P`, `B = N_matched/P` inputs).  Ranked
+/// mode prices edge `i+1` against the residual left by edges `1..=i`;
+/// unranked mode prices every edge against `start_rows` (static
+/// propagation).  Static planning calls this with the full fact scan;
+/// adaptive re-planning calls it with the measured residual.
+pub fn derive_edge_stats(
+    dims: &[DimStats],
+    start_rows: f64,
+    mode: PushdownMode,
+) -> Vec<(String, Relation, EdgeStats)> {
+    let mut residual = start_rows;
     let mut out = Vec::with_capacity(dims.len());
     for d in dims {
         let probe_rows = match mode {
             PushdownMode::Ranked => residual,
-            PushdownMode::Unranked => fact_rows,
+            PushdownMode::Unranked => start_rows,
         };
         let probe_rows_u = (probe_rows.round() as u64).max(1);
         let matched = ((probe_rows * d.match_frac).round() as u64).min(probe_rows_u);
@@ -213,9 +253,22 @@ pub fn predict_sortmerge_s(cfg: &ClusterConfig, e: &EdgeStats) -> f64 {
 /// Decide every edge: probe order (star topologies), per-edge optimal ε
 /// (or the global ε), and the cheapest predicted strategy.
 pub fn plan_edges(cluster: &Cluster, spec: &PlanSpec, inputs: &PlanInputs) -> JoinPlan {
-    let cfg = cluster.config();
-    let edge_list = match spec.topology {
-        Topology::Star => star_edge_stats(spec, inputs, spec.pushdown),
+    plan_edges_calibrated(cluster, spec, inputs, None)
+}
+
+/// [`plan_edges`] with an optional per-cluster [`CostCalibration`]: when
+/// the store has enough accumulated [`EdgeObservation`]s, every edge's
+/// constructed cost model is rescaled by the fitted stage factors before
+/// ε* and the strategy are decided — the paper's offline fit, closed
+/// into a loop.
+pub fn plan_edges_calibrated(
+    cluster: &Cluster,
+    spec: &PlanSpec,
+    inputs: &PlanInputs,
+    calibration: Option<&CostCalibration>,
+) -> JoinPlan {
+    let (edge_list, dim_stats) = match spec.topology {
+        Topology::Star => star_edge_stats_with_dims(spec, inputs, spec.pushdown),
         Topology::Chain => {
             assert!(
                 spec.dims.len() == 2
@@ -223,15 +276,35 @@ pub fn plan_edges(cluster: &Cluster, spec: &PlanSpec, inputs: &PlanInputs) -> Jo
                     && spec.dims.contains(&Relation::Customer),
                 "chain topology supports only the CUSTOMER ⋈ ORDERS ⋈ LINEITEM tree"
             );
-            chain_edge_stats(spec, inputs)
+            (chain_edge_stats(spec, inputs), Vec::new())
         }
     };
-    let edges = edge_list
+    let edges = price_edges(cluster.config(), spec.eps_mode, calibration, edge_list);
+    JoinPlan { topology: spec.topology, edges, dim_stats }
+}
+
+/// Price an edge list: build each edge's §7 model (calibrated when a
+/// store is supplied), solve its ε*, and pick the cheapest predicted
+/// strategy.  Shared by the static planner and the adaptive re-planner —
+/// a re-planned tail goes through exactly this pricing, just with
+/// measured workloads.
+pub fn price_edges(
+    cfg: &ClusterConfig,
+    eps_mode: EpsMode,
+    calibration: Option<&CostCalibration>,
+    edge_list: Vec<(String, Relation, EdgeStats)>,
+) -> Vec<PlannedEdge> {
+    // fit the calibration factors once per pricing pass, not per edge
+    let factors = calibration.and_then(|c| c.factors());
+    edge_list
         .into_iter()
         .map(|(name, relation, stats)| {
-            let model = edge_cost_model(cfg, &stats);
+            let mut model = edge_cost_model(cfg, &stats);
+            if let Some(f) = factors {
+                model = CostCalibration::scale(model, f);
+            }
             let opt = newton::optimal_epsilon(&model);
-            let eps = match spec.eps_mode {
+            let eps = match eps_mode {
                 EpsMode::PerFilter => opt.eps,
                 EpsMode::Global(g) => g,
             };
@@ -253,8 +326,203 @@ pub fn plan_edges(cluster: &Cluster, spec: &PlanSpec, inputs: &PlanInputs) -> Jo
             };
             PlannedEdge { name, relation, strategy, stats, prediction }
         })
-        .collect();
-    JoinPlan { topology: spec.topology, edges }
+        .collect()
+}
+
+/// One bloom-edge observation in the §7 fit's coordinates: the measured
+/// stage seconds against the uncalibrated model's predictions on the
+/// *measured* workload (so constant error is isolated from estimate
+/// error).
+#[derive(Clone, Copy, Debug)]
+pub struct CalibrationSample {
+    pub eps: f64,
+    pub predicted_stage1_s: f64,
+    pub predicted_stage2_s: f64,
+    pub measured_stage1_s: f64,
+    pub measured_stage2_s: f64,
+}
+
+/// Per-cluster calibration store: accumulated executor observations that
+/// refine the constructed cost model's constants.  [`factors`] fits two
+/// through-origin regressions with [`crate::model::fit`] —
+/// `measured_stage1 ≈ α · predicted_stage1` (the K constants) and
+/// `measured_stage2 ≈ β · predicted_stage2` (the L and C constants) —
+/// and [`apply`] rescales a constructed [`CostModel`] by them, closing
+/// the loop the paper fits offline.  Persisted as JSON under `target/`
+/// (see [`CostCalibration::default_path`]).
+///
+/// [`factors`]: CostCalibration::factors
+/// [`apply`]: CostCalibration::apply
+#[derive(Clone, Debug, Default)]
+pub struct CostCalibration {
+    pub samples: Vec<CalibrationSample>,
+}
+
+impl CostCalibration {
+    /// Fewest samples before the fit is trusted.
+    pub const MIN_SAMPLES: usize = 3;
+    /// Most samples retained (oldest evicted first).
+    pub const MAX_SAMPLES: usize = 256;
+    /// Plausible range for a stage-scale factor — a fit outside it says
+    /// the observations do not look like the model at all (mismatched
+    /// store, contaminated samples), so the whole fit is discarded
+    /// rather than applied.
+    pub const FACTOR_RANGE: (f64, f64) = (0.05, 20.0);
+
+    /// Fold one executed edge into the store (bloom edges only — the §7
+    /// stage models are the bloom cascade's).
+    pub fn record(&mut self, obs: &EdgeObservation) {
+        let Some(eps) = obs.eps else { return };
+        if obs.predicted_stage1_s <= 0.0 || obs.predicted_stage2_s <= 0.0 {
+            return;
+        }
+        if self.samples.len() >= Self::MAX_SAMPLES {
+            self.samples.remove(0);
+        }
+        self.samples.push(CalibrationSample {
+            eps,
+            predicted_stage1_s: obs.predicted_stage1_s,
+            predicted_stage2_s: obs.predicted_stage2_s,
+            measured_stage1_s: obs.measured_stage1_s,
+            measured_stage2_s: obs.measured_stage2_s,
+        });
+    }
+
+    /// The fitted (α, β) stage-scale factors, or `None` below
+    /// [`Self::MIN_SAMPLES`] or on a degenerate fit.
+    pub fn factors(&self) -> Option<(f64, f64)> {
+        if self.samples.len() < Self::MIN_SAMPLES {
+            return None;
+        }
+        let p1: Vec<f64> = self.samples.iter().map(|s| s.predicted_stage1_s).collect();
+        let m1: Vec<f64> = self.samples.iter().map(|s| s.measured_stage1_s).collect();
+        let p2: Vec<f64> = self.samples.iter().map(|s| s.predicted_stage2_s).collect();
+        let m2: Vec<f64> = self.samples.iter().map(|s| s.measured_stage2_s).collect();
+        let alpha = fit::fit_scale(&p1, &m1).ok()?;
+        let beta = fit::fit_scale(&p2, &m2).ok()?;
+        if !(alpha.is_finite() && beta.is_finite()) {
+            return None;
+        }
+        let (lo, hi) = Self::FACTOR_RANGE;
+        if !(lo..=hi).contains(&alpha) || !(lo..=hi).contains(&beta) {
+            return None;
+        }
+        Some((alpha, beta))
+    }
+
+    /// Rescale a constructed model by the fitted factors (identity until
+    /// the store has a usable fit).
+    pub fn apply(&self, m: CostModel) -> CostModel {
+        match self.factors() {
+            Some(f) => Self::scale(m, f),
+            None => m,
+        }
+    }
+
+    /// Rescale `m` by explicit `(α, β)` stage factors — what [`apply`]
+    /// does; exposed so a pricing pass can fit once and rescale many
+    /// edge models.
+    ///
+    /// [`apply`]: CostCalibration::apply
+    pub fn scale(m: CostModel, factors: (f64, f64)) -> CostModel {
+        let (alpha, beta) = factors;
+        CostModel {
+            k1: m.k1 * alpha,
+            k2: m.k2 * alpha,
+            l1: m.l1 * beta,
+            l2: m.l2 * beta,
+            c: m.c * beta,
+            ..m
+        }
+    }
+
+    /// Where the store for `cfg` lives:
+    /// `target/calibration/cluster_n<..>e<..>c<..>p<..>-<fp>.json`.  The
+    /// trailing fingerprint hashes the cost-relevant constants
+    /// (bandwidths, latencies, overheads, per-record costs), so two
+    /// clusters with the same shape but different economics never share
+    /// a store.
+    pub fn default_path(cfg: &ClusterConfig) -> std::path::PathBuf {
+        std::path::PathBuf::from(format!(
+            "target/calibration/cluster_n{}e{}c{}p{}-{:08x}.json",
+            cfg.n_nodes,
+            cfg.executors_per_node,
+            cfg.cores_per_executor,
+            cfg.shuffle_partitions,
+            cost_fingerprint(cfg) as u32
+        ))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let samples: Vec<Json> = self.samples.iter().map(sample_json).collect();
+        Json::obj([("samples", Json::Arr(samples))])
+    }
+
+    pub fn from_json(j: &Json) -> Option<CostCalibration> {
+        let mut out = CostCalibration::default();
+        for s in j.get("samples")?.as_arr()? {
+            out.samples.push(CalibrationSample {
+                eps: s.get("eps")?.as_f64()?,
+                predicted_stage1_s: s.get("predicted_stage1_s")?.as_f64()?,
+                predicted_stage2_s: s.get("predicted_stage2_s")?.as_f64()?,
+                measured_stage1_s: s.get("measured_stage1_s")?.as_f64()?,
+                measured_stage2_s: s.get("measured_stage2_s")?.as_f64()?,
+            });
+        }
+        Some(out)
+    }
+
+    pub fn load(path: &std::path::Path) -> Option<CostCalibration> {
+        let text = std::fs::read_to_string(path).ok()?;
+        Self::from_json(&Json::parse(&text).ok()?)
+    }
+
+    /// Write-then-rename, so a killed process never leaves a truncated
+    /// store behind for the next run to discard.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())?;
+        std::fs::rename(&tmp, path)
+    }
+}
+
+/// FNV-1a over the cost constants the §7 models are built from — the
+/// calibration store's cache key beyond the topology counts.
+fn cost_fingerprint(cfg: &ClusterConfig) -> u64 {
+    let vals = [
+        cfg.net_bandwidth,
+        cfg.net_latency,
+        cfg.disk_bandwidth,
+        cfg.task_overhead,
+        cfg.stage_overhead,
+        cfg.cpu_scale,
+        cfg.scan_record_cost,
+        cfg.sort_compare_cost,
+        cfg.merge_record_cost,
+        cfg.hash_insert_cost,
+        cfg.executor_mem_bytes as f64,
+    ];
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in vals {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn sample_json(s: &CalibrationSample) -> Json {
+    Json::obj([
+        ("eps", Json::num(s.eps)),
+        ("predicted_stage1_s", Json::num(s.predicted_stage1_s)),
+        ("predicted_stage2_s", Json::num(s.predicted_stage2_s)),
+        ("measured_stage1_s", Json::num(s.measured_stage1_s)),
+        ("measured_stage2_s", Json::num(s.measured_stage2_s)),
+    ])
 }
 
 #[cfg(test)]
@@ -371,6 +639,112 @@ mod tests {
         let a_ranked = ranked_orders.2.probe_rows - ranked_orders.2.matched_rows;
         let a_static = unranked_orders.2.probe_rows - unranked_orders.2.matched_rows;
         assert!(a_ranked * 10 < a_static.max(1), "A {a_ranked} vs {a_static}");
+    }
+
+    fn obs_with(p1: f64, p2: f64, m1: f64, m2: f64) -> EdgeObservation {
+        EdgeObservation {
+            edge: "⋈part".into(),
+            relation: Relation::Part,
+            strategy: "bloom(eps=0.0500)".into(),
+            eps: Some(0.05),
+            estimated_probe_rows: 100,
+            measured_probe_rows: 100,
+            estimated_survivors: 50,
+            measured_survivors: 50,
+            build_wall_s: 0.0,
+            probe_wall_s: 0.0,
+            shipped_bytes: 0,
+            sim_s: m1 + m2,
+            measured_stage1_s: m1,
+            measured_stage2_s: m2,
+            predicted_stage1_s: p1,
+            predicted_stage2_s: p2,
+        }
+    }
+
+    #[test]
+    fn calibration_recovers_scale_factors() {
+        let mut store = CostCalibration::default();
+        assert!(store.factors().is_none(), "no fit below MIN_SAMPLES");
+        // synthetic truth: stage 1 runs 2× the constructed model, stage 2 half
+        for i in 0..6 {
+            let p1 = 1.0 + i as f64;
+            let p2 = 3.0 + 2.0 * i as f64;
+            store.record(&obs_with(p1, p2, 2.0 * p1, 0.5 * p2));
+        }
+        let (alpha, beta) = store.factors().unwrap();
+        assert!((alpha - 2.0).abs() < 1e-9, "{alpha}");
+        assert!((beta - 0.5).abs() < 1e-9, "{beta}");
+        let m = CostModel { k1: 1.0, k2: 0.4, l1: 5.0, l2: 8.0, c: 2e-7, a: 1e6, b: 1e4 };
+        let cal = store.apply(m);
+        assert!((cal.k1 - 2.0).abs() < 1e-9 && (cal.k2 - 0.8).abs() < 1e-9);
+        assert!((cal.l1 - 2.5).abs() < 1e-9 && (cal.l2 - 4.0).abs() < 1e-9);
+        assert!((cal.c - 1e-7).abs() < 1e-15);
+        // workload terms are measured inputs, never rescaled
+        assert_eq!(cal.a, m.a);
+        assert_eq!(cal.b, m.b);
+    }
+
+    #[test]
+    fn calibration_shifts_eps_star() {
+        // stage 1 (filter cost) twice as expensive as constructed ⇒ the
+        // calibrated optimum tolerates more false positives
+        let mut store = CostCalibration::default();
+        for i in 0..4 {
+            let p1 = 1.0 + i as f64;
+            let p2 = 2.0 + i as f64;
+            store.record(&obs_with(p1, p2, 2.0 * p1, p2));
+        }
+        let cfg = ClusterConfig::default();
+        let m = edge_cost_model(&cfg, &edge(10_000_000, 500_000, 1_000_000));
+        let e_plain = newton::optimal_epsilon(&m).eps;
+        let e_cal = newton::optimal_epsilon(&store.apply(m)).eps;
+        assert!(e_cal > e_plain, "{e_cal} vs {e_plain}");
+    }
+
+    #[test]
+    fn calibration_discards_implausible_fits() {
+        let mut store = CostCalibration::default();
+        for i in 0..4 {
+            let p1 = 1.0 + i as f64;
+            store.record(&obs_with(p1, p1, 300.0 * p1, p1));
+        }
+        // a 300× stage-1 factor does not look like the model: reject
+        // the whole fit instead of clamping it into range
+        assert!(store.factors().is_none());
+        let m = CostModel { k1: 1.0, k2: 0.4, l1: 5.0, l2: 8.0, c: 2e-7, a: 1e6, b: 1e4 };
+        assert_eq!(store.apply(m), m);
+    }
+
+    #[test]
+    fn calibration_path_keys_on_cost_constants_too() {
+        let a = ClusterConfig::default();
+        let mut b = ClusterConfig::default();
+        b.net_bandwidth /= 10.0;
+        assert_eq!(CostCalibration::default_path(&a), CostCalibration::default_path(&a));
+        assert_ne!(CostCalibration::default_path(&a), CostCalibration::default_path(&b));
+    }
+
+    #[test]
+    fn calibration_ignores_non_bloom_and_persists() {
+        let mut store = CostCalibration::default();
+        let mut non_bloom = obs_with(1.0, 1.0, 1.0, 1.0);
+        non_bloom.eps = None;
+        store.record(&non_bloom);
+        assert!(store.samples.is_empty(), "non-bloom edges carry no §7 stage split");
+        for i in 0..4 {
+            let p1 = 1.0 + i as f64;
+            store.record(&obs_with(p1, 2.0 * p1, 1.1 * p1, 2.0 * p1));
+        }
+        let path =
+            std::env::temp_dir().join(format!("bloomjoin_calib_{}.json", std::process::id()));
+        store.save(&path).unwrap();
+        let back = CostCalibration::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.samples.len(), store.samples.len());
+        let (a0, b0) = store.factors().unwrap();
+        let (a1, b1) = back.factors().unwrap();
+        assert!((a0 - a1).abs() < 1e-12 && (b0 - b1).abs() < 1e-12);
     }
 
     #[test]

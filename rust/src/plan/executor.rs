@@ -1,29 +1,41 @@
-//! Plan execution: run the planned edges with their chosen strategies
-//! and compose the per-edge stage accounting into one ledger.
+//! Plan execution: an incremental **plan / observe / re-plan loop** over
+//! the planned edge list, composing per-edge stage accounting into one
+//! ledger.
 //!
-//! A star plan is executed as a **loop over the planned edge list** on a
-//! vectorized fact stream: the LINEITEM scan is held as column batches
-//! ([`FactStream`]), each edge probes a gathered key column and ships
-//! only **survivor indices + appended payload columns** downstream (a
-//! selection-vector pipeline — no per-edge `Vec<PlanRow>` clones), and
-//! the final [`PlanRow`]s are assembled exactly once, in parallel chunks
-//! on the cluster's worker pool.  Per-edge [`crate::metrics::QueryMetrics`]
-//! are absorbed deterministically in edge order and every stage collects
-//! its per-partition outputs in task order, so ledgers and row order are
-//! identical for any `BLOOMJOIN_THREADS` worker count.  Every edge order
-//! and strategy assignment produces the same logical multiset (the
-//! equivalence property `rust/tests/join_equivalence.rs` checks against
-//! [`nested_loop_oracle`]); what differs is the simulated cost of the
-//! composition — which is the planner's whole subject.
+//! A star plan is executed on a vectorized fact stream: the LINEITEM
+//! scan is held as column batches ([`FactStream`]), each edge probes a
+//! gathered key column and ships only **survivor indices + appended
+//! payload columns** downstream (a selection-vector pipeline — no
+//! per-edge `Vec<PlanRow>` clones), and the final [`PlanRow`]s are
+//! assembled exactly once, in parallel chunks on the cluster's worker
+//! pool.  After each edge completes the executor emits an
+//! [`EdgeObservation`] (measured survivors, stage wall times, shipped
+//! bytes); under [`ReplanPolicy::Adaptive`] the not-yet-executed tail is
+//! re-planned whenever the measured survivors break the estimate's 3σ
+//! bound (see [`super::adaptive`]).  Per-edge
+//! [`crate::metrics::QueryMetrics`] are absorbed deterministically in
+//! edge order and every stage collects its per-partition outputs in task
+//! order, so ledgers and row order are identical for any
+//! `BLOOMJOIN_THREADS` worker count.  Every edge order and strategy
+//! assignment produces the same logical multiset (the equivalence
+//! property `rust/tests/join_equivalence.rs` checks against
+//! [`nested_loop_oracle`], with and without re-planning); what differs
+//! is the simulated cost of the composition — which is the planner's
+//! whole subject.
 
 use crate::cluster::pool::ThreadPool;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ClusterConfig};
 use crate::dataset::PartitionedTable;
 use crate::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
 use crate::joins::{exec, JoinedRow, Keyed, RowSize};
 use crate::metrics::QueryMetrics;
 
-use super::catalog::{FactRow, PlanInputs, STREAM_ROW_BYTES};
+use super::adaptive::{
+    estimate_error, expected_survivors, replan_remaining, should_replan, tail_labels,
+    EdgeObservation, ReplanEvent, ReplanLedger, ReplanPolicy,
+};
+use super::catalog::{EdgeStats, FactRow, PlanInputs, STREAM_ROW_BYTES};
+use super::costing::{edge_cost_model, CostCalibration};
 use super::{EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, Relation, Topology};
 
 /// One row of the n-way join result: the fact columns plus every joined
@@ -236,11 +248,13 @@ fn edge_report(edge: &PlannedEdge, m: &QueryMetrics, probe_rows: u64) -> EdgeRep
     }
 }
 
-/// Execution result: rows + composed metrics + per-edge breakdown.
+/// Execution result: rows + composed metrics + per-edge breakdown + the
+/// adaptive loop's observation/re-plan ledger.
 pub struct PlanOutput {
     pub rows: Vec<PlanRow>,
     pub metrics: QueryMetrics,
     pub edge_reports: Vec<EdgeReport>,
+    pub ledger: ReplanLedger,
 }
 
 impl PlanOutput {
@@ -355,16 +369,185 @@ where
     }
 }
 
+/// The dimension tables an executing star plan may still consume.  Each
+/// relation is joined at most once per plan, so edges take the tables by
+/// value (no deep clones) — and a re-planned tail can only reorder
+/// relations that are still here.
+struct DimTables {
+    orders: Option<PartitionedTable<(u64, u64, i32)>>,
+    customer: Option<PartitionedTable<Keyed<i32>>>,
+    part: Option<PartitionedTable<Keyed<i32>>>,
+    supplier: Option<PartitionedTable<Keyed<i32>>>,
+    orders_joined: bool,
+}
+
+/// Run one star edge: probe the gathered key column against the edge's
+/// dimension, contract the stream through the survivors and append the
+/// dimension's payload column.  Returns the edge's metrics; the measured
+/// survivor count is the stream's new length.
+fn run_star_edge(
+    cluster: &Cluster,
+    edge: &PlannedEdge,
+    parts: usize,
+    stream: &mut FactStream,
+    tables: &mut DimTables,
+) -> QueryMetrics {
+    // the edge's big side: the gathered key column + stream indices —
+    // survivors come back as indices + payloads
+    let big: PartitionedTable<Keyed<StreamIdx>> = PartitionedTable::from_rows(
+        stream
+            .keys_for(edge.relation)
+            .into_iter()
+            .enumerate()
+            .map(|(j, k)| (k, StreamIdx(j as u32)))
+            .collect(),
+        parts,
+    );
+    match edge.relation {
+        Relation::Orders => {
+            let dim = tables.orders.take().expect("star plans join orders at most once");
+            let small: PartitionedTable<Keyed<(u64, i32)>> =
+                dim.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect());
+            let (joined, m) = run_edge(cluster, edge, big, small);
+            tables.orders_joined = true;
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut ck = Vec::with_capacity(joined.len());
+            let mut od = Vec::with_capacity(joined.len());
+            for (_, idx, (c, d)) in joined {
+                inner.push(idx.0);
+                ck.push(c);
+                od.push(d);
+            }
+            stream.contract(&inner);
+            stream.custkey = Some(ck);
+            stream.orderdate = Some(od);
+            m
+        }
+        Relation::Customer => {
+            assert!(
+                tables.orders_joined,
+                "a customer edge requires an orders edge upstream (custkey comes from ORDERS)"
+            );
+            let dim = tables.customer.take().expect("star plans join customer at most once");
+            let (joined, m) = run_edge(cluster, edge, big, dim);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut nk = Vec::with_capacity(joined.len());
+            for (_, idx, n) in joined {
+                inner.push(idx.0);
+                nk.push(n);
+            }
+            stream.contract(&inner);
+            stream.nationkey = Some(nk);
+            m
+        }
+        Relation::Part => {
+            let dim = tables.part.take().expect("star plans join part at most once");
+            let (joined, m) = run_edge(cluster, edge, big, dim);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut brand = Vec::with_capacity(joined.len());
+            for (_, idx, b) in joined {
+                inner.push(idx.0);
+                brand.push(b);
+            }
+            stream.contract(&inner);
+            stream.p_brand = Some(brand);
+            m
+        }
+        Relation::Supplier => {
+            let dim = tables.supplier.take().expect("star plans join supplier at most once");
+            let (joined, m) = run_edge(cluster, edge, big, dim);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut nk = Vec::with_capacity(joined.len());
+            for (_, idx, n) in joined {
+                inner.push(idx.0);
+                nk.push(n);
+            }
+            stream.contract(&inner);
+            stream.s_nationkey = Some(nk);
+            m
+        }
+        Relation::Lineitem => {
+            panic!("lineitem is the fact side of a star plan, not a dimension")
+        }
+    }
+}
+
+/// What the executor measured running one edge — the adaptive loop's
+/// (and the calibration store's) input.  For bloom edges the
+/// uncalibrated §7 model is re-evaluated on the *measured* workload at
+/// the executed ε, so a calibration fit sees constant error, not
+/// estimate error.
+fn observe_edge(
+    cfg: &ClusterConfig,
+    edge: &PlannedEdge,
+    m: &QueryMetrics,
+    probe_rows: u64,
+    survivors: u64,
+) -> EdgeObservation {
+    let eps = match edge.strategy {
+        EdgeStrategy::Bloom { eps } => Some(eps),
+        _ => None,
+    };
+    let (pred1, pred2) = match eps {
+        Some(e) => {
+            let measured = EdgeStats {
+                probe_rows: probe_rows.max(1),
+                matched_rows: survivors.min(probe_rows).max(1),
+                ..edge.stats.clone()
+            };
+            let model = edge_cost_model(cfg, &measured);
+            (model.bloom(e), model.join(e))
+        }
+        None => (0.0, 0.0),
+    };
+    let probe_stage = match edge.strategy {
+        EdgeStrategy::Bloom { .. } => "filter_scan",
+        _ => "join",
+    };
+    EdgeObservation {
+        edge: edge.name.clone(),
+        relation: edge.relation,
+        strategy: edge.strategy.label(),
+        eps,
+        estimated_probe_rows: edge.stats.probe_rows,
+        measured_probe_rows: probe_rows,
+        estimated_survivors: edge.stats.matched_rows,
+        measured_survivors: survivors,
+        build_wall_s: m.bloom_creation_wall_s(),
+        probe_wall_s: m.stage(probe_stage).map_or(0.0, |s| s.wall_s),
+        shipped_bytes: m.total_net_bytes(),
+        sim_s: m.total_sim_s(),
+        measured_stage1_s: m.bloom_creation_s(),
+        measured_stage2_s: m.filter_join_s(),
+        predicted_stage1_s: pred1,
+        predicted_stage2_s: pred2,
+    }
+}
+
 /// Execute `plan` over `inputs` on `cluster`.
 ///
 /// Star plans run any number of dimension edges (a CUSTOMER edge must
 /// come after an ORDERS edge) over the vectorized [`FactStream`]; chain
-/// plans are the fixed two-edge 3-relation tree.
+/// plans are the fixed two-edge 3-relation tree.  Re-planning (when
+/// `spec.replan` asks for it) uses uncalibrated cost models; use
+/// [`execute_with`] to thread a calibration store through.
 pub fn execute(
     cluster: &Cluster,
     spec: &PlanSpec,
     plan: &JoinPlan,
     inputs: PlanInputs,
+) -> PlanOutput {
+    execute_with(cluster, spec, plan, inputs, None)
+}
+
+/// [`execute`] with an optional per-cluster calibration store, applied
+/// when an adaptive re-plan re-prices the remaining tail.
+pub fn execute_with(
+    cluster: &Cluster,
+    spec: &PlanSpec,
+    plan: &JoinPlan,
+    inputs: PlanInputs,
+    calibration: Option<&CostCalibration>,
 ) -> PlanOutput {
     assert!(!plan.edges.is_empty(), "a plan needs at least one edge");
     let parts = spec.partitions.max(1);
@@ -372,101 +555,68 @@ pub fn execute(
 
     let mut metrics = QueryMetrics::default();
     let mut edge_reports = Vec::with_capacity(plan.edges.len());
+    let mut ledger = ReplanLedger::new(spec.replan);
 
     let rows: Vec<PlanRow> = match plan.topology {
         Topology::Star => {
             let mut stream = FactStream::seed(&lineitem);
-            // each relation is joined at most once per star plan, so the
-            // edges take the dimension tables by value (no deep clones)
-            let mut orders = Some(orders);
-            let mut customer = Some(customer);
-            let mut part = Some(part);
-            let mut supplier = Some(supplier);
-            let mut orders_joined = false;
-            for (i, edge) in plan.edges.iter().enumerate() {
+            let mut tables = DimTables {
+                orders: Some(orders),
+                customer: Some(customer),
+                part: Some(part),
+                supplier: Some(supplier),
+                orders_joined: false,
+            };
+            // the working edge list: a re-plan rewrites the tail beyond
+            // the edge that just completed
+            let mut pending: Vec<PlannedEdge> = plan.edges.clone();
+            let mut i = 0;
+            while i < pending.len() {
+                let edge = pending[i].clone();
                 let probe_rows = stream.len() as u64;
-                // the edge's big side: the gathered key column + stream
-                // indices — survivors come back as indices + payloads
-                let big: PartitionedTable<Keyed<StreamIdx>> = PartitionedTable::from_rows(
-                    stream
-                        .keys_for(edge.relation)
-                        .into_iter()
-                        .enumerate()
-                        .map(|(j, k)| (k, StreamIdx(j as u32)))
-                        .collect(),
-                    parts,
-                );
-                let m: QueryMetrics = match edge.relation {
-                    Relation::Orders => {
-                        let dim = orders.take().expect("star plans join orders at most once");
-                        let small: PartitionedTable<Keyed<(u64, i32)>> = dim.map_partitions(
-                            |p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect(),
-                        );
-                        let (joined, m) = run_edge(cluster, edge, big, small);
-                        orders_joined = true;
-                        let mut inner = Vec::with_capacity(joined.len());
-                        let mut ck = Vec::with_capacity(joined.len());
-                        let mut od = Vec::with_capacity(joined.len());
-                        for (_, idx, (c, d)) in joined {
-                            inner.push(idx.0);
-                            ck.push(c);
-                            od.push(d);
-                        }
-                        stream.contract(&inner);
-                        stream.custkey = Some(ck);
-                        stream.orderdate = Some(od);
-                        m
+                let m = run_star_edge(cluster, &edge, parts, &mut stream, &mut tables);
+                let survivors = stream.len() as u64;
+                // observe: if the measured survivors are inconsistent
+                // with this edge's selectivity estimate (beyond sketch
+                // noise), every remaining edge's workload was derived
+                // from a wrong residual — re-plan the tail against the
+                // measured one
+                let expected = expected_survivors(&edge.stats, probe_rows);
+                if spec.replan == ReplanPolicy::Adaptive
+                    && i + 1 < pending.len()
+                    && should_replan(expected, survivors, ledger.bound)
+                {
+                    if let Some(new_tail) = replan_remaining(
+                        cluster,
+                        spec,
+                        calibration,
+                        &plan.dim_stats,
+                        &pending[i + 1..],
+                        survivors,
+                    ) {
+                        ledger.events.push(ReplanEvent {
+                            after_edge: edge.name.clone(),
+                            estimated_survivors: expected,
+                            measured_survivors: survivors,
+                            relative_error: estimate_error(expected, survivors),
+                            bound: ledger.bound,
+                            old_tail: tail_labels(&pending[i + 1..]),
+                            new_tail: tail_labels(&new_tail),
+                        });
+                        pending.truncate(i + 1);
+                        pending.extend(new_tail);
                     }
-                    Relation::Customer => {
-                        assert!(
-                            orders_joined,
-                            "a customer edge requires an orders edge upstream (custkey comes \
-                             from ORDERS)"
-                        );
-                        let dim = customer.take().expect("star plans join customer at most once");
-                        let (joined, m) = run_edge(cluster, edge, big, dim);
-                        let mut inner = Vec::with_capacity(joined.len());
-                        let mut nk = Vec::with_capacity(joined.len());
-                        for (_, idx, n) in joined {
-                            inner.push(idx.0);
-                            nk.push(n);
-                        }
-                        stream.contract(&inner);
-                        stream.nationkey = Some(nk);
-                        m
-                    }
-                    Relation::Part => {
-                        let dim = part.take().expect("star plans join part at most once");
-                        let (joined, m) = run_edge(cluster, edge, big, dim);
-                        let mut inner = Vec::with_capacity(joined.len());
-                        let mut brand = Vec::with_capacity(joined.len());
-                        for (_, idx, b) in joined {
-                            inner.push(idx.0);
-                            brand.push(b);
-                        }
-                        stream.contract(&inner);
-                        stream.p_brand = Some(brand);
-                        m
-                    }
-                    Relation::Supplier => {
-                        let dim = supplier.take().expect("star plans join supplier at most once");
-                        let (joined, m) = run_edge(cluster, edge, big, dim);
-                        let mut inner = Vec::with_capacity(joined.len());
-                        let mut nk = Vec::with_capacity(joined.len());
-                        for (_, idx, n) in joined {
-                            inner.push(idx.0);
-                            nk.push(n);
-                        }
-                        stream.contract(&inner);
-                        stream.s_nationkey = Some(nk);
-                        m
-                    }
-                    Relation::Lineitem => {
-                        panic!("lineitem is the fact side of a star plan, not a dimension")
-                    }
-                };
-                edge_reports.push(edge_report(edge, &m, probe_rows));
+                }
+                ledger.observations.push(observe_edge(
+                    cluster.config(),
+                    &edge,
+                    &m,
+                    probe_rows,
+                    survivors,
+                ));
+                edge_reports.push(edge_report(&edge, &m, probe_rows));
                 metrics.absorb(&format!("e{}", i + 1), m);
+                i += 1;
             }
             stream.assemble(cluster.pool())
         }
@@ -477,6 +627,14 @@ pub fn execute(
                 .map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect());
             let probe1 = big1.n_rows() as u64;
             let (j1, m1) = run_edge(cluster, &plan.edges[0], big1, customer);
+            let survivors1 = j1.len() as u64;
+            ledger.observations.push(observe_edge(
+                cluster.config(),
+                &plan.edges[0],
+                &m1,
+                probe1,
+                survivors1,
+            ));
             edge_reports.push(edge_report(&plan.edges[0], &m1, probe1));
             metrics.absorb("e1", m1);
 
@@ -492,6 +650,14 @@ pub fn execute(
                 .map_partitions(|p| p.iter().map(|f| (f.orderkey, seed_row(f))).collect());
             let probe2 = big2.n_rows() as u64;
             let (j2, m2) = run_edge(cluster, &plan.edges[1], big2, small2);
+            let survivors2 = j2.len() as u64;
+            ledger.observations.push(observe_edge(
+                cluster.config(),
+                &plan.edges[1],
+                &m2,
+                probe2,
+                survivors2,
+            ));
             edge_reports.push(edge_report(&plan.edges[1], &m2, probe2));
             metrics.absorb("e2", m2);
 
@@ -507,7 +673,7 @@ pub fn execute(
     };
 
     metrics.output_rows = rows.len() as u64;
-    PlanOutput { rows, metrics, edge_reports }
+    PlanOutput { rows, metrics, edge_reports, ledger }
 }
 
 #[cfg(test)]
@@ -515,6 +681,50 @@ mod tests {
     use super::super::{plan_edges, prepare, EpsMode, PlanSpec};
     use super::*;
     use crate::cluster::ClusterConfig;
+
+    #[test]
+    fn observations_cover_every_edge_and_static_never_replans() {
+        let spec = wide_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&spec);
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        let out = execute(&cluster, &spec, &plan, inputs);
+        assert_eq!(out.ledger.observations.len(), out.edge_reports.len());
+        assert!(out.ledger.events.is_empty(), "static runs must never re-plan");
+        for (obs, rep) in out.ledger.observations.iter().zip(&out.edge_reports) {
+            assert_eq!(obs.edge, rep.name);
+            assert_eq!(obs.measured_probe_rows, rep.probe_rows);
+            assert!((obs.sim_s - rep.sim_s).abs() < 1e-9);
+        }
+        // the last star edge's survivors are the plan's output rows
+        let last = out.ledger.observations.last().unwrap();
+        assert_eq!(last.measured_survivors, out.metrics.output_rows);
+        // bloom edges carry calibration features
+        for obs in &out.ledger.observations {
+            if obs.eps.is_some() {
+                assert!(obs.predicted_stage1_s > 0.0 && obs.predicted_stage2_s > 0.0);
+                assert!(obs.measured_stage1_s > 0.0 && obs.measured_stage2_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_execution_produces_the_same_rows_as_static() {
+        let spec = wide_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&spec);
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        let a = execute(&cluster, &spec, &plan, inputs.clone());
+        let adaptive_spec =
+            PlanSpec { replan: super::super::ReplanPolicy::Adaptive, ..spec.clone() };
+        let b = execute(&cluster, &adaptive_spec, &plan, inputs);
+        let mut ra = a.rows;
+        let mut rb = b.rows;
+        ra.sort_unstable();
+        rb.sort_unstable();
+        assert_eq!(ra, rb, "re-planning must not change the join result");
+        assert_eq!(b.ledger.observations.len(), b.edge_reports.len());
+    }
 
     fn tiny_spec() -> PlanSpec {
         PlanSpec { sf: 0.002, partitions: 4, ..Default::default() }

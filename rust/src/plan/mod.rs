@@ -36,17 +36,32 @@
 //! work runs in parallel on the `BLOOMJOIN_THREADS`-sized pool) and
 //! composes the per-edge stage accounting into a single
 //! [`crate::metrics::QueryMetrics`] ledger, so a plan's simulated cost
-//! is the composition of its stages.
+//! is the composition of its stages.  The loop is **incremental**: each
+//! executed edge emits an [`EdgeObservation`], and under
+//! [`ReplanPolicy::Adaptive`] the not-yet-executed tail is re-ranked and
+//! re-priced ([`adaptive`]) whenever measured survivors break the HLL 3σ
+//! bound; accumulated observations also feed the per-cluster
+//! [`CostCalibration`] store that refines the cost constants across runs.
 
+pub mod adaptive;
 pub mod catalog;
 pub mod costing;
 pub mod executor;
 
+pub use adaptive::{
+    estimate_error, should_replan, trigger_bound, EdgeObservation, ReplanEvent, ReplanLedger,
+    ReplanPolicy,
+};
 pub use catalog::{
     chain_edge_stats, prepare, star_dim_stats, DimStats, EdgeStats, FactRow, PlanInputs, Relation,
 };
-pub use costing::{plan_edges, star_edge_stats, EdgePrediction};
-pub use executor::{execute, nested_loop_oracle, EdgeReport, PlanOutput, PlanRow, StreamIdx};
+pub use costing::{
+    derive_edge_stats, plan_edges, plan_edges_calibrated, rank_dims, star_edge_stats,
+    CostCalibration, EdgePrediction,
+};
+pub use executor::{
+    execute, execute_with, nested_loop_oracle, EdgeReport, PlanOutput, PlanRow, StreamIdx,
+};
 
 use crate::tpch::ORDERDATE_RANGE_DAYS;
 
@@ -137,6 +152,11 @@ pub struct PlanSpec {
     pub supp_nationkey: Option<i32>,
     pub eps_mode: EpsMode,
     pub pushdown: PushdownMode,
+    /// Whether the executor may re-plan the remaining edges when a
+    /// measured survivor count breaks the estimate's 3σ bound
+    /// ([`adaptive`]); [`ReplanPolicy::Static`] is the pre-adaptive
+    /// behaviour.
+    pub replan: ReplanPolicy,
 }
 
 impl Default for PlanSpec {
@@ -156,6 +176,7 @@ impl Default for PlanSpec {
             supp_nationkey: None,
             eps_mode: EpsMode::PerFilter,
             pushdown: PushdownMode::Ranked,
+            replan: ReplanPolicy::Static,
         }
     }
 }
@@ -210,11 +231,16 @@ impl PlannedEdge {
     }
 }
 
-/// A fully-decided plan: topology + per-edge strategies.
+/// A fully-decided plan: topology + per-edge strategies, plus the
+/// per-dimension sketch features planning was derived from — the raw
+/// material the adaptive re-planner needs to re-derive the tail against
+/// a measured residual.  Empty `dim_stats` (chain plans, strategy-forced
+/// test plans) makes the plan immune to re-planning.
 #[derive(Clone, Debug)]
 pub struct JoinPlan {
     pub topology: Topology,
     pub edges: Vec<PlannedEdge>,
+    pub dim_stats: Vec<DimStats>,
 }
 
 impl JoinPlan {

@@ -12,8 +12,8 @@ use bloomjoin::cluster::{Cluster, ClusterConfig};
 use bloomjoin::dataset::PartitionedTable;
 use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin, FilterBuildStyle};
 use bloomjoin::plan::{
-    execute, nested_loop_oracle, EdgeStrategy, FactRow, JoinPlan, PlanInputs, PlanRow, PlanSpec,
-    PlannedEdge, Relation, Topology,
+    execute, nested_loop_oracle, plan_edges, EdgeStrategy, FactRow, JoinPlan, PlanInputs, PlanRow,
+    PlanSpec, PlannedEdge, Relation, ReplanPolicy, Topology,
 };
 use bloomjoin::testkit::check;
 use bloomjoin::util::Rng;
@@ -282,6 +282,7 @@ fn star_plan(dims: &[Relation], strats: &[EdgeStrategy]) -> JoinPlan {
             .enumerate()
             .map(|(i, (&rel, s))| PlannedEdge::forced(rel, format!("e{}", i + 1), s.clone()))
             .collect(),
+        dim_stats: Vec::new(),
     }
 }
 
@@ -303,6 +304,7 @@ fn three_way_plans_equal_oracle_for_every_strategy_assignment() {
                                 PlannedEdge::forced(Relation::Customer, "e1", s1.clone()),
                                 PlannedEdge::forced(Relation::Orders, "e2", s2.clone()),
                             ],
+                            dim_stats: Vec::new(),
                         },
                     };
                     let mut got = execute(&cluster, &spec, &plan, star_inputs(case)).rows;
@@ -395,6 +397,44 @@ fn five_way_star_plans_equal_oracle_across_orders_and_assignments() {
                         want.len()
                     ));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn adaptive_replanning_still_equals_oracle() {
+    // fully planned (not forced) runs: HLL estimates on these tiny skewed
+    // workloads are frequently off by more than the 3σ bound, so the
+    // adaptive executor genuinely re-ranks and re-prices mid-query — and
+    // the result must still be the oracle's multiset, for both policies
+    let cluster = Cluster::new(ClusterConfig::local());
+    let dims = [Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier];
+    check("adaptive planned 5-way ≡ oracle", 4, gen_star, |case| {
+        let want = oracle_for(case, &dims);
+        let plan_inputs = star_inputs(case);
+        for replan in [ReplanPolicy::Static, ReplanPolicy::Adaptive] {
+            let spec = PlanSpec {
+                partitions: 4,
+                dims: dims.to_vec(),
+                replan,
+                ..Default::default()
+            };
+            let plan = plan_edges(&cluster, &spec, &plan_inputs);
+            let out = execute(&cluster, &spec, &plan, star_inputs(case));
+            if out.ledger.observations.len() != out.edge_reports.len() {
+                return Err("one observation per executed edge".into());
+            }
+            let mut got = out.rows;
+            got.sort_unstable();
+            if got != want {
+                return Err(format!(
+                    "{} run: got {} rows, want {}",
+                    replan.name(),
+                    got.len(),
+                    want.len()
+                ));
             }
         }
         Ok(())

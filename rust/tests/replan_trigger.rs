@@ -1,0 +1,194 @@
+//! Property coverage for the adaptive re-plan trigger (plan/adaptive.rs):
+//!
+//! * estimates inside the HLL 3σ bound never trigger a re-plan, and
+//!   estimates just outside it always do (pure trigger math, both
+//!   directions);
+//! * an adaptive run with *perfect* estimates (dimension key sets equal
+//!   to the fact key sets, unique keys, so the sketch overlap is exact
+//!   and survivors equal probe rows) produces an executed plan identical
+//!   to the static run's, with an empty event ledger;
+//! * a skewed workload (hot fact keys the dimension misses — exactly
+//!   where distinct-key overlap misestimates row survival) always
+//!   triggers, and the re-planned execution still returns the oracle's
+//!   multiset.
+
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::dataset::PartitionedTable;
+use bloomjoin::plan::{
+    execute, nested_loop_oracle, plan_edges, should_replan, trigger_bound, FactRow, PlanInputs,
+    PlanSpec, PushdownMode, Relation, ReplanPolicy,
+};
+use bloomjoin::testkit::check;
+
+#[test]
+fn estimates_inside_the_bound_never_trigger_and_just_outside_always_do() {
+    let bound = trigger_bound();
+    check(
+        "re-plan trigger ≡ 3σ band membership",
+        40,
+        |g| {
+            let estimated = 1 + g.u64_below(1_000_000_000);
+            let frac = g.rng.f64(); // in [0, 1)
+            (estimated, frac)
+        },
+        |&(estimated, frac)| {
+            // inside: |measured − est| ≤ frac·bound·est < bound·est
+            let inside = (estimated as f64 * bound * frac).floor() as u64;
+            for measured in [estimated + inside, estimated - inside] {
+                if should_replan(estimated, measured, bound) {
+                    return Err(format!(
+                        "inside the bound triggered: est {estimated}, measured {measured}"
+                    ));
+                }
+            }
+            // just outside: |measured − est| = ceil(bound·est) + 1 > bound·est
+            let outside = (estimated as f64 * bound).ceil() as u64 + 1;
+            for measured in [estimated + outside, estimated.saturating_sub(outside)] {
+                if !should_replan(estimated, measured, bound) {
+                    return Err(format!(
+                        "outside the bound did not trigger: est {estimated}, measured {measured}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Dimensions whose key sets equal the fact stream's key sets, with
+/// unique dimension keys: the HLL overlap of identical sets is exact
+/// (identical sketches), every estimated survivor count equals the
+/// measured one, and the adaptive loop has nothing to correct.
+fn perfect_inputs() -> PlanInputs {
+    let lineitem: Vec<FactRow> = (0..4000u64)
+        .map(|i| FactRow {
+            orderkey: i % 500 + 1,
+            partkey: i % 800 + 1,
+            suppkey: i % 50 + 1,
+            price_cents: i as i64,
+        })
+        .collect();
+    let orders: Vec<(u64, u64, i32)> = (1..=500u64).map(|ok| (ok, ok % 100 + 1, 10)).collect();
+    let part: Vec<(u64, i32)> = (1..=800u64).map(|pk| (pk, (pk % 25 + 1) as i32)).collect();
+    let supplier: Vec<(u64, i32)> = (1..=50u64).map(|sk| (sk, (sk % 25) as i32)).collect();
+    PlanInputs {
+        customer: PartitionedTable::from_rows(Vec::new(), 2),
+        orders: PartitionedTable::from_rows(orders, 3),
+        lineitem: PartitionedTable::from_rows(lineitem, 4),
+        part: PartitionedTable::from_rows(part, 2),
+        supplier: PartitionedTable::from_rows(supplier, 2),
+    }
+}
+
+#[test]
+fn perfect_estimates_produce_a_plan_identical_to_static() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    // three dimensions, so the trigger check also runs on a middle edge
+    let base = PlanSpec {
+        dims: vec![Relation::Orders, Relation::Part, Relation::Supplier],
+        pushdown: PushdownMode::Ranked,
+        ..Default::default()
+    };
+    let static_spec = PlanSpec { replan: ReplanPolicy::Static, ..base.clone() };
+    let adaptive_spec = PlanSpec { replan: ReplanPolicy::Adaptive, ..base };
+
+    let plan = plan_edges(&cluster, &static_spec, &perfect_inputs());
+    let s = execute(&cluster, &static_spec, &plan, perfect_inputs());
+    let a = execute(&cluster, &adaptive_spec, &plan, perfect_inputs());
+
+    assert!(a.ledger.events.is_empty(), "perfect estimates must never re-plan");
+    for obs in &a.ledger.observations {
+        assert_eq!(obs.estimated_survivors, obs.measured_survivors, "{}", obs.edge);
+    }
+    // the executed plan is identical edge for edge
+    let executed = |o: &bloomjoin::plan::PlanOutput| {
+        o.edge_reports.iter().map(|r| (r.name.clone(), r.strategy.clone())).collect::<Vec<_>>()
+    };
+    assert_eq!(executed(&s), executed(&a));
+    let mut sr = s.rows;
+    let mut ar = a.rows;
+    sr.sort_unstable();
+    ar.sort_unstable();
+    assert_eq!(sr, ar);
+}
+
+#[test]
+fn unranked_static_propagation_estimates_do_not_false_trigger() {
+    use bloomjoin::plan::adaptive::expected_survivors;
+    use bloomjoin::plan::EdgeStats;
+    // unranked mode prices every edge against the full scan, so after a
+    // 50%-selective first edge a pass-through second edge is planned
+    // with matched_rows = 4000 while the executor probes (and passes)
+    // only 2000 rows.  The raw comparison would read that as a 50%
+    // "error"…
+    let stats = EdgeStats { probe_rows: 4000, matched_rows: 4000, ..EdgeStats::default() };
+    assert!(should_replan(stats.matched_rows, 2000, trigger_bound()));
+    // …but rescaled to the measured probe, the edge's own selectivity
+    // estimate is exact — the trigger the executor uses stays silent
+    let expected = expected_survivors(&stats, 2000);
+    assert_eq!(expected, 2000);
+    assert!(!should_replan(expected, 2000, trigger_bound()));
+}
+
+/// 90 % of the fact rows sit on ten hot order keys the dimension does
+/// not contain, while the dimension covers essentially all *distinct*
+/// keys — the distinct-key overlap estimate says ~98 % of rows survive
+/// when in truth 10 % do.
+fn skewed_inputs() -> PlanInputs {
+    let lineitem: Vec<FactRow> = (0..6000u64)
+        .map(|i| FactRow {
+            orderkey: if i < 5400 { i % 10 + 1 } else { 11 + (i - 5400) },
+            partkey: i % 300 + 1,
+            suppkey: i % 20 + 1,
+            price_cents: i as i64,
+        })
+        .collect();
+    let orders: Vec<(u64, u64, i32)> = (11..=610u64).map(|ok| (ok, ok % 50 + 1, 5)).collect();
+    let part: Vec<(u64, i32)> = (1..=100u64).map(|pk| (pk, (pk % 25 + 1) as i32)).collect();
+    PlanInputs {
+        customer: PartitionedTable::from_rows(Vec::new(), 2),
+        orders: PartitionedTable::from_rows(orders, 3),
+        lineitem: PartitionedTable::from_rows(lineitem, 4),
+        part: PartitionedTable::from_rows(part, 2),
+        supplier: PartitionedTable::from_rows(Vec::new(), 2),
+    }
+}
+
+#[test]
+fn skewed_estimates_always_trigger_and_preserve_the_result() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let base = PlanSpec {
+        dims: vec![Relation::Orders, Relation::Part],
+        // unranked pins the probe order, so the mis-estimated orders
+        // edge runs first and the part edge is still ahead to re-plan
+        pushdown: PushdownMode::Unranked,
+        ..Default::default()
+    };
+    let static_spec = PlanSpec { replan: ReplanPolicy::Static, ..base.clone() };
+    let adaptive_spec = PlanSpec { replan: ReplanPolicy::Adaptive, ..base };
+
+    let want = nested_loop_oracle(&skewed_inputs(), &static_spec.dims);
+    assert!(!want.is_empty());
+
+    let plan = plan_edges(&cluster, &static_spec, &skewed_inputs());
+    let s = execute(&cluster, &static_spec, &plan, skewed_inputs());
+    let a = execute(&cluster, &adaptive_spec, &plan, skewed_inputs());
+
+    assert!(s.ledger.events.is_empty());
+    assert!(
+        !a.ledger.events.is_empty(),
+        "a 10× survivor mis-estimate must break the {:.1}% bound",
+        100.0 * a.ledger.bound
+    );
+    let ev = &a.ledger.events[0];
+    assert_eq!(ev.after_edge, "⋈orders");
+    assert!(ev.relative_error > ev.bound);
+    assert!(ev.estimated_survivors > 4 * ev.measured_survivors);
+
+    let mut sr = s.rows;
+    let mut ar = a.rows;
+    sr.sort_unstable();
+    ar.sort_unstable();
+    assert_eq!(sr, want, "static ≡ oracle");
+    assert_eq!(ar, want, "adaptive (re-planned) ≡ oracle");
+}
