@@ -61,6 +61,65 @@ pub fn forced_plan(
     }
 }
 
+/// A calibration store whose fitted stage factors come out exactly
+/// (α, β) — the poisoned prior `benches/fig9_regret.rs` and
+/// `rust/tests/replan_trigger.rs` make the planner trust.
+pub fn poisoned_store(alpha: f64, beta: f64) -> crate::plan::CostCalibration {
+    let mut store = crate::plan::CostCalibration::default();
+    for i in 0..4 {
+        let p1 = 1.0 + i as f64;
+        let p2 = 2.0 + 1.5 * i as f64;
+        store.record(&crate::plan::EdgeObservation {
+            edge: "seed".into(),
+            relation: crate::plan::Relation::Orders,
+            strategy: "bloom(eps=0.0500)".into(),
+            eps: Some(0.05),
+            resized: false,
+            estimated_probe_rows: 1,
+            measured_probe_rows: 1,
+            estimated_survivors: 1,
+            measured_survivors: 1,
+            build_wall_s: 0.0,
+            probe_wall_s: 0.0,
+            shipped_bytes: 0,
+            sim_s: 0.0,
+            measured_stage1_s: alpha * p1,
+            measured_stage2_s: beta * p2,
+            predicted_stage1_s: p1,
+            predicted_stage2_s: p2,
+        });
+    }
+    let (a, b) = store.factors().expect("poisoned store must fit");
+    assert!((a - alpha).abs() < 1e-9 && (b - beta).abs() < 1e-9);
+    store
+}
+
+/// Nested unique key sets: fact orderkeys are 1..=n each exactly once,
+/// ORDERS covers 1..=o_keys of them, PART covers the whole partkey space
+/// 1..=p_keys — every semijoin fraction is exact by construction, so
+/// only constant error can mislead the planner.  Shared by the regret
+/// bench and the trigger test suite.
+pub fn exact_star_inputs(n: u64, o_keys: u64, p_keys: u64) -> crate::plan::PlanInputs {
+    use crate::dataset::PartitionedTable;
+    let lineitem: Vec<crate::plan::FactRow> = (0..n)
+        .map(|i| crate::plan::FactRow {
+            orderkey: i + 1,
+            partkey: i % p_keys + 1,
+            suppkey: i % 50 + 1,
+            price_cents: i as i64,
+        })
+        .collect();
+    let orders: Vec<(u64, u64, i32)> = (1..=o_keys).map(|ok| (ok, ok % 40 + 1, 5)).collect();
+    let part: Vec<(u64, i32)> = (1..=p_keys).map(|pk| (pk, (pk % 25 + 1) as i32)).collect();
+    crate::plan::PlanInputs {
+        customer: PartitionedTable::from_rows(Vec::new(), 2),
+        orders: PartitionedTable::from_rows(orders, 4),
+        lineitem: PartitionedTable::from_rows(lineitem, 8),
+        part: PartitionedTable::from_rows(part, 4),
+        supplier: PartitionedTable::from_rows(Vec::new(), 2),
+    }
+}
+
 /// One measured statistic set, seconds.
 #[derive(Clone, Copy, Debug)]
 pub struct Stats {

@@ -16,6 +16,15 @@
 //! the AOT-compiled Pallas kernel (`runtime::XlaProbe`), selected by
 //! [`ProbePath`] — both use the same hash algebra, pinned by golden
 //! vectors, so results are identical.
+//!
+//! Execution is phased — **build** (steps 1–3), **broadcast** (step 4),
+//! **probe** (step 5) — with a re-plan point between build and
+//! broadcast: [`BloomCascadeJoin::execute_with_resize`] offers the
+//! just-built filter's approximate count and ε to a [`ResizeDecision`]
+//! hook, and rebuilds the filter at a corrected ε (the `bloom_resize`
+//! stage) before anything is shipped.  That is the last moment the
+//! filter's size is still a local decision; the adaptive planner
+//! (`plan::adaptive`) uses it to fix a mis-sized ε mid-edge.
 
 use std::sync::Arc;
 
@@ -70,6 +79,21 @@ pub trait BatchProbe: Send + Sync {
     }
 }
 
+/// Mid-build re-sizing hook, called at the re-plan point between the
+/// filter build and the broadcast with `(approximate build-side count,
+/// the ε the filter was built at)`.  Returning `Some(new ε)` rebuilds
+/// the filter at the new target before anything is shipped.
+pub type ResizeDecision<'a> = &'a dyn Fn(u64, f64) -> Option<f64>;
+
+/// What a mid-build re-size did (the adaptive ledger's raw material).
+#[derive(Clone, Copy, Debug)]
+pub struct FilterResize {
+    pub old_fpr: f64,
+    pub new_fpr: f64,
+    /// Build-side approximate count the re-size was decided on.
+    pub build_estimate: u64,
+}
+
 /// SBFCJ knobs.
 #[derive(Clone, Debug)]
 pub struct BloomCascadeConfig {
@@ -118,6 +142,27 @@ impl BloomCascadeJoin {
         B: Clone + Send + Sync + RowSize + 'static,
         S: Clone + Send + Sync + RowSize + 'static,
     {
+        let (rows, metrics, _) = self.execute_with_resize(cluster, big, small, None);
+        (rows, metrics)
+    }
+
+    /// [`execute`] with the mid-build re-plan point armed: after the
+    /// filter build and before the broadcast, `resize` may replace the
+    /// filter's ε, paying a second build stage (`bloom_resize`) to avoid
+    /// shipping and probing with a mis-sized filter.
+    ///
+    /// [`execute`]: BloomCascadeJoin::execute
+    pub fn execute_with_resize<B, S>(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<B>>,
+        small: PartitionedTable<Keyed<S>>,
+        resize: Option<ResizeDecision<'_>>,
+    ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>)
+    where
+        B: Clone + Send + Sync + RowSize + 'static,
+        S: Clone + Send + Sync + RowSize + 'static,
+    {
         let cfg = cluster.config().clone();
         let mut metrics = QueryMetrics::default();
         metrics.requested_fpr = self.cfg.fpr;
@@ -132,24 +177,48 @@ impl BloomCascadeJoin {
         });
 
         // -- step 2: sizing -------------------------------------------------
-        let mut params = BloomParams::optimal(est.estimate.max(1), self.cfg.fpr);
-        // with an XLA probe engine, snap the size up to its artifact
-        // ladder so the AOT kernel (static shapes) can run the scan
-        if let ProbePath::Batch(engine) = &self.cfg.probe_path {
-            let raw = crate::model::CostModel::filter_bits(est.estimate.max(1), self.cfg.fpr);
-            if let Some(m) = engine.snap_m_bits(raw) {
-                params = BloomParams::with_m(est.estimate.max(1), self.cfg.fpr, m);
+        let sized = |fpr: f64| {
+            let mut params = BloomParams::optimal(est.estimate.max(1), fpr);
+            // with an XLA probe engine, snap the size up to its artifact
+            // ladder so the AOT kernel (static shapes) can run the scan
+            if let ProbePath::Batch(engine) = &self.cfg.probe_path {
+                let raw = crate::model::CostModel::filter_bits(est.estimate.max(1), fpr);
+                if let Some(m) = engine.snap_m_bits(raw) {
+                    params = BloomParams::with_m(est.estimate.max(1), fpr, m);
+                }
             }
-        }
+            params
+        };
+        let mut params = sized(self.cfg.fpr);
         metrics.bloom_bits = params.m_bits;
 
         // -- step 3: build ----------------------------------------------------
-        let (filter, build_timing) = match self.cfg.build_style {
+        let build = |params: BloomParams| match self.cfg.build_style {
             FilterBuildStyle::Distributed => self.build_distributed(cluster, &small, params),
             FilterBuildStyle::DriverSide => self.build_driver_side(cluster, &small, params),
         };
+        let (mut filter, build_timing) = build(params);
         metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
         metrics.push(build_timing);
+
+        // -- re-plan point: re-size before broadcast --------------------------
+        // the filter exists but nothing has shipped; a corrected ε can
+        // still replace it for the price of a second build stage
+        let mut resized: Option<FilterResize> = None;
+        if let Some(decide) = resize {
+            if let Some(new_fpr) = decide(est.estimate.max(1), self.cfg.fpr) {
+                params = sized(new_fpr);
+                let (rebuilt, mut timing) = build(params);
+                timing.name = "bloom_resize".to_string();
+                filter = rebuilt;
+                metrics.bloom_bits = params.m_bits;
+                metrics.requested_fpr = new_fpr;
+                metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
+                metrics.push(timing);
+                let old_fpr = self.cfg.fpr;
+                resized = Some(FilterResize { old_fpr, new_fpr, build_estimate: est.estimate });
+            }
+        }
 
         // -- step 4: broadcast ---------------------------------------------
         let filter_bytes = filter.to_bytes().len() as u64;
@@ -270,7 +339,7 @@ impl BloomCascadeJoin {
         });
 
         metrics.output_rows = rows.len() as u64;
-        (rows, metrics)
+        (rows, metrics, resized)
     }
 
     /// §5.1 change #1: per-partition partial build + tree OR-merge.
@@ -447,6 +516,40 @@ mod tests {
         let (_, m_tight) = tight.execute(&cluster, big, small);
         assert!(m_tight.bloom_bits > m_loose.bloom_bits);
         assert!(m_tight.big_rows_after_filter <= m_loose.big_rows_after_filter);
+    }
+
+    #[test]
+    fn resize_hook_rebuilds_before_broadcast() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let join = BloomCascadeJoin::new(BloomCascadeConfig { fpr: 0.5, ..Default::default() });
+
+        // a declining hook leaves the planned filter in place
+        let (big, small) = inputs(5_000, 100, 100_000);
+        let want = oracle_count(&big, &small);
+        let none = |_: u64, _: f64| -> Option<f64> { None };
+        let (rows, loose, resized) = join.execute_with_resize(&cluster, big, small, Some(&none));
+        assert_eq!(rows.len(), want);
+        assert!(resized.is_none() && loose.stage("bloom_resize").is_none());
+
+        // a correcting hook rebuilds tighter before anything ships
+        let (big, small) = inputs(5_000, 100, 100_000);
+        let decide = |n: u64, old: f64| {
+            assert!(n > 0 && (old - 0.5).abs() < 1e-12);
+            Some(0.001)
+        };
+        let (rows, tight, resized) =
+            join.execute_with_resize(&cluster, big, small, Some(&decide));
+        assert_eq!(rows.len(), want, "re-sizing must not change the result");
+        let r = resized.expect("hook returned a new ε");
+        assert!((r.old_fpr - 0.5).abs() < 1e-12 && (r.new_fpr - 0.001).abs() < 1e-12);
+        assert!(r.build_estimate > 0);
+        assert!(tight.stage("bloom_resize").is_some());
+        assert!((tight.requested_fpr - 0.001).abs() < 1e-12);
+        // the rebuilt filter is the one that probed: bigger, and stricter
+        assert!(tight.bloom_bits > loose.bloom_bits);
+        assert!(tight.big_rows_after_filter <= loose.big_rows_after_filter);
+        // the rebuild is priced as build-side (stage 1) work
+        assert!(tight.bloom_creation_s() > loose.bloom_creation_s());
     }
 
     #[test]

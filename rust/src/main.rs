@@ -212,7 +212,7 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     };
     let replan = match plan::ReplanPolicy::parse(args.get_or("replan", "static")) {
         Some(p) => p,
-        None => anyhow::bail!("unknown replan policy (static|adaptive)"),
+        None => anyhow::bail!("unknown replan policy (static|adaptive|regret)"),
     };
     let json_mode = args.flag("json");
     let mut spec = PlanSpec {
@@ -224,6 +224,7 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         eps_mode,
         pushdown,
         replan,
+        replan_floor: args.parse_or("replan-floor", plan::DEFAULT_ROW_FLOOR)?,
         ..Default::default()
     };
     if let Some(b) = args.parse_as::<u8>("part-brand")? {
@@ -253,7 +254,22 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
 
     let inputs = plan::prepare(&spec);
     let calib_ref = calib_path.is_some().then_some(&calibration);
-    let join_plan = plan::plan_edges_calibrated(&cluster, &spec, &inputs, calib_ref);
+    let mut join_plan = plan::plan_edges_calibrated(&cluster, &spec, &inputs, calib_ref);
+    // debug/CI knob: override every edge's strategy after pricing (bloom
+    // keeps its solved per-edge ε*) — how the calibration drift check
+    // guarantees §7 stage samples on any workload
+    if let Some(forced) = args.get("force-strategy") {
+        if !["bloom", "broadcast", "sortmerge"].contains(&forced) {
+            anyhow::bail!("unknown force-strategy {forced:?} (bloom|broadcast|sortmerge)");
+        }
+        for e in &mut join_plan.edges {
+            e.strategy = match forced {
+                "bloom" => plan::EdgeStrategy::Bloom { eps: e.prediction.eps_star },
+                "broadcast" => plan::EdgeStrategy::Broadcast,
+                _ => plan::EdgeStrategy::SortMerge,
+            };
+        }
+    }
     if !json_mode {
         println!(
             "topology: {} ({} relations, {} pushdown, {} re-planning)   predicted total: {:.4}s",
@@ -324,25 +340,45 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
             r.probe_keys_per_s()
         );
     }
-    if !out.ledger.events.is_empty() {
+    if !out.ledger.events.is_empty() || !out.ledger.resizes.is_empty() {
         println!(
-            "\nre-plan ledger ({} event(s), 3σ trigger bound {:.2}%):",
+            "\nre-plan ledger ({} event(s), {} re-size(s), 3σ bound {:.2}%, row floor {}):",
             out.ledger.events.len(),
-            100.0 * out.ledger.bound
+            out.ledger.resizes.len(),
+            100.0 * out.ledger.bound,
+            out.ledger.floor
         );
         for ev in &out.ledger.events {
+            match ev.trigger {
+                plan::ReplanTrigger::Cardinality => println!(
+                    "  [cardinality] after {}: estimated {} survivors, measured {} \
+                     (err {:.1}%) — re-planned [{}] -> [{}]",
+                    ev.after_edge,
+                    ev.estimated_survivors,
+                    ev.measured_survivors,
+                    100.0 * ev.relative_error,
+                    ev.old_tail.join(", "),
+                    ev.new_tail.join(", ")
+                ),
+                plan::ReplanTrigger::Regret => println!(
+                    "  [regret] after {}: assigned strategy {:.1}% over the re-priced \
+                     cheapest (margin {:.0}%) — re-planned [{}] -> [{}]",
+                    ev.after_edge,
+                    100.0 * ev.relative_error,
+                    100.0 * ev.bound,
+                    ev.old_tail.join(", "),
+                    ev.new_tail.join(", ")
+                ),
+            }
+        }
+        for rs in &out.ledger.resizes {
             println!(
-                "  after {}: estimated {} survivors, measured {} (err {:.1}%) — \
-                 re-planned [{}] -> [{}]",
-                ev.after_edge,
-                ev.estimated_survivors,
-                ev.measured_survivors,
-                100.0 * ev.relative_error,
-                ev.old_tail.join(", "),
-                ev.new_tail.join(", ")
+                "  [resize] {}: ε {:.4} -> {:.4} before broadcast ({} build keys, \
+                 {} probe rows)",
+                rs.edge, rs.old_eps, rs.new_eps, rs.build_estimate, rs.probe_rows
             );
         }
-    } else if matches!(spec.replan, plan::ReplanPolicy::Adaptive) {
+    } else if spec.replan.is_adaptive() {
         println!("\nre-plan ledger: no events");
     }
     println!("\nrows: {}\n", out.rows.len());
@@ -395,6 +431,7 @@ fn plan_to_json(
         ("topology", Json::str(spec.topology.name())),
         ("pushdown", Json::str(spec.pushdown.name())),
         ("replan", Json::str(spec.replan.name())),
+        ("replan_floor", Json::num(spec.replan_floor as f64)),
         ("sf", Json::num(spec.sf)),
         ("partitions", Json::num(spec.partitions as f64)),
         ("dims", Json::Arr(dims)),
@@ -535,11 +572,22 @@ COMMANDS
              incl. lineitem; customer needs orders) --topology star|chain
              --eps-mode per-filter|global [--eps 0.05]
              --pushdown ranked|unranked [--part-brand N] [--supp-nation N]
-             --replan static|adaptive (adaptive re-plans the remaining
-              edges when a measured survivor count breaks the HLL 3σ
-              bound, and prints the re-plan ledger)
+             --replan static|adaptive|regret (adaptive re-plans the
+              remaining edges when a measured survivor count breaks the
+              HLL 3σ bound; regret additionally re-plans when measured §7
+              stage seconds would flip a remaining edge's cheapest
+              strategy, and re-sizes a mis-built filter's ε between build
+              and broadcast; both print the re-plan ledger and work on
+              star and chain topologies)
+             --replan-floor N (absolute row floor both triggers must
+              clear, default 64 — single-digit residual noise never
+              re-plans a cheap tail)
              --calibration auto|off|<path> (per-cluster K/L/C store under
-              target/calibration/, refined from observed runs)
+              target/calibration/, refined from observed runs; CI tracks
+              the fitted factors for drift)
+             --force-strategy bloom|broadcast|sortmerge (debug: override
+              every edge's strategy after pricing — bloom keeps its
+              per-edge ε*; how CI guarantees §7 calibration samples)
              [--json] (machine-readable plan + metrics + ledger)
              [--no-execute]
              (n-way planner: ranked filter pushdown, per-edge strategy

@@ -63,8 +63,10 @@ fn base_name(name: &str) -> &str {
 
 /// The paper's "stage 1" (build-side) stages — one predicate shared by
 /// the sim- and wall-time accessors so they can never desynchronize.
+/// `bloom_resize` is the adaptive executor's mid-build rebuild: a second
+/// filter build, so build-side by definition.
 fn is_stage1(name: &str) -> bool {
-    matches!(base_name(name), "approx_count" | "bloom_build" | "broadcast")
+    matches!(base_name(name), "approx_count" | "bloom_build" | "bloom_resize" | "broadcast")
 }
 
 impl QueryMetrics {

@@ -2,53 +2,98 @@
 //! planner (Spark-AQE-style, specialised to the paper's bloom math).
 //!
 //! The static planner commits every edge's probe order, strategy and ε
-//! up front, from HLL catalog estimates.  Those estimates carry a stated
-//! error: the P=12 HyperLogLog's 3σ relative bound
-//! ([`HyperLogLog::relative_error_bound`], ≈ 4.9 %).  The executor can
-//! do better than trust them end-to-end — after each edge completes it
-//! *knows* the residual stream, exactly.
+//! up front, from HLL catalog estimates priced with the §7 cost model.
+//! Both inputs can be wrong at run time, and each failure has its own
+//! trigger here:
 //!
-//! **Trigger math.**  After edge `i` finishes, the executor compares
-//! the edge's estimated survivor count `Ê` against the measured
+//! **Cardinality trigger.**  After edge `i` finishes, the executor
+//! compares the edge's estimated survivor count `Ê` against the measured
 //! survivor count `M` (the contracted stream length).  `Ê` is the
 //! planner's `matched_rows` **rescaled to the stream the edge actually
 //! probed** ([`expected_survivors`]) — i.e. the planner's match
-//! *fraction* applied to the measured probe — so the check judges this
+//! *fraction* applied to the measured probe, so the check judges this
 //! edge's own selectivity estimate, not upstream contraction that
-//! earlier checks already judged (in unranked static-propagation mode
-//! the planned probe is always the full scan, so the rescaling is what
-//! makes the comparison meaningful at all).  The estimate is
-//! *consistent* with the sketch error model when the relative error
-//! `|M − Ê| / max(Ê, 1)` is within the 3σ bound; anything larger cannot
-//! be explained by sketch noise and means the catalog's picture of the
-//! remaining workload is wrong too (every downstream edge's
-//! `A = N_filtrable/P`, `B = N_matched/P` was derived from this
-//! residual).  [`should_replan`] fires exactly then.
+//! earlier checks already judged.  The estimate is *consistent* with the
+//! sketch error model when the relative error `|M − Ê| / max(Ê, 1)` is
+//! within the HLL 3σ bound; anything larger cannot be explained by
+//! sketch noise and means the catalog's picture of the remaining
+//! workload is wrong too.  [`should_replan`] fires exactly then — unless
+//! the **absolute residual** `|M − Ê|` is below the spec's row floor
+//! ([`DEFAULT_ROW_FLOOR`]): at single-digit residuals the relative bound
+//! is meaningless, and one row of noise must not re-plan a cheap tail.
+//!
+//! **Strategy-regret trigger** ([`regret_flip`]).  Estimates can be
+//! exact while the *cost constants* are wrong (a stale or contaminated
+//! calibration store, a mis-modelled cluster).  Every executed bloom
+//! edge reports its measured §7 stage seconds next to the uncalibrated
+//! model's prediction on the same measured workload; the run-local fit
+//! of those pairs (the same through-origin regression the persistent
+//! [`super::costing::CostCalibration`] uses, trusted from one in-run
+//! sample) re-prices the not-yet-executed tail.  When some remaining
+//! edge's assigned strategy is no longer within [`REGRET_MARGIN`] of the
+//! re-priced cheapest — the cheapest-strategy ranking would have flipped
+//! — the tail is re-planned with the measured factors.  Only
+//! [`ReplanPolicy::Regret`] arms this trigger; cardinality-only
+//! [`ReplanPolicy::Adaptive`] keeps re-pricing with whatever the planner
+//! trusted, which is exactly why it cannot win on mispriced-constant
+//! workloads (`benches/fig9_regret.rs`).
+//!
+//! **Mid-build ε re-size** ([`resize_epsilon`]).  Edge execution is
+//! split into build / broadcast / probe phases
+//! ([`crate::joins::bloom_cascade::BloomCascadeJoin::execute_with_resize`])
+//! with a re-plan point between build and broadcast — the last moment
+//! before the filter's size is shipped.  Under the regret policy the
+//! executor re-solves ε* there from what the build phase measured (the
+//! approximate build-side count, the known probe stream length, the
+//! run-local stage factors) and rebuilds the filter when the corrected ε
+//! pays for the rebuild even if the whole §7 stage 1 is paid a second
+//! time.  The payback condition makes this a one-direction correction: a
+//! too-loose filter is worth rebuilding tighter (the false-positive
+//! shuffle is still ahead), while a too-tight filter's cost is already
+//! sunk and re-sizing can never pay.
 //!
 //! **Re-plan.**  On a trigger, [`replan_remaining`] re-runs the planning
-//! pipeline for the not-yet-executed tail only: the remaining dimensions
-//! are re-ranked by (selectivity / probe cost) against the *measured*
-//! residual, each tail edge's workload is re-derived from it (the same
-//! single residual-stream derivation the static planner uses —
-//! [`super::costing::derive_edge_stats`]), and every bloom edge's ε* is
-//! re-solved with `model::newton` on the observed residual stream.  The
-//! whole loop is demotable to a no-op with [`ReplanPolicy::Static`], so
-//! the pre-adaptive behaviour stays benchmarkable
-//! (`benches/fig8_adaptive.rs` compares the two).
+//! pipeline for the not-yet-executed star tail against the *measured*
+//! residual (re-rank, re-derive workloads, re-solve every bloom ε* with
+//! `model::newton`); [`replan_chain_tail`] does the same for chain
+//! topologies by rescaling the tail's propagated build-side estimates by
+//! the measured contraction ratio.  The whole loop is demotable to a
+//! no-op with [`ReplanPolicy::Static`].
 //!
-//! Every executed edge also emits an [`EdgeObservation`] (measured
-//! survivors, stage wall times, shipped bytes, and the §7 stage split of
-//! its simulated seconds) — the raw material both for the re-plan ledger
-//! and for the per-cluster [`super::costing::CostCalibration`] store
-//! that refines the cost model's K/L/C constants across runs.
+//! Every executed edge also emits an [`EdgeObservation`] — the raw
+//! material for the re-plan ledger, the run-local regret factors, and
+//! the per-cluster [`super::costing::CostCalibration`] store that
+//! refines the cost model's K/L/C constants across runs.
 
 use crate::approx::HyperLogLog;
-use crate::cluster::Cluster;
+use crate::bloom::BloomParams;
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::model::newton;
 use crate::util::Json;
 
 use super::catalog::{DimStats, EdgeStats};
-use super::costing::{derive_edge_stats, price_edges, rank_dims, CostCalibration};
-use super::{PlanSpec, PlannedEdge, Relation};
+use super::costing::{
+    derive_edge_stats, edge_cost_model, predict_broadcast_s, predict_sortmerge_s, price_edges_with,
+    rank_dims, CostCalibration,
+};
+use super::{EdgeStrategy, EpsMode, PlanSpec, PlannedEdge, Relation};
+
+/// Default absolute row floor for both triggers: the relative 3σ bound
+/// is not meaningful at single-digit residuals, where one row of noise
+/// would re-plan a tail that costs nothing to finish as planned.
+pub const DEFAULT_ROW_FLOOR: u64 = 64;
+
+/// Relative slack an assigned strategy is allowed over the re-priced
+/// cheapest before the regret trigger fires.  The §7 model is
+/// constructed, not fitted, so predictions carry structural error
+/// against the staged simulation; the margin keeps near-tie edges from
+/// flip-flopping on that error.
+pub const REGRET_MARGIN: f64 = 0.25;
+
+/// Smallest ε ratio (either direction) before a mid-build re-size is
+/// even considered — rebuilding a filter whose target was nearly right
+/// can never pay.
+pub const RESIZE_RATIO: f64 = 1.5;
 
 /// Whether the executor may re-plan the remaining edges mid-query.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -57,8 +102,13 @@ pub enum ReplanPolicy {
     #[default]
     Static,
     /// Re-rank and re-solve the remaining edges whenever a measured
-    /// survivor count falls outside the estimate's 3σ bound.
+    /// survivor count falls outside the estimate's 3σ bound (and the
+    /// absolute row floor).
     Adaptive,
+    /// [`ReplanPolicy::Adaptive`] plus the strategy-regret trigger and
+    /// the mid-build ε re-size: measured stage seconds may override the
+    /// planner's cost constants, not just its cardinalities.
+    Regret,
 }
 
 impl ReplanPolicy {
@@ -66,6 +116,7 @@ impl ReplanPolicy {
         match self {
             ReplanPolicy::Static => "static",
             ReplanPolicy::Adaptive => "adaptive",
+            ReplanPolicy::Regret => "regret",
         }
     }
 
@@ -73,8 +124,14 @@ impl ReplanPolicy {
         match s {
             "static" => Some(ReplanPolicy::Static),
             "adaptive" => Some(ReplanPolicy::Adaptive),
+            "regret" => Some(ReplanPolicy::Regret),
             _ => None,
         }
+    }
+
+    /// True for every policy that arms the cardinality trigger.
+    pub fn is_adaptive(self) -> bool {
+        !matches!(self, ReplanPolicy::Static)
     }
 }
 
@@ -91,9 +148,11 @@ pub fn estimate_error(estimated: u64, measured: u64) -> f64 {
 }
 
 /// True when the measured survivor count is inconsistent with the
-/// estimate under the sketch error `bound` — the re-plan trigger.
-pub fn should_replan(estimated: u64, measured: u64, bound: f64) -> bool {
-    estimate_error(estimated, measured) > bound
+/// estimate under the sketch error `bound` — the re-plan trigger.  The
+/// absolute residual must also reach `floor` rows: a relative breach on
+/// a handful of rows is noise, not information.
+pub fn should_replan(estimated: u64, measured: u64, bound: f64, floor: u64) -> bool {
+    estimated.abs_diff(measured) >= floor.max(1) && estimate_error(estimated, measured) > bound
 }
 
 /// The planner's survivor estimate for an edge, rescaled to the stream
@@ -118,8 +177,13 @@ pub struct EdgeObservation {
     pub edge: String,
     pub relation: Relation,
     pub strategy: String,
-    /// The ε the edge executed with (bloom edges only).
+    /// The ε the edge executed with (bloom edges only; the re-sized
+    /// value when a mid-build re-size fired).
     pub eps: Option<f64>,
+    /// Whether a mid-build re-size replaced the planned filter.  Re-sized
+    /// edges pay §7 stage 1 twice, so they are excluded from the
+    /// calibration fit.
+    pub resized: bool,
     pub estimated_probe_rows: u64,
     pub measured_probe_rows: u64,
     /// The planner's `matched_rows` estimate for this edge.
@@ -140,8 +204,8 @@ pub struct EdgeObservation {
     pub measured_stage2_s: f64,
     /// The *uncalibrated* §7 model re-evaluated on the measured workload
     /// at the executed ε (bloom edges; 0 otherwise) — the calibration
-    /// store regresses measured against these to isolate constant error
-    /// from estimate error.
+    /// store and the run-local regret factors regress measured against
+    /// these to isolate constant error from estimate error.
     pub predicted_stage1_s: f64,
     pub predicted_stage2_s: f64,
 }
@@ -153,6 +217,7 @@ impl EdgeObservation {
             ("relation", Json::str(self.relation.name())),
             ("strategy", Json::str(self.strategy.clone())),
             ("eps", self.eps.map_or(Json::Null, Json::num)),
+            ("resized", Json::Bool(self.resized)),
             ("estimated_probe_rows", Json::num(self.estimated_probe_rows as f64)),
             ("measured_probe_rows", Json::num(self.measured_probe_rows as f64)),
             ("estimated_survivors", Json::num(self.estimated_survivors as f64)),
@@ -169,10 +234,33 @@ impl EdgeObservation {
     }
 }
 
-/// One re-plan decision, for the ledger.
+/// Which trigger caused a re-plan event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplanTrigger {
+    /// Measured survivors broke the sketch 3σ bound (and the row floor).
+    Cardinality,
+    /// Run-measured stage factors flipped a remaining edge's
+    /// cheapest-strategy ranking beyond [`REGRET_MARGIN`].
+    Regret,
+}
+
+impl ReplanTrigger {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplanTrigger::Cardinality => "cardinality",
+            ReplanTrigger::Regret => "regret",
+        }
+    }
+}
+
+/// One re-plan decision, for the ledger.  For cardinality events
+/// `relative_error`/`bound` are the survivor-estimate error against the
+/// 3σ bound; for regret events they are the assigned strategy's relative
+/// cost excess against [`REGRET_MARGIN`].
 #[derive(Clone, Debug)]
 pub struct ReplanEvent {
-    /// The edge whose measured survivors broke the bound.
+    pub trigger: ReplanTrigger,
+    /// The edge whose measurement fired the trigger.
     pub after_edge: String,
     pub estimated_survivors: u64,
     pub measured_survivors: u64,
@@ -188,6 +276,7 @@ impl ReplanEvent {
         let old: Vec<Json> = self.old_tail.iter().map(|s| Json::str(s.clone())).collect();
         let new: Vec<Json> = self.new_tail.iter().map(|s| Json::str(s.clone())).collect();
         Json::obj([
+            ("trigger", Json::str(self.trigger.name())),
             ("after_edge", Json::str(self.after_edge.clone())),
             ("estimated_survivors", Json::num(self.estimated_survivors as f64)),
             ("measured_survivors", Json::num(self.measured_survivors as f64)),
@@ -199,36 +288,75 @@ impl ReplanEvent {
     }
 }
 
+/// One mid-build filter re-size, for the ledger.
+#[derive(Clone, Debug)]
+pub struct ResizeEvent {
+    /// The bloom edge whose filter was rebuilt before broadcast.
+    pub edge: String,
+    pub old_eps: f64,
+    pub new_eps: f64,
+    /// Build-side approximate count the corrected ε was solved on.
+    pub build_estimate: u64,
+    /// Measured probe stream length at the edge's start.
+    pub probe_rows: u64,
+}
+
+impl ResizeEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("edge", Json::str(self.edge.clone())),
+            ("old_eps", Json::num(self.old_eps)),
+            ("new_eps", Json::num(self.new_eps)),
+            ("build_estimate", Json::num(self.build_estimate as f64)),
+            ("probe_rows", Json::num(self.probe_rows as f64)),
+        ])
+    }
+}
+
 /// Everything the adaptive loop recorded during one execution: one
-/// observation per executed edge, one event per re-plan.  Static runs
-/// still fill `observations` (they feed the calibration store); their
-/// `events` are always empty.
+/// observation per executed edge, one event per re-plan, one entry per
+/// mid-build re-size.  Static runs still fill `observations` (they feed
+/// the calibration store); their `events` and `resizes` are always
+/// empty.
 #[derive(Clone, Debug)]
 pub struct ReplanLedger {
     pub policy: ReplanPolicy,
     pub bound: f64,
+    /// Absolute row floor both triggers must clear.
+    pub floor: u64,
     pub observations: Vec<EdgeObservation>,
     pub events: Vec<ReplanEvent>,
+    pub resizes: Vec<ResizeEvent>,
 }
 
 impl ReplanLedger {
-    pub fn new(policy: ReplanPolicy) -> ReplanLedger {
+    pub fn new(policy: ReplanPolicy, floor: u64) -> ReplanLedger {
         ReplanLedger {
             policy,
             bound: trigger_bound(),
+            floor,
             observations: Vec::new(),
             events: Vec::new(),
+            resizes: Vec::new(),
         }
+    }
+
+    /// Events fired by a specific trigger.
+    pub fn events_by(&self, trigger: ReplanTrigger) -> usize {
+        self.events.iter().filter(|e| e.trigger == trigger).count()
     }
 
     pub fn to_json(&self) -> Json {
         let obs: Vec<Json> = self.observations.iter().map(|o| o.to_json()).collect();
         let events: Vec<Json> = self.events.iter().map(|e| e.to_json()).collect();
+        let resizes: Vec<Json> = self.resizes.iter().map(|r| r.to_json()).collect();
         Json::obj([
             ("policy", Json::str(self.policy.name())),
             ("bound", Json::num(self.bound)),
+            ("floor", Json::num(self.floor as f64)),
             ("observations", Json::Arr(obs)),
             ("events", Json::Arr(events)),
+            ("resizes", Json::Arr(resizes)),
         ])
     }
 }
@@ -238,10 +366,122 @@ pub fn tail_labels(edges: &[PlannedEdge]) -> Vec<String> {
     edges.iter().map(|e| format!("{} {}", e.name, e.strategy.label())).collect()
 }
 
+/// What [`regret_flip`] found: a remaining edge whose assigned strategy
+/// is no longer competitive under the run-measured stage factors.
+#[derive(Clone, Debug)]
+pub struct RegretFinding {
+    pub edge: String,
+    pub assigned: String,
+    pub cheapest: String,
+    pub assigned_s: f64,
+    pub cheapest_s: f64,
+}
+
+/// Re-price every remaining edge's strategies under the run-measured
+/// §7 stage factors and report the first edge whose assigned strategy
+/// costs more than the cheapest by over [`REGRET_MARGIN`] — the
+/// strategy-regret trigger.  Bloom is re-priced at its re-solved ε* (a
+/// materially mis-sized ε on a still-bloom edge is regret too);
+/// broadcast and sort-merge predictions carry no §7 stage split, so the
+/// factors do not apply to them.
+pub fn regret_flip(
+    cfg: &ClusterConfig,
+    factors: (f64, f64),
+    remaining: &[PlannedEdge],
+) -> Option<RegretFinding> {
+    for e in remaining {
+        if !e.has_estimates() {
+            continue;
+        }
+        let model = CostCalibration::scale(edge_cost_model(cfg, &e.stats), factors);
+        let opt = newton::optimal_epsilon(&model);
+        let bloom_s = model.total(opt.eps);
+        let broadcast_s = predict_broadcast_s(cfg, &e.stats);
+        let sortmerge_s = predict_sortmerge_s(cfg, &e.stats);
+        let assigned_s = match &e.strategy {
+            EdgeStrategy::Bloom { eps } => model.total(*eps),
+            EdgeStrategy::Broadcast => broadcast_s,
+            EdgeStrategy::SortMerge => sortmerge_s,
+        };
+        let mut cheapest = (EdgeStrategy::Bloom { eps: opt.eps }.label(), bloom_s);
+        if broadcast_s < cheapest.1 {
+            cheapest = (EdgeStrategy::Broadcast.label(), broadcast_s);
+        }
+        if sortmerge_s < cheapest.1 {
+            cheapest = (EdgeStrategy::SortMerge.label(), sortmerge_s);
+        }
+        if assigned_s > cheapest.1 * (1.0 + REGRET_MARGIN) {
+            return Some(RegretFinding {
+                edge: e.name.clone(),
+                assigned: e.strategy.label(),
+                cheapest: cheapest.0,
+                assigned_s,
+                cheapest_s: cheapest.1,
+            });
+        }
+    }
+    None
+}
+
+/// The mid-build re-size decision: given the measured workload of the
+/// edge being executed (`stats` carries the measured probe stream and
+/// the build phase's approximate count) and the ε the filter was just
+/// built at, return the corrected ε when rebuilding before broadcast
+/// still pays with the **whole §7 stage 1 charged a second time** —
+/// conservative, since the rebuild actually skips the approximate count.
+///
+/// The decision is made on the **physical filters**, not the requested
+/// ε's: sizing rounds bits up to a power of two
+/// ([`BloomParams::optimal`]), so a loose requested ε often already
+/// realises a much tighter rate — or even the exact filter the corrected
+/// ε would build, in which case there is nothing to fix.  Stage 1 is
+/// priced at the ε whose raw size formula yields the new physical bit
+/// count (folding the rounding into the model's `ln(1/ε)` term), stage 2
+/// at the realised rates the probe will actually see.
+///
+/// The payback test makes this a one-direction correction: a too-loose
+/// filter is worth rebuilding tighter (the false-positive shuffle is
+/// still ahead of us), while a too-tight filter's cost is sunk —
+/// `new.m_bits ≤ old.m_bits` never pays.
+pub fn resize_epsilon(
+    cfg: &ClusterConfig,
+    stats: &EdgeStats,
+    old_eps: f64,
+    factors: Option<(f64, f64)>,
+) -> Option<f64> {
+    let mut model = edge_cost_model(cfg, stats);
+    if let Some(f) = factors {
+        model = CostCalibration::scale(model, f);
+    }
+    let opt = newton::optimal_epsilon(&model);
+    let ratio = (opt.eps / old_eps).max(old_eps / opt.eps);
+    if !ratio.is_finite() || ratio < RESIZE_RATIO {
+        return None;
+    }
+    let n = stats.build_distinct.max(1);
+    let old = BloomParams::optimal(n, old_eps);
+    let new = BloomParams::optimal(n, opt.eps);
+    if new.m_bits <= old.m_bits {
+        return None;
+    }
+    let ln2 = std::f64::consts::LN_2;
+    let size_eps = (-(new.m_bits as f64) * ln2 / (1.44 * n as f64)).exp();
+    let keep_s = model.join(old.realized_fpr(n));
+    let resize_s = model.bloom(size_eps) + model.join(new.realized_fpr(n));
+    if resize_s < keep_s {
+        Some(opt.eps)
+    } else {
+        None
+    }
+}
+
 /// Re-plan the not-yet-executed tail of a star plan against the
 /// *measured* residual stream: re-rank the remaining dimensions, re-derive
 /// each tail edge's workload from `measured_residual`, and re-price every
 /// strategy (re-solving bloom ε* with Newton on the observed residual).
+/// `factors` are the §7 stage-scale factors the re-pricing trusts — the
+/// persistent calibration's under [`ReplanPolicy::Adaptive`], the
+/// run-measured ones under [`ReplanPolicy::Regret`].
 ///
 /// Returns `None` when the plan carries no sketch features for some
 /// remaining relation (e.g. a strategy-forced test plan) — re-planning
@@ -249,7 +489,7 @@ pub fn tail_labels(edges: &[PlannedEdge]) -> Vec<String> {
 pub fn replan_remaining(
     cluster: &Cluster,
     spec: &PlanSpec,
-    calibration: Option<&CostCalibration>,
+    factors: Option<(f64, f64)>,
     dim_stats: &[DimStats],
     remaining: &[PlannedEdge],
     measured_residual: u64,
@@ -261,20 +501,50 @@ pub fn replan_remaining(
     let residual = measured_residual.max(1) as f64;
     rank_dims(&mut dims, residual, spec.pushdown);
     let edge_list = derive_edge_stats(&dims, residual, spec.pushdown);
-    Some(price_edges(cluster.config(), spec.eps_mode, calibration, edge_list))
+    Some(price_edges_with(cluster.config(), spec.eps_mode, factors, edge_list))
+}
+
+/// Re-plan a chain tail: the chain's propagated estimates (the tail
+/// edge's build side is the head edge's output) are rescaled by the
+/// measured contraction `ratio` (measured / expected survivors of the
+/// edge that fired), then re-priced exactly like a fresh plan — strategy
+/// and ε* re-decided per edge under `factors`.
+pub fn replan_chain_tail(
+    cfg: &ClusterConfig,
+    eps_mode: EpsMode,
+    factors: Option<(f64, f64)>,
+    remaining: &[PlannedEdge],
+    ratio: f64,
+) -> Vec<PlannedEdge> {
+    let list = remaining
+        .iter()
+        .map(|e| {
+            let mut st = e.stats.clone();
+            st.build_rows = ((st.build_rows as f64 * ratio).round() as u64).max(1);
+            st.build_distinct = ((st.build_distinct as f64 * ratio).round() as u64).max(1);
+            st.matched_rows =
+                ((st.matched_rows as f64 * ratio).round() as u64).clamp(1, st.probe_rows);
+            (e.name.clone(), e.relation, st)
+        })
+        .collect();
+    price_edges_with(cfg, eps_mode, factors, list)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::ClusterConfig;
 
     #[test]
     fn policy_parse_roundtrips() {
-        for p in [ReplanPolicy::Static, ReplanPolicy::Adaptive] {
+        for p in [ReplanPolicy::Static, ReplanPolicy::Adaptive, ReplanPolicy::Regret] {
             assert_eq!(ReplanPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(ReplanPolicy::parse("aggressive"), None);
         assert_eq!(ReplanPolicy::default(), ReplanPolicy::Static);
+        assert!(!ReplanPolicy::Static.is_adaptive());
+        assert!(ReplanPolicy::Adaptive.is_adaptive());
+        assert!(ReplanPolicy::Regret.is_adaptive());
     }
 
     #[test]
@@ -288,15 +558,29 @@ mod tests {
     fn trigger_fires_only_outside_the_bound() {
         let bound = trigger_bound();
         // exactly on the estimate: never
-        assert!(!should_replan(10_000, 10_000, bound));
+        assert!(!should_replan(10_000, 10_000, bound, 1));
         // inside the bound in both directions: never
         let delta = (10_000.0 * bound * 0.9) as u64;
-        assert!(!should_replan(10_000, 10_000 + delta, bound));
-        assert!(!should_replan(10_000, 10_000 - delta, bound));
+        assert!(!should_replan(10_000, 10_000 + delta, bound, 1));
+        assert!(!should_replan(10_000, 10_000 - delta, bound, 1));
         // outside the bound in both directions: always
         let delta = (10_000.0 * bound * 1.1).ceil() as u64;
-        assert!(should_replan(10_000, 10_000 + delta, bound));
-        assert!(should_replan(10_000, 10_000 - delta, bound));
+        assert!(should_replan(10_000, 10_000 + delta, bound, 1));
+        assert!(should_replan(10_000, 10_000 - delta, bound, 1));
+    }
+
+    #[test]
+    fn floor_suppresses_small_absolute_residuals() {
+        let bound = trigger_bound();
+        // 10 estimated vs 30 measured: 200 % relative error, but only a
+        // 20-row residual — the floor keeps the tail as planned
+        assert!(should_replan(10, 30, bound, 1));
+        assert!(!should_replan(10, 30, bound, DEFAULT_ROW_FLOOR));
+        // the same relative error at scale clears the floor
+        assert!(should_replan(10_000, 30_000, bound, DEFAULT_ROW_FLOOR));
+        // exactly at the floor fires; one below does not
+        assert!(should_replan(10, 10 + DEFAULT_ROW_FLOOR, bound, DEFAULT_ROW_FLOOR));
+        assert!(!should_replan(10, 10 + DEFAULT_ROW_FLOOR - 1, bound, DEFAULT_ROW_FLOOR));
     }
 
     #[test]
@@ -309,14 +593,120 @@ mod tests {
 
     #[test]
     fn zero_estimate_does_not_divide_by_zero() {
-        assert!(should_replan(0, 100, trigger_bound()));
-        assert!(!should_replan(0, 0, trigger_bound()));
+        assert!(should_replan(0, 100, trigger_bound(), 1));
+        assert!(!should_replan(0, 0, trigger_bound(), 1));
+    }
+
+    /// A pass-through edge (nothing filtrable) over a tiny dimension:
+    /// broadcast is the true cheapest by a wide margin (see
+    /// `costing::tests::tiny_dimension_prefers_broadcast`).
+    fn broadcast_favored() -> EdgeStats {
+        EdgeStats {
+            build_rows: 2_000,
+            build_distinct: 2_000,
+            build_row_bytes: 16.0,
+            probe_rows: 10_000_000,
+            probe_row_bytes: 16.0,
+            matched_rows: 9_500_000,
+        }
+    }
+
+    #[test]
+    fn regret_fires_on_a_mispriced_assignment_and_not_on_the_cheapest() {
+        let cfg = ClusterConfig::default();
+        let wrong = PlannedEdge {
+            strategy: EdgeStrategy::Bloom { eps: 0.05 },
+            stats: broadcast_favored(),
+            ..PlannedEdge::forced(Relation::Part, "⋈part", EdgeStrategy::Broadcast)
+        };
+        let finding = regret_flip(&cfg, (1.0, 1.0), std::slice::from_ref(&wrong))
+            .expect("bloom on a pass-through edge is regret");
+        assert_eq!(finding.edge, "⋈part");
+        assert!(finding.cheapest.contains("broadcast"), "{finding:?}");
+        assert!(finding.assigned_s > finding.cheapest_s * (1.0 + REGRET_MARGIN));
+
+        let right = PlannedEdge { strategy: EdgeStrategy::Broadcast, ..wrong.clone() };
+        assert!(regret_flip(&cfg, (1.0, 1.0), std::slice::from_ref(&right)).is_none());
+        // edges without estimates (forced test plans) are never judged
+        let eps = EdgeStrategy::Bloom { eps: 0.05 };
+        let forced = PlannedEdge::forced(Relation::Part, "⋈part", eps);
+        assert!(regret_flip(&cfg, (1.0, 1.0), std::slice::from_ref(&forced)).is_none());
+    }
+
+    /// A heavily filtrable edge (see
+    /// `costing::tests::filterable_fact_edge_prefers_bloom_over_sortmerge`).
+    fn bloom_favored() -> EdgeStats {
+        EdgeStats {
+            build_rows: 5_000_000,
+            build_distinct: 5_000_000,
+            build_row_bytes: 16.0,
+            probe_rows: 50_000_000,
+            probe_row_bytes: 16.0,
+            matched_rows: 2_000_000,
+        }
+    }
+
+    #[test]
+    fn resize_fires_only_on_a_loose_filter_that_pays() {
+        let cfg = ClusterConfig::default();
+        let stats = bloom_favored();
+        let model = edge_cost_model(&cfg, &stats);
+        let opt = newton::optimal_epsilon(&model).eps;
+        // far too loose: the false-positive shuffle ahead dwarfs a rebuild
+        let fixed = resize_epsilon(&cfg, &stats, 0.5, None).expect("loose filter must re-size");
+        assert!((fixed - opt).abs() < 1e-9, "{fixed} vs {opt}");
+        // already optimal: ratio below RESIZE_RATIO, never
+        assert!(resize_epsilon(&cfg, &stats, opt, None).is_none());
+        // too tight: the cost is sunk, re-sizing can never pay
+        assert!(resize_epsilon(&cfg, &stats, opt / 100.0, None).is_none());
+    }
+
+    #[test]
+    fn resize_respects_measured_stage_factors() {
+        let cfg = ClusterConfig::default();
+        let stats = bloom_favored();
+        let plain = resize_epsilon(&cfg, &stats, 0.5, None).unwrap();
+        // stage 2 measured 3x the constructed model: false positives are
+        // dearer, so the corrected optimum is tighter than the plain one
+        let tight = resize_epsilon(&cfg, &stats, 0.5, Some((1.0, 3.0))).unwrap();
+        assert!(tight < plain, "{tight} vs {plain}");
+    }
+
+    #[test]
+    fn chain_tail_rescales_and_reprices() {
+        let cfg = ClusterConfig::default();
+        let tail = PlannedEdge {
+            strategy: EdgeStrategy::Bloom { eps: 0.05 },
+            stats: EdgeStats {
+                build_rows: 100_000,
+                build_distinct: 90_000,
+                build_row_bytes: 24.0,
+                probe_rows: 6_000_000,
+                probe_row_bytes: 56.0,
+                matched_rows: 3_000_000,
+            },
+            ..PlannedEdge::forced(Relation::Orders, "lineitem⋈orders'", EdgeStrategy::Broadcast)
+        };
+        let new = replan_chain_tail(
+            &cfg,
+            EpsMode::PerFilter,
+            None,
+            std::slice::from_ref(&tail),
+            0.1,
+        );
+        assert_eq!(new.len(), 1);
+        assert_eq!(new[0].stats.build_rows, 10_000);
+        assert_eq!(new[0].stats.build_distinct, 9_000);
+        assert_eq!(new[0].stats.matched_rows, 300_000);
+        // probe side is unchanged — the fact scan is what it is
+        assert_eq!(new[0].stats.probe_rows, 6_000_000);
     }
 
     #[test]
     fn ledger_json_has_all_sections() {
-        let mut l = ReplanLedger::new(ReplanPolicy::Adaptive);
+        let mut l = ReplanLedger::new(ReplanPolicy::Adaptive, DEFAULT_ROW_FLOOR);
         l.events.push(ReplanEvent {
+            trigger: ReplanTrigger::Cardinality,
             after_edge: "⋈orders".into(),
             estimated_survivors: 100,
             measured_survivors: 10,
@@ -325,10 +715,21 @@ mod tests {
             old_tail: vec!["⋈part bloom(eps=0.0100)".into()],
             new_tail: vec!["⋈part broadcast".into()],
         });
+        l.resizes.push(ResizeEvent {
+            edge: "⋈orders".into(),
+            old_eps: 0.2,
+            new_eps: 0.01,
+            build_estimate: 5_000,
+            probe_rows: 100_000,
+        });
         let j = l.to_json();
         assert_eq!(j.get("policy").unwrap().as_str(), Some("adaptive"));
+        assert_eq!(j.get("floor").unwrap().as_f64(), Some(DEFAULT_ROW_FLOOR as f64));
         assert_eq!(j.get("events").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("resizes").unwrap().as_arr().unwrap().len(), 1);
         assert!(j.get("observations").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(l.events_by(ReplanTrigger::Cardinality), 1);
+        assert_eq!(l.events_by(ReplanTrigger::Regret), 0);
         // the writer emits parseable JSON
         assert!(crate::util::Json::parse(&j.to_string()).is_ok());
     }

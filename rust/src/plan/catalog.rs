@@ -182,7 +182,7 @@ pub fn prepare(spec: &PlanSpec) -> PlanInputs {
 
 /// Workload features of one join edge, in the cost model's vocabulary:
 /// the build (filter/broadcast) side and the probe (big) side.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EdgeStats {
     pub build_rows: u64,
     /// HLL-estimated distinct join keys on the build side (what the

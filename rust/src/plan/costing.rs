@@ -296,6 +296,18 @@ pub fn price_edges(
 ) -> Vec<PlannedEdge> {
     // fit the calibration factors once per pricing pass, not per edge
     let factors = calibration.and_then(|c| c.factors());
+    price_edges_with(cfg, eps_mode, factors, edge_list)
+}
+
+/// [`price_edges`] with explicit §7 stage-scale factors instead of a
+/// store — how the regret re-planner prices a tail with *run-measured*
+/// factors rather than whatever the persistent calibration says.
+pub fn price_edges_with(
+    cfg: &ClusterConfig,
+    eps_mode: EpsMode,
+    factors: Option<(f64, f64)>,
+    edge_list: Vec<(String, Relation, EdgeStats)>,
+) -> Vec<PlannedEdge> {
     edge_list
         .into_iter()
         .map(|(name, relation, stats)| {
@@ -370,10 +382,12 @@ impl CostCalibration {
     pub const FACTOR_RANGE: (f64, f64) = (0.05, 20.0);
 
     /// Fold one executed edge into the store (bloom edges only — the §7
-    /// stage models are the bloom cascade's).
+    /// stage models are the bloom cascade's).  Re-sized edges paid stage
+    /// 1 twice (build + rebuild), so their measured split is not the
+    /// model's shape and is excluded from the fit.
     pub fn record(&mut self, obs: &EdgeObservation) {
         let Some(eps) = obs.eps else { return };
-        if obs.predicted_stage1_s <= 0.0 || obs.predicted_stage2_s <= 0.0 {
+        if obs.resized || obs.predicted_stage1_s <= 0.0 || obs.predicted_stage2_s <= 0.0 {
             return;
         }
         if self.samples.len() >= Self::MAX_SAMPLES {
@@ -391,7 +405,17 @@ impl CostCalibration {
     /// The fitted (α, β) stage-scale factors, or `None` below
     /// [`Self::MIN_SAMPLES`] or on a degenerate fit.
     pub fn factors(&self) -> Option<(f64, f64)> {
-        if self.samples.len() < Self::MIN_SAMPLES {
+        self.factors_with_min(Self::MIN_SAMPLES)
+    }
+
+    /// [`factors`] with an explicit sample minimum.  The executor's
+    /// run-local regret state trusts a single in-run observation (the
+    /// simulator's measurements are not noisy the way cross-run wall
+    /// clocks are); the persistent store keeps the stricter default.
+    ///
+    /// [`factors`]: CostCalibration::factors
+    pub fn factors_with_min(&self, min_samples: usize) -> Option<(f64, f64)> {
+        if self.samples.len() < min_samples.max(1) {
             return None;
         }
         let p1: Vec<f64> = self.samples.iter().map(|s| s.predicted_stage1_s).collect();
@@ -647,6 +671,7 @@ mod tests {
             relation: Relation::Part,
             strategy: "bloom(eps=0.0500)".into(),
             eps: Some(0.05),
+            resized: false,
             estimated_probe_rows: 100,
             measured_probe_rows: 100,
             estimated_survivors: 50,
@@ -671,6 +696,9 @@ mod tests {
             let p1 = 1.0 + i as f64;
             let p2 = 3.0 + 2.0 * i as f64;
             store.record(&obs_with(p1, p2, 2.0 * p1, 0.5 * p2));
+            // the run-local regret fit trusts even a single sample
+            let (a1, b1) = store.factors_with_min(1).unwrap();
+            assert!((a1 - 2.0).abs() < 1e-9 && (b1 - 0.5).abs() < 1e-9);
         }
         let (alpha, beta) = store.factors().unwrap();
         assert!((alpha - 2.0).abs() < 1e-9, "{alpha}");
@@ -732,6 +760,10 @@ mod tests {
         non_bloom.eps = None;
         store.record(&non_bloom);
         assert!(store.samples.is_empty(), "non-bloom edges carry no §7 stage split");
+        let mut resized = obs_with(1.0, 1.0, 1.0, 1.0);
+        resized.resized = true;
+        store.record(&resized);
+        assert!(store.samples.is_empty(), "re-sized edges paid stage 1 twice");
         for i in 0..4 {
             let p1 = 1.0 + i as f64;
             store.record(&obs_with(p1, 2.0 * p1, 1.1 * p1, 2.0 * p1));

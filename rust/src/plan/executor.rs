@@ -8,11 +8,15 @@
 //! payload columns** downstream (a selection-vector pipeline — no
 //! per-edge `Vec<PlanRow>` clones), and the final [`PlanRow`]s are
 //! assembled exactly once, in parallel chunks on the cluster's worker
-//! pool.  After each edge completes the executor emits an
-//! [`EdgeObservation`] (measured survivors, stage wall times, shipped
+//! pool; chain plans run the 3-relation dimension-reduction dataflow
+//! through the same loop.  After each edge completes the executor emits
+//! an [`EdgeObservation`] (measured survivors, stage wall times, shipped
 //! bytes); under [`ReplanPolicy::Adaptive`] the not-yet-executed tail is
 //! re-planned whenever the measured survivors break the estimate's 3σ
-//! bound (see [`super::adaptive`]).  Per-edge
+//! bound and the absolute row floor, and [`ReplanPolicy::Regret`] also
+//! re-plans on measured-cost strategy flips and re-sizes a mis-built
+//! filter's ε at the build→broadcast re-plan point (see
+//! [`super::adaptive`]).  Per-edge
 //! [`crate::metrics::QueryMetrics`] are absorbed deterministically in
 //! edge order and every stage collects its per-partition outputs in task
 //! order, so ledgers and row order are identical for any
@@ -26,13 +30,16 @@
 use crate::cluster::pool::ThreadPool;
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::dataset::PartitionedTable;
-use crate::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
+use crate::joins::bloom_cascade::{
+    BloomCascadeConfig, BloomCascadeJoin, FilterResize, ResizeDecision,
+};
 use crate::joins::{exec, JoinedRow, Keyed, RowSize};
 use crate::metrics::QueryMetrics;
 
 use super::adaptive::{
-    estimate_error, expected_survivors, replan_remaining, should_replan, tail_labels,
-    EdgeObservation, ReplanEvent, ReplanLedger, ReplanPolicy,
+    estimate_error, expected_survivors, regret_flip, replan_chain_tail, replan_remaining,
+    resize_epsilon, should_replan, tail_labels, EdgeObservation, ReplanEvent, ReplanLedger,
+    ReplanPolicy, ReplanTrigger, ResizeEvent, REGRET_MARGIN,
 };
 use super::catalog::{EdgeStats, FactRow, PlanInputs, STREAM_ROW_BYTES};
 use super::costing::{edge_cost_model, CostCalibration};
@@ -347,13 +354,16 @@ pub fn nested_loop_oracle(inputs: &PlanInputs, dims: &[Relation]) -> Vec<PlanRow
     out
 }
 
-/// Dispatch one edge to its strategy's executor.
+/// Dispatch one edge to its strategy's executor.  Bloom edges run the
+/// phased cascade with the mid-build re-plan point armed (`resize`);
+/// the other strategies have no filter to re-size.
 fn run_edge<B, S>(
     cluster: &Cluster,
     edge: &PlannedEdge,
     big: PartitionedTable<Keyed<B>>,
     small: PartitionedTable<Keyed<S>>,
-) -> (Vec<JoinedRow<B, S>>, QueryMetrics)
+    resize: Option<ResizeDecision<'_>>,
+) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>)
 where
     B: Clone + Send + Sync + RowSize + 'static,
     S: Clone + Send + Sync + RowSize + 'static,
@@ -362,10 +372,16 @@ where
         EdgeStrategy::Bloom { eps } => {
             let join =
                 BloomCascadeJoin::new(BloomCascadeConfig { fpr: *eps, ..Default::default() });
-            join.execute(cluster, big, small)
+            join.execute_with_resize(cluster, big, small, resize)
         }
-        EdgeStrategy::Broadcast => exec::broadcast_hash_join(cluster, big, small),
-        EdgeStrategy::SortMerge => exec::sort_merge_join(cluster, big, small),
+        EdgeStrategy::Broadcast => {
+            let (rows, m) = exec::broadcast_hash_join(cluster, big, small);
+            (rows, m, None)
+        }
+        EdgeStrategy::SortMerge => {
+            let (rows, m) = exec::sort_merge_join(cluster, big, small);
+            (rows, m, None)
+        }
     }
 }
 
@@ -383,15 +399,17 @@ struct DimTables {
 
 /// Run one star edge: probe the gathered key column against the edge's
 /// dimension, contract the stream through the survivors and append the
-/// dimension's payload column.  Returns the edge's metrics; the measured
-/// survivor count is the stream's new length.
+/// dimension's payload column.  Returns the edge's metrics (and what the
+/// mid-build re-plan point did, for bloom edges); the measured survivor
+/// count is the stream's new length.
 fn run_star_edge(
     cluster: &Cluster,
     edge: &PlannedEdge,
     parts: usize,
     stream: &mut FactStream,
     tables: &mut DimTables,
-) -> QueryMetrics {
+    resize: Option<ResizeDecision<'_>>,
+) -> (QueryMetrics, Option<FilterResize>) {
     // the edge's big side: the gathered key column + stream indices —
     // survivors come back as indices + payloads
     let big: PartitionedTable<Keyed<StreamIdx>> = PartitionedTable::from_rows(
@@ -408,7 +426,7 @@ fn run_star_edge(
             let dim = tables.orders.take().expect("star plans join orders at most once");
             let small: PartitionedTable<Keyed<(u64, i32)>> =
                 dim.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect());
-            let (joined, m) = run_edge(cluster, edge, big, small);
+            let (joined, m, resized) = run_edge(cluster, edge, big, small, resize);
             tables.orders_joined = true;
             let mut inner = Vec::with_capacity(joined.len());
             let mut ck = Vec::with_capacity(joined.len());
@@ -421,7 +439,7 @@ fn run_star_edge(
             stream.contract(&inner);
             stream.custkey = Some(ck);
             stream.orderdate = Some(od);
-            m
+            (m, resized)
         }
         Relation::Customer => {
             assert!(
@@ -429,7 +447,7 @@ fn run_star_edge(
                 "a customer edge requires an orders edge upstream (custkey comes from ORDERS)"
             );
             let dim = tables.customer.take().expect("star plans join customer at most once");
-            let (joined, m) = run_edge(cluster, edge, big, dim);
+            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize);
             let mut inner = Vec::with_capacity(joined.len());
             let mut nk = Vec::with_capacity(joined.len());
             for (_, idx, n) in joined {
@@ -438,11 +456,11 @@ fn run_star_edge(
             }
             stream.contract(&inner);
             stream.nationkey = Some(nk);
-            m
+            (m, resized)
         }
         Relation::Part => {
             let dim = tables.part.take().expect("star plans join part at most once");
-            let (joined, m) = run_edge(cluster, edge, big, dim);
+            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize);
             let mut inner = Vec::with_capacity(joined.len());
             let mut brand = Vec::with_capacity(joined.len());
             for (_, idx, b) in joined {
@@ -451,11 +469,11 @@ fn run_star_edge(
             }
             stream.contract(&inner);
             stream.p_brand = Some(brand);
-            m
+            (m, resized)
         }
         Relation::Supplier => {
             let dim = tables.supplier.take().expect("star plans join supplier at most once");
-            let (joined, m) = run_edge(cluster, edge, big, dim);
+            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize);
             let mut inner = Vec::with_capacity(joined.len());
             let mut nk = Vec::with_capacity(joined.len());
             for (_, idx, n) in joined {
@@ -464,7 +482,7 @@ fn run_star_edge(
             }
             stream.contract(&inner);
             stream.s_nationkey = Some(nk);
-            m
+            (m, resized)
         }
         Relation::Lineitem => {
             panic!("lineitem is the fact side of a star plan, not a dimension")
@@ -475,18 +493,23 @@ fn run_star_edge(
 /// What the executor measured running one edge — the adaptive loop's
 /// (and the calibration store's) input.  For bloom edges the
 /// uncalibrated §7 model is re-evaluated on the *measured* workload at
-/// the executed ε, so a calibration fit sees constant error, not
-/// estimate error.
+/// the executed ε (the re-sized value when the mid-build re-plan point
+/// fired), so a calibration fit sees constant error, not estimate error.
 fn observe_edge(
     cfg: &ClusterConfig,
     edge: &PlannedEdge,
     m: &QueryMetrics,
     probe_rows: u64,
     survivors: u64,
+    resized: Option<&FilterResize>,
 ) -> EdgeObservation {
-    let eps = match edge.strategy {
+    let planned_eps = match edge.strategy {
         EdgeStrategy::Bloom { eps } => Some(eps),
         _ => None,
+    };
+    let eps = match (planned_eps, resized) {
+        (Some(_), Some(r)) => Some(r.new_fpr),
+        (planned, _) => planned,
     };
     let (pred1, pred2) = match eps {
         Some(e) => {
@@ -500,6 +523,10 @@ fn observe_edge(
         }
         None => (0.0, 0.0),
     };
+    let strategy = match eps {
+        Some(e) => EdgeStrategy::Bloom { eps: e }.label(),
+        None => edge.strategy.label(),
+    };
     let probe_stage = match edge.strategy {
         EdgeStrategy::Bloom { .. } => "filter_scan",
         _ => "join",
@@ -507,8 +534,9 @@ fn observe_edge(
     EdgeObservation {
         edge: edge.name.clone(),
         relation: edge.relation,
-        strategy: edge.strategy.label(),
+        strategy,
         eps,
+        resized: resized.is_some(),
         estimated_probe_rows: edge.stats.probe_rows,
         measured_probe_rows: probe_rows,
         estimated_survivors: edge.stats.matched_rows,
@@ -524,13 +552,118 @@ fn observe_edge(
     }
 }
 
+/// Whether this edge should arm the mid-build re-plan point: regret
+/// policy, a genuinely planned bloom edge, and a probe stream big enough
+/// that the row floor considers it worth correcting at all.
+fn wants_resize(spec: &PlanSpec, edge: &PlannedEdge, probe_rows: u64) -> bool {
+    spec.replan == ReplanPolicy::Regret
+        && edge.has_estimates()
+        && probe_rows >= spec.replan_floor
+        && matches!(edge.strategy, EdgeStrategy::Bloom { .. })
+}
+
+/// Build the [`ResizeDecision`] hook for one bloom edge: the executor
+/// already knows the measured probe stream; the build phase adds the
+/// approximate build-side count, and [`resize_epsilon`] decides on that
+/// measured workload under the run-measured stage factors (the
+/// constructed model when the run has none yet — the persistent store is
+/// exactly what the regret policy holds under suspicion).
+fn resize_decider(
+    cfg: ClusterConfig,
+    stats: EdgeStats,
+    probe_rows: u64,
+    factors: Option<(f64, f64)>,
+) -> impl Fn(u64, f64) -> Option<f64> {
+    move |build_estimate, built_eps| {
+        let frac = stats.matched_rows as f64 / stats.probe_rows.max(1) as f64;
+        let matched = ((probe_rows as f64 * frac).round() as u64).clamp(1, probe_rows.max(1));
+        let measured = EdgeStats {
+            build_distinct: build_estimate.max(1),
+            probe_rows: probe_rows.max(1),
+            matched_rows: matched,
+            ..stats.clone()
+        };
+        resize_epsilon(&cfg, &measured, built_eps, factors)
+    }
+}
+
+/// The post-edge trigger checks, shared by the star and chain loops.
+/// `replan` produces the topology's re-planned tail for a given set of
+/// §7 stage factors (and may decline, e.g. when the plan carries no
+/// estimates).  Returns the new tail to splice in and records the event.
+#[allow(clippy::too_many_arguments)]
+fn trigger_tail(
+    cfg: &ClusterConfig,
+    spec: &PlanSpec,
+    persistent_factors: Option<(f64, f64)>,
+    run_calib: &CostCalibration,
+    ledger: &mut ReplanLedger,
+    edge: &PlannedEdge,
+    remaining: &[PlannedEdge],
+    survivors: u64,
+    expected: u64,
+    replan: &dyn Fn(Option<(f64, f64)>) -> Option<Vec<PlannedEdge>>,
+) -> Option<Vec<PlannedEdge>> {
+    if remaining.is_empty() || !edge.has_estimates() {
+        return None;
+    }
+    // cardinality: measured survivors inconsistent with this edge's own
+    // selectivity estimate, beyond sketch noise and the row floor —
+    // every remaining workload was derived from a wrong residual
+    let cardinality = spec.replan.is_adaptive()
+        && should_replan(expected, survivors, ledger.bound, ledger.floor);
+    if cardinality {
+        let factors = match spec.replan {
+            ReplanPolicy::Regret => run_calib.factors_with_min(1).or(persistent_factors),
+            _ => persistent_factors,
+        };
+        if let Some(new_tail) = replan(factors) {
+            ledger.events.push(ReplanEvent {
+                trigger: ReplanTrigger::Cardinality,
+                after_edge: edge.name.clone(),
+                estimated_survivors: expected,
+                measured_survivors: survivors,
+                relative_error: estimate_error(expected, survivors),
+                bound: ledger.bound,
+                old_tail: tail_labels(remaining),
+                new_tail: tail_labels(&new_tail),
+            });
+            return Some(new_tail);
+        }
+    }
+    // strategy regret: the run-measured stage factors would flip a
+    // remaining edge's cheapest-strategy ranking
+    if spec.replan == ReplanPolicy::Regret && survivors >= ledger.floor {
+        if let Some(factors) = run_calib.factors_with_min(1) {
+            if let Some(finding) = regret_flip(cfg, factors, remaining) {
+                if let Some(new_tail) = replan(Some(factors)) {
+                    ledger.events.push(ReplanEvent {
+                        trigger: ReplanTrigger::Regret,
+                        after_edge: edge.name.clone(),
+                        estimated_survivors: expected,
+                        measured_survivors: survivors,
+                        relative_error: (finding.assigned_s - finding.cheapest_s)
+                            / finding.cheapest_s.max(1e-12),
+                        bound: REGRET_MARGIN,
+                        old_tail: tail_labels(remaining),
+                        new_tail: tail_labels(&new_tail),
+                    });
+                    return Some(new_tail);
+                }
+            }
+        }
+    }
+    None
+}
+
 /// Execute `plan` over `inputs` on `cluster`.
 ///
 /// Star plans run any number of dimension edges (a CUSTOMER edge must
 /// come after an ORDERS edge) over the vectorized [`FactStream`]; chain
-/// plans are the fixed two-edge 3-relation tree.  Re-planning (when
-/// `spec.replan` asks for it) uses uncalibrated cost models; use
-/// [`execute_with`] to thread a calibration store through.
+/// plans run the 3-relation dimension-reduction tree through the same
+/// incremental observe/re-plan loop.  Re-planning (when `spec.replan`
+/// asks for it) uses uncalibrated cost models; use [`execute_with`] to
+/// thread a calibration store through.
 pub fn execute(
     cluster: &Cluster,
     spec: &PlanSpec,
@@ -541,7 +674,10 @@ pub fn execute(
 }
 
 /// [`execute`] with an optional per-cluster calibration store, applied
-/// when an adaptive re-plan re-prices the remaining tail.
+/// when an adaptive re-plan re-prices the remaining tail.  Under
+/// [`ReplanPolicy::Regret`] the run's own §7 observations take
+/// precedence over the store — fresh measurements outrank the prior that
+/// may be exactly what mispriced the plan.
 pub fn execute_with(
     cluster: &Cluster,
     spec: &PlanSpec,
@@ -555,7 +691,11 @@ pub fn execute_with(
 
     let mut metrics = QueryMetrics::default();
     let mut edge_reports = Vec::with_capacity(plan.edges.len());
-    let mut ledger = ReplanLedger::new(spec.replan);
+    let mut ledger = ReplanLedger::new(spec.replan, spec.replan_floor);
+    // run-local regret state: this run's own §7 observations, nothing
+    // else — under the regret policy these outrank the persistent store
+    let mut run_calib = CostCalibration::default();
+    let persistent_factors = calibration.and_then(|c| c.factors());
 
     let rows: Vec<PlanRow> = match plan.topology {
         Topology::Star => {
@@ -574,46 +714,65 @@ pub fn execute_with(
             while i < pending.len() {
                 let edge = pending[i].clone();
                 let probe_rows = stream.len() as u64;
-                let m = run_star_edge(cluster, &edge, parts, &mut stream, &mut tables);
+                // mid-build re-plan point (regret bloom edges only)
+                let decider = wants_resize(spec, &edge, probe_rows).then(|| {
+                    resize_decider(
+                        cluster.config().clone(),
+                        edge.stats.clone(),
+                        probe_rows,
+                        run_calib.factors_with_min(1),
+                    )
+                });
+                let resize = decider.as_ref().map(|f| f as ResizeDecision<'_>);
+                let (m, resized) =
+                    run_star_edge(cluster, &edge, parts, &mut stream, &mut tables, resize);
                 let survivors = stream.len() as u64;
-                // observe: if the measured survivors are inconsistent
-                // with this edge's selectivity estimate (beyond sketch
-                // noise), every remaining edge's workload was derived
-                // from a wrong residual — re-plan the tail against the
-                // measured one
-                let expected = expected_survivors(&edge.stats, probe_rows);
-                if spec.replan == ReplanPolicy::Adaptive
-                    && i + 1 < pending.len()
-                    && should_replan(expected, survivors, ledger.bound)
-                {
-                    if let Some(new_tail) = replan_remaining(
-                        cluster,
-                        spec,
-                        calibration,
-                        &plan.dim_stats,
-                        &pending[i + 1..],
-                        survivors,
-                    ) {
-                        ledger.events.push(ReplanEvent {
-                            after_edge: edge.name.clone(),
-                            estimated_survivors: expected,
-                            measured_survivors: survivors,
-                            relative_error: estimate_error(expected, survivors),
-                            bound: ledger.bound,
-                            old_tail: tail_labels(&pending[i + 1..]),
-                            new_tail: tail_labels(&new_tail),
-                        });
-                        pending.truncate(i + 1);
-                        pending.extend(new_tail);
-                    }
-                }
-                ledger.observations.push(observe_edge(
+                let obs = observe_edge(
                     cluster.config(),
                     &edge,
                     &m,
                     probe_rows,
                     survivors,
-                ));
+                    resized.as_ref(),
+                );
+                if let Some(r) = &resized {
+                    ledger.resizes.push(ResizeEvent {
+                        edge: edge.name.clone(),
+                        old_eps: r.old_fpr,
+                        new_eps: r.new_fpr,
+                        build_estimate: r.build_estimate,
+                        probe_rows,
+                    });
+                }
+                run_calib.record(&obs);
+                let expected = expected_survivors(&edge.stats, probe_rows);
+                let replan = |factors: Option<(f64, f64)>| {
+                    replan_remaining(
+                        cluster,
+                        spec,
+                        factors,
+                        &plan.dim_stats,
+                        &pending[i + 1..],
+                        survivors,
+                    )
+                };
+                let new_tail = trigger_tail(
+                    cluster.config(),
+                    spec,
+                    persistent_factors,
+                    &run_calib,
+                    &mut ledger,
+                    &edge,
+                    &pending[i + 1..],
+                    survivors,
+                    expected,
+                    &replan,
+                );
+                if let Some(new_tail) = new_tail {
+                    pending.truncate(i + 1);
+                    pending.extend(new_tail);
+                }
+                ledger.observations.push(obs);
                 edge_reports.push(edge_report(&edge, &m, probe_rows));
                 metrics.absorb(&format!("e{}", i + 1), m);
                 i += 1;
@@ -621,54 +780,134 @@ pub fn execute_with(
             stream.assemble(cluster.pool())
         }
         Topology::Chain => {
-            assert_eq!(plan.edges.len(), 2, "chain plans are the 3-relation tree");
-            // edge 1: ORDERS ⋈ CUSTOMER on custkey (customer build side)
-            let big1: PartitionedTable<Keyed<(u64, i32)>> = orders
-                .map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect());
-            let probe1 = big1.n_rows() as u64;
-            let (j1, m1) = run_edge(cluster, &plan.edges[0], big1, customer);
-            let survivors1 = j1.len() as u64;
-            ledger.observations.push(observe_edge(
-                cluster.config(),
-                &plan.edges[0],
-                &m1,
-                probe1,
-                survivors1,
-            ));
-            edge_reports.push(edge_report(&plan.edges[0], &m1, probe1));
-            metrics.absorb("e1", m1);
-
-            // re-key the reduced orders by orderkey for the fact edge
-            let small2: PartitionedTable<Keyed<(u64, (i32, i32))>> =
-                PartitionedTable::from_rows(
-                    j1.into_iter().map(|(ck, (ok, od), nk)| (ok, (ck, (od, nk)))).collect(),
-                    parts,
+            // the same incremental observe/re-plan loop, over the chain's
+            // dimension-reduction dataflow: the CUSTOMER edge reduces
+            // ORDERS, then the ORDERS edge joins LINEITEM to the
+            // reduction
+            let mut orders_tbl = Some(orders);
+            let mut customer_tbl = Some(customer);
+            let mut lineitem_tbl = Some(lineitem);
+            // ORDERS' — the customer-reduced orders, keyed by orderkey
+            let mut reduced: Option<PartitionedTable<Keyed<(u64, (i32, i32))>>> = None;
+            let mut rows_out: Vec<PlanRow> = Vec::new();
+            let mut pending: Vec<PlannedEdge> = plan.edges.clone();
+            let mut i = 0;
+            while i < pending.len() {
+                let edge = pending[i].clone();
+                let probe_rows = match edge.relation {
+                    Relation::Customer => orders_tbl.as_ref().map_or(0, |t| t.n_rows()) as u64,
+                    _ => lineitem_tbl.as_ref().map_or(0, |t| t.n_rows()) as u64,
+                };
+                let decider = wants_resize(spec, &edge, probe_rows).then(|| {
+                    resize_decider(
+                        cluster.config().clone(),
+                        edge.stats.clone(),
+                        probe_rows,
+                        run_calib.factors_with_min(1),
+                    )
+                });
+                let resize = decider.as_ref().map(|f| f as ResizeDecision<'_>);
+                let (m, resized, survivors) = match edge.relation {
+                    Relation::Customer => {
+                        // edge: ORDERS ⋈ CUSTOMER on custkey
+                        let o = orders_tbl.take().expect("chain joins orders at most once");
+                        let c = customer_tbl.take().expect("chain joins customer at most once");
+                        let big: PartitionedTable<Keyed<(u64, i32)>> = o.map_partitions(|p| {
+                            p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect()
+                        });
+                        let (joined, m, r) = run_edge(cluster, &edge, big, c, resize);
+                        let survivors = joined.len() as u64;
+                        // re-key the reduction by orderkey for the fact edge
+                        reduced = Some(PartitionedTable::from_rows(
+                            joined
+                                .into_iter()
+                                .map(|(ck, (ok, od), nk)| (ok, (ck, (od, nk))))
+                                .collect(),
+                            parts,
+                        ));
+                        (m, r, survivors)
+                    }
+                    Relation::Orders => {
+                        // edge: LINEITEM ⋈ ORDERS' on orderkey
+                        let small =
+                            reduced.take().expect("the chain fact edge needs the reduction");
+                        let l = lineitem_tbl.take().expect("chain joins lineitem once");
+                        let big: PartitionedTable<Keyed<PlanRow>> = l.map_partitions(|p| {
+                            p.iter().map(|f| (f.orderkey, seed_row(f))).collect()
+                        });
+                        let (joined, m, r) = run_edge(cluster, &edge, big, small, resize);
+                        let survivors = joined.len() as u64;
+                        rows_out = joined
+                            .into_iter()
+                            .map(|(_, mut row, (ck, (od, nk)))| {
+                                row.custkey = ck;
+                                row.orderdate = od;
+                                row.nationkey = nk;
+                                row
+                            })
+                            .collect();
+                        (m, r, survivors)
+                    }
+                    other => {
+                        panic!("chain plans join customer then orders, not {}", other.name())
+                    }
+                };
+                let obs = observe_edge(
+                    cluster.config(),
+                    &edge,
+                    &m,
+                    probe_rows,
+                    survivors,
+                    resized.as_ref(),
                 );
-
-            // edge 2: LINEITEM ⋈ ORDERS' on orderkey
-            let big2: PartitionedTable<Keyed<PlanRow>> = lineitem
-                .map_partitions(|p| p.iter().map(|f| (f.orderkey, seed_row(f))).collect());
-            let probe2 = big2.n_rows() as u64;
-            let (j2, m2) = run_edge(cluster, &plan.edges[1], big2, small2);
-            let survivors2 = j2.len() as u64;
-            ledger.observations.push(observe_edge(
-                cluster.config(),
-                &plan.edges[1],
-                &m2,
-                probe2,
-                survivors2,
-            ));
-            edge_reports.push(edge_report(&plan.edges[1], &m2, probe2));
-            metrics.absorb("e2", m2);
-
-            j2.into_iter()
-                .map(|(_, mut row, (ck, (od, nk)))| {
-                    row.custkey = ck;
-                    row.orderdate = od;
-                    row.nationkey = nk;
-                    row
-                })
-                .collect()
+                if let Some(r) = &resized {
+                    ledger.resizes.push(ResizeEvent {
+                        edge: edge.name.clone(),
+                        old_eps: r.old_fpr,
+                        new_eps: r.new_fpr,
+                        build_estimate: r.build_estimate,
+                        probe_rows,
+                    });
+                }
+                run_calib.record(&obs);
+                let expected = expected_survivors(&edge.stats, probe_rows);
+                let replan = |factors: Option<(f64, f64)>| {
+                    // chain tails carry propagated estimates; a
+                    // strategy-forced plan has none to rescale
+                    if !pending[i + 1..].iter().all(PlannedEdge::has_estimates) {
+                        return None;
+                    }
+                    let ratio = survivors as f64 / expected.max(1) as f64;
+                    Some(replan_chain_tail(
+                        cluster.config(),
+                        spec.eps_mode,
+                        factors,
+                        &pending[i + 1..],
+                        ratio,
+                    ))
+                };
+                let new_tail = trigger_tail(
+                    cluster.config(),
+                    spec,
+                    persistent_factors,
+                    &run_calib,
+                    &mut ledger,
+                    &edge,
+                    &pending[i + 1..],
+                    survivors,
+                    expected,
+                    &replan,
+                );
+                if let Some(new_tail) = new_tail {
+                    pending.truncate(i + 1);
+                    pending.extend(new_tail);
+                }
+                ledger.observations.push(obs);
+                edge_reports.push(edge_report(&edge, &m, probe_rows));
+                metrics.absorb(&format!("e{}", i + 1), m);
+                i += 1;
+            }
+            rows_out
         }
     };
 
@@ -715,15 +954,16 @@ mod tests {
         let inputs = prepare(&spec);
         let plan = plan_edges(&cluster, &spec, &inputs);
         let a = execute(&cluster, &spec, &plan, inputs.clone());
-        let adaptive_spec =
-            PlanSpec { replan: super::super::ReplanPolicy::Adaptive, ..spec.clone() };
-        let b = execute(&cluster, &adaptive_spec, &plan, inputs);
         let mut ra = a.rows;
-        let mut rb = b.rows;
         ra.sort_unstable();
-        rb.sort_unstable();
-        assert_eq!(ra, rb, "re-planning must not change the join result");
-        assert_eq!(b.ledger.observations.len(), b.edge_reports.len());
+        for policy in [ReplanPolicy::Adaptive, ReplanPolicy::Regret] {
+            let respec = PlanSpec { replan: policy, ..spec.clone() };
+            let b = execute(&cluster, &respec, &plan, inputs.clone());
+            let mut rb = b.rows;
+            rb.sort_unstable();
+            assert_eq!(ra, rb, "{}: re-planning must not change the join result", policy.name());
+            assert_eq!(b.ledger.observations.len(), b.edge_reports.len());
+        }
     }
 
     fn tiny_spec() -> PlanSpec {

@@ -36,12 +36,20 @@
 //! work runs in parallel on the `BLOOMJOIN_THREADS`-sized pool) and
 //! composes the per-edge stage accounting into a single
 //! [`crate::metrics::QueryMetrics`] ledger, so a plan's simulated cost
-//! is the composition of its stages.  The loop is **incremental**: each
-//! executed edge emits an [`EdgeObservation`], and under
-//! [`ReplanPolicy::Adaptive`] the not-yet-executed tail is re-ranked and
-//! re-priced ([`adaptive`]) whenever measured survivors break the HLL 3σ
-//! bound; accumulated observations also feed the per-cluster
-//! [`CostCalibration`] store that refines the cost constants across runs.
+//! is the composition of its stages.  The loop is **incremental** for
+//! both topologies: each executed edge emits an [`EdgeObservation`], and
+//! under [`ReplanPolicy::Adaptive`] the not-yet-executed tail is
+//! re-ranked and re-priced ([`adaptive`]) whenever measured survivors
+//! break the HLL 3σ bound *and* the absolute row floor
+//! ([`PlanSpec::replan_floor`]).  [`ReplanPolicy::Regret`] goes further:
+//! run-measured §7 stage seconds are fitted against the model's
+//! predictions on the same workloads, and the tail is re-planned when
+//! those factors would flip a remaining edge's cheapest-strategy ranking
+//! ([`regret_flip`]) — plus a mid-edge re-plan point between filter
+//! build and broadcast that re-sizes a mis-built ε before it ships
+//! ([`resize_epsilon`]).  Accumulated observations also feed the
+//! per-cluster [`CostCalibration`] store that refines the cost constants
+//! across runs.
 
 pub mod adaptive;
 pub mod catalog;
@@ -49,15 +57,16 @@ pub mod costing;
 pub mod executor;
 
 pub use adaptive::{
-    estimate_error, should_replan, trigger_bound, EdgeObservation, ReplanEvent, ReplanLedger,
-    ReplanPolicy,
+    estimate_error, regret_flip, resize_epsilon, should_replan, trigger_bound, EdgeObservation,
+    RegretFinding, ReplanEvent, ReplanLedger, ReplanPolicy, ReplanTrigger, ResizeEvent,
+    DEFAULT_ROW_FLOOR, REGRET_MARGIN, RESIZE_RATIO,
 };
 pub use catalog::{
     chain_edge_stats, prepare, star_dim_stats, DimStats, EdgeStats, FactRow, PlanInputs, Relation,
 };
 pub use costing::{
-    derive_edge_stats, plan_edges, plan_edges_calibrated, rank_dims, star_edge_stats,
-    CostCalibration, EdgePrediction,
+    derive_edge_stats, plan_edges, plan_edges_calibrated, price_edges_with, rank_dims,
+    star_edge_stats, CostCalibration, EdgePrediction,
 };
 pub use executor::{
     execute, execute_with, nested_loop_oracle, EdgeReport, PlanOutput, PlanRow, StreamIdx,
@@ -154,9 +163,13 @@ pub struct PlanSpec {
     pub pushdown: PushdownMode,
     /// Whether the executor may re-plan the remaining edges when a
     /// measured survivor count breaks the estimate's 3σ bound
-    /// ([`adaptive`]); [`ReplanPolicy::Static`] is the pre-adaptive
-    /// behaviour.
+    /// ([`adaptive`]); [`ReplanPolicy::Regret`] additionally re-plans on
+    /// strategy regret and re-sizes a mis-built filter before broadcast;
+    /// [`ReplanPolicy::Static`] is the pre-adaptive behaviour.
     pub replan: ReplanPolicy,
+    /// Absolute row floor both re-plan triggers must clear — a relative
+    /// breach on fewer residual rows than this is noise, not information.
+    pub replan_floor: u64,
 }
 
 impl Default for PlanSpec {
@@ -177,6 +190,7 @@ impl Default for PlanSpec {
             eps_mode: EpsMode::PerFilter,
             pushdown: PushdownMode::Ranked,
             replan: ReplanPolicy::Static,
+            replan_floor: DEFAULT_ROW_FLOOR,
         }
     }
 }
@@ -214,6 +228,14 @@ pub struct PlannedEdge {
 }
 
 impl PlannedEdge {
+    /// Whether this edge carries real catalog estimates (vs the defaults
+    /// a [`PlannedEdge::forced`] test edge gets).  The adaptive triggers
+    /// only judge edges that were actually planned — a forced edge has
+    /// no estimate to be wrong about.
+    pub fn has_estimates(&self) -> bool {
+        self.stats != EdgeStats::default()
+    }
+
     /// An edge with a caller-forced strategy and no planning stats —
     /// what the equivalence tests use to enumerate strategy assignments.
     pub fn forced(
@@ -233,9 +255,11 @@ impl PlannedEdge {
 
 /// A fully-decided plan: topology + per-edge strategies, plus the
 /// per-dimension sketch features planning was derived from — the raw
-/// material the adaptive re-planner needs to re-derive the tail against
-/// a measured residual.  Empty `dim_stats` (chain plans, strategy-forced
-/// test plans) makes the plan immune to re-planning.
+/// material the adaptive re-planner needs to re-derive a star tail
+/// against a measured residual.  Chain plans carry no `dim_stats`; their
+/// tails re-plan by rescaling the propagated per-edge estimates instead
+/// ([`adaptive::replan_chain_tail`]).  Strategy-forced test plans carry
+/// neither, which makes them immune to re-planning.
 #[derive(Clone, Debug)]
 pub struct JoinPlan {
     pub topology: Topology,

@@ -408,17 +408,19 @@ fn adaptive_replanning_still_equals_oracle() {
     // fully planned (not forced) runs: HLL estimates on these tiny skewed
     // workloads are frequently off by more than the 3σ bound, so the
     // adaptive executor genuinely re-ranks and re-prices mid-query — and
-    // the result must still be the oracle's multiset, for both policies
+    // the result must still be the oracle's multiset, for every policy,
+    // with a low row floor so the tiny workloads can actually trigger
     let cluster = Cluster::new(ClusterConfig::local());
     let dims = [Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier];
     check("adaptive planned 5-way ≡ oracle", 4, gen_star, |case| {
         let want = oracle_for(case, &dims);
         let plan_inputs = star_inputs(case);
-        for replan in [ReplanPolicy::Static, ReplanPolicy::Adaptive] {
+        for replan in [ReplanPolicy::Static, ReplanPolicy::Adaptive, ReplanPolicy::Regret] {
             let spec = PlanSpec {
                 partitions: 4,
                 dims: dims.to_vec(),
                 replan,
+                replan_floor: 8,
                 ..Default::default()
             };
             let plan = plan_edges(&cluster, &spec, &plan_inputs);
@@ -432,6 +434,78 @@ fn adaptive_replanning_still_equals_oracle() {
                 return Err(format!(
                     "{} run: got {} rows, want {}",
                     replan.name(),
+                    got.len(),
+                    want.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chain_adaptive_plans_equal_oracle_for_every_strategy_assignment() {
+    // the chain topology now runs the same incremental observe/re-plan
+    // loop stars use: forced plans (no estimates) must execute untouched
+    // under every policy, and fully planned chains must equal the oracle
+    // even when the loop genuinely re-plans the tail mid-query
+    let cluster = Cluster::new(ClusterConfig::local());
+    let dims3 = [Relation::Orders, Relation::Customer];
+    check("chain ≡ oracle under adaptive policies, all assignments", 3, gen_star, |case| {
+        let want = oracle_for(case, &dims3);
+        for policy in [ReplanPolicy::Adaptive, ReplanPolicy::Regret] {
+            for s1 in strategies() {
+                for s2 in strategies() {
+                    let plan = JoinPlan {
+                        topology: Topology::Chain,
+                        edges: vec![
+                            PlannedEdge::forced(Relation::Customer, "e1", s1.clone()),
+                            PlannedEdge::forced(Relation::Orders, "e2", s2.clone()),
+                        ],
+                        dim_stats: Vec::new(),
+                    };
+                    let spec = PlanSpec { partitions: 4, replan: policy, ..Default::default() };
+                    let out = execute(&cluster, &spec, &plan, star_inputs(case));
+                    if !out.ledger.events.is_empty() {
+                        return Err(format!(
+                            "{}: forced chain plans carry no estimates to re-plan on",
+                            policy.name()
+                        ));
+                    }
+                    let mut got = out.rows;
+                    got.sort_unstable();
+                    if got != want {
+                        return Err(format!(
+                            "{} chain ({}, {}): got {} rows, want {}",
+                            policy.name(),
+                            s1.label(),
+                            s2.label(),
+                            got.len(),
+                            want.len()
+                        ));
+                    }
+                }
+            }
+            // fully planned chain: estimates present, re-planning live
+            let spec = PlanSpec {
+                partitions: 4,
+                topology: Topology::Chain,
+                dims: dims3.to_vec(),
+                replan: policy,
+                replan_floor: 8,
+                ..Default::default()
+            };
+            let plan = plan_edges(&cluster, &spec, &star_inputs(case));
+            let out = execute(&cluster, &spec, &plan, star_inputs(case));
+            if out.ledger.observations.len() != 2 {
+                return Err("one observation per chain edge".into());
+            }
+            let mut got = out.rows;
+            got.sort_unstable();
+            if got != want {
+                return Err(format!(
+                    "{} planned chain: got {} rows, want {}",
+                    policy.name(),
                     got.len(),
                     want.len()
                 ));

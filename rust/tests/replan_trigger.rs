@@ -1,8 +1,11 @@
-//! Property coverage for the adaptive re-plan trigger (plan/adaptive.rs):
+//! Property coverage for the adaptive re-plan triggers (plan/adaptive.rs):
 //!
 //! * estimates inside the HLL 3σ bound never trigger a re-plan, and
 //!   estimates just outside it always do (pure trigger math, both
 //!   directions);
+//! * the absolute row floor silences any residual smaller than itself,
+//!   however large the relative error — and a residual clearing both the
+//!   floor and the bound always fires;
 //! * an adaptive run with *perfect* estimates (dimension key sets equal
 //!   to the fact key sets, unique keys, so the sketch overlap is exact
 //!   and survivors equal probe rows) produces an executed plan identical
@@ -10,13 +13,24 @@
 //! * a skewed workload (hot fact keys the dimension misses — exactly
 //!   where distinct-key overlap misestimates row survival) always
 //!   triggers, and the re-planned execution still returns the oracle's
-//!   multiset.
+//!   multiset;
+//! * the strategy-regret trigger fires exactly when planning trusted a
+//!   poisoned calibration store (measured stage seconds contradict the
+//!   plan's economics and flip a tail strategy), never when predictions
+//!   are honest; the mid-build re-size point corrects a poisoned-loose ε
+//!   before broadcast; both preserve the oracle's multiset;
+//! * chain topologies run the same incremental observe/re-plan loop:
+//!   a skewed dimension-reduction edge triggers, the tail is re-priced
+//!   from the measured contraction, and the result still equals the
+//!   oracle under every policy.
 
+use bloomjoin::bench_support::{exact_star_inputs, paper_scaled_cluster, poisoned_store};
 use bloomjoin::cluster::{Cluster, ClusterConfig};
 use bloomjoin::dataset::PartitionedTable;
 use bloomjoin::plan::{
-    execute, nested_loop_oracle, plan_edges, should_replan, trigger_bound, FactRow, PlanInputs,
-    PlanSpec, PushdownMode, Relation, ReplanPolicy,
+    execute, execute_with, nested_loop_oracle, plan_edges, plan_edges_calibrated, should_replan,
+    trigger_bound, EdgeStrategy, FactRow, PlanInputs, PlanSpec, PushdownMode, Relation,
+    ReplanPolicy, ReplanTrigger, Topology,
 };
 use bloomjoin::testkit::check;
 
@@ -35,7 +49,7 @@ fn estimates_inside_the_bound_never_trigger_and_just_outside_always_do() {
             // inside: |measured − est| ≤ frac·bound·est < bound·est
             let inside = (estimated as f64 * bound * frac).floor() as u64;
             for measured in [estimated + inside, estimated - inside] {
-                if should_replan(estimated, measured, bound) {
+                if should_replan(estimated, measured, bound, 1) {
                     return Err(format!(
                         "inside the bound triggered: est {estimated}, measured {measured}"
                     ));
@@ -44,11 +58,47 @@ fn estimates_inside_the_bound_never_trigger_and_just_outside_always_do() {
             // just outside: |measured − est| = ceil(bound·est) + 1 > bound·est
             let outside = (estimated as f64 * bound).ceil() as u64 + 1;
             for measured in [estimated + outside, estimated.saturating_sub(outside)] {
-                if !should_replan(estimated, measured, bound) {
+                if !should_replan(estimated, measured, bound, 1) {
                     return Err(format!(
                         "outside the bound did not trigger: est {estimated}, measured {measured}"
                     ));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn residuals_below_the_floor_never_trigger() {
+    let bound = trigger_bound();
+    check(
+        "row floor suppresses small residuals",
+        40,
+        |g| {
+            let estimated = 1 + g.u64_below(1_000);
+            let floor = 1 + g.u64_below(1_000);
+            (estimated, floor)
+        },
+        |&(estimated, floor)| {
+            // any measurement within floor rows of the estimate is quiet,
+            // no matter how large the relative error gets at small scale
+            for diff in [0, floor.saturating_sub(1)] {
+                for measured in [estimated + diff, estimated.saturating_sub(diff)] {
+                    if should_replan(estimated, measured, bound, floor) {
+                        return Err(format!(
+                            "floor {floor} let est {estimated} vs measured {measured} through"
+                        ));
+                    }
+                }
+            }
+            // a residual clearing both the floor and the bound fires
+            let diff = floor.max((estimated as f64 * bound).ceil() as u64 + 1);
+            if !should_replan(estimated, estimated + diff, bound, floor) {
+                return Err(format!(
+                    "est {estimated} vs {} (floor {floor}) stayed quiet",
+                    estimated + diff
+                ));
             }
             Ok(())
         },
@@ -97,6 +147,7 @@ fn perfect_estimates_produce_a_plan_identical_to_static() {
     let a = execute(&cluster, &adaptive_spec, &plan, perfect_inputs());
 
     assert!(a.ledger.events.is_empty(), "perfect estimates must never re-plan");
+    assert!(a.ledger.resizes.is_empty(), "the adaptive policy never arms the re-size point");
     for obs in &a.ledger.observations {
         assert_eq!(obs.estimated_survivors, obs.measured_survivors, "{}", obs.edge);
     }
@@ -122,12 +173,12 @@ fn unranked_static_propagation_estimates_do_not_false_trigger() {
     // only 2000 rows.  The raw comparison would read that as a 50%
     // "error"…
     let stats = EdgeStats { probe_rows: 4000, matched_rows: 4000, ..EdgeStats::default() };
-    assert!(should_replan(stats.matched_rows, 2000, trigger_bound()));
+    assert!(should_replan(stats.matched_rows, 2000, trigger_bound(), 1));
     // …but rescaled to the measured probe, the edge's own selectivity
     // estimate is exact — the trigger the executor uses stays silent
     let expected = expected_survivors(&stats, 2000);
     assert_eq!(expected, 2000);
-    assert!(!should_replan(expected, 2000, trigger_bound()));
+    assert!(!should_replan(expected, 2000, trigger_bound(), 1));
 }
 
 /// 90 % of the fact rows sit on ten hot order keys the dimension does
@@ -181,6 +232,7 @@ fn skewed_estimates_always_trigger_and_preserve_the_result() {
         100.0 * a.ledger.bound
     );
     let ev = &a.ledger.events[0];
+    assert_eq!(ev.trigger, ReplanTrigger::Cardinality);
     assert_eq!(ev.after_edge, "⋈orders");
     assert!(ev.relative_error > ev.bound);
     assert!(ev.estimated_survivors > 4 * ev.measured_survivors);
@@ -191,4 +243,191 @@ fn skewed_estimates_always_trigger_and_preserve_the_result() {
     ar.sort_unstable();
     assert_eq!(sr, want, "static ≡ oracle");
     assert_eq!(ar, want, "adaptive (re-planned) ≡ oracle");
+}
+
+fn regret_spec() -> PlanSpec {
+    PlanSpec {
+        dims: vec![Relation::Orders, Relation::Part],
+        pushdown: PushdownMode::Ranked,
+        // well above sketch noise, far below the real survivor count:
+        // pins these tests on the regret trigger, not cardinality noise
+        replan_floor: 750,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn regret_trigger_fires_on_a_forced_strategy_flip_and_preserves_the_result() {
+    let cluster = paper_scaled_cluster(0.005);
+    let spec = regret_spec();
+    let inputs = exact_star_inputs(15_000, 3_000, 450);
+    // a 0.1× store underprices bloom: the pass-through PART tail edge
+    // (truly broadcast by ~3×) comes out bloom
+    let store = poisoned_store(0.1, 0.1);
+    let plan = plan_edges_calibrated(&cluster, &spec, &inputs, Some(&store));
+    assert_eq!(plan.edges[1].relation, Relation::Part);
+    assert!(
+        matches!(plan.edges[1].strategy, EdgeStrategy::Bloom { .. }),
+        "the poisoned store must flip the tail to bloom, got {}",
+        plan.edges[1].strategy.label()
+    );
+
+    let mut want = nested_loop_oracle(&inputs, &spec.dims);
+    want.sort_unstable();
+
+    let static_spec = PlanSpec { replan: ReplanPolicy::Static, ..spec.clone() };
+    let with_regret = PlanSpec { replan: ReplanPolicy::Regret, ..spec };
+    let s = execute_with(&cluster, &static_spec, &plan, inputs.clone(), Some(&store));
+    let r = execute_with(&cluster, &with_regret, &plan, inputs, Some(&store));
+
+    assert!(
+        r.ledger.events_by(ReplanTrigger::Regret) >= 1,
+        "run-measured factors must flip the mispriced tail"
+    );
+    let ev = r.ledger.events.iter().find(|e| e.trigger == ReplanTrigger::Regret).unwrap();
+    assert!(ev.relative_error > ev.bound, "regret excess must exceed the margin");
+    assert!(
+        ev.new_tail.iter().any(|t| t.contains("broadcast")),
+        "the re-planned tail should take the truly-cheapest strategy: {:?}",
+        ev.new_tail
+    );
+    let mut sr = s.rows;
+    let mut rr = r.rows;
+    sr.sort_unstable();
+    rr.sort_unstable();
+    assert_eq!(sr, want, "static ≡ oracle");
+    assert_eq!(rr, want, "regret (re-planned) ≡ oracle");
+    assert!(
+        r.total_sim_s() < s.total_sim_s(),
+        "re-planning to the truly-cheapest tail must win: {} vs {}",
+        r.total_sim_s(),
+        s.total_sim_s()
+    );
+}
+
+#[test]
+fn regret_stays_silent_when_measurements_match_predictions() {
+    let cluster = paper_scaled_cluster(0.005);
+    let spec = regret_spec();
+    let inputs = exact_star_inputs(15_000, 3_000, 450);
+    // honest planning: measured stage seconds match the §7 predictions
+    // within the margin, so neither the flip nor the re-size may fire
+    let plan = plan_edges(&cluster, &spec, &inputs);
+    let static_spec = PlanSpec { replan: ReplanPolicy::Static, ..spec.clone() };
+    let regret = PlanSpec { replan: ReplanPolicy::Regret, ..spec };
+    let s = execute(&cluster, &static_spec, &plan, inputs.clone());
+    let r = execute(&cluster, &regret, &plan, inputs);
+    assert_eq!(r.ledger.events_by(ReplanTrigger::Regret), 0, "honest plans have no regret");
+    assert!(r.ledger.resizes.is_empty(), "a well-sized filter is never rebuilt");
+    let mut sr = s.rows;
+    let mut rr = r.rows;
+    sr.sort_unstable();
+    rr.sort_unstable();
+    assert_eq!(sr, rr);
+}
+
+#[test]
+fn poisoned_loose_eps_is_resized_before_broadcast() {
+    let cluster = paper_scaled_cluster(0.005);
+    let spec = PlanSpec { dims: vec![Relation::Orders], ..Default::default() };
+    let inputs = exact_star_inputs(25_000, 6_000, 100);
+    // a (12×, 0.5×) store makes ε* solve ~24× too loose — past the
+    // power-of-two sizing slack, so the built filter is physically leaky;
+    // the strategy stays bloom and only the build→broadcast re-plan
+    // point can correct it
+    let store = poisoned_store(12.0, 0.5);
+    let plan = plan_edges_calibrated(&cluster, &spec, &inputs, Some(&store));
+    assert!(matches!(plan.edges[0].strategy, EdgeStrategy::Bloom { .. }));
+
+    let mut want = nested_loop_oracle(&inputs, &spec.dims);
+    want.sort_unstable();
+
+    let static_spec = PlanSpec { replan: ReplanPolicy::Static, ..spec.clone() };
+    let regret = PlanSpec { replan: ReplanPolicy::Regret, ..spec };
+    let s = execute_with(&cluster, &static_spec, &plan, inputs.clone(), Some(&store));
+    let r = execute_with(&cluster, &regret, &plan, inputs, Some(&store));
+
+    assert_eq!(r.ledger.resizes.len(), 1, "the loose filter must be rebuilt exactly once");
+    let rs = &r.ledger.resizes[0];
+    assert!(rs.new_eps < rs.old_eps, "loose → tighter: {} vs {}", rs.new_eps, rs.old_eps);
+    assert!(r.ledger.observations[0].resized);
+    let mut sr = s.rows;
+    let mut rr = r.rows;
+    sr.sort_unstable();
+    rr.sort_unstable();
+    assert_eq!(sr, want);
+    assert_eq!(rr, want, "re-sizing must not change the result");
+    assert!(
+        r.total_sim_s() < s.total_sim_s(),
+        "rebuilding tighter must beat probing loose: {} vs {}",
+        r.total_sim_s(),
+        s.total_sim_s()
+    );
+}
+
+/// 90 % of the order rows sit on five hot custkeys CUSTOMER lacks, while
+/// CUSTOMER covers every tail custkey — the distinct-key overlap says
+/// ~95 % of order rows survive the reduction when in truth 10 % do.
+fn skewed_chain_inputs() -> PlanInputs {
+    let orders: Vec<(u64, u64, i32)> = (0..1000u64)
+        .map(|i| {
+            let ck = if i < 900 { i % 5 + 1 } else { 6 + (i - 900) };
+            (i + 1, ck, 10)
+        })
+        .collect();
+    let customer: Vec<(u64, i32)> = (6..=505u64).map(|ck| (ck, (ck % 25) as i32)).collect();
+    let lineitem: Vec<FactRow> = (0..6000u64)
+        .map(|i| FactRow {
+            orderkey: i % 1000 + 1,
+            partkey: i % 300 + 1,
+            suppkey: i % 20 + 1,
+            price_cents: i as i64,
+        })
+        .collect();
+    PlanInputs {
+        customer: PartitionedTable::from_rows(customer, 3),
+        orders: PartitionedTable::from_rows(orders, 3),
+        lineitem: PartitionedTable::from_rows(lineitem, 4),
+        part: PartitionedTable::from_rows(Vec::new(), 2),
+        supplier: PartitionedTable::from_rows(Vec::new(), 2),
+    }
+}
+
+#[test]
+fn chain_topologies_replan_and_still_equal_the_oracle() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let base = PlanSpec {
+        topology: Topology::Chain,
+        dims: vec![Relation::Orders, Relation::Customer],
+        partitions: 4,
+        ..Default::default()
+    };
+    let want = nested_loop_oracle(&skewed_chain_inputs(), &base.dims);
+    assert!(!want.is_empty());
+
+    let plan = plan_edges(&cluster, &base, &skewed_chain_inputs());
+    let s = execute(&cluster, &base, &plan, skewed_chain_inputs());
+    assert!(s.ledger.events.is_empty(), "static chains never re-plan");
+
+    for policy in [ReplanPolicy::Adaptive, ReplanPolicy::Regret] {
+        let spec = PlanSpec { replan: policy, ..base.clone() };
+        let out = execute(&cluster, &spec, &plan, skewed_chain_inputs());
+        assert!(
+            !out.ledger.events.is_empty(),
+            "{}: a ~9× reduction mis-estimate must re-plan the chain tail",
+            policy.name()
+        );
+        let ev = &out.ledger.events[0];
+        assert_eq!(ev.trigger, ReplanTrigger::Cardinality);
+        assert_eq!(ev.after_edge, "orders⋈customer");
+        assert!(ev.estimated_survivors > 4 * ev.measured_survivors);
+        assert_eq!(out.ledger.observations.len(), 2, "one observation per chain edge");
+        let mut got = out.rows;
+        got.sort_unstable();
+        assert_eq!(got, want, "{}: re-planned chain ≡ oracle", policy.name());
+    }
+
+    let mut sr = s.rows;
+    sr.sort_unstable();
+    assert_eq!(sr, want, "static chain ≡ oracle");
 }

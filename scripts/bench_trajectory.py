@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Maintain the in-repo bench trajectory series.
+
+Each tracked bench writes a one-object `BENCH_<name>.json` point under
+`target/bench_results/` per run (see `bench_support::trajectory_point`).
+The repo root holds the cross-PR series: `BENCH_<name>.json` as a JSON
+array, one appended object per landed PR, committed by the bench-smoke
+job on pushes to main.
+
+Subcommands (both take <bench_results_dir> <repo_root>):
+
+  gate    compare the fresh point's headline metric against the last
+          committed point; exit non-zero on a >20% regression.  A missing
+          or empty committed series passes (first point).
+  append  append the fresh point (stamped with GITHUB_SHA when set) to
+          the committed series files.
+"""
+import json
+import os
+import sys
+
+TRACKED = {
+    # the batched/scalar ratio, not absolute keys/sec: both numbers come
+    # from the same runner, so the ratio survives heterogeneous shared CI
+    # hardware while still catching vectorization regressions
+    "fig7_throughput": (
+        "batched/scalar speedup",
+        lambda p: p["batched_keys_per_s"] / max(p["scalar_keys_per_s"], 1e-9),
+    ),
+    "fig8_adaptive": (
+        "adaptive win ratio (hot-keys-missed static/adaptive)",
+        lambda p: p["missed_static_s"] / max(p["missed_adaptive_s"], 1e-9),
+    ),
+    "fig9_regret": (
+        "regret win ratio (mispriced-tail static/regret)",
+        lambda p: p["mispriced_static_s"] / max(p["mispriced_regret_s"], 1e-9),
+    ),
+}
+# fail when a metric drops below this fraction of the last committed point
+THRESHOLD = 0.8
+
+
+def fresh_point(results_dir, name):
+    with open(os.path.join(results_dir, f"BENCH_{name}.json")) as f:
+        return json.load(f)
+
+
+def series_path(repo_root, name):
+    return os.path.join(repo_root, f"BENCH_{name}.json")
+
+
+def load_series(repo_root, name):
+    path = series_path(repo_root, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate(results_dir, repo_root):
+    failed = False
+    for name, (label, metric) in TRACKED.items():
+        now = metric(fresh_point(results_dir, name))
+        series = load_series(repo_root, name)
+        if not series:
+            print(f"{name}: {label} = {now:.3f} (first point — no gate)")
+            continue
+        prev = metric(series[-1])
+        ok = now >= THRESHOLD * prev
+        verdict = "OK" if ok else f"REGRESSION (below {THRESHOLD:.0%} of previous)"
+        print(f"{name}: {label} = {now:.3f} vs committed {prev:.3f} — {verdict}")
+        failed |= not ok
+    if failed:
+        sys.exit(1)
+
+
+def append(results_dir, repo_root):
+    sha = os.environ.get("GITHUB_SHA", "")
+    for name in TRACKED:
+        series = load_series(repo_root, name)
+        # job re-runs rebase onto the bot commit they pushed last time —
+        # don't append the same trigger SHA's point twice
+        if sha and series and series[-1].get("commit") == sha:
+            print(f"{name}: point for {sha[:12]} already committed — skipping")
+            continue
+        point = fresh_point(results_dir, name)
+        if sha:
+            point = {"commit": sha, **point}
+        series.append(point)
+        with open(series_path(repo_root, name), "w") as f:
+            json.dump(series, f, indent=1)
+            f.write("\n")
+        print(f"{name}: appended point #{len(series)}")
+
+
+def main():
+    if len(sys.argv) != 4 or sys.argv[1] not in ("gate", "append"):
+        print("usage: bench_trajectory.py gate|append <bench_results_dir> <repo_root>")
+        sys.exit(2)
+    (gate if sys.argv[1] == "gate" else append)(sys.argv[2], sys.argv[3])
+
+
+if __name__ == "__main__":
+    main()
