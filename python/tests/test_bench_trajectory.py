@@ -1,0 +1,107 @@
+"""`scripts/bench_trajectory.py` must survive the states the committed
+series files actually pass through: absent, seeded empty (`[]`), one
+point deep, schema-drifted, or hand-mangled — the gate degrades to
+"no gate", never crashes the bench-smoke job."""
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SCRIPT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "scripts", "bench_trajectory.py")
+)
+_spec = importlib.util.spec_from_file_location("bench_trajectory", _SCRIPT)
+bt = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bt)
+
+
+def write_fresh_points(results_dir):
+    """One fresh point per tracked bench, with every metric's inputs."""
+    os.makedirs(results_dir, exist_ok=True)
+    payloads = {
+        "fig7_throughput": {"batched_keys_per_s": 300.0, "scalar_keys_per_s": 100.0},
+        "fig8_adaptive": {"missed_static_s": 8.0, "missed_adaptive_s": 4.0},
+        "fig9_regret": {"mispriced_static_s": 6.0, "mispriced_regret_s": 3.0},
+        "fig10_partitioned": {"broadcast_bytes": 4096.0, "partitioned_bytes": 1024.0},
+    }
+    assert set(payloads) == set(bt.TRACKED), "keep the test's fresh points in sync"
+    for name, payload in payloads.items():
+        with open(os.path.join(results_dir, f"BENCH_{name}.json"), "w") as f:
+            json.dump(payload, f)
+    return payloads
+
+
+def seed(repo_root, name, content):
+    with open(os.path.join(repo_root, f"BENCH_{name}.json"), "w") as f:
+        f.write(content)
+
+
+def test_gate_passes_with_no_committed_series(tmp_path, capsys):
+    results = tmp_path / "results"
+    write_fresh_points(results)
+    bt.gate(str(results), str(tmp_path))
+    out = capsys.readouterr().out
+    assert out.count("first point — no gate") == len(bt.TRACKED)
+
+
+def test_gate_passes_with_seeded_empty_series(tmp_path, capsys):
+    results = tmp_path / "results"
+    write_fresh_points(results)
+    for name in bt.TRACKED:
+        seed(tmp_path, name, "[]\n")
+    bt.gate(str(results), str(tmp_path))
+    assert "no gate" in capsys.readouterr().out
+
+
+def test_load_series_tolerates_mangled_files(tmp_path):
+    seed(tmp_path, "fig10_partitioned", "")
+    assert bt.load_series(str(tmp_path), "fig10_partitioned") == []
+    seed(tmp_path, "fig10_partitioned", "{not json")
+    assert bt.load_series(str(tmp_path), "fig10_partitioned") == []
+    seed(tmp_path, "fig10_partitioned", '{"a": 1}')
+    assert bt.load_series(str(tmp_path), "fig10_partitioned") == []
+
+
+def test_gate_compares_against_a_one_point_series(tmp_path, capsys):
+    results = tmp_path / "results"
+    fresh = write_fresh_points(results)
+    for name in bt.TRACKED:
+        seed(tmp_path, name, json.dumps([fresh[name]]))
+    bt.gate(str(results), str(tmp_path))  # identical metric: passes
+    assert capsys.readouterr().out.count("OK") == len(bt.TRACKED)
+
+
+def test_gate_fails_on_regression_past_threshold(tmp_path):
+    results = tmp_path / "results"
+    write_fresh_points(results)
+    better = {"broadcast_bytes": 4096.0, "partitioned_bytes": 512.0}  # ratio 8 vs fresh 4
+    for name in bt.TRACKED:
+        seed(tmp_path, name, "[]")
+    seed(tmp_path, "fig10_partitioned", json.dumps([better]))
+    with pytest.raises(SystemExit):
+        bt.gate(str(results), str(tmp_path))
+
+
+def test_gate_skips_points_predating_the_metric(tmp_path, capsys):
+    results = tmp_path / "results"
+    write_fresh_points(results)
+    for name in bt.TRACKED:
+        seed(tmp_path, name, json.dumps([{"commit": "abc", "legacy_field": 1}]))
+    bt.gate(str(results), str(tmp_path))
+    assert capsys.readouterr().out.count("predates metric — no gate") == len(bt.TRACKED)
+
+
+def test_append_seeds_and_extends_series(tmp_path, monkeypatch):
+    results = tmp_path / "results"
+    write_fresh_points(results)
+    seed(tmp_path, "fig10_partitioned", "[]\n")
+    monkeypatch.setenv("GITHUB_SHA", "deadbeef")
+    bt.append(str(results), str(tmp_path))
+    series = bt.load_series(str(tmp_path), "fig10_partitioned")
+    assert len(series) == 1 and series[0]["commit"] == "deadbeef"
+    # re-running the job with the same trigger SHA must not double-append
+    bt.append(str(results), str(tmp_path))
+    assert len(bt.load_series(str(tmp_path), "fig10_partitioned")) == 1

@@ -1,0 +1,247 @@
+//! F10 — partitioned filter shipping vs the broadcast wall.
+//!
+//! SBFCJ ships one monolithic filter to **every** executor, so its
+//! shipping bill is `executors × filter_bytes` and grows with both the
+//! cluster and the dimension.  The partitioned strategy (SBFPJ) shards
+//! the filter by key range and ships each shard **once** to its owner
+//! node; its bill is `~filter_bytes + 8·dim_rows` (the key-routing
+//! exchange) and is flat in cluster size.  This bench measures both
+//! sides of that trade:
+//!
+//! * **pricing** — the §7 strategy table on a worker-count ×
+//!   dimension-cardinality grid: the planner must auto-select
+//!   `bloom-partitioned` past the wall (many workers × a huge filter),
+//!   keep plain `bloom` on small clusters, and still hand tiny
+//!   pass-through dimensions to `broadcast`;
+//! * **execution** — real runs on simulated clusters of growing size:
+//!   filter-ship bytes (`broadcast` stage vs `shard_route` +
+//!   `shard_ship`), the byte gap as the dimension grows, wall clock,
+//!   and the exchange variant's shuffle-byte savings on a mutually
+//!   selective edge.
+//!
+//! Writes the `BENCH_fig10_partitioned.json` trajectory point with the
+//! headline byte ratio CI tracks across PRs.
+
+use bloomjoin::bench_support::{measure, secs, smoke_or, trajectory_point, Report};
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::dataset::PartitionedTable;
+use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
+use bloomjoin::joins::{bloom_exchange_join, bloom_partitioned_join};
+use bloomjoin::model::optimal_epsilon;
+use bloomjoin::plan::costing::{edge_cost_model, predict_all};
+use bloomjoin::plan::{EdgePrediction, EdgeStats, StrategyKind};
+use bloomjoin::util::{Json, Rng};
+
+fn edge(probe_rows: u64, matched: u64, build: u64) -> EdgeStats {
+    EdgeStats {
+        build_rows: build,
+        build_distinct: build,
+        build_row_bytes: 16.0,
+        probe_rows,
+        probe_row_bytes: 16.0,
+        matched_rows: matched,
+    }
+}
+
+/// Price one edge's full strategy table, uncalibrated, at its ε*.
+fn price(cfg: &ClusterConfig, e: &EdgeStats) -> EdgePrediction {
+    let model = edge_cost_model(cfg, e);
+    let opt = optimal_epsilon(&model);
+    predict_all(cfg, e, None, &model, opt.eps, opt.interior, opt.eps)
+}
+
+type Row = (u64, u64);
+
+fn tables(n_big: usize, n_small: usize) -> (PartitionedTable<Row>, PartitionedTable<Row>) {
+    let mut rng = Rng::new(1706);
+    let big_space = 20 * n_small as u64;
+    let small_space = 2 * n_small as u64;
+    let big: Vec<Row> = (0..n_big).map(|_| (rng.below(big_space), rng.next_u64())).collect();
+    let small: Vec<Row> = (0..n_small).map(|_| (rng.below(small_space), rng.next_u64())).collect();
+    (PartitionedTable::from_rows(big, 8), PartitionedTable::from_rows(small, 4))
+}
+
+/// Bytes the partitioned strategy ships to place its filter: the
+/// key-routing exchange plus every shard's one hop to its owner.
+fn filter_ship_bytes(m: &bloomjoin::metrics::QueryMetrics) -> u64 {
+    m.stage("shard_route").map_or(0, |s| s.net_bytes)
+        + m.stage("shard_ship").map_or(0, |s| s.net_bytes)
+}
+
+fn main() {
+    let mut checks: Vec<(String, bool)> = Vec::new();
+
+    // -- part 1: the §7 pricing grid ------------------------------------
+    let mut grid = Report::new(
+        "fig10_partitioned_pricing",
+        &["nodes", "build_distinct", "picked", "bloom_s", "partitioned_s", "broadcast_s"],
+    );
+    for nodes in [4usize, 16, 64] {
+        for build in [2_000u64, 1_000_000, 150_000_000] {
+            let cfg = ClusterConfig { n_nodes: nodes, ..ClusterConfig::grid5000_like() };
+            let e = edge(800_000_000, 80_000_000, build);
+            let p = price(&cfg, &e);
+            grid.row(vec![
+                nodes.to_string(),
+                build.to_string(),
+                p.cheapest().kind.name().to_string(),
+                format!("{:.3}", p.bloom_s),
+                format!("{:.3}", p.bloom_partitioned_s),
+                format!("{:.3}", p.broadcast_s),
+            ]);
+        }
+    }
+    grid.finish();
+
+    // the wall: many workers × a huge dimension filter
+    let wall_cfg = ClusterConfig { n_nodes: 64, ..ClusterConfig::grid5000_like() };
+    let wall = price(&wall_cfg, &edge(800_000_000, 80_000_000, 150_000_000));
+    checks.push((
+        format!(
+            "planner picks partitioned past the wall ({:.3}s vs bloom {:.3}s)",
+            wall.bloom_partitioned_s, wall.bloom_s
+        ),
+        wall.cheapest().kind == StrategyKind::BloomPartitioned
+            && wall.bloom_partitioned_s < wall.bloom_s,
+    ));
+    // growing the cluster at fixed cardinality widens partitioned's edge
+    let small_n = ClusterConfig { n_nodes: 4, ..ClusterConfig::grid5000_like() };
+    let near = price(&small_n, &edge(800_000_000, 80_000_000, 150_000_000));
+    checks.push((
+        "partitioned's margin over bloom grows with worker count".to_string(),
+        wall.bloom_s - wall.bloom_partitioned_s > near.bloom_s - near.bloom_partitioned_s,
+    ));
+    // a small cluster keeps monolithic shipping
+    let sc = ClusterConfig::small_cluster();
+    let p_small = price(&sc, &edge(1_000_000, 100_000, 100_000));
+    checks.push((
+        "small cluster: plain bloom beats partitioned".to_string(),
+        p_small.bloom_s < p_small.bloom_partitioned_s,
+    ));
+    // and a tiny pass-through dimension still goes to broadcast
+    let p_tiny = price(&sc, &edge(10_000_000, 9_500_000, 2_000));
+    checks.push((
+        "small cluster + tiny dimension: broadcast still wins".to_string(),
+        p_tiny.cheapest().kind == StrategyKind::Broadcast,
+    ));
+
+    // -- part 2: executed shipped bytes + wall clock --------------------
+    let n_big = smoke_or(30_000usize, 400_000);
+    let n_small = smoke_or(3_000usize, 40_000);
+    let fpr = 0.01;
+    let iters = smoke_or(2usize, 5);
+
+    let mut exec = Report::new(
+        "fig10_partitioned_exec",
+        &["nodes", "dim_rows", "bcast_bytes", "part_bytes", "bcast_wall", "part_wall", "rows"],
+    );
+    let mut byte_rows: Vec<(usize, usize, u64, u64)> = Vec::new();
+    let mut headline = (0u64, 0u64);
+    for nodes in [4usize, 16] {
+        for scale in [1usize, 4] {
+            let cfg = ClusterConfig { n_nodes: nodes, ..ClusterConfig::default() };
+            let cluster = Cluster::new(cfg);
+            let dim = n_small * scale;
+            let cascade = BloomCascadeJoin::new(BloomCascadeConfig { fpr, ..Default::default() });
+            let (b, s) = tables(n_big, dim);
+            let (c_rows, c_metrics) = cascade.execute(&cluster, b, s);
+            let (b, s) = tables(n_big, dim);
+            let (p_rows, p_metrics) = bloom_partitioned_join(&cluster, b, s, fpr);
+            assert_eq!(c_rows.len(), p_rows.len(), "strategies must agree on the join");
+
+            let bcast = c_metrics.stage("broadcast").expect("cascade broadcasts").net_bytes;
+            let part = filter_ship_bytes(&p_metrics);
+            let c_wall = measure(1, iters, || {
+                let (b, s) = tables(n_big, dim);
+                cascade.execute(&cluster, b, s)
+            });
+            let p_wall = measure(1, iters, || {
+                let (b, s) = tables(n_big, dim);
+                bloom_partitioned_join(&cluster, b, s, fpr)
+            });
+            exec.row(vec![
+                nodes.to_string(),
+                dim.to_string(),
+                bcast.to_string(),
+                part.to_string(),
+                secs(c_wall.mean),
+                secs(p_wall.mean),
+                p_rows.len().to_string(),
+            ]);
+            checks.push((
+                format!("{nodes} nodes × {dim} dim rows: partitioned ships fewer filter bytes"),
+                part < bcast,
+            ));
+            byte_rows.push((nodes, scale, bcast, part));
+            if nodes == 16 && scale == 4 {
+                headline = (bcast, part);
+            }
+        }
+    }
+    exec.finish();
+
+    // the advantage must widen along both axes of the wall
+    for scale in [1usize, 4] {
+        let at = |n: usize| byte_rows.iter().find(|r| r.0 == n && r.1 == scale).unwrap();
+        let (r4, r16) = (at(4), at(16));
+        checks.push((
+            format!("byte ratio grows with workers at {scale}x dim"),
+            r16.2 as f64 / r16.3.max(1) as f64 > r4.2 as f64 / r4.3.max(1) as f64,
+        ));
+    }
+    for nodes in [4usize, 16] {
+        let at = |s: usize| byte_rows.iter().find(|r| r.0 == nodes && r.1 == s).unwrap();
+        let (r1, r4) = (at(1), at(4));
+        checks.push((
+            format!("byte gap grows with dimension cardinality at {nodes} nodes"),
+            r4.2.saturating_sub(r4.3) > r1.2.saturating_sub(r1.3),
+        ));
+    }
+
+    // -- part 3: the exchange variant prunes the build-side shuffle -----
+    let cluster = Cluster::new(ClusterConfig::default());
+    let mut rng = Rng::new(42);
+    let nb = smoke_or(10_000usize, 100_000);
+    let ns = smoke_or(5_000usize, 50_000);
+    let big: Vec<Row> = (0..nb).map(|_| (rng.below(2_000), rng.next_u64())).collect();
+    let small: Vec<Row> = (0..ns).map(|_| (rng.below(100_000), rng.next_u64())).collect();
+    let cascade = BloomCascadeJoin::new(BloomCascadeConfig { fpr, ..Default::default() });
+    let (c_rows, c_metrics) = cascade.execute(
+        &cluster,
+        PartitionedTable::from_rows(big.clone(), 8),
+        PartitionedTable::from_rows(small.clone(), 4),
+    );
+    let (e_rows, e_metrics) = bloom_exchange_join(
+        &cluster,
+        PartitionedTable::from_rows(big, 8),
+        PartitionedTable::from_rows(small, 4),
+        fpr,
+    );
+    assert_eq!(c_rows.len(), e_rows.len(), "exchange must not change the join");
+    let c_shuffle = c_metrics.stage("shuffle").unwrap().net_bytes;
+    let e_shuffle = e_metrics.stage("shuffle").unwrap().net_bytes;
+    checks.push((
+        format!("exchange prunes the shuffle ({e_shuffle} vs {c_shuffle} bytes)"),
+        e_shuffle < c_shuffle,
+    ));
+
+    trajectory_point(
+        "fig10_partitioned",
+        Json::obj([
+            ("bench", Json::str("fig10_partitioned")),
+            ("broadcast_bytes", Json::num(headline.0 as f64)),
+            ("partitioned_bytes", Json::num(headline.1 as f64)),
+            ("exchange_shuffle_bytes", Json::num(e_shuffle as f64)),
+            ("cascade_shuffle_bytes", Json::num(c_shuffle as f64)),
+            ("wall_pick_partitioned_s", Json::num(wall.bloom_partitioned_s)),
+            ("wall_pick_bloom_s", Json::num(wall.bloom_s)),
+        ]),
+    );
+
+    let mut failed = false;
+    for (what, ok) in &checks {
+        println!("{} {}", if *ok { "PASS" } else { "FAIL" }, what);
+        failed |= !ok;
+    }
+    assert!(!failed, "fig10_partitioned invariants failed (see PASS/FAIL lines above)");
+}

@@ -33,6 +33,17 @@ impl BloomParams {
         BloomParams { m_bits, k, requested_fpr: fpr, expected_items: n }
     }
 
+    /// Sizing for one shard of a key-range-partitioned filter: `n` total
+    /// expected keys hash-split across `n_shards` equal slices, each
+    /// slice sized independently at the same ε.  Hash routing
+    /// (`cluster::shuffle::partition_of`) balances the slices, so the
+    /// per-shard load is `n / n_shards`; the per-key bit budget — and
+    /// hence the realized FPR — matches the monolithic filter's, while
+    /// each shard can be built and placed at its owner node.
+    pub fn sharded(n: u64, n_shards: usize, fpr: f64) -> BloomParams {
+        Self::optimal((n / n_shards.max(1) as u64).max(1), fpr)
+    }
+
     /// Explicit filter size (e.g. snapped to an artifact ladder rung),
     /// with the k that is optimal for that (m, n).
     pub fn with_m(n: u64, fpr: f64, m_bits: u64) -> BloomParams {
@@ -283,6 +294,22 @@ mod tests {
             assert!(p.m_bits as f64 >= raw, "rounding must only add bits");
             last = p.m_bits;
         }
+    }
+
+    #[test]
+    fn sharded_sizing_splits_the_budget() {
+        let whole = BloomParams::optimal(1_000_000, 0.01);
+        let shard = BloomParams::sharded(1_000_000, 8, 0.01);
+        // each shard carries 1/8 of the keys with the same per-key bit
+        // budget (modulo pow-2 rounding), so its FPR at design load
+        // matches the monolithic filter's
+        assert!(shard.m_bits <= whole.m_bits / 4, "{} vs {}", shard.m_bits, whole.m_bits);
+        let whole_fpr = whole.realized_fpr(1_000_000);
+        let shard_fpr = shard.realized_fpr(125_000);
+        assert!((shard_fpr - whole_fpr).abs() < 0.01, "{shard_fpr} vs {whole_fpr}");
+        // degenerate shard counts clamp instead of dividing by zero
+        assert_eq!(BloomParams::sharded(100, 0, 0.05).expected_items, 100);
+        assert_eq!(BloomParams::sharded(4, 8, 0.05).expected_items, 1);
     }
 
     #[test]

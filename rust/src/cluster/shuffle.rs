@@ -113,6 +113,27 @@ mod tests {
         }
     }
 
+    /// `partition_of` is part of the on-the-wire contract of the
+    /// partitioned bloom strategy: the build side routes dimension keys
+    /// into filter shards with it, and the probe side must route every
+    /// fact key to the *same* shard or the join silently drops rows.
+    /// These vectors pin the mapping (mix32 ∘ fold64 mod n) so any hash
+    /// change is a deliberate, test-visible event.
+    #[test]
+    fn partition_of_golden_vectors() {
+        let keys = [0u64, 1, 2, 42, 6_000_000, 0xDEAD_BEEF, 1 << 40, u64::MAX];
+        let cases: [(usize, [usize; 8]); 4] = [
+            (8, [4, 6, 5, 2, 4, 3, 3, 5]),
+            (16, [4, 14, 13, 2, 12, 3, 3, 5]),
+            (64, [36, 46, 29, 2, 60, 3, 3, 5]),
+            (200, [180, 78, 197, 194, 52, 155, 115, 21]),
+        ];
+        for (n, want) in cases {
+            let got: Vec<usize> = keys.iter().map(|&k| partition_of(k, n)).collect();
+            assert_eq!(got, want, "n_partitions = {n}");
+        }
+    }
+
     #[test]
     fn buckets_roughly_balanced() {
         let parts = vec![(0..40_000u64).map(|i| (i, ())).collect::<Vec<_>>()];

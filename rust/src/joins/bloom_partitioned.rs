@@ -1,0 +1,628 @@
+//! Partitioned filter exchange: the two strategies that scale bloom
+//! shipping past the broadcast wall.
+//!
+//! **SBFPJ — partitioned bloom join** ([`bloom_partitioned_join`]).
+//! Broadcast ships every filter bit to every executor, so its network
+//! cost grows as `filter_bytes × executors` — the "broadcast wall" that
+//! makes huge dimension filters unaffordable on big clusters.  Here the
+//! dimension's keys are hash-routed (`shuffle::partition_of`) into one
+//! shard per node; each shard builds a filter over only its key range and
+//! the filter is *placed* at its owner node's block manager instead of
+//! broadcast.  Every filter bit crosses exactly one link, so shipping
+//! divides by the cluster size rather than multiplying by it.  The fact
+//! scan routes each probe key to its shard's filter (same hash, so a key
+//! always meets the filter that saw its build-side twin — no false
+//! negatives) and only the per-key verdict bitmap travels back.
+//!
+//! **SBFEJ — exchange bloom join** ([`bloom_exchange_join`]).  For
+//! mutually selective edges the filtering is run in both directions: the
+//! usual dimension filter prunes the fact side, then a *second* filter
+//! built from the fact-side survivors travels back and prunes the
+//! dimension before its payload is shuffled.  Two filter rounds buy a
+//! smaller build-side shuffle; `plan::costing::exchange_cost_model`
+//! prices when that trade wins.
+//!
+//! Both strategies reuse the cascade's shuffle + sort-merge tail and are
+//! exact: filters may pass false positives (removed by the join) but
+//! never drop a matching row.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::approx::approx_count;
+use crate::bloom::{BloomFilter, BloomParams, KeyFilter, SelectionVector};
+use crate::cluster::blockmanager::BlockManager;
+use crate::cluster::shuffle::{partition_of, repartition, ShuffleCodec, ShuffleVolume};
+use crate::cluster::{broadcast, Cluster, Cost, SimDuration, Stage, Task};
+use crate::dataset::PartitionedTable;
+use crate::metrics::{QueryMetrics, StageTiming};
+
+use super::sort_merge::sort_merge_join_partition;
+use super::{JoinedRow, Keyed, RowSize};
+
+/// Key-range-sharded bloom join: build one filter shard per node from
+/// hash-routed dimension keys, place (not broadcast) each shard at its
+/// owner, and route fact-side probe keys to the shard that can answer
+/// them.
+pub fn bloom_partitioned_join<B, S>(
+    cluster: &Cluster,
+    big: PartitionedTable<Keyed<B>>,
+    small: PartitionedTable<Keyed<S>>,
+    fpr: f64,
+) -> (Vec<JoinedRow<B, S>>, QueryMetrics)
+where
+    B: Clone + Send + Sync + RowSize + 'static,
+    S: Clone + Send + Sync + RowSize + 'static,
+{
+    let cfg = cluster.config().clone();
+    let mut metrics = QueryMetrics::default();
+    metrics.requested_fpr = fpr;
+    metrics.big_rows_scanned = big.n_rows() as u64;
+
+    // -- step 1: approximate count ----------------------------------------
+    let sizes: Vec<usize> = small.partitions().iter().map(Vec::len).collect();
+    let est = approx_count(&cfg, &sizes, 2.0, 2e-8);
+    metrics.push(StageTiming {
+        tasks: est.partitions_seen,
+        ..StageTiming::new("approx_count", SimDuration::from_secs(est.sim_s))
+    });
+
+    // -- step 2: route dimension keys to their shard -----------------------
+    // one shard per node; only the 8-byte keys travel, priced as a
+    // repartition exchange (the partitioned strategy's extra K1 term)
+    let n_shards = cfg.n_nodes.max(1);
+    let mut shard_keys: Vec<Vec<u64>> = vec![Vec::new(); n_shards];
+    let mut route_vol = ShuffleVolume { records: 0, bytes: 0, partitions_out: n_shards };
+    for part in small.partitions() {
+        for (k, _) in part {
+            route_vol.records += 1;
+            route_vol.bytes += 8;
+            shard_keys[partition_of(*k, n_shards)].push(*k);
+        }
+    }
+    let route_cost = route_vol.exchange_cost(&cfg, ShuffleCodec::Tungsten);
+    metrics.push(
+        StageTiming {
+            tasks: n_shards,
+            ..StageTiming::new(
+                "shard_route",
+                SimDuration::from_secs(route_cost.total_seconds(cfg.cpu_scale)),
+            )
+        }
+        .with_cost(&route_cost),
+    );
+
+    // -- step 3: per-shard filter build ------------------------------------
+    // each shard sizes for its slice of the estimate and builds where the
+    // filter will live (locality = the shard's owner node)
+    let params = BloomParams::sharded(est.estimate.max(1), n_shards, fpr);
+    let tasks: Vec<Task<BloomFilter>> = shard_keys
+        .into_iter()
+        .enumerate()
+        .map(|(s, keys)| {
+            let hash_c = cfg.hash_insert_cost;
+            let scan_c = cfg.scan_record_cost;
+            Task::new(move || {
+                let cpu_s = keys.len() as f64 * (scan_c + hash_c * params.k as f64);
+                let mut f = BloomFilter::new(params);
+                for k in keys {
+                    f.insert(k);
+                }
+                (f, Cost { cpu_s, ..Default::default() })
+            })
+            .with_locality(s % cfg.n_nodes)
+        })
+        .collect();
+    let build = cluster.run_stage(Stage::new("shard_build", tasks));
+    let shard_filters = build.outputs;
+    metrics.bloom_bits = params.m_bits * n_shards as u64;
+    metrics.realized_fpr = params.realized_fpr((small.n_rows() / n_shards).max(1) as u64);
+    metrics.push(StageTiming {
+        tasks: build.n_tasks,
+        wall_s: build.wall_time.seconds(),
+        cpu_s: build.total_cost.cpu_s,
+        ..StageTiming::new("shard_build", build.sim_time)
+    });
+
+    // -- step 4: place each shard at its owner node ------------------------
+    // no broadcast: every filter byte crosses one link, per-node links in
+    // parallel, and the shard parks in its node's block manager.  (The
+    // cluster's own managers need `&mut`; a per-query placement ledger
+    // keeps the accounting honest.)
+    let shard_bytes: Vec<u64> = shard_filters.iter().map(|f| f.to_bytes().len() as u64).collect();
+    let total_fb: u64 = shard_bytes.iter().sum();
+    let mut managers: Vec<BlockManager> =
+        (0..cfg.n_nodes).map(|n| BlockManager::new(n, cfg.executor_mem_bytes)).collect();
+    let mut spilled = 0u64;
+    for (s, &fb) in shard_bytes.iter().enumerate() {
+        if !managers[s % cfg.n_nodes].put(format!("filter-shard-{s}"), fb) {
+            spilled += fb; // over the executor budget: spilled, re-read from disk
+        }
+    }
+    let per_shard = (total_fb / n_shards as u64).max(1);
+    let ship = SimDuration::from_secs(cfg.transfer_seconds(per_shard) + cfg.net_latency);
+    metrics.push(StageTiming { tasks: n_shards, ..StageTiming::new("shard_ship", ship) }.with_cost(
+        &Cost { net_bytes: total_fb, disk_bytes: spilled, ..Default::default() },
+    ));
+
+    // -- step 5: sharded filter scan ---------------------------------------
+    // each fact partition routes its keys with the *same* hash the build
+    // used, probes shard-major, and streams only 8-byte keys out plus a
+    // 1-bit-per-key verdict bitmap back
+    let filters = Arc::new(shard_filters);
+    let n_nodes = cfg.n_nodes;
+    let tasks: Vec<Task<Vec<Keyed<B>>>> = big
+        .into_partitions()
+        .into_iter()
+        .enumerate()
+        .map(|(p, part)| {
+            let filters = Arc::clone(&filters);
+            let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
+            let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
+            let cpu_s = part.len() as f64 * cfg.scan_record_cost;
+            let wire = 8 * part.len() as u64 + part.len() as u64 / 8;
+            let net_s = wire as f64 / cfg.net_bandwidth;
+            Task::new(move || {
+                let n_shards = filters.len();
+                let mut shard_keys: Vec<Vec<u64>> = vec![Vec::new(); n_shards];
+                let mut shard_idx: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+                for (i, (k, _)) in part.iter().enumerate() {
+                    let s = partition_of(*k, n_shards);
+                    shard_keys[s].push(*k);
+                    shard_idx[s].push(i as u32);
+                }
+                let mut keep = vec![false; part.len()];
+                let mut sel = SelectionVector::new();
+                for ((filter, keys), idx) in filters.iter().zip(&shard_keys).zip(&shard_idx) {
+                    filter.probe_batch(keys, &mut sel);
+                    for &j in sel.indices() {
+                        keep[idx[j as usize] as usize] = true;
+                    }
+                }
+                let survivors: Vec<Keyed<B>> =
+                    part.into_iter().zip(keep).filter_map(|(row, k)| k.then_some(row)).collect();
+                let cost = Cost {
+                    cpu_s,
+                    net_s,
+                    net_bytes: wire,
+                    disk_s,
+                    disk_bytes,
+                    ..Default::default()
+                };
+                (survivors, cost)
+            })
+            .with_locality(p % n_nodes)
+        })
+        .collect();
+    let scan = cluster.run_stage(Stage::new("filter_scan", tasks));
+    let filtered: Vec<Vec<Keyed<B>>> = scan.outputs;
+    metrics.big_rows_after_filter = filtered.iter().map(|p| p.len() as u64).sum();
+    metrics.push(StageTiming {
+        tasks: scan.n_tasks,
+        wall_s: scan.wall_time.seconds(),
+        cpu_s: scan.total_cost.cpu_s,
+        net_bytes: scan.total_cost.net_bytes,
+        disk_bytes: scan.total_cost.disk_bytes,
+        ..StageTiming::new("filter_scan", scan.sim_time)
+    });
+
+    // -- step 6: shuffle + sort-merge join (cascade tail) ------------------
+    let rows = shuffle_and_join(cluster, filtered, small.into_partitions(), &mut metrics);
+    metrics.output_rows = rows.len() as u64;
+    (rows, metrics)
+}
+
+/// Two-round exchange bloom join: the usual dimension filter prunes the
+/// fact side, then a filter over the fact-side *survivors* travels back
+/// and prunes the dimension before its payload ships.
+pub fn bloom_exchange_join<B, S>(
+    cluster: &Cluster,
+    big: PartitionedTable<Keyed<B>>,
+    small: PartitionedTable<Keyed<S>>,
+    fpr: f64,
+) -> (Vec<JoinedRow<B, S>>, QueryMetrics)
+where
+    B: Clone + Send + Sync + RowSize + 'static,
+    S: Clone + Send + Sync + RowSize + 'static,
+{
+    let cfg = cluster.config().clone();
+    let mut metrics = QueryMetrics::default();
+    metrics.requested_fpr = fpr;
+    metrics.big_rows_scanned = big.n_rows() as u64;
+
+    // -- round 1: the cascade's build + broadcast + filtered scan ----------
+    let sizes: Vec<usize> = small.partitions().iter().map(Vec::len).collect();
+    let est = approx_count(&cfg, &sizes, 2.0, 2e-8);
+    metrics.push(StageTiming {
+        tasks: est.partitions_seen,
+        ..StageTiming::new("approx_count", SimDuration::from_secs(est.sim_s))
+    });
+
+    let params = BloomParams::optimal(est.estimate.max(1), fpr);
+    let key_parts: Vec<Vec<u64>> =
+        small.partitions().iter().map(|p| p.iter().map(|(k, _)| *k).collect()).collect();
+    let (filter, timing) = distributed_filter_build(cluster, key_parts, params, "bloom_build");
+    metrics.bloom_bits = params.m_bits;
+    metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
+    metrics.push(timing);
+
+    let filter_bytes = filter.to_bytes().len() as u64;
+    let bc = broadcast::p2p_broadcast_cost(&cfg, filter_bytes);
+    metrics.push(StageTiming::new("broadcast", bc).with_cost(&Cost {
+        net_bytes: filter_bytes * cfg.total_executors() as u64,
+        ..Default::default()
+    }));
+
+    let filter = Arc::new(filter);
+    let n_nodes = cfg.n_nodes;
+    let tasks: Vec<Task<Vec<Keyed<B>>>> = big
+        .into_partitions()
+        .into_iter()
+        .enumerate()
+        .map(|(p, part)| {
+            let filter = Arc::clone(&filter);
+            let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
+            let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
+            let cpu_s = part.len() as f64 * cfg.scan_record_cost;
+            Task::new(move || {
+                let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
+                let mut sel = SelectionVector::with_capacity(keys.len());
+                filter.probe_batch(&keys, &mut sel);
+                (sel.gather_owned(part), Cost { cpu_s, disk_s, disk_bytes, ..Default::default() })
+            })
+            .with_locality(p % n_nodes)
+        })
+        .collect();
+    let scan = cluster.run_stage(Stage::new("filter_scan", tasks));
+    let filtered: Vec<Vec<Keyed<B>>> = scan.outputs;
+    metrics.big_rows_after_filter = filtered.iter().map(|p| p.len() as u64).sum();
+    metrics.push(StageTiming {
+        tasks: scan.n_tasks,
+        wall_s: scan.wall_time.seconds(),
+        cpu_s: scan.total_cost.cpu_s,
+        disk_bytes: scan.total_cost.disk_bytes,
+        ..StageTiming::new("filter_scan", scan.sim_time)
+    });
+
+    // -- round 2: survivor filter back-prunes the build side ---------------
+    // sized for the survivors' distinct keys; built where the survivors
+    // already sit, so only the (small) survivor filter travels
+    let distinct: HashSet<u64> =
+        filtered.iter().flat_map(|p| p.iter().map(|(k, _)| *k)).collect();
+    let sf_params = BloomParams::optimal(distinct.len().max(1) as u64, fpr);
+    let survivor_keys: Vec<Vec<u64>> =
+        filtered.iter().map(|p| p.iter().map(|(k, _)| *k).collect()).collect();
+    let (sf, sf_timing) =
+        distributed_filter_build(cluster, survivor_keys, sf_params, "exchange_build");
+    metrics.bloom_bits += sf_params.m_bits;
+    metrics.push(sf_timing);
+
+    let sf = Arc::new(sf);
+    let sf_bytes = sf.to_bytes().len() as u64;
+    let back = broadcast::p2p_broadcast_cost(&cfg, sf_bytes);
+    let tasks: Vec<Task<Vec<Keyed<S>>>> = small
+        .into_partitions()
+        .into_iter()
+        .enumerate()
+        .map(|(p, part)| {
+            let sf = Arc::clone(&sf);
+            let cpu_s = part.len() as f64 * cfg.scan_record_cost;
+            Task::new(move || {
+                let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
+                let mut sel = SelectionVector::with_capacity(keys.len());
+                sf.probe_batch(&keys, &mut sel);
+                (sel.gather_owned(part), Cost { cpu_s, ..Default::default() })
+            })
+            .with_locality(p % n_nodes)
+        })
+        .collect();
+    let prune = cluster.run_stage(Stage::new("exchange_ship", tasks));
+    let pruned: Vec<Vec<Keyed<S>>> = prune.outputs;
+    metrics.push(StageTiming {
+        tasks: prune.n_tasks,
+        wall_s: prune.wall_time.seconds(),
+        cpu_s: prune.total_cost.cpu_s,
+        net_bytes: sf_bytes * cfg.total_executors() as u64,
+        ..StageTiming::new("exchange_ship", back + prune.sim_time)
+    });
+
+    // -- shuffle + sort-merge join over both pruned sides ------------------
+    let rows = shuffle_and_join(cluster, filtered, pruned, &mut metrics);
+    metrics.output_rows = rows.len() as u64;
+    (rows, metrics)
+}
+
+/// Per-partition partial filter build + driver tree OR-merge (the
+/// cascade's §5.1 distributed build, shared by both exchange rounds).
+fn distributed_filter_build(
+    cluster: &Cluster,
+    key_parts: Vec<Vec<u64>>,
+    params: BloomParams,
+    stage_name: &'static str,
+) -> (BloomFilter, StageTiming) {
+    let cfg = cluster.config();
+    let tasks: Vec<Task<BloomFilter>> = key_parts
+        .into_iter()
+        .map(|keys| {
+            let hash_c = cfg.hash_insert_cost;
+            let scan_c = cfg.scan_record_cost;
+            Task::new(move || {
+                let cpu_s = keys.len() as f64 * (scan_c + hash_c * params.k as f64);
+                let mut f = BloomFilter::new(params);
+                for k in keys {
+                    f.insert(k);
+                }
+                (f, Cost { cpu_s, ..Default::default() })
+            })
+        })
+        .collect();
+    let stage = cluster.run_stage(Stage::new(stage_name, tasks));
+
+    let t0 = std::time::Instant::now();
+    let mut it = stage.outputs.into_iter();
+    let mut merged = it.next().unwrap_or_else(|| BloomFilter::new(params));
+    for partial in it {
+        merged.merge(&partial).expect("identical params by construction");
+    }
+    let merge_cpu = t0.elapsed().as_secs_f64();
+    let collect = broadcast::driver_collect_cost(cfg, params.size_bytes());
+
+    let sim = stage.sim_time + collect + SimDuration::from_secs(merge_cpu * cfg.cpu_scale);
+    let timing = StageTiming {
+        tasks: stage.n_tasks,
+        wall_s: stage.wall_time.seconds() + merge_cpu,
+        cpu_s: stage.total_cost.cpu_s + merge_cpu,
+        net_bytes: params.size_bytes() * stage.n_tasks as u64,
+        ..StageTiming::new(stage_name, sim)
+    };
+    (merged, timing)
+}
+
+/// The cascade's tail: 200-partition shuffle of both (already filtered)
+/// sides plus the per-partition sort-merge join, with the usual
+/// accounting.
+fn shuffle_and_join<B, S>(
+    cluster: &Cluster,
+    filtered: Vec<Vec<Keyed<B>>>,
+    small_parts: Vec<Vec<Keyed<S>>>,
+    metrics: &mut QueryMetrics,
+) -> Vec<JoinedRow<B, S>>
+where
+    B: Clone + Send + Sync + RowSize + 'static,
+    S: Clone + Send + Sync + RowSize + 'static,
+{
+    let cfg = cluster.config().clone();
+    let n_shuffle = cfg.shuffle_partitions;
+    let (big_buckets, big_vol) = repartition(filtered, n_shuffle, |b: &B| b.row_bytes());
+    let (small_buckets, small_vol) = repartition(small_parts, n_shuffle, |s: &S| s.row_bytes());
+    let mut ex_cost = big_vol.exchange_cost(&cfg, ShuffleCodec::Tungsten);
+    ex_cost.merge(&small_vol.exchange_cost(&cfg, ShuffleCodec::Tungsten));
+    metrics.push(
+        StageTiming {
+            tasks: n_shuffle,
+            ..StageTiming::new(
+                "shuffle",
+                SimDuration::from_secs(ex_cost.total_seconds(cfg.cpu_scale)),
+            )
+        }
+        .with_cost(&ex_cost),
+    );
+
+    let tasks: Vec<Task<Vec<JoinedRow<B, S>>>> = big_buckets
+        .into_iter()
+        .zip(small_buckets)
+        .map(|(b, s)| {
+            let disk_bw = cfg.disk_bandwidth;
+            let sort_c = cfg.sort_compare_cost;
+            let merge_c = cfg.merge_record_cost;
+            Task::new(move || {
+                let nlogn =
+                    |n: usize| if n < 2 { n as f64 } else { n as f64 * (n as f64).log2() };
+                let cpu_s = sort_c * (nlogn(b.len()) + nlogn(s.len()))
+                    + merge_c * (b.len() + s.len()) as f64;
+                let out = sort_merge_join_partition(b, s);
+                let cpu_s = cpu_s + merge_c * out.len() as f64;
+                let write_bytes: u64 =
+                    out.iter().map(|(_, b, s)| 8 + b.row_bytes() + s.row_bytes()).sum();
+                let disk_s = write_bytes as f64 / disk_bw;
+                (out, Cost { cpu_s, disk_s, disk_bytes: write_bytes, ..Default::default() })
+            })
+        })
+        .collect();
+    let join = cluster.run_stage(Stage::new("join", tasks));
+    let rows: Vec<JoinedRow<B, S>> = join.outputs.into_iter().flatten().collect();
+    metrics.push(StageTiming {
+        tasks: join.n_tasks,
+        wall_s: join.wall_time.seconds(),
+        cpu_s: join.total_cost.cpu_s,
+        disk_bytes: join.total_cost.disk_bytes,
+        ..StageTiming::new("join", join.sim_time)
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::joins::{BloomCascadeConfig, BloomCascadeJoin};
+    use crate::util::Rng;
+
+    fn inputs(
+        n_big: usize,
+        n_small: usize,
+        big_space: u64,
+        small_space: u64,
+    ) -> (PartitionedTable<Keyed<u64>>, PartitionedTable<Keyed<u64>>) {
+        let mut rng = Rng::new(42);
+        let big: Vec<Keyed<u64>> =
+            (0..n_big).map(|_| (rng.below(big_space), rng.next_u64())).collect();
+        let small: Vec<Keyed<u64>> =
+            (0..n_small).map(|_| (rng.below(small_space), rng.next_u64())).collect();
+        (PartitionedTable::from_rows(big, 4), PartitionedTable::from_rows(small, 2))
+    }
+
+    fn oracle_count(
+        big: &PartitionedTable<Keyed<u64>>,
+        small: &PartitionedTable<Keyed<u64>>,
+    ) -> usize {
+        use std::collections::HashMap;
+        let mut sc: HashMap<u64, usize> = HashMap::new();
+        for (k, _) in small.iter() {
+            *sc.entry(*k).or_default() += 1;
+        }
+        big.iter().map(|(k, _)| sc.get(k).copied().unwrap_or(0)).sum()
+    }
+
+    #[test]
+    fn partitioned_produces_exact_join_result() {
+        // multi-node config: real sharding (8 shards), not the degenerate
+        // single-shard case
+        let cluster = Cluster::new(ClusterConfig::default());
+        let (big, small) = inputs(2_000, 200, 10_000, 1_000);
+        let want = oracle_count(&big, &small);
+        let (rows, metrics) = bloom_partitioned_join(&cluster, big, small, 0.05);
+        assert_eq!(rows.len(), want);
+        assert_eq!(metrics.output_rows as usize, want);
+    }
+
+    #[test]
+    fn partitioned_exact_on_single_node_too() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (big, small) = inputs(1_500, 150, 5_000, 500);
+        let want = oracle_count(&big, &small);
+        let (rows, _) = bloom_partitioned_join(&cluster, big, small, 0.05);
+        assert_eq!(rows.len(), want);
+    }
+
+    #[test]
+    fn exchange_produces_exact_join_result() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (big, small) = inputs(2_000, 200, 10_000, 1_000);
+        let want = oracle_count(&big, &small);
+        let (rows, metrics) = bloom_exchange_join(&cluster, big, small, 0.05);
+        assert_eq!(rows.len(), want);
+        assert_eq!(metrics.output_rows as usize, want);
+    }
+
+    #[test]
+    fn partitioned_filter_actually_filters() {
+        let cluster = Cluster::new(ClusterConfig::default());
+        let (big, small) = inputs(5_000, 100, 100_000, 10_000);
+        let scanned = big.n_rows() as u64;
+        let (_, metrics) = bloom_partitioned_join(&cluster, big, small, 0.01);
+        assert_eq!(metrics.big_rows_scanned, scanned);
+        assert!(
+            metrics.big_rows_after_filter < scanned / 2,
+            "{} of {scanned} survived",
+            metrics.big_rows_after_filter
+        );
+    }
+
+    #[test]
+    fn partitioned_has_its_stages() {
+        let cluster = Cluster::new(ClusterConfig::default());
+        let (big, small) = inputs(500, 50, 1_000, 100);
+        let (_, metrics) = bloom_partitioned_join(&cluster, big, small, 0.05);
+        for stage in [
+            "approx_count",
+            "shard_route",
+            "shard_build",
+            "shard_ship",
+            "filter_scan",
+            "shuffle",
+            "join",
+        ] {
+            assert!(metrics.stage(stage).is_some(), "missing {stage}");
+        }
+        assert!(metrics.stage("broadcast").is_none(), "partitioned must not broadcast");
+        assert!(metrics.bloom_creation_s() > 0.0);
+        assert!(metrics.filter_join_s() > 0.0);
+        assert!(metrics.bloom_bits > 0);
+    }
+
+    #[test]
+    fn exchange_has_its_stages() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let (big, small) = inputs(500, 50, 1_000, 100);
+        let (_, metrics) = bloom_exchange_join(&cluster, big, small, 0.05);
+        for stage in [
+            "approx_count",
+            "bloom_build",
+            "broadcast",
+            "filter_scan",
+            "exchange_build",
+            "exchange_ship",
+            "shuffle",
+            "join",
+        ] {
+            assert!(metrics.stage(stage).is_some(), "missing {stage}");
+        }
+        assert!(metrics.bloom_creation_s() > 0.0);
+        assert!(metrics.filter_join_s() > 0.0);
+    }
+
+    #[test]
+    fn partitioned_ships_fewer_filter_bytes_than_broadcast() {
+        // 8 nodes × 2 executors: broadcast pays filter × 16, sharding
+        // pays each filter byte once
+        let cfg = ClusterConfig::default();
+        let (big, small) = inputs(20_000, 2_000, 50_000, 5_000);
+        let want = oracle_count(&big, &small);
+
+        let cluster = Cluster::new(cfg);
+        let cascade = BloomCascadeJoin::new(BloomCascadeConfig { fpr: 0.05, ..Default::default() });
+        let (b_rows, b_metrics) = cascade.execute(&cluster, big.clone(), small.clone());
+        let (p_rows, p_metrics) = bloom_partitioned_join(&cluster, big, small, 0.05);
+
+        assert_eq!(b_rows.len(), want);
+        assert_eq!(p_rows.len(), want);
+        let broadcast_bytes = b_metrics.stage("broadcast").unwrap().net_bytes;
+        let shipped = p_metrics.stage("shard_ship").unwrap().net_bytes;
+        assert!(
+            shipped < broadcast_bytes,
+            "sharded ship {shipped} must beat broadcast {broadcast_bytes}"
+        );
+    }
+
+    #[test]
+    fn exchange_prunes_the_build_side_before_the_shuffle() {
+        // mutually selective: most small keys never meet a surviving big
+        // row, so the survivor filter shrinks the build-side shuffle
+        let cfg = ClusterConfig::local();
+        let mut rng = Rng::new(7);
+        let big: Vec<Keyed<u64>> =
+            (0..10_000).map(|_| (rng.below(2_000), rng.next_u64())).collect();
+        let small: Vec<Keyed<u64>> =
+            (0..5_000).map(|_| (rng.below(100_000), rng.next_u64())).collect();
+        let big = PartitionedTable::from_rows(big, 4);
+        let small = PartitionedTable::from_rows(small, 2);
+        let want = oracle_count(&big, &small);
+
+        let cluster = Cluster::new(cfg);
+        let cascade = BloomCascadeJoin::new(BloomCascadeConfig { fpr: 0.01, ..Default::default() });
+        let (c_rows, c_metrics) = cascade.execute(&cluster, big.clone(), small.clone());
+        let (e_rows, e_metrics) = bloom_exchange_join(&cluster, big, small, 0.01);
+
+        assert_eq!(c_rows.len(), want);
+        assert_eq!(e_rows.len(), want, "back-pruning must not change the result");
+        let c_shuffle = c_metrics.stage("shuffle").unwrap().net_bytes;
+        let e_shuffle = e_metrics.stage("shuffle").unwrap().net_bytes;
+        assert!(
+            e_shuffle < c_shuffle,
+            "exchange shuffle {e_shuffle} must beat cascade shuffle {c_shuffle}"
+        );
+    }
+
+    #[test]
+    fn shard_routing_is_build_probe_consistent() {
+        // the invariant exactness rests on: build and probe route any key
+        // to the same shard, for every shard count
+        for n in [1usize, 4, 8, 64] {
+            for key in [0u64, 1, 42, 6_000_000, u64::MAX] {
+                assert_eq!(partition_of(key, n), partition_of(key, n), "key {key} shards {n}");
+                assert!(partition_of(key, n) < n.max(1));
+            }
+        }
+    }
+}

@@ -7,7 +7,8 @@
 //!              (LINEITEM fact; ORDERS, CUSTOMER, PART, SUPPLIER dims):
 //!              dimension filters are ranked by (selectivity / probe
 //!              cost), each edge picks its own strategy (bloom cascade /
-//!              broadcast hash / sort-merge) from the §7 cost model, and
+//!              partitioned bloom / exchange bloom / broadcast hash /
+//!              sort-merge) from the §7 cost model, and
 //!              every bloom edge solves its own optimal ε from HLL
 //!              cardinality estimates —
 //!              `bloomjoin plan --relations lineitem,orders,part,supplier
@@ -259,15 +260,15 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     // keeps its solved per-edge ε*) — how the calibration drift check
     // guarantees §7 stage samples on any workload
     if let Some(forced) = args.get("force-strategy") {
-        if !["bloom", "broadcast", "sortmerge"].contains(&forced) {
-            anyhow::bail!("unknown force-strategy {forced:?} (bloom|broadcast|sortmerge)");
-        }
+        let kind = match plan::StrategyKind::parse(forced) {
+            Some(k) => k,
+            None => anyhow::bail!(
+                "unknown force-strategy {forced:?} \
+                 (bloom|bloom-partitioned|bloom-exchange|broadcast|sortmerge)"
+            ),
+        };
         for e in &mut join_plan.edges {
-            e.strategy = match forced {
-                "bloom" => plan::EdgeStrategy::Bloom { eps: e.prediction.eps_star },
-                "broadcast" => plan::EdgeStrategy::Broadcast,
-                _ => plan::EdgeStrategy::SortMerge,
-            };
+            e.strategy = plan::EdgeStrategy::for_kind(kind, e.prediction.eps_star);
         }
     }
     if !json_mode {
@@ -285,14 +286,24 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
                 calibration.samples.len()
             );
         }
-        let mut t =
-            Table::new(&["edge", "strategy", "eps*", "bloom_s", "broadcast_s", "sortmerge_s"]);
+        let mut t = Table::new(&[
+            "edge",
+            "strategy",
+            "eps*",
+            "bloom_s",
+            "partitioned_s",
+            "exchange_s",
+            "broadcast_s",
+            "sortmerge_s",
+        ]);
         for e in &join_plan.edges {
             t.row(vec![
                 e.name.clone(),
                 e.strategy.label(),
                 format!("{:.5}", e.prediction.eps_star),
                 format!("{:.4}", e.prediction.bloom_s),
+                format!("{:.4}", e.prediction.bloom_partitioned_s),
+                format!("{:.4}", e.prediction.bloom_exchange_s),
                 format!("{:.4}", e.prediction.broadcast_s),
                 format!("{:.4}", e.prediction.sortmerge_s),
             ]);
@@ -399,6 +410,8 @@ fn planned_edge_json(e: &bloomjoin::plan::PlannedEdge) -> bloomjoin::util::Json 
         ("eps_star", Json::num(e.prediction.eps_star)),
         ("interior", Json::Bool(e.prediction.interior)),
         ("bloom_s", Json::num(e.prediction.bloom_s)),
+        ("bloom_partitioned_s", Json::num(e.prediction.bloom_partitioned_s)),
+        ("bloom_exchange_s", Json::num(e.prediction.bloom_exchange_s)),
         ("broadcast_s", Json::num(e.prediction.broadcast_s)),
         ("sortmerge_s", Json::num(e.prediction.sortmerge_s)),
         ("est_probe_rows", Json::num(e.stats.probe_rows as f64)),
@@ -585,9 +598,10 @@ COMMANDS
              --calibration auto|off|<path> (per-cluster K/L/C store under
               target/calibration/, refined from observed runs; CI tracks
               the fitted factors for drift)
-             --force-strategy bloom|broadcast|sortmerge (debug: override
-              every edge's strategy after pricing — bloom keeps its
-              per-edge ε*; how CI guarantees §7 calibration samples)
+             --force-strategy bloom|bloom-partitioned|bloom-exchange|
+              broadcast|sortmerge (debug: override every edge's strategy
+              after pricing — bloom variants keep their per-edge ε*; how
+              CI guarantees §7 calibration samples)
              [--json] (machine-readable plan + metrics + ledger)
              [--no-execute]
              (n-way planner: ranked filter pushdown, per-edge strategy

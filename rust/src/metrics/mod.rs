@@ -64,9 +64,24 @@ fn base_name(name: &str) -> &str {
 /// The paper's "stage 1" (build-side) stages — one predicate shared by
 /// the sim- and wall-time accessors so they can never desynchronize.
 /// `bloom_resize` is the adaptive executor's mid-build rebuild: a second
-/// filter build, so build-side by definition.
+/// filter build, so build-side by definition.  The partitioned variant
+/// replaces `bloom_build`/`broadcast` with `shard_route`/`shard_build`/
+/// `shard_ship`; the exchange variant adds a second build round
+/// (`exchange_build`/`exchange_ship`) that is still filter construction,
+/// not probing.
 fn is_stage1(name: &str) -> bool {
-    matches!(base_name(name), "approx_count" | "bloom_build" | "bloom_resize" | "broadcast")
+    matches!(
+        base_name(name),
+        "approx_count"
+            | "bloom_build"
+            | "bloom_resize"
+            | "broadcast"
+            | "shard_route"
+            | "shard_build"
+            | "shard_ship"
+            | "exchange_build"
+            | "exchange_ship"
+    )
 }
 
 impl QueryMetrics {

@@ -59,6 +59,15 @@ impl CostModel {
     pub fn filter_bits(n: u64, eps: f64) -> f64 {
         n as f64 * 1.44 * (1.0 / eps).log2()
     }
+
+    /// Seconds to place a key-range-sharded filter of `bits` total bits:
+    /// every bit crosses exactly one link (its shard's), and the
+    /// per-node links run in parallel — filter bits ÷ workers shipped
+    /// per node, against the broadcast leg's `2·rounds·bytes/bw` where
+    /// every executor receives every bit.
+    pub fn sharded_ship_seconds(bits: f64, n_nodes: usize, net_bandwidth: f64) -> f64 {
+        (bits / 8.0) / (net_bandwidth * n_nodes.max(1) as f64)
+    }
 }
 
 #[cfg(test)]
@@ -103,6 +112,16 @@ mod tests {
                 "eps {eps}: fd {fd} vs analytic {an}"
             );
         }
+    }
+
+    #[test]
+    fn sharded_ship_parallelises_over_nodes() {
+        let one = CostModel::sharded_ship_seconds(8e9, 1, 1e9);
+        let eight = CostModel::sharded_ship_seconds(8e9, 8, 1e9);
+        assert!((one - 1.0).abs() < 1e-12, "{one}");
+        assert!((eight - 0.125).abs() < 1e-12, "{eight}");
+        // zero workers clamps instead of dividing by zero
+        assert!(CostModel::sharded_ship_seconds(8e9, 0, 1e9).is_finite());
     }
 
     #[test]

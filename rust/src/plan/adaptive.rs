@@ -73,8 +73,8 @@ use crate::util::Json;
 
 use super::catalog::{DimStats, EdgeStats};
 use super::costing::{
-    derive_edge_stats, edge_cost_model, predict_broadcast_s, predict_sortmerge_s, price_edges_with,
-    rank_dims, CostCalibration,
+    derive_edge_stats, edge_cost_model, exchange_cost_model, partitioned_cost_model, predict_all,
+    price_edges_with, rank_dims, CostCalibration,
 };
 use super::{EdgeStrategy, EpsMode, PlanSpec, PlannedEdge, Relation};
 
@@ -380,10 +380,13 @@ pub struct RegretFinding {
 /// Re-price every remaining edge's strategies under the run-measured
 /// §7 stage factors and report the first edge whose assigned strategy
 /// costs more than the cheapest by over [`REGRET_MARGIN`] — the
-/// strategy-regret trigger.  Bloom is re-priced at its re-solved ε* (a
-/// materially mis-sized ε on a still-bloom edge is regret too);
-/// broadcast and sort-merge predictions carry no §7 stage split, so the
-/// factors do not apply to them.
+/// strategy-regret trigger.  The whole [`super::StrategyKind`] table is
+/// re-priced through [`predict_all`] at the re-solved ε*; the bloom
+/// family's assigned cost is re-evaluated at its *assigned* ε on the
+/// matching calibrated variant model (a materially mis-sized ε on a
+/// still-bloom edge is regret too), while broadcast and sort-merge
+/// predictions carry no §7 stage split, so the factors do not apply to
+/// them.
 pub fn regret_flip(
     cfg: &ClusterConfig,
     factors: (f64, f64),
@@ -395,28 +398,26 @@ pub fn regret_flip(
         }
         let model = CostCalibration::scale(edge_cost_model(cfg, &e.stats), factors);
         let opt = newton::optimal_epsilon(&model);
-        let bloom_s = model.total(opt.eps);
-        let broadcast_s = predict_broadcast_s(cfg, &e.stats);
-        let sortmerge_s = predict_sortmerge_s(cfg, &e.stats);
+        let prediction =
+            predict_all(cfg, &e.stats, Some(factors), &model, opt.eps, opt.interior, opt.eps);
         let assigned_s = match &e.strategy {
             EdgeStrategy::Bloom { eps } => model.total(*eps),
-            EdgeStrategy::Broadcast => broadcast_s,
-            EdgeStrategy::SortMerge => sortmerge_s,
+            EdgeStrategy::BloomPartitioned { eps } => {
+                CostCalibration::scale(partitioned_cost_model(cfg, &e.stats), factors).total(*eps)
+            }
+            EdgeStrategy::BloomExchange { eps } => {
+                CostCalibration::scale(exchange_cost_model(cfg, &e.stats), factors).total(*eps)
+            }
+            other => prediction.cost_of(other.kind()),
         };
-        let mut cheapest = (EdgeStrategy::Bloom { eps: opt.eps }.label(), bloom_s);
-        if broadcast_s < cheapest.1 {
-            cheapest = (EdgeStrategy::Broadcast.label(), broadcast_s);
-        }
-        if sortmerge_s < cheapest.1 {
-            cheapest = (EdgeStrategy::SortMerge.label(), sortmerge_s);
-        }
-        if assigned_s > cheapest.1 * (1.0 + REGRET_MARGIN) {
+        let cheapest = prediction.cheapest();
+        if assigned_s > cheapest.seconds * (1.0 + REGRET_MARGIN) {
             return Some(RegretFinding {
                 edge: e.name.clone(),
                 assigned: e.strategy.label(),
-                cheapest: cheapest.0,
+                cheapest: EdgeStrategy::for_kind(cheapest.kind, opt.eps).label(),
                 assigned_s,
-                cheapest_s: cheapest.1,
+                cheapest_s: cheapest.seconds,
             });
         }
     }

@@ -1,6 +1,7 @@
 //! A-priori edge costing: order the same-fact dimension filters, price
-//! each edge under all three strategies from the cluster's cost constants
-//! and the catalog's estimates, and solve each bloom edge's own optimal ε.
+//! each edge under every [`StrategyKind`] from the cluster's cost
+//! constants and the catalog's estimates, and solve each bloom edge's
+//! own optimal ε.
 //!
 //! Two planning decisions live here:
 //!
@@ -34,10 +35,27 @@ use super::catalog::{
     chain_edge_stats, star_dim_stats, DimStats, EdgeStats, PlanInputs, STREAM_ROW_BYTES,
 };
 use super::{
-    EdgeStrategy, EpsMode, JoinPlan, PlanSpec, PlannedEdge, PushdownMode, Relation, Topology,
+    EdgeStrategy, EpsMode, JoinPlan, PlanSpec, PlannedEdge, PushdownMode, Relation, StrategyKind,
+    Topology,
 };
 
-/// Predicted per-strategy costs for one edge.
+/// One row of an edge's strategy pricing table: a strategy identity and
+/// its predicted seconds on this edge's workload.
+#[derive(Clone, Copy, Debug)]
+pub struct StrategyCost {
+    pub kind: StrategyKind,
+    pub seconds: f64,
+}
+
+/// Predicted per-strategy costs for one edge.  The per-kind fields keep
+/// their historical names (the `--json` ledger CI cross-checks them);
+/// everything that *consumes* the prices goes through the typed table —
+/// [`cost_of`], [`table`], [`cheapest`] — so a new strategy is one new
+/// arm in [`cost_of`], not a sweep across plan, adaptive and the CLI.
+///
+/// [`cost_of`]: EdgePrediction::cost_of
+/// [`table`]: EdgePrediction::table
+/// [`cheapest`]: EdgePrediction::cheapest
 #[derive(Clone, Copy, Debug)]
 pub struct EdgePrediction {
     /// This edge's own optimal ε (root of `d(model_total)/dε`).
@@ -46,6 +64,12 @@ pub struct EdgePrediction {
     pub interior: bool,
     /// Predicted SBFCJ seconds at the ε the edge will actually use.
     pub bloom_s: f64,
+    /// Predicted seconds with the filter sharded by key range and each
+    /// shard shipped once, at the same ε.
+    pub bloom_partitioned_s: f64,
+    /// Predicted seconds for the two-round survivor-filter exchange, at
+    /// the same ε.
+    pub bloom_exchange_s: f64,
     pub broadcast_s: f64,
     pub sortmerge_s: f64,
 }
@@ -56,9 +80,41 @@ impl Default for EdgePrediction {
             eps_star: 0.05,
             interior: false,
             bloom_s: 0.0,
+            bloom_partitioned_s: 0.0,
+            bloom_exchange_s: 0.0,
             broadcast_s: 0.0,
             sortmerge_s: 0.0,
         }
+    }
+}
+
+impl EdgePrediction {
+    /// Predicted seconds under one strategy kind.
+    pub fn cost_of(&self, kind: StrategyKind) -> f64 {
+        match kind {
+            StrategyKind::Bloom => self.bloom_s,
+            StrategyKind::BloomPartitioned => self.bloom_partitioned_s,
+            StrategyKind::BloomExchange => self.bloom_exchange_s,
+            StrategyKind::Broadcast => self.broadcast_s,
+            StrategyKind::SortMerge => self.sortmerge_s,
+        }
+    }
+
+    /// The full pricing table, in [`StrategyKind::ALL`] order.
+    pub fn table(&self) -> [StrategyCost; StrategyKind::ALL.len()] {
+        StrategyKind::ALL.map(|kind| StrategyCost { kind, seconds: self.cost_of(kind) })
+    }
+
+    /// The cheapest row; ties keep the earlier [`StrategyKind::ALL`]
+    /// entry (bloom variants win ties, like the historical `<=` chain).
+    pub fn cheapest(&self) -> StrategyCost {
+        let mut best = StrategyCost { kind: StrategyKind::Bloom, seconds: self.bloom_s };
+        for row in self.table() {
+            if row.seconds < best.seconds {
+                best = row;
+            }
+        }
+        best
     }
 }
 
@@ -224,6 +280,77 @@ pub fn edge_cost_model(cfg: &ClusterConfig, e: &EdgeStats) -> CostModel {
     CostModel { k1, k2, l1, l2, c, a: filtrable / p, b: (matched / p).max(1.0) }
 }
 
+/// The §7 model for the key-range-sharded variant: same stage structure
+/// as [`edge_cost_model`], with the filter's broadcast leg (every bit to
+/// every executor, `2·rounds·bytes/bw` in `K2`) replaced by three
+/// cheaper movements:
+///
+/// * `K2` — each shard ships exactly once to the node that serves it
+///   (every filter bit crosses one link, the per-node links in parallel
+///   — [`CostModel::sharded_ship_seconds`]);
+/// * `K1` — the dimension's keys repartition by [`partition_of`] to the
+///   shard builders, priced through [`ShuffleVolume::exchange_cost`]
+///   like any other exchange, plus one extra stage barrier;
+/// * `L1` — every probe key streams to its shard's node and a verdict
+///   bitmap streams back, pipelined over the per-node links without a
+///   disk spill (ε-independent: all keys are routed before any is
+///   rejected).
+///
+/// Big clusters amortise the routing (`1/nodes`) while the broadcast leg
+/// it replaces only grows (`rounds`), so the trade flips with cluster
+/// size × filter bits — the broadcast wall.
+///
+/// [`partition_of`]: crate::cluster::shuffle::partition_of
+/// [`ShuffleVolume::exchange_cost`]: crate::cluster::shuffle::ShuffleVolume::exchange_cost
+pub fn partitioned_cost_model(cfg: &ClusterConfig, e: &EdgeStats) -> CostModel {
+    use crate::cluster::shuffle::{ShuffleCodec, ShuffleVolume};
+    let ln2 = std::f64::consts::LN_2;
+    let n = e.build_distinct.max(1) as f64;
+    let nodes = cfg.n_nodes.max(1);
+    let rounds = ((cfg.total_executors().max(1) as f64) + 1.0).log2().ceil().max(1.0);
+    let bits_per_ln = 1.44 * n / ln2;
+
+    let mut m = edge_cost_model(cfg, e);
+    m.k2 -= 2.0 * rounds * (bits_per_ln / 8.0) / cfg.net_bandwidth;
+    m.k2 += CostModel::sharded_ship_seconds(bits_per_ln, nodes, cfg.net_bandwidth);
+    let dim_route = ShuffleVolume {
+        records: e.build_rows,
+        bytes: (8.0 * e.build_rows as f64) as u64,
+        partitions_out: nodes,
+    };
+    m.k1 += cfg.stage_overhead
+        + dim_route.exchange_cost(cfg, ShuffleCodec::Tungsten).total_seconds(cfg.cpu_scale);
+    let probe_wire = 8.0 * e.probe_rows as f64 + e.probe_rows as f64 / 8.0;
+    m.l1 += probe_wire / (cfg.net_bandwidth * nodes as f64) + 2.0 * cfg.net_latency;
+    m
+}
+
+/// The §7 model for the two-round survivor-filter exchange: the cascade
+/// plus a semi-join message back — `K1` pays the extra stage barrier,
+/// the ship-back latency and the survivor inserts; `K2` pays shipping
+/// the survivor filter's bits (sized on the matched rows); `L1` drops
+/// the build-side payload the returned filter prunes before the shuffle.
+/// Wins only on mutually-selective edges, where the pruned payload
+/// outweighs the second round.
+pub fn exchange_cost_model(cfg: &ClusterConfig, e: &EdgeStats) -> CostModel {
+    let ln2 = std::f64::consts::LN_2;
+    let slots = cfg.total_slots().max(1) as f64;
+    let matched = e.matched_rows.max(1) as f64;
+    let rounds = ((cfg.total_executors().max(1) as f64) + 1.0).log2().ceil().max(1.0);
+    let survivor_bytes_per_ln = 1.44 * matched / ln2 / 8.0;
+
+    let mut m = edge_cost_model(cfg, e);
+    m.k1 += cfg.stage_overhead + rounds * cfg.net_latency + matched * cfg.hash_insert_cost / slots;
+    m.k2 += rounds * survivor_bytes_per_ln / cfg.net_bandwidth;
+    // at most one build row per matched probe row survives the ship-back
+    let survivors_build = (e.build_rows as f64).min(matched);
+    let saved = (e.build_rows as f64 - survivors_build).max(0.0)
+        * e.build_row_bytes
+        * shuffle_per_byte(cfg);
+    m.l1 = (m.l1 - saved).max(0.0);
+    m
+}
+
 /// Predicted broadcast-hash seconds for this edge.
 pub fn predict_broadcast_s(cfg: &ClusterConfig, e: &EdgeStats) -> f64 {
     let slots = cfg.total_slots().max(1) as f64;
@@ -320,25 +447,45 @@ pub fn price_edges_with(
                 EpsMode::PerFilter => opt.eps,
                 EpsMode::Global(g) => g,
             };
-            let prediction = EdgePrediction {
-                eps_star: opt.eps,
-                interior: opt.interior,
-                bloom_s: model.total(eps),
-                broadcast_s: predict_broadcast_s(cfg, &stats),
-                sortmerge_s: predict_sortmerge_s(cfg, &stats),
-            };
-            let strategy = if prediction.bloom_s <= prediction.broadcast_s
-                && prediction.bloom_s <= prediction.sortmerge_s
-            {
-                EdgeStrategy::Bloom { eps }
-            } else if prediction.broadcast_s <= prediction.sortmerge_s {
-                EdgeStrategy::Broadcast
-            } else {
-                EdgeStrategy::SortMerge
-            };
+            let prediction =
+                predict_all(cfg, &stats, factors, &model, opt.eps, opt.interior, eps);
+            let strategy = EdgeStrategy::for_kind(prediction.cheapest().kind, eps);
             PlannedEdge { name, relation, strategy, stats, prediction }
         })
         .collect()
+}
+
+/// Price every strategy kind for one edge at a chosen ε, from the (already
+/// calibrated) cascade model plus the variant models built and calibrated
+/// the same way.  `model` must be `edge_cost_model(cfg, stats)` scaled by
+/// `factors` — passed in because callers already solved `eps_star` on it.
+/// The one place the full [`StrategyCost`] table is assembled; the static
+/// planner and the regret re-pricer both go through here.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_all(
+    cfg: &ClusterConfig,
+    stats: &EdgeStats,
+    factors: Option<(f64, f64)>,
+    model: &CostModel,
+    eps_star: f64,
+    interior: bool,
+    eps: f64,
+) -> EdgePrediction {
+    let mut partitioned = partitioned_cost_model(cfg, stats);
+    let mut exchange = exchange_cost_model(cfg, stats);
+    if let Some(f) = factors {
+        partitioned = CostCalibration::scale(partitioned, f);
+        exchange = CostCalibration::scale(exchange, f);
+    }
+    EdgePrediction {
+        eps_star,
+        interior,
+        bloom_s: model.total(eps),
+        bloom_partitioned_s: partitioned.total(eps),
+        bloom_exchange_s: exchange.total(eps),
+        broadcast_s: predict_broadcast_s(cfg, stats),
+        sortmerge_s: predict_sortmerge_s(cfg, stats),
+    }
 }
 
 /// One bloom-edge observation in the §7 fit's coordinates: the measured
@@ -597,6 +744,80 @@ mod tests {
         let model = edge_cost_model(&cfg, &e);
         let bloom = model.total(newton::optimal_epsilon(&model).eps);
         assert!(bcast < bloom, "broadcast {bcast} vs bloom {bloom}");
+    }
+
+    /// Price one edge's full table uncalibrated at its ε*.
+    fn table_for(cfg: &ClusterConfig, e: &EdgeStats) -> EdgePrediction {
+        let model = edge_cost_model(cfg, e);
+        let opt = newton::optimal_epsilon(&model);
+        predict_all(cfg, e, None, &model, opt.eps, opt.interior, opt.eps)
+    }
+
+    #[test]
+    fn partitioned_wins_past_the_broadcast_wall() {
+        // many workers × a huge dimension filter: the broadcast leg
+        // (2·rounds·bytes/bw to every executor) dwarfs shipping each
+        // shard once plus routing the dimension and probe keys
+        let cfg = ClusterConfig { n_nodes: 64, ..ClusterConfig::grid5000_like() };
+        let e = edge(800_000_000, 80_000_000, 150_000_000);
+        let p = table_for(&cfg, &e);
+        assert!(
+            p.bloom_partitioned_s < p.bloom_s,
+            "partitioned {} vs broadcast-shipped bloom {}",
+            p.bloom_partitioned_s,
+            p.bloom_s
+        );
+        assert_eq!(p.cheapest().kind, StrategyKind::BloomPartitioned);
+
+        // a small cluster flips the trade: the key routing and the extra
+        // stage cost more than the broadcast fan-out ever saved
+        let small = ClusterConfig::small_cluster();
+        let e_small = edge(1_000_000, 100_000, 100_000);
+        let ps = table_for(&small, &e_small);
+        assert!(ps.bloom_s < ps.bloom_partitioned_s);
+    }
+
+    #[test]
+    fn tiny_dimension_still_prefers_broadcast_over_every_bloom_variant() {
+        let cfg = ClusterConfig::small_cluster();
+        let p = table_for(&cfg, &edge(10_000_000, 9_500_000, 2_000));
+        assert_eq!(p.cheapest().kind, StrategyKind::Broadcast);
+    }
+
+    #[test]
+    fn mutually_selective_edge_prefers_exchange() {
+        // probe side mostly filtrable AND build side mostly unmatched:
+        // the survivor filter's ship-back prunes 19/20 of the build
+        // payload out of the shuffle, worth more than the second round
+        let cfg = ClusterConfig::default();
+        let e = edge(30_000_000, 1_000_000, 20_000_000);
+        let p = table_for(&cfg, &e);
+        assert!(
+            p.bloom_exchange_s < p.bloom_s,
+            "exchange {} vs bloom {}",
+            p.bloom_exchange_s,
+            p.bloom_s
+        );
+        assert_eq!(p.cheapest().kind, StrategyKind::BloomExchange);
+
+        // a fully-matched build side has nothing to prune: the exchange
+        // pays its extra round for nothing
+        let dense = table_for(&cfg, &edge(10_000_000, 5_000_000, 1_000_000));
+        assert!(dense.bloom_s < dense.bloom_exchange_s);
+    }
+
+    #[test]
+    fn strategy_table_is_consistent() {
+        let cfg = ClusterConfig::default();
+        let p = table_for(&cfg, &edge(10_000_000, 500_000, 1_000_000));
+        for row in p.table() {
+            assert!(row.seconds.is_finite() && row.seconds >= 0.0);
+            assert_eq!(row.seconds, p.cost_of(row.kind));
+        }
+        let cheapest = p.cheapest();
+        for row in p.table() {
+            assert!(cheapest.seconds <= row.seconds);
+        }
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::dataset::PartitionedTable;
 use crate::joins::bloom_cascade::{
     BloomCascadeConfig, BloomCascadeJoin, FilterResize, ResizeDecision,
 };
-use crate::joins::{exec, JoinedRow, Keyed, RowSize};
+use crate::joins::{bloom_exchange_join, bloom_partitioned_join, exec, JoinedRow, Keyed, RowSize};
 use crate::metrics::QueryMetrics;
 
 use super::adaptive::{
@@ -241,10 +241,7 @@ impl EdgeReport {
 }
 
 fn edge_report(edge: &PlannedEdge, m: &QueryMetrics, probe_rows: u64) -> EdgeReport {
-    let probe_stage = match edge.strategy {
-        EdgeStrategy::Bloom { .. } => "filter_scan",
-        _ => "join",
-    };
+    let probe_stage = if edge.strategy.kind().is_bloom() { "filter_scan" } else { "join" };
     EdgeReport {
         name: edge.name.clone(),
         strategy: edge.strategy.label(),
@@ -373,6 +370,14 @@ where
             let join =
                 BloomCascadeJoin::new(BloomCascadeConfig { fpr: *eps, ..Default::default() });
             join.execute_with_resize(cluster, big, small, resize)
+        }
+        EdgeStrategy::BloomPartitioned { eps } => {
+            let (rows, m) = bloom_partitioned_join(cluster, big, small, *eps);
+            (rows, m, None)
+        }
+        EdgeStrategy::BloomExchange { eps } => {
+            let (rows, m) = bloom_exchange_join(cluster, big, small, *eps);
+            (rows, m, None)
         }
         EdgeStrategy::Broadcast => {
             let (rows, m) = exec::broadcast_hash_join(cluster, big, small);
@@ -527,10 +532,7 @@ fn observe_edge(
         Some(e) => EdgeStrategy::Bloom { eps: e }.label(),
         None => edge.strategy.label(),
     };
-    let probe_stage = match edge.strategy {
-        EdgeStrategy::Bloom { .. } => "filter_scan",
-        _ => "join",
-    };
+    let probe_stage = if edge.strategy.kind().is_bloom() { "filter_scan" } else { "join" };
     EdgeObservation {
         edge: edge.name.clone(),
         relation: edge.relation,

@@ -27,10 +27,16 @@
 //! filters ahead of it ([`PushdownMode::Ranked`]), rather than pricing
 //! every edge against the full scan ([`PushdownMode::Unranked`], the
 //! static-propagation baseline the benches compare).  Each edge is then
-//! priced under all three strategies with an a-priori instance of the §7
-//! cost model, and — when an edge takes the bloom-cascade — solves that
-//! edge's **own** optimal ε with [`crate::model::newton`] instead of one
-//! global ε.  Execution ([`executor`]) runs a **vectorized selection-
+//! priced under every [`StrategyKind`] with an a-priori instance of the
+//! §7 cost model — including the shard-shipped [`BloomPartitioned`] and
+//! the two-round [`BloomExchange`] variants — and, when an edge takes a
+//! bloom family strategy, solves that edge's **own** optimal ε with
+//! [`crate::model::newton`] instead of one global ε.
+//!
+//! [`BloomPartitioned`]: StrategyKind::BloomPartitioned
+//! [`BloomExchange`]: StrategyKind::BloomExchange
+//!
+//! Execution ([`executor`]) runs a **vectorized selection-
 //! vector pipeline** over columnar fact batches (edges ship survivor
 //! indices + payload columns, bloom probes are batched, per-partition
 //! work runs in parallel on the `BLOOMJOIN_THREADS`-sized pool) and
@@ -66,7 +72,7 @@ pub use catalog::{
 };
 pub use costing::{
     derive_edge_stats, plan_edges, plan_edges_calibrated, price_edges_with, rank_dims,
-    star_edge_stats, CostCalibration, EdgePrediction,
+    star_edge_stats, CostCalibration, EdgePrediction, StrategyCost,
 };
 pub use executor::{
     execute, execute_with, nested_loop_oracle, EdgeReport, PlanOutput, PlanRow, StreamIdx,
@@ -195,11 +201,72 @@ impl Default for PlanSpec {
     }
 }
 
+/// Strategy identity, independent of per-edge parameters like ε.  The
+/// planner prices every kind for every edge ([`EdgePrediction`]'s
+/// strategy-cost table) and picks the cheapest; adding a strategy is one
+/// new arm here plus its pricing row, not edits scattered across plan,
+/// costing, adaptive and serialization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// SBFCJ: monolithic filter broadcast to every executor.
+    Bloom,
+    /// Filter sharded by key range across nodes; each fact partition is
+    /// routed to — and probes — exactly one locally-held shard.
+    BloomPartitioned,
+    /// Two-round semi-join message: the probe-side survivors build a
+    /// filter that ships back and prunes the build side before payload.
+    BloomExchange,
+    /// Broadcast hash join (SBJ).
+    Broadcast,
+    /// Plain shuffle + sort-merge.
+    SortMerge,
+}
+
+impl StrategyKind {
+    /// Every strategy the planner prices, in tie-break order (bloom
+    /// variants first, like the historical `<=` comparisons).
+    pub const ALL: [StrategyKind; 5] = [
+        StrategyKind::Bloom,
+        StrategyKind::BloomPartitioned,
+        StrategyKind::BloomExchange,
+        StrategyKind::Broadcast,
+        StrategyKind::SortMerge,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::Bloom => "bloom",
+            StrategyKind::BloomPartitioned => "bloom-partitioned",
+            StrategyKind::BloomExchange => "bloom-exchange",
+            StrategyKind::Broadcast => "broadcast",
+            StrategyKind::SortMerge => "sortmerge",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        StrategyKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// Whether this kind probes through a bloom filter (and therefore
+    /// carries a per-edge ε and reports a `filter_scan` probe stage).
+    pub fn is_bloom(self) -> bool {
+        matches!(
+            self,
+            StrategyKind::Bloom | StrategyKind::BloomPartitioned | StrategyKind::BloomExchange
+        )
+    }
+}
+
 /// The strategy one edge executes with.
 #[derive(Clone, Debug)]
 pub enum EdgeStrategy {
     /// SBFCJ with this edge's ε (per-filter optimal or the global value).
     Bloom { eps: f64 },
+    /// Key-range-sharded filter at this edge's ε, shipped once per shard
+    /// instead of broadcast to every executor.
+    BloomPartitioned { eps: f64 },
+    /// Two-round survivor-filter exchange at this edge's ε.
+    BloomExchange { eps: f64 },
     /// Broadcast hash join (SBJ).
     Broadcast,
     /// Plain shuffle + sort-merge.
@@ -207,9 +274,33 @@ pub enum EdgeStrategy {
 }
 
 impl EdgeStrategy {
+    pub fn kind(&self) -> StrategyKind {
+        match self {
+            EdgeStrategy::Bloom { .. } => StrategyKind::Bloom,
+            EdgeStrategy::BloomPartitioned { .. } => StrategyKind::BloomPartitioned,
+            EdgeStrategy::BloomExchange { .. } => StrategyKind::BloomExchange,
+            EdgeStrategy::Broadcast => StrategyKind::Broadcast,
+            EdgeStrategy::SortMerge => StrategyKind::SortMerge,
+        }
+    }
+
+    /// Instantiate a kind as an executable per-edge strategy; `eps` is
+    /// ignored by the non-bloom kinds.
+    pub fn for_kind(kind: StrategyKind, eps: f64) -> EdgeStrategy {
+        match kind {
+            StrategyKind::Bloom => EdgeStrategy::Bloom { eps },
+            StrategyKind::BloomPartitioned => EdgeStrategy::BloomPartitioned { eps },
+            StrategyKind::BloomExchange => EdgeStrategy::BloomExchange { eps },
+            StrategyKind::Broadcast => EdgeStrategy::Broadcast,
+            StrategyKind::SortMerge => EdgeStrategy::SortMerge,
+        }
+    }
+
     pub fn label(&self) -> String {
         match self {
             EdgeStrategy::Bloom { eps } => format!("bloom(eps={eps:.4})"),
+            EdgeStrategy::BloomPartitioned { eps } => format!("bloom-partitioned(eps={eps:.4})"),
+            EdgeStrategy::BloomExchange { eps } => format!("bloom-exchange(eps={eps:.4})"),
             EdgeStrategy::Broadcast => "broadcast".to_string(),
             EdgeStrategy::SortMerge => "sortmerge".to_string(),
         }
@@ -271,14 +362,7 @@ impl JoinPlan {
     /// Model-predicted simulated seconds for the whole plan (the sum of
     /// each edge's predicted cost under its chosen strategy).
     pub fn predicted_total_s(&self) -> f64 {
-        self.edges
-            .iter()
-            .map(|e| match e.strategy {
-                EdgeStrategy::Bloom { .. } => e.prediction.bloom_s,
-                EdgeStrategy::Broadcast => e.prediction.broadcast_s,
-                EdgeStrategy::SortMerge => e.prediction.sortmerge_s,
-            })
-            .sum()
+        self.edges.iter().map(|e| e.prediction.cost_of(e.strategy.kind())).sum()
     }
 }
 
@@ -312,12 +396,31 @@ mod tests {
 
     #[test]
     fn strategy_labels_distinct() {
-        let labels = [
-            EdgeStrategy::Bloom { eps: 0.05 }.label(),
-            EdgeStrategy::Broadcast.label(),
-            EdgeStrategy::SortMerge.label(),
-        ];
+        let labels: Vec<String> =
+            StrategyKind::ALL.iter().map(|k| EdgeStrategy::for_kind(*k, 0.05).label()).collect();
         assert!(labels[0].contains("bloom"));
-        assert_ne!(labels[1], labels[2]);
+        for (i, a) in labels.iter().enumerate() {
+            for b in labels.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn strategy_kind_parse_roundtrips() {
+        for k in StrategyKind::ALL {
+            assert_eq!(StrategyKind::parse(k.name()), Some(k));
+            assert_eq!(EdgeStrategy::for_kind(k, 0.05).kind(), k);
+        }
+        assert_eq!(StrategyKind::parse("hash"), None);
+    }
+
+    #[test]
+    fn bloom_family_flagged() {
+        assert!(StrategyKind::Bloom.is_bloom());
+        assert!(StrategyKind::BloomPartitioned.is_bloom());
+        assert!(StrategyKind::BloomExchange.is_bloom());
+        assert!(!StrategyKind::Broadcast.is_bloom());
+        assert!(!StrategyKind::SortMerge.is_bloom());
     }
 }

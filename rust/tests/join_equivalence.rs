@@ -1,5 +1,6 @@
 //! Cross-strategy integration properties: on arbitrary workloads, all
-//! three join strategies return exactly the same multiset as a
+//! five join strategies (bloom, bloom-partitioned, bloom-exchange,
+//! broadcast, sortmerge) return exactly the same multiset as a
 //! nested-loop oracle, and the SBFCJ invariants hold (no lost matches at
 //! any ε, filters monotone in ε).  The n-way planner gets the same
 //! treatment: 3-way star and chain plans must equal the nested-loop
@@ -269,8 +270,14 @@ fn oracle_for(case: &StarCase, dims: &[Relation]) -> Vec<PlanRow> {
     nested_loop_oracle(&star_inputs(case), dims)
 }
 
-fn strategies() -> [EdgeStrategy; 3] {
-    [EdgeStrategy::Bloom { eps: 0.05 }, EdgeStrategy::Broadcast, EdgeStrategy::SortMerge]
+fn strategies() -> [EdgeStrategy; 5] {
+    [
+        EdgeStrategy::Bloom { eps: 0.05 },
+        EdgeStrategy::BloomPartitioned { eps: 0.05 },
+        EdgeStrategy::BloomExchange { eps: 0.05 },
+        EdgeStrategy::Broadcast,
+        EdgeStrategy::SortMerge,
+    ]
 }
 
 fn star_plan(dims: &[Relation], strats: &[EdgeStrategy]) -> JoinPlan {
@@ -291,7 +298,7 @@ fn three_way_plans_equal_oracle_for_every_strategy_assignment() {
     let cluster = Cluster::new(ClusterConfig::local());
     let spec = PlanSpec { partitions: 4, ..Default::default() };
     let dims3 = [Relation::Orders, Relation::Customer];
-    check("3-way star/chain ≡ oracle, all 2×9 assignments", 5, gen_star, |case| {
+    check("3-way star/chain ≡ oracle, all 2×25 assignments", 5, gen_star, |case| {
         let want = oracle_for(case, &dims3);
         for topology in [Topology::Star, Topology::Chain] {
             for s1 in strategies() {

@@ -1,0 +1,169 @@
+//! Shipped-bytes conservation: every strategy's metrics ledger must
+//! attribute its whole `total_net_bytes()` to recognised data-movement
+//! events (filter collect, broadcast, shard routing/shipping, probe-key
+//! streaming, exchange rounds, shuffle) — compute-only stages
+//! (`approx_count`, `shard_build`, `join`, `write`) must ship nothing.
+//! This is what makes the `--json` ledger's byte totals auditable
+//! event-by-event, and what fig10 sums when it compares broadcast
+//! against partitioned shipping.
+
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::dataset::PartitionedTable;
+use bloomjoin::joins::bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin};
+use bloomjoin::joins::{
+    bloom_exchange_join, bloom_partitioned_join, broadcast_hash_join, sort_merge_join,
+};
+use bloomjoin::metrics::QueryMetrics;
+use bloomjoin::plan::{
+    execute, EdgeStrategy, JoinPlan, PlanInputs, PlanSpec, PlannedEdge, Relation, StrategyKind,
+    Topology,
+};
+use bloomjoin::util::Rng;
+
+/// Stage kinds that represent bytes on the wire.  Everything else is
+/// compute or disk only.  Names arrive either bare (direct executor
+/// calls) or prefixed per edge (`e1/broadcast`) from composed plans.
+fn is_ship_stage(name: &str) -> bool {
+    matches!(
+        name.rsplit('/').next().unwrap_or(name),
+        "bloom_build"
+            | "bloom_resize"
+            | "broadcast"
+            | "shard_route"
+            | "shard_ship"
+            | "filter_scan"
+            | "exchange_build"
+            | "exchange_ship"
+            | "shuffle"
+    )
+}
+
+/// The conservation property itself: Σ(ship-stage bytes) == ledger
+/// total, and no unclassified stage carries network bytes.
+fn assert_conserved(label: &str, m: &QueryMetrics) {
+    let mut shipped = 0u64;
+    for s in &m.stages {
+        if is_ship_stage(&s.name) {
+            shipped += s.net_bytes;
+        } else {
+            assert_eq!(
+                s.net_bytes, 0,
+                "{label}: compute stage {:?} claims {} net bytes",
+                s.name, s.net_bytes
+            );
+        }
+    }
+    assert_eq!(
+        shipped,
+        m.total_net_bytes(),
+        "{label}: ship-stage bytes must account for the whole ledger total"
+    );
+}
+
+type Row = (u64, u64);
+
+fn tables(n_big: usize, n_small: usize) -> (PartitionedTable<Row>, PartitionedTable<Row>) {
+    let mut rng = Rng::new(7);
+    let big: Vec<Row> = (0..n_big).map(|_| (rng.below(5_000), rng.next_u64())).collect();
+    let small: Vec<Row> = (0..n_small).map(|_| (rng.below(1_500), rng.next_u64())).collect();
+    (PartitionedTable::from_rows(big, 4), PartitionedTable::from_rows(small, 2))
+}
+
+#[test]
+fn every_strategy_conserves_shipped_bytes() {
+    let cluster = Cluster::new(ClusterConfig::default());
+    let mut row_counts = Vec::new();
+
+    let (big, small) = tables(4_000, 400);
+    let cascade = BloomCascadeJoin::new(BloomCascadeConfig { fpr: 0.05, ..Default::default() });
+    let (rows, m) = cascade.execute(&cluster, big, small);
+    assert_conserved("bloom", &m);
+    assert!(m.total_net_bytes() > 0, "bloom ships filter + shuffle bytes");
+    row_counts.push(rows.len());
+
+    let (big, small) = tables(4_000, 400);
+    let (rows, m) = bloom_partitioned_join(&cluster, big, small, 0.05);
+    assert_conserved("bloom-partitioned", &m);
+    assert!(m.stage("shard_ship").unwrap().net_bytes > 0, "shards must travel");
+    row_counts.push(rows.len());
+
+    let (big, small) = tables(4_000, 400);
+    let (rows, m) = bloom_exchange_join(&cluster, big, small, 0.05);
+    assert_conserved("bloom-exchange", &m);
+    assert!(m.stage("exchange_ship").unwrap().net_bytes > 0, "return filter must travel");
+    row_counts.push(rows.len());
+
+    let (big, small) = tables(4_000, 400);
+    let (rows, m) = broadcast_hash_join(&cluster, big, small);
+    assert_conserved("broadcast", &m);
+    assert!(m.stage("broadcast").unwrap().net_bytes > 0);
+    row_counts.push(rows.len());
+
+    let (big, small) = tables(4_000, 400);
+    let (rows, m) = sort_merge_join(&cluster, big, small);
+    assert_conserved("sortmerge", &m);
+    assert!(m.stage("shuffle").unwrap().net_bytes > 0);
+    row_counts.push(rows.len());
+
+    assert!(
+        row_counts.iter().all(|&n| n == row_counts[0] && n > 0),
+        "all strategies must produce the same join: {row_counts:?}"
+    );
+}
+
+fn star_inputs() -> PlanInputs {
+    let mut rng = Rng::new(11);
+    PlanInputs {
+        customer: PartitionedTable::from_rows(
+            (0..60).map(|_| (rng.below(40), 1i32)).collect(),
+            3,
+        ),
+        orders: PartitionedTable::from_rows(
+            (0..160).map(|_| (rng.below(120), rng.below(40), 10i32)).collect(),
+            4,
+        ),
+        lineitem: PartitionedTable::from_rows(
+            (0..600)
+                .map(|_| bloomjoin::plan::FactRow {
+                    orderkey: rng.below(120),
+                    partkey: rng.below(30),
+                    suppkey: rng.below(15),
+                    price_cents: rng.next_u64() as i64,
+                })
+                .collect(),
+            5,
+        ),
+        part: PartitionedTable::from_rows((0..25).map(|_| (rng.below(30), 2i32)).collect(), 2),
+        supplier: PartitionedTable::from_rows((0..12).map(|_| (rng.below(15), 3i32)).collect(), 2),
+    }
+}
+
+#[test]
+fn composed_plans_conserve_shipped_bytes_for_every_strategy() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let spec = PlanSpec { partitions: 4, ..Default::default() };
+    let dims = [Relation::Orders, Relation::Customer];
+    let mut row_counts = Vec::new();
+    for kind in StrategyKind::ALL {
+        let strategy = EdgeStrategy::for_kind(kind, 0.05);
+        let plan = JoinPlan {
+            topology: Topology::Star,
+            edges: dims
+                .iter()
+                .enumerate()
+                .map(|(i, &rel)| {
+                    PlannedEdge::forced(rel, format!("e{}", i + 1), strategy.clone())
+                })
+                .collect(),
+            dim_stats: Vec::new(),
+        };
+        let out = execute(&cluster, &spec, &plan, star_inputs());
+        assert_conserved(kind.name(), &out.metrics);
+        assert!(out.metrics.total_net_bytes() > 0, "{}: plans move bytes", kind.name());
+        row_counts.push(out.rows.len());
+    }
+    assert!(
+        row_counts.iter().all(|&n| n == row_counts[0] && n > 0),
+        "same plan rows under every strategy: {row_counts:?}"
+    );
+}

@@ -35,6 +35,13 @@ TRACKED = {
         "regret win ratio (mispriced-tail static/regret)",
         lambda p: p["mispriced_static_s"] / max(p["mispriced_regret_s"], 1e-9),
     ),
+    # filter-ship bytes are simulated, not timed, so the ratio is exact
+    # and deterministic: broadcast's executors×filter bill over the
+    # partitioned strategy's route+shard-ship bill at the largest shape
+    "fig10_partitioned": (
+        "partitioned ship win ratio (broadcast/partitioned bytes)",
+        lambda p: p["broadcast_bytes"] / max(p["partitioned_bytes"], 1e-9),
+    ),
 }
 # fail when a metric drops below this fraction of the last committed point
 THRESHOLD = 0.8
@@ -50,11 +57,28 @@ def series_path(repo_root, name):
 
 
 def load_series(repo_root, name):
+    """The committed series, or [] for anything unusable.
+
+    Newly tracked benches are seeded as an empty array (or not at all),
+    and a botched manual edit must degrade to "first point — no gate"
+    rather than crash the whole bench-smoke job.
+    """
     path = series_path(repo_root, name)
     if not os.path.exists(path):
         return []
     with open(path) as f:
-        return json.load(f)
+        text = f.read().strip()
+    if not text:
+        return []
+    try:
+        data = json.loads(text)
+    except json.JSONDecodeError:
+        print(f"{name}: committed series is not valid JSON — treating as empty")
+        return []
+    if not isinstance(data, list):
+        print(f"{name}: committed series is not a JSON array — treating as empty")
+        return []
+    return data
 
 
 def gate(results_dir, repo_root):
@@ -65,7 +89,12 @@ def gate(results_dir, repo_root):
         if not series:
             print(f"{name}: {label} = {now:.3f} (first point — no gate)")
             continue
-        prev = metric(series[-1])
+        try:
+            prev = metric(series[-1])
+        except (KeyError, TypeError):
+            # a committed point from before this metric's fields existed
+            print(f"{name}: {label} = {now:.3f} (last point predates metric — no gate)")
+            continue
         ok = now >= THRESHOLD * prev
         verdict = "OK" if ok else f"REGRESSION (below {THRESHOLD:.0%} of previous)"
         print(f"{name}: {label} = {now:.3f} vs committed {prev:.3f} — {verdict}")
@@ -80,7 +109,7 @@ def append(results_dir, repo_root):
         series = load_series(repo_root, name)
         # job re-runs rebase onto the bot commit they pushed last time —
         # don't append the same trigger SHA's point twice
-        if sha and series and series[-1].get("commit") == sha:
+        if sha and series and isinstance(series[-1], dict) and series[-1].get("commit") == sha:
             print(f"{name}: point for {sha[:12]} already committed — skipping")
             continue
         point = fresh_point(results_dir, name)
