@@ -1,0 +1,206 @@
+//! F11 — the long-running query service: warm-vs-cold latency under the
+//! cross-query filter and plan caches, and behaviour under concurrent
+//! mixed load.
+//!
+//! Three phases over one shared [`Engine`]:
+//!
+//! * **cold** — the repeated 5-relation star query with every cache
+//!   cleared before each run: the full pipeline every time (what the
+//!   one-shot CLI pays per invocation).
+//! * **warm** — the same query with caches left standing: plans served
+//!   from the plan cache, every dimension filter from the filter cache
+//!   (build stages skipped, cache-aware pricing discounts the edges).
+//! * **concurrent** — N workers submitting a mixed star/chain workload
+//!   through admission control; every answer is checked against the
+//!   sequentially computed row count, sheds are retried.
+//!
+//! Asserted invariants (smoke and full shapes): warm and cold answers
+//! are identical; warm p50 is strictly below cold p50 (the tentpole's
+//! acceptance bar); the warm phase actually hits the filter cache; the
+//! concurrent phase loses no queries and diverges on none.  Writes the
+//! `BENCH_fig11_server.json` trajectory point with warm/cold p50+p99,
+//! the filter-cache hit rate, and the shed count.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bloomjoin::bench_support::{smoke_or, trajectory_point, Report};
+use bloomjoin::cluster::ClusterConfig;
+use bloomjoin::plan::{PlanSpec, Relation, StrategyKind, Topology};
+use bloomjoin::server::{CalibrationMode, Engine, PlanRequest, ServerConfig};
+use bloomjoin::util::Json;
+
+fn request(sf: f64, dims: &[Relation], topology: Topology) -> PlanRequest {
+    PlanRequest {
+        spec: PlanSpec {
+            sf,
+            partitions: 4,
+            topology,
+            dims: dims.to_vec(),
+            ..PlanSpec::default()
+        },
+        no_execute: false,
+        // pin the bloom cascade so the filter cache is on the hot path
+        // regardless of what the cost model would pick at this scale
+        force: Some(StrategyKind::Bloom),
+    }
+}
+
+fn quantile(sorted_ms: &[f64], q: f64) -> f64 {
+    sorted_ms[((sorted_ms.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Run `iters` queries through `f`, returning (p50_ms, p99_ms).
+fn latency_ms(iters: usize, mut f: impl FnMut()) -> (f64, f64) {
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (quantile(&samples, 0.5), quantile(&samples, 0.99))
+}
+
+fn rows_of(payload: &Json) -> u64 {
+    payload.get("rows").and_then(Json::as_f64).expect("executed payload has rows") as u64
+}
+
+fn main() {
+    let sf = smoke_or(0.002, 0.01);
+    let iters = smoke_or(5, 20);
+    let workers = smoke_or(4, 8);
+    let per_worker = smoke_or(4, 16);
+
+    let engine = Arc::new(Engine::new(ServerConfig {
+        cluster: ClusterConfig::local(),
+        max_inflight: 2,
+        max_queue: 2,
+        calibration: CalibrationMode::Off,
+        ..ServerConfig::default()
+    }));
+    let star5 = request(
+        sf,
+        &[Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier],
+        Topology::Star,
+    );
+
+    // -- cold: every run pays planning, generation, and filter builds ---
+    let mut cold_rows = 0;
+    let (cold_p50, cold_p99) = latency_ms(iters, || {
+        engine.clear_caches();
+        cold_rows = rows_of(&engine.run_plan(&star5));
+    });
+
+    // -- warm: one priming run, then cache-served repeats --------------
+    engine.clear_caches();
+    let primed = engine.run_plan(&star5);
+    assert_eq!(rows_of(&primed), cold_rows, "priming run agrees with cold runs");
+    let hits_before = engine.filter_cache().stats().hits;
+    let mut warm_rows = 0;
+    let (warm_p50, warm_p99) = latency_ms(iters, || {
+        warm_rows = rows_of(&engine.run_plan(&star5));
+    });
+    let warm_hits = engine.filter_cache().stats().hits - hits_before;
+    assert_eq!(warm_rows, cold_rows, "cache hits must not change the answer");
+    assert!(
+        warm_hits >= iters as u64,
+        "warm runs must serve filters from cache ({warm_hits} hits over {iters} runs)"
+    );
+    assert!(
+        warm_p50 < cold_p50,
+        "warm p50 ({warm_p50:.2}ms) must beat cold p50 ({cold_p50:.2}ms)"
+    );
+
+    // -- concurrent: mixed workload through admission control ----------
+    let workload = vec![
+        star5.clone(),
+        request(sf, &[Relation::Orders, Relation::Customer], Topology::Chain),
+        request(sf, &[Relation::Orders, Relation::Part], Topology::Star),
+        request(sf, &[Relation::Orders, Relation::Customer], Topology::Star),
+    ];
+    // sequential reference answers (the engine itself, idle, warm)
+    let expected: Vec<u64> = workload.iter().map(|r| rows_of(&engine.run_plan(r))).collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..workers)
+        .map(|w| {
+            let engine = Arc::clone(&engine);
+            let workload = workload.clone();
+            let expected = expected.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_worker {
+                    let idx = (w + i) % workload.len();
+                    let payload = loop {
+                        match engine.submit(&workload[idx]) {
+                            Ok(p) => break p,
+                            Err(_shed) => std::thread::yield_now(),
+                        }
+                    };
+                    assert_eq!(
+                        rows_of(&payload),
+                        expected[idx],
+                        "query {idx} diverged under concurrency"
+                    );
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let concurrent_s = t0.elapsed().as_secs_f64();
+    let shed = engine.admission().shed_count();
+    let f = engine.filter_cache().stats();
+    let hit_rate = f.hits as f64 / (f.hits + f.misses).max(1) as f64;
+
+    let mut report = Report::new(
+        "fig11_server",
+        &["phase", "p50_ms", "p99_ms", "queries", "filter_hits", "shed"],
+    );
+    report.row(vec![
+        "cold".into(),
+        format!("{cold_p50:.3}"),
+        format!("{cold_p99:.3}"),
+        iters.to_string(),
+        "0".into(),
+        "0".into(),
+    ]);
+    report.row(vec![
+        "warm".into(),
+        format!("{warm_p50:.3}"),
+        format!("{warm_p99:.3}"),
+        iters.to_string(),
+        warm_hits.to_string(),
+        "0".into(),
+    ]);
+    report.row(vec![
+        "concurrent".into(),
+        format!("{:.3}", concurrent_s * 1e3 / (workers * per_worker) as f64),
+        String::new(),
+        (workers * per_worker).to_string(),
+        f.hits.to_string(),
+        shed.to_string(),
+    ]);
+    report.finish();
+
+    println!(
+        "\nwarm p50 {warm_p50:.2}ms vs cold p50 {cold_p50:.2}ms ({:.1}x), \
+         filter hit rate {:.1}%, {shed} shed over {} concurrent queries",
+        cold_p50 / warm_p50.max(1e-9),
+        100.0 * hit_rate,
+        workers * per_worker
+    );
+
+    trajectory_point(
+        "fig11_server",
+        Json::obj([
+            ("cold_p50_ms", Json::num(cold_p50)),
+            ("cold_p99_ms", Json::num(cold_p99)),
+            ("warm_p50_ms", Json::num(warm_p50)),
+            ("warm_p99_ms", Json::num(warm_p99)),
+            ("filter_hit_rate", Json::num(hit_rate)),
+            ("shed", Json::num(shed as f64)),
+        ]),
+    );
+}

@@ -75,6 +75,7 @@ pub fn poisoned_store(alpha: f64, beta: f64) -> crate::plan::CostCalibration {
             strategy: "bloom(eps=0.0500)".into(),
             eps: Some(0.05),
             resized: false,
+            cached: false,
             estimated_probe_rows: 1,
             measured_probe_rows: 1,
             estimated_survivors: 1,

@@ -13,9 +13,16 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Worker count for per-partition build/probe work: the
 /// `BLOOMJOIN_THREADS` env var when set to a positive integer, otherwise
-/// the machine's available parallelism.
+/// the machine's available parallelism.  An invalid override (`abc`, `0`,
+/// out-of-range) falls back to the default, but not silently: the first
+/// offending read warns once on stderr.
 pub fn configured_workers() -> usize {
-    workers_from(std::env::var("BLOOMJOIN_THREADS").ok().as_deref())
+    static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+    let env = std::env::var("BLOOMJOIN_THREADS").ok();
+    if let Some(msg) = threads_override_warning(env.as_deref()) {
+        WARN_ONCE.call_once(|| eprintln!("{msg}"));
+    }
+    workers_from(env.as_deref())
 }
 
 /// Parse rule behind [`configured_workers`] (pure, unit-testable).
@@ -26,9 +33,27 @@ pub fn workers_from(env: Option<&str>) -> usize {
     }
 }
 
+/// Warning text for an invalid `BLOOMJOIN_THREADS` override, `None` when
+/// the value is absent or parses to a usable worker count (pure,
+/// unit-testable — [`configured_workers`] rate-limits the actual print).
+pub fn threads_override_warning(env: Option<&str>) -> Option<String> {
+    let raw = env?;
+    match raw.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => None,
+        _ => Some(format!(
+            "bloomjoin: ignoring invalid BLOOMJOIN_THREADS={raw:?} \
+             (expected an integer >= 1); using available parallelism"
+        )),
+    }
+}
+
 pub struct ThreadPool {
     workers: Vec<JoinHandle<()>>,
-    tx: Option<mpsc::Sender<Job>>,
+    // Behind a mutex so the pool is `Sync`: `mpsc::Sender` itself is
+    // `!Sync`, and the server shares one `Cluster` across query-handler
+    // threads.  `run_tasks` holds the lock only long enough to clone the
+    // sender, so concurrent stages still feed workers in parallel.
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
 }
 
 impl ThreadPool {
@@ -50,7 +75,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { workers, tx: Some(tx) }
+        ThreadPool { workers, tx: Mutex::new(Some(tx)) }
     }
 
     pub fn size(&self) -> usize {
@@ -66,6 +91,7 @@ impl ThreadPool {
     {
         let n = tasks.len();
         let (done_tx, done_rx) = mpsc::channel::<(usize, T, f64)>();
+        let tx = self.tx.lock().unwrap().clone().expect("pool alive");
         for (i, task) in tasks.into_iter().enumerate() {
             let done = done_tx.clone();
             let job: Job = Box::new(move || {
@@ -74,7 +100,7 @@ impl ThreadPool {
                 let dt = t0.elapsed().as_secs_f64();
                 let _ = done.send((i, out, dt));
             });
-            self.tx.as_ref().expect("pool alive").send(job).expect("worker alive");
+            tx.send(job).expect("worker alive");
         }
         drop(done_tx);
         let mut slots: Vec<Option<(T, f64)>> = (0..n).map(|_| None).collect();
@@ -115,7 +141,7 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        drop(self.tx.lock().unwrap().take());
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -152,6 +178,37 @@ mod tests {
         assert_eq!(workers_from(Some("0")), default);
         assert_eq!(workers_from(Some("lots")), default);
         assert_eq!(workers_from(Some("")), default);
+    }
+
+    #[test]
+    fn threads_override_warning_fires_only_on_garbage() {
+        assert_eq!(threads_override_warning(None), None);
+        assert_eq!(threads_override_warning(Some("4")), None);
+        assert_eq!(threads_override_warning(Some(" 12 ")), None);
+        for bad in ["abc", "0", "", "-3", "1.5"] {
+            let msg = threads_override_warning(Some(bad)).expect(bad);
+            assert!(msg.contains("BLOOMJOIN_THREADS"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn pool_is_shareable_across_threads() {
+        // the server hands one `Arc<Cluster>` to concurrent query handlers
+        fn assert_sync<T: Send + Sync>() {}
+        assert_sync::<ThreadPool>();
+        let pool = std::sync::Arc::new(ThreadPool::new(2));
+        let handles: Vec<_> = (0..3)
+            .map(|t| {
+                let pool = std::sync::Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    pool.run_chunked(100, move |r| r.map(|i| i + t).collect::<Vec<usize>>())
+                })
+            })
+            .collect();
+        for (t, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            assert_eq!(got, (0..100).map(|i| i + t).collect::<Vec<usize>>());
+        }
     }
 
     #[test]

@@ -163,62 +163,138 @@ impl BloomCascadeJoin {
         B: Clone + Send + Sync + RowSize + 'static,
         S: Clone + Send + Sync + RowSize + 'static,
     {
+        let (rows, metrics, resized, _) =
+            self.execute_phased(cluster, big, small, resize, None);
+        (rows, metrics, resized)
+    }
+
+    /// [`execute_with_resize`] that also hands back the broadcast filter,
+    /// so a long-running service can publish it to its cross-query filter
+    /// cache.
+    ///
+    /// [`execute_with_resize`]: BloomCascadeJoin::execute_with_resize
+    pub fn execute_returning_filter<B, S>(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<B>>,
+        small: PartitionedTable<Keyed<S>>,
+        resize: Option<ResizeDecision<'_>>,
+    ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>, Arc<BloomFilter>)
+    where
+        B: Clone + Send + Sync + RowSize + 'static,
+        S: Clone + Send + Sync + RowSize + 'static,
+    {
+        self.execute_phased(cluster, big, small, resize, None)
+    }
+
+    /// Run the cascade with a filter already built by an earlier query
+    /// over the same build side (same relation, predicate, ε and data
+    /// version — the server's filter-cache key guarantees it).  Steps 1–3
+    /// and the re-size point are skipped: the query pays only broadcast +
+    /// stage 2, and a zero-cost `filter_cached` marker stage records the
+    /// hit in the metrics ledger (deliberately outside both §7 stage
+    /// buckets, so ledger stage sums still reconcile).
+    pub fn execute_with_prebuilt<B, S>(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<B>>,
+        small: PartitionedTable<Keyed<S>>,
+        filter: Arc<BloomFilter>,
+    ) -> (Vec<JoinedRow<B, S>>, QueryMetrics)
+    where
+        B: Clone + Send + Sync + RowSize + 'static,
+        S: Clone + Send + Sync + RowSize + 'static,
+    {
+        let (rows, metrics, _, _) = self.execute_phased(cluster, big, small, None, Some(filter));
+        (rows, metrics)
+    }
+
+    fn execute_phased<B, S>(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<B>>,
+        small: PartitionedTable<Keyed<S>>,
+        resize: Option<ResizeDecision<'_>>,
+        prebuilt: Option<Arc<BloomFilter>>,
+    ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>, Arc<BloomFilter>)
+    where
+        B: Clone + Send + Sync + RowSize + 'static,
+        S: Clone + Send + Sync + RowSize + 'static,
+    {
         let cfg = cluster.config().clone();
         let mut metrics = QueryMetrics::default();
         metrics.requested_fpr = self.cfg.fpr;
         metrics.big_rows_scanned = big.n_rows() as u64;
 
-        // -- step 1: approximate count ------------------------------------
-        let sizes: Vec<usize> = small.partitions().iter().map(Vec::len).collect();
-        let est = approx_count(&cfg, &sizes, self.cfg.count_budget_s, 2e-8);
-        metrics.push(StageTiming {
-            tasks: est.partitions_seen,
-            ..StageTiming::new("approx_count", crate::cluster::SimDuration::from_secs(est.sim_s))
-        });
+        let mut resized: Option<FilterResize> = None;
+        let filter: Arc<BloomFilter> = if let Some(cached) = prebuilt {
+            // cache hit: the build side is already summarised — record the
+            // reused filter's shape and jump straight to the broadcast
+            let params = cached.params();
+            metrics.bloom_bits = params.m_bits;
+            metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
+            metrics.push(StageTiming::new(
+                "filter_cached",
+                crate::cluster::SimDuration::ZERO,
+            ));
+            cached
+        } else {
+            // -- step 1: approximate count --------------------------------
+            let sizes: Vec<usize> = small.partitions().iter().map(Vec::len).collect();
+            let est = approx_count(&cfg, &sizes, self.cfg.count_budget_s, 2e-8);
+            metrics.push(StageTiming {
+                tasks: est.partitions_seen,
+                ..StageTiming::new(
+                    "approx_count",
+                    crate::cluster::SimDuration::from_secs(est.sim_s),
+                )
+            });
 
-        // -- step 2: sizing -------------------------------------------------
-        let sized = |fpr: f64| {
-            let mut params = BloomParams::optimal(est.estimate.max(1), fpr);
-            // with an XLA probe engine, snap the size up to its artifact
-            // ladder so the AOT kernel (static shapes) can run the scan
-            if let ProbePath::Batch(engine) = &self.cfg.probe_path {
-                let raw = crate::model::CostModel::filter_bits(est.estimate.max(1), fpr);
-                if let Some(m) = engine.snap_m_bits(raw) {
-                    params = BloomParams::with_m(est.estimate.max(1), fpr, m);
+            // -- step 2: sizing ---------------------------------------------
+            let sized = |fpr: f64| {
+                let mut params = BloomParams::optimal(est.estimate.max(1), fpr);
+                // with an XLA probe engine, snap the size up to its artifact
+                // ladder so the AOT kernel (static shapes) can run the scan
+                if let ProbePath::Batch(engine) = &self.cfg.probe_path {
+                    let raw = crate::model::CostModel::filter_bits(est.estimate.max(1), fpr);
+                    if let Some(m) = engine.snap_m_bits(raw) {
+                        params = BloomParams::with_m(est.estimate.max(1), fpr, m);
+                    }
+                }
+                params
+            };
+            let mut params = sized(self.cfg.fpr);
+            metrics.bloom_bits = params.m_bits;
+
+            // -- step 3: build ------------------------------------------------
+            let build = |params: BloomParams| match self.cfg.build_style {
+                FilterBuildStyle::Distributed => self.build_distributed(cluster, &small, params),
+                FilterBuildStyle::DriverSide => self.build_driver_side(cluster, &small, params),
+            };
+            let (mut filter, build_timing) = build(params);
+            metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
+            metrics.push(build_timing);
+
+            // -- re-plan point: re-size before broadcast ----------------------
+            // the filter exists but nothing has shipped; a corrected ε can
+            // still replace it for the price of a second build stage
+            if let Some(decide) = resize {
+                if let Some(new_fpr) = decide(est.estimate.max(1), self.cfg.fpr) {
+                    params = sized(new_fpr);
+                    let (rebuilt, mut timing) = build(params);
+                    timing.name = "bloom_resize".to_string();
+                    filter = rebuilt;
+                    metrics.bloom_bits = params.m_bits;
+                    metrics.requested_fpr = new_fpr;
+                    metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
+                    metrics.push(timing);
+                    let old_fpr = self.cfg.fpr;
+                    resized =
+                        Some(FilterResize { old_fpr, new_fpr, build_estimate: est.estimate });
                 }
             }
-            params
+            Arc::new(filter)
         };
-        let mut params = sized(self.cfg.fpr);
-        metrics.bloom_bits = params.m_bits;
-
-        // -- step 3: build ----------------------------------------------------
-        let build = |params: BloomParams| match self.cfg.build_style {
-            FilterBuildStyle::Distributed => self.build_distributed(cluster, &small, params),
-            FilterBuildStyle::DriverSide => self.build_driver_side(cluster, &small, params),
-        };
-        let (mut filter, build_timing) = build(params);
-        metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
-        metrics.push(build_timing);
-
-        // -- re-plan point: re-size before broadcast --------------------------
-        // the filter exists but nothing has shipped; a corrected ε can
-        // still replace it for the price of a second build stage
-        let mut resized: Option<FilterResize> = None;
-        if let Some(decide) = resize {
-            if let Some(new_fpr) = decide(est.estimate.max(1), self.cfg.fpr) {
-                params = sized(new_fpr);
-                let (rebuilt, mut timing) = build(params);
-                timing.name = "bloom_resize".to_string();
-                filter = rebuilt;
-                metrics.bloom_bits = params.m_bits;
-                metrics.requested_fpr = new_fpr;
-                metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
-                metrics.push(timing);
-                let old_fpr = self.cfg.fpr;
-                resized = Some(FilterResize { old_fpr, new_fpr, build_estimate: est.estimate });
-            }
-        }
 
         // -- step 4: broadcast ---------------------------------------------
         let filter_bytes = filter.to_bytes().len() as u64;
@@ -231,7 +307,6 @@ impl BloomCascadeJoin {
         );
 
         // -- step 5a: filtered scan ------------------------------------------
-        let filter = Arc::new(filter);
         let probe = self.cfg.probe_path.clone();
         let n_nodes = cfg.n_nodes;
         let tasks: Vec<Task<Vec<Keyed<B>>>> = big
@@ -339,7 +414,7 @@ impl BloomCascadeJoin {
         });
 
         metrics.output_rows = rows.len() as u64;
-        (rows, metrics, resized)
+        (rows, metrics, resized, filter)
     }
 
     /// §5.1 change #1: per-partition partial build + tree OR-merge.
@@ -550,6 +625,35 @@ mod tests {
         assert!(tight.big_rows_after_filter <= loose.big_rows_after_filter);
         // the rebuild is priced as build-side (stage 1) work
         assert!(tight.bloom_creation_s() > loose.bloom_creation_s());
+    }
+
+    #[test]
+    fn prebuilt_filter_skips_build_and_matches_cold_run() {
+        let cluster = Cluster::new(ClusterConfig::local());
+        let join = BloomCascadeJoin::new(BloomCascadeConfig { fpr: 0.01, ..Default::default() });
+
+        let (big, small) = inputs(5_000, 100, 100_000);
+        let (cold_rows, cold_m, resized, filter) =
+            join.execute_returning_filter(&cluster, big, small, None);
+        assert!(resized.is_none());
+        assert!(cold_m.stage("bloom_build").is_some());
+
+        // same inputs, filter served from the "cache": identical output
+        let (big, small) = inputs(5_000, 100, 100_000);
+        let (warm_rows, warm_m) = join.execute_with_prebuilt(&cluster, big, small, filter);
+        assert_eq!(warm_rows, cold_rows, "cache hit must be bit-identical");
+        assert_eq!(warm_m.output_rows, cold_m.output_rows);
+        assert_eq!(warm_m.bloom_bits, cold_m.bloom_bits);
+        assert_eq!(warm_m.big_rows_after_filter, cold_m.big_rows_after_filter);
+
+        // the hit pays no build-side stages — only the marker + broadcast
+        for skipped in ["approx_count", "bloom_build", "bloom_resize"] {
+            assert!(warm_m.stage(skipped).is_none(), "{skipped} must be skipped on a hit");
+        }
+        let marker = warm_m.stage("filter_cached").expect("hit marker stage");
+        assert_eq!(marker.sim_s, 0.0);
+        assert!(warm_m.stage("broadcast").is_some(), "the reused filter still ships");
+        assert!(warm_m.bloom_creation_s() < cold_m.bloom_creation_s());
     }
 
     #[test]

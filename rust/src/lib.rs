@@ -37,6 +37,7 @@ pub mod model;
 pub mod plan;
 pub mod query;
 pub mod runtime;
+pub mod server;
 pub mod storage;
 pub mod testkit;
 pub mod tpch;

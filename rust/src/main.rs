@@ -48,6 +48,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "generate" => generate(args),
         "query" => query(args),
         "plan" => plan_cmd(args),
+        "serve" => serve_cmd(args),
         "sweep" => sweep(args),
         "calibrate" | "optimal" => optimal(args, cmd == "calibrate"),
         "info" => info(),
@@ -58,7 +59,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     }
 }
 
-fn cluster_from(args: &Args) -> anyhow::Result<Cluster> {
+fn cluster_config_from(args: &Args) -> anyhow::Result<ClusterConfig> {
     let mut cfg = match args.get_or("cluster", "default") {
         "grid5000" => ClusterConfig::grid5000_like(),
         "small" => ClusterConfig::small_cluster(),
@@ -77,7 +78,48 @@ fn cluster_from(args: &Args) -> anyhow::Result<Cluster> {
     if let Some(p) = args.parse_as::<usize>("shuffle-partitions")? {
         cfg.shuffle_partitions = p;
     }
-    Ok(Cluster::new(cfg))
+    // a zero anywhere makes a cluster with no slots — every downstream
+    // per-slot division would be meaningless; reject with a usage error
+    // instead of planning over it
+    for (name, v) in [
+        ("--nodes", cfg.n_nodes),
+        ("--executors", cfg.executors_per_node),
+        ("--cores", cfg.cores_per_executor),
+        ("--shuffle-partitions", cfg.shuffle_partitions),
+    ] {
+        if v == 0 {
+            anyhow::bail!("{name} must be at least 1 (got 0)");
+        }
+    }
+    Ok(cfg)
+}
+
+fn cluster_from(args: &Args) -> anyhow::Result<Cluster> {
+    Ok(Cluster::new(cluster_config_from(args)?))
+}
+
+/// Resolve `--calibration auto|off|<path>`: `auto` keys the store file
+/// on the cluster topology under the state dir (`BLOOMJOIN_STATE_DIR`
+/// env, default `.bloomjoin/`); an existing *directory* is treated as a
+/// state dir and gets the same topology-keyed file name inside it; any
+/// other path is used as the store file verbatim.
+fn calibration_path_from(
+    args: &Args,
+    cfg: &ClusterConfig,
+) -> Option<std::path::PathBuf> {
+    use bloomjoin::plan::CostCalibration;
+    match args.get_or("calibration", "auto") {
+        "off" => None,
+        "auto" => Some(CostCalibration::default_path(cfg)),
+        p => {
+            let pb = std::path::PathBuf::from(p);
+            if pb.is_dir() || p.ends_with('/') {
+                Some(CostCalibration::path_in(&pb, cfg))
+            } else {
+                Some(pb)
+            }
+        }
+    }
 }
 
 fn query_from(args: &Args) -> anyhow::Result<JoinQuery> {
@@ -236,12 +278,9 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     }
 
     // per-cluster calibration store (§7 constants refined from observed
-    // runs) — "auto" keys the file on the cluster topology under target/
-    let calib_path = match args.get_or("calibration", "auto") {
-        "off" => None,
-        "auto" => Some(plan::CostCalibration::default_path(cluster.config())),
-        p => Some(std::path::PathBuf::from(p)),
-    };
+    // runs) — "auto" keys the file on the cluster topology under the
+    // state dir (BLOOMJOIN_STATE_DIR, default .bloomjoin/)
+    let calib_path = calibration_path_from(args, cluster.config());
     let mut calibration = plan::CostCalibration::default();
     if let Some(p) = &calib_path {
         if let Some(c) = plan::CostCalibration::load(p) {
@@ -313,7 +352,7 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
 
     if args.flag("no-execute") {
         if json_mode {
-            println!("{}", plan_to_json(&spec, &join_plan, &calibration, None));
+            println!("{}", plan::plan_report_json(&spec, &join_plan, &calibration, None));
         }
         return Ok(());
     }
@@ -332,7 +371,7 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     }
 
     if json_mode {
-        println!("{}", plan_to_json(&spec, &join_plan, &calibration, Some(&out)));
+        println!("{}", plan::plan_report_json(&spec, &join_plan, &calibration, Some(&out)));
         return Ok(());
     }
     println!(
@@ -398,79 +437,32 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The `plan --json` payload: spec + decided plan + calibration state,
-/// and (when executed) metrics, per-edge reports and the adaptive
-/// ledger.  CI cross-checks the ledger against the metrics ledger.
-fn planned_edge_json(e: &bloomjoin::plan::PlannedEdge) -> bloomjoin::util::Json {
-    use bloomjoin::util::Json;
-    Json::obj([
-        ("name", Json::str(e.name.clone())),
-        ("relation", Json::str(e.relation.name())),
-        ("strategy", Json::str(e.strategy.label())),
-        ("eps_star", Json::num(e.prediction.eps_star)),
-        ("interior", Json::Bool(e.prediction.interior)),
-        ("bloom_s", Json::num(e.prediction.bloom_s)),
-        ("bloom_partitioned_s", Json::num(e.prediction.bloom_partitioned_s)),
-        ("bloom_exchange_s", Json::num(e.prediction.bloom_exchange_s)),
-        ("broadcast_s", Json::num(e.prediction.broadcast_s)),
-        ("sortmerge_s", Json::num(e.prediction.sortmerge_s)),
-        ("est_probe_rows", Json::num(e.stats.probe_rows as f64)),
-        ("est_survivors", Json::num(e.stats.matched_rows as f64)),
-    ])
-}
+fn serve_cmd(args: &Args) -> anyhow::Result<()> {
+    use bloomjoin::server::{serve, CalibrationMode, ServerConfig};
 
-fn edge_report_json(r: &bloomjoin::plan::EdgeReport) -> bloomjoin::util::Json {
-    use bloomjoin::util::Json;
-    Json::obj([
-        ("name", Json::str(r.name.clone())),
-        ("strategy", Json::str(r.strategy.clone())),
-        ("sim_s", Json::num(r.sim_s)),
-        ("output_rows", Json::num(r.output_rows as f64)),
-        ("probe_rows", Json::num(r.probe_rows as f64)),
-        ("probe_keys_per_s", Json::num(r.probe_keys_per_s())),
-    ])
-}
-
-fn plan_to_json(
-    spec: &bloomjoin::plan::PlanSpec,
-    join_plan: &bloomjoin::plan::JoinPlan,
-    calibration: &bloomjoin::plan::CostCalibration,
-    out: Option<&bloomjoin::plan::PlanOutput>,
-) -> bloomjoin::util::Json {
-    use bloomjoin::util::Json;
-
-    let dims: Vec<Json> = spec.dims.iter().map(|r| Json::str(r.name())).collect();
-    let spec_json = Json::obj([
-        ("topology", Json::str(spec.topology.name())),
-        ("pushdown", Json::str(spec.pushdown.name())),
-        ("replan", Json::str(spec.replan.name())),
-        ("replan_floor", Json::num(spec.replan_floor as f64)),
-        ("sf", Json::num(spec.sf)),
-        ("partitions", Json::num(spec.partitions as f64)),
-        ("dims", Json::Arr(dims)),
-    ]);
-    let edges: Vec<Json> = join_plan.edges.iter().map(planned_edge_json).collect();
-    let mut calib_fields = vec![("samples", Json::num(calibration.samples.len() as f64))];
-    if let Some((alpha, beta)) = calibration.factors() {
-        calib_fields.push(("alpha", Json::num(alpha)));
-        calib_fields.push(("beta", Json::num(beta)));
+    let cfg = cluster_config_from(args)?;
+    let calibration = match args.get_or("calibration", "auto") {
+        "memory" => CalibrationMode::Memory,
+        _ => match calibration_path_from(args, &cfg) {
+            Some(p) => CalibrationMode::Persistent(p),
+            None => CalibrationMode::Off,
+        },
+    };
+    let max_inflight = args.parse_or("max-inflight", 4usize)?;
+    let max_queue = args.parse_or("max-queue", 16usize)?;
+    if max_inflight == 0 {
+        anyhow::bail!("--max-inflight must be at least 1 (got 0)");
     }
-    let calib_json = Json::obj(calib_fields);
-    let mut fields = vec![
-        ("spec", spec_json),
-        ("predicted_total_s", Json::num(join_plan.predicted_total_s())),
-        ("edges", Json::Arr(edges)),
-        ("calibration", calib_json),
-        ("executed", Json::Bool(out.is_some())),
-    ];
-    if let Some(out) = out {
-        let reports: Vec<Json> = out.edge_reports.iter().map(edge_report_json).collect();
-        fields.push(("rows", Json::num(out.rows.len() as f64)));
-        fields.push(("metrics", out.metrics.to_json()));
-        fields.push(("ledger", out.ledger.to_json()));
-        fields.push(("edge_reports", Json::Arr(reports)));
-    }
-    Json::obj(fields)
+    let config = ServerConfig {
+        cluster: cfg,
+        max_inflight,
+        max_queue,
+        filter_budget_bytes: args.parse_or("filter-budget-mb", 64u64)? << 20,
+        plan_cache_entries: args.parse_or("plan-cache-entries", 64usize)?,
+        calibration,
+    };
+    let port = args.parse_as::<u16>("port")?;
+    serve(config, port)
 }
 
 fn eps_series(n: usize) -> Vec<f64> {
@@ -595,9 +587,11 @@ COMMANDS
              --replan-floor N (absolute row floor both triggers must
               clear, default 64 — single-digit residual noise never
               re-plans a cheap tail)
-             --calibration auto|off|<path> (per-cluster K/L/C store under
-              target/calibration/, refined from observed runs; CI tracks
-              the fitted factors for drift)
+             --calibration auto|off|<path-or-dir> (per-cluster K/L/C
+              store refined from observed runs, kept under the state dir
+              — BLOOMJOIN_STATE_DIR or ./.bloomjoin — when auto; a
+              directory argument keys the topology-named file inside it;
+              CI tracks the fitted factors for drift)
              --force-strategy bloom|bloom-partitioned|bloom-exchange|
               broadcast|sortmerge (debug: override every edge's strategy
               after pricing — bloom variants keep their per-edge ε*; how
@@ -606,6 +600,17 @@ COMMANDS
              [--no-execute]
              (n-way planner: ranked filter pushdown, per-edge strategy
               from the cost model, per-filter optimal ε from HLL estimates)
+  serve      long-running query service: newline-delimited JSON requests
+             on stdin (one response line per request on stdout), plus a
+             localhost TCP listener with the same protocol when --port
+             is given.  Caches built bloom filters and decided plans
+             across queries; see docs/server.md for the protocol.
+             --max-inflight N (default 4) --max-queue N (default 16;
+              past both, plan requests are shed with a typed error)
+             --filter-budget-mb N (default 64, filter-cache LRU budget)
+             --plan-cache-entries N (default 64)
+             --calibration auto|off|memory|<path-or-dir>
+             [--port P] (plus the cluster options below)
   sweep      --sf 0.01 --runs 69 --eps 0.05           (CSV on stdout — the paper's §6 series)
   calibrate  --sf 0.01 --runs 16                      (fit the §7 cost model)
   optimal    --sf 0.01 --runs 16                      (fit + solve ε*, validate)
@@ -618,7 +623,11 @@ CLUSTER OPTIONS (all commands)
 ENVIRONMENT
   BLOOMJOIN_THREADS       worker threads for parallel per-partition
                           build/probe (default: available parallelism,
-                          capped at the cluster's slot count)
+                          capped at the cluster's slot count).  Accepts
+                          an integer >= 1; anything else warns once on
+                          stderr and falls back to the default
+  BLOOMJOIN_STATE_DIR     where mutable state (the calibration store)
+                          lives; default ./.bloomjoin
   BLOOMJOIN_BENCH_SMOKE   =1 shrinks every bench target to CI smoke shapes"
     );
 }

@@ -68,7 +68,9 @@ fn base_name(name: &str) -> &str {
 /// replaces `bloom_build`/`broadcast` with `shard_route`/`shard_build`/
 /// `shard_ship`; the exchange variant adds a second build round
 /// (`exchange_build`/`exchange_ship`) that is still filter construction,
-/// not probing.
+/// not probing.  The server's zero-cost `filter_cached` marker (a
+/// cache-served filter skipped the build) is deliberately in *neither*
+/// stage bucket: it is an annotation, not work.
 fn is_stage1(name: &str) -> bool {
     matches!(
         base_name(name),

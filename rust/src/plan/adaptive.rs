@@ -184,6 +184,11 @@ pub struct EdgeObservation {
     /// edges pay §7 stage 1 twice, so they are excluded from the
     /// calibration fit.
     pub resized: bool,
+    /// Whether the edge's filter came from the server's cross-query
+    /// filter cache.  Cache-served edges skip the approx-count and build
+    /// stages entirely, so their measured stage split is not the §7
+    /// model's shape either — excluded from the calibration fit.
+    pub cached: bool,
     pub estimated_probe_rows: u64,
     pub measured_probe_rows: u64,
     /// The planner's `matched_rows` estimate for this edge.
@@ -218,6 +223,7 @@ impl EdgeObservation {
             ("strategy", Json::str(self.strategy.clone())),
             ("eps", self.eps.map_or(Json::Null, Json::num)),
             ("resized", Json::Bool(self.resized)),
+            ("cached", Json::Bool(self.cached)),
             ("estimated_probe_rows", Json::num(self.estimated_probe_rows as f64)),
             ("measured_probe_rows", Json::num(self.measured_probe_rows as f64)),
             ("estimated_survivors", Json::num(self.estimated_survivors as f64)),

@@ -30,7 +30,7 @@ use super::PlanSpec;
 /// The five relations the planner knows.  LINEITEM is the fact table of
 /// every star plan; the other four are dimensions (CUSTOMER through the
 /// snowflake edge ORDERS attaches).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Relation {
     Customer,
     Orders,

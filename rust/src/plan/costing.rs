@@ -280,6 +280,69 @@ pub fn edge_cost_model(cfg: &ClusterConfig, e: &EdgeStats) -> CostModel {
     CostModel { k1, k2, l1, l2, c, a: filtrable / p, b: (matched / p).max(1.0) }
 }
 
+/// Stage-1 model for a bloom edge whose filter will be served from the
+/// server's cross-query filter cache: the approximate count, the
+/// per-partition build scan/hash and the driver-side collect+merge all
+/// vanish — only the broadcast leg (the reused filter's bits still ship
+/// to every executor) and its single stage barrier remain.  Stage 2 is
+/// untouched: a cached filter probes identically to a fresh one.
+fn cached_build_cost_model(cfg: &ClusterConfig, e: &EdgeStats) -> CostModel {
+    let ln2 = std::f64::consts::LN_2;
+    let n = e.build_distinct.max(1) as f64;
+    let rounds = ((cfg.total_executors().max(1) as f64) + 1.0).log2().ceil().max(1.0);
+    let bits_per_ln = 1.44 * n / ln2;
+    CostModel {
+        k1: cfg.stage_overhead,
+        k2: 2.0 * rounds * (bits_per_ln / 8.0) / cfg.net_bandwidth,
+        ..edge_cost_model(cfg, e)
+    }
+}
+
+/// Cache-aware re-pricing pass over a (possibly plan-cached) plan: for
+/// every planned edge whose dimension filter is already in the server's
+/// filter cache (per `is_cached`, at the ε the bloom variant would run
+/// with), re-price `bloom_s` with the build stage zeroed
+/// ([`cached_build_cost_model`]) and re-pick the strategy.  The discount
+/// only ever *lowers* `bloom_s`, so flips go toward plain `Bloom` — the
+/// one strategy that can consume the cached artifact; partitioned /
+/// exchange assignments are left alone unless plain bloom now beats
+/// them outright.  Returns how many edges ended up priced (and
+/// strategised) against a cached build.
+pub fn discount_cached_builds(
+    cfg: &ClusterConfig,
+    factors: Option<(f64, f64)>,
+    plan: &mut JoinPlan,
+    is_cached: &dyn Fn(Relation, f64) -> bool,
+) -> usize {
+    let mut discounted = 0;
+    for e in &mut plan.edges {
+        if !e.has_estimates() {
+            continue;
+        }
+        let eps = match e.strategy {
+            EdgeStrategy::Bloom { eps } => eps,
+            _ => e.prediction.eps_star,
+        };
+        if !is_cached(e.relation, eps) {
+            continue;
+        }
+        let mut m = cached_build_cost_model(cfg, &e.stats);
+        if let Some(f) = factors {
+            m = CostCalibration::scale(m, f);
+        }
+        e.prediction.bloom_s = m.total(eps);
+        if e.strategy.kind() != StrategyKind::Bloom
+            && e.prediction.cheapest().kind == StrategyKind::Bloom
+        {
+            e.strategy = EdgeStrategy::Bloom { eps };
+        }
+        if e.strategy.kind() == StrategyKind::Bloom {
+            discounted += 1;
+        }
+    }
+    discounted
+}
+
 /// The §7 model for the key-range-sharded variant: same stage structure
 /// as [`edge_cost_model`], with the filter's broadcast leg (every bit to
 /// every executor, `2·rounds·bytes/bw` in `K2`) replaced by three
@@ -530,11 +593,17 @@ impl CostCalibration {
 
     /// Fold one executed edge into the store (bloom edges only — the §7
     /// stage models are the bloom cascade's).  Re-sized edges paid stage
-    /// 1 twice (build + rebuild), so their measured split is not the
-    /// model's shape and is excluded from the fit.
+    /// 1 twice (build + rebuild) and cache-served edges paid it not at
+    /// all (the filter came from the server's filter cache), so neither
+    /// measured split is the model's shape; both are excluded from the
+    /// fit.
     pub fn record(&mut self, obs: &EdgeObservation) {
         let Some(eps) = obs.eps else { return };
-        if obs.resized || obs.predicted_stage1_s <= 0.0 || obs.predicted_stage2_s <= 0.0 {
+        if obs.resized
+            || obs.cached
+            || obs.predicted_stage1_s <= 0.0
+            || obs.predicted_stage2_s <= 0.0
+        {
             return;
         }
         if self.samples.len() >= Self::MAX_SAMPLES {
@@ -607,15 +676,37 @@ impl CostCalibration {
         }
     }
 
+    /// State root for persistent calibration stores: `BLOOMJOIN_STATE_DIR`
+    /// when set, else `.bloomjoin/` in the working directory.  The store
+    /// used to live under `target/calibration/`, where `cargo clean`
+    /// silently wiped it and every concurrent run shared one directory of
+    /// mutable files.
+    pub fn state_dir() -> std::path::PathBuf {
+        match std::env::var_os("BLOOMJOIN_STATE_DIR") {
+            Some(dir) if !dir.is_empty() => std::path::PathBuf::from(dir),
+            _ => std::path::PathBuf::from(".bloomjoin"),
+        }
+    }
+
     /// Where the store for `cfg` lives:
-    /// `target/calibration/cluster_n<..>e<..>c<..>p<..>-<fp>.json`.  The
-    /// trailing fingerprint hashes the cost-relevant constants
-    /// (bandwidths, latencies, overheads, per-record costs), so two
-    /// clusters with the same shape but different economics never share
-    /// a store.
+    /// `<state_dir>/calibration/cluster_n<..>e<..>c<..>p<..>-<fp>.json`
+    /// (see [`state_dir`]).  The trailing fingerprint hashes the
+    /// cost-relevant constants (bandwidths, latencies, overheads,
+    /// per-record costs), so two clusters with the same shape but
+    /// different economics never share a store.
+    ///
+    /// [`state_dir`]: CostCalibration::state_dir
     pub fn default_path(cfg: &ClusterConfig) -> std::path::PathBuf {
-        std::path::PathBuf::from(format!(
-            "target/calibration/cluster_n{}e{}c{}p{}-{:08x}.json",
+        Self::path_in(&Self::state_dir(), cfg)
+    }
+
+    /// [`default_path`] rooted at an explicit state directory — what
+    /// `--calibration <dir>` resolves through.
+    ///
+    /// [`default_path`]: CostCalibration::default_path
+    pub fn path_in(dir: &std::path::Path, cfg: &ClusterConfig) -> std::path::PathBuf {
+        dir.join("calibration").join(format!(
+            "cluster_n{}e{}c{}p{}-{:08x}.json",
             cfg.n_nodes,
             cfg.executors_per_node,
             cfg.cores_per_executor,
@@ -643,26 +734,59 @@ impl CostCalibration {
         Some(out)
     }
 
+    /// Load the store at `path`.  A file that exists but does not parse
+    /// is *not* silently discarded: it is moved aside to
+    /// `<name>.json.corrupt` with a stderr warning, so the evidence
+    /// survives and the recalibration from scratch is visible instead of
+    /// mysterious.
     pub fn load(path: &std::path::Path) -> Option<CostCalibration> {
         let text = std::fs::read_to_string(path).ok()?;
-        Self::from_json(&Json::parse(&text).ok()?)
+        match Json::parse(&text).ok().as_ref().and_then(Self::from_json) {
+            Some(store) => Some(store),
+            None => {
+                let mut quarantine = path.as_os_str().to_os_string();
+                quarantine.push(".corrupt");
+                let moved = std::fs::rename(path, &quarantine).is_ok();
+                eprintln!(
+                    "bloomjoin: calibration store {} is malformed; {} — \
+                     recalibrating from scratch",
+                    path.display(),
+                    if moved {
+                        format!("quarantined to {}", std::path::Path::new(&quarantine).display())
+                    } else {
+                        "quarantine rename failed, leaving it in place".to_string()
+                    }
+                );
+                None
+            }
+        }
     }
 
-    /// Write-then-rename, so a killed process never leaves a truncated
-    /// store behind for the next run to discard.
+    /// Write-then-rename with a per-call unique temp name, so a killed
+    /// process never leaves a truncated store behind and concurrent
+    /// server queries saving the same store can't interleave partial
+    /// JSON through a shared temp file.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let tmp = path.with_extension("json.tmp");
+        let tmp = path.with_extension(format!(
+            "json.tmp.{}.{}",
+            std::process::id(),
+            SAVE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
         std::fs::write(&tmp, self.to_json().to_string())?;
         std::fs::rename(&tmp, path)
     }
 }
 
 /// FNV-1a over the cost constants the §7 models are built from — the
-/// calibration store's cache key beyond the topology counts.
-fn cost_fingerprint(cfg: &ClusterConfig) -> u64 {
+/// calibration store's cache key beyond the topology counts, and one
+/// component of the server's plan-cache key (a plan priced for one
+/// cluster economics must not serve another).
+pub fn cost_fingerprint(cfg: &ClusterConfig) -> u64 {
     let vals = [
         cfg.net_bandwidth,
         cfg.net_latency,
@@ -893,6 +1017,7 @@ mod tests {
             strategy: "bloom(eps=0.0500)".into(),
             eps: Some(0.05),
             resized: false,
+            cached: false,
             estimated_probe_rows: 100,
             measured_probe_rows: 100,
             estimated_survivors: 50,
@@ -966,12 +1091,118 @@ mod tests {
     }
 
     #[test]
+    fn cached_build_discount_lowers_bloom_cost_only_for_cached_relations() {
+        let spec = PlanSpec {
+            dims: vec![Relation::Orders, Relation::Part, Relation::Supplier],
+            ..PlanSpec::default()
+        };
+        let inputs = super::super::prepare(&spec);
+        let cluster = Cluster::with_workers(ClusterConfig::default(), 1);
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        let cold_total = plan.predicted_total_s();
+        let cold_bloom: Vec<f64> = plan.edges.iter().map(|e| e.prediction.bloom_s).collect();
+
+        let mut warm = plan.clone();
+        let n = discount_cached_builds(cluster.config(), None, &mut warm, &|rel, _eps| {
+            rel == Relation::Part
+        });
+        for (e, cold) in warm.edges.iter().zip(&cold_bloom) {
+            if e.relation == Relation::Part {
+                assert!(
+                    e.prediction.bloom_s < *cold,
+                    "cached build must be cheaper: {} vs {cold}",
+                    e.prediction.bloom_s
+                );
+                assert!(e.prediction.bloom_s > 0.0, "broadcast still costs");
+            } else {
+                assert_eq!(e.prediction.bloom_s, *cold, "{:?} was not cached", e.relation);
+            }
+        }
+        // the discount can only flip strategies toward plain bloom, and
+        // only a bloom-strategised PART edge counts as discounted
+        let part = warm.edges.iter().find(|e| e.relation == Relation::Part).unwrap();
+        assert_eq!(n, usize::from(part.strategy.kind() == StrategyKind::Bloom));
+        assert!(warm.predicted_total_s() <= cold_total);
+
+        // nothing cached ⇒ pure no-op
+        let mut untouched = plan.clone();
+        assert_eq!(
+            discount_cached_builds(cluster.config(), None, &mut untouched, &|_, _| false),
+            0
+        );
+        assert_eq!(untouched.predicted_total_s(), cold_total);
+    }
+
+    #[test]
     fn calibration_path_keys_on_cost_constants_too() {
         let a = ClusterConfig::default();
         let mut b = ClusterConfig::default();
         b.net_bandwidth /= 10.0;
         assert_eq!(CostCalibration::default_path(&a), CostCalibration::default_path(&a));
         assert_ne!(CostCalibration::default_path(&a), CostCalibration::default_path(&b));
+    }
+
+    #[test]
+    fn calibration_store_lives_outside_target() {
+        // the store survives `cargo clean`: never under target/, and an
+        // explicit state dir relocates the whole layout
+        let p = CostCalibration::default_path(&ClusterConfig::default());
+        assert!(!p.starts_with("target"), "store must not live under target/: {p:?}");
+        let custom = std::path::Path::new("/var/lib/bloomjoin");
+        let q = CostCalibration::path_in(custom, &ClusterConfig::default());
+        assert!(q.starts_with(custom), "{q:?}");
+        assert_eq!(q.parent().unwrap().file_name().unwrap(), "calibration");
+        assert_eq!(p.file_name(), q.file_name(), "file name must not depend on the root");
+    }
+
+    #[test]
+    fn malformed_store_is_quarantined_not_discarded() {
+        let dir = std::env::temp_dir()
+            .join(format!("bloomjoin_corrupt_{}_{:p}", std::process::id(), &0));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.json");
+        std::fs::write(&path, "{\"samples\": [truncated").unwrap();
+        assert!(CostCalibration::load(&path).is_none());
+        assert!(!path.exists(), "bad file must be moved aside");
+        let quarantined = dir.join("store.json.corrupt");
+        assert!(quarantined.exists(), "quarantine file must hold the evidence");
+        let kept = std::fs::read_to_string(&quarantined).unwrap();
+        assert!(kept.contains("truncated"));
+        // a fresh save then loads cleanly alongside the quarantined copy
+        let mut store = CostCalibration::default();
+        for i in 0..4 {
+            store.record(&obs_with(1.0 + i as f64, 2.0, 1.0 + i as f64, 2.0));
+        }
+        store.save(&path).unwrap();
+        assert_eq!(CostCalibration::load(&path).unwrap().samples.len(), store.samples.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_saves_never_interleave() {
+        let dir = std::env::temp_dir()
+            .join(format!("bloomjoin_saves_{}_{:p}", std::process::id(), &0));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = std::sync::Arc::new(dir.join("store.json"));
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let path = std::sync::Arc::clone(&path);
+                std::thread::spawn(move || {
+                    let mut store = CostCalibration::default();
+                    for i in 0..(4 + t) {
+                        store.record(&obs_with(1.0 + i as f64, 2.0, 1.0 + i as f64, 2.0));
+                    }
+                    store.save(&path).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // whichever save won, the surviving file is complete valid JSON
+        let back = CostCalibration::load(&path).expect("store parses after racing saves");
+        assert!(back.samples.len() >= 4);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -985,6 +1216,10 @@ mod tests {
         resized.resized = true;
         store.record(&resized);
         assert!(store.samples.is_empty(), "re-sized edges paid stage 1 twice");
+        let mut cached = obs_with(1.0, 1.0, 1.0, 1.0);
+        cached.cached = true;
+        store.record(&cached);
+        assert!(store.samples.is_empty(), "cache-served edges never paid stage 1");
         for i in 0..4 {
             let p1 = 1.0 + i as f64;
             store.record(&obs_with(p1, 2.0 * p1, 1.1 * p1, 2.0 * p1));

@@ -27,6 +27,7 @@
 //! is the simulated cost of the composition — which is the planner's
 //! whole subject.
 
+use crate::bloom::BloomFilter;
 use crate::cluster::pool::ThreadPool;
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::dataset::PartitionedTable;
@@ -351,15 +352,34 @@ pub fn nested_loop_oracle(inputs: &PlanInputs, dims: &[Relation]) -> Vec<PlanRow
     out
 }
 
+/// Cross-query dimension-filter reuse hook (implemented by the server's
+/// filter cache).  `fetch` may return a filter built by an earlier query
+/// over the **same build side** — same relation, predicates, ε and data
+/// version; the implementor's key must guarantee that, because the
+/// executor will probe it without rebuilding.  `publish` offers a
+/// freshly built filter back for future queries.  Only plain `Bloom`
+/// edges consult the source: the partitioned/exchange variants ship
+/// sharded or survivor-pruned filters whose shape depends on the
+/// probe side too, so they are not reusable across queries.
+pub trait FilterSource: Sync {
+    fn fetch(&self, relation: Relation, eps: f64) -> Option<std::sync::Arc<BloomFilter>>;
+    fn publish(&self, relation: Relation, eps: f64, filter: &std::sync::Arc<BloomFilter>);
+}
+
 /// Dispatch one edge to its strategy's executor.  Bloom edges run the
 /// phased cascade with the mid-build re-plan point armed (`resize`);
-/// the other strategies have no filter to re-size.
+/// the other strategies have no filter to re-size.  With a
+/// [`FilterSource`], a bloom edge first tries to serve the filter from
+/// it (skipping the build stages entirely) and publishes a cold build's
+/// filter back — except re-sized filters, whose ε no longer matches the
+/// fetch key the next query would look up.
 fn run_edge<B, S>(
     cluster: &Cluster,
     edge: &PlannedEdge,
     big: PartitionedTable<Keyed<B>>,
     small: PartitionedTable<Keyed<S>>,
     resize: Option<ResizeDecision<'_>>,
+    filters: Option<&dyn FilterSource>,
 ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>)
 where
     B: Clone + Send + Sync + RowSize + 'static,
@@ -369,6 +389,18 @@ where
         EdgeStrategy::Bloom { eps } => {
             let join =
                 BloomCascadeJoin::new(BloomCascadeConfig { fpr: *eps, ..Default::default() });
+            if let Some(src) = filters {
+                if let Some(f) = src.fetch(edge.relation, *eps) {
+                    let (rows, m) = join.execute_with_prebuilt(cluster, big, small, f);
+                    return (rows, m, None);
+                }
+                let (rows, m, resized, built) =
+                    join.execute_returning_filter(cluster, big, small, resize);
+                if resized.is_none() {
+                    src.publish(edge.relation, *eps, &built);
+                }
+                return (rows, m, resized);
+            }
             join.execute_with_resize(cluster, big, small, resize)
         }
         EdgeStrategy::BloomPartitioned { eps } => {
@@ -414,6 +446,7 @@ fn run_star_edge(
     stream: &mut FactStream,
     tables: &mut DimTables,
     resize: Option<ResizeDecision<'_>>,
+    filters: Option<&dyn FilterSource>,
 ) -> (QueryMetrics, Option<FilterResize>) {
     // the edge's big side: the gathered key column + stream indices —
     // survivors come back as indices + payloads
@@ -431,7 +464,7 @@ fn run_star_edge(
             let dim = tables.orders.take().expect("star plans join orders at most once");
             let small: PartitionedTable<Keyed<(u64, i32)>> =
                 dim.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect());
-            let (joined, m, resized) = run_edge(cluster, edge, big, small, resize);
+            let (joined, m, resized) = run_edge(cluster, edge, big, small, resize, filters);
             tables.orders_joined = true;
             let mut inner = Vec::with_capacity(joined.len());
             let mut ck = Vec::with_capacity(joined.len());
@@ -452,7 +485,7 @@ fn run_star_edge(
                 "a customer edge requires an orders edge upstream (custkey comes from ORDERS)"
             );
             let dim = tables.customer.take().expect("star plans join customer at most once");
-            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize);
+            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters);
             let mut inner = Vec::with_capacity(joined.len());
             let mut nk = Vec::with_capacity(joined.len());
             for (_, idx, n) in joined {
@@ -465,7 +498,7 @@ fn run_star_edge(
         }
         Relation::Part => {
             let dim = tables.part.take().expect("star plans join part at most once");
-            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize);
+            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters);
             let mut inner = Vec::with_capacity(joined.len());
             let mut brand = Vec::with_capacity(joined.len());
             for (_, idx, b) in joined {
@@ -478,7 +511,7 @@ fn run_star_edge(
         }
         Relation::Supplier => {
             let dim = tables.supplier.take().expect("star plans join supplier at most once");
-            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize);
+            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters);
             let mut inner = Vec::with_capacity(joined.len());
             let mut nk = Vec::with_capacity(joined.len());
             for (_, idx, n) in joined {
@@ -539,6 +572,7 @@ fn observe_edge(
         strategy,
         eps,
         resized: resized.is_some(),
+        cached: m.stage("filter_cached").is_some(),
         estimated_probe_rows: edge.stats.probe_rows,
         measured_probe_rows: probe_rows,
         estimated_survivors: edge.stats.matched_rows,
@@ -687,6 +721,23 @@ pub fn execute_with(
     inputs: PlanInputs,
     calibration: Option<&CostCalibration>,
 ) -> PlanOutput {
+    execute_with_filters(cluster, spec, plan, inputs, calibration, None)
+}
+
+/// [`execute_with`] plus a cross-query [`FilterSource`]: bloom edges
+/// fetch their dimension filter from it when an earlier query already
+/// built one (the edge then skips the build stages and carries a
+/// `filter_cached` marker stage), and publish cold builds back.  The
+/// result rows are identical either way — the source only changes *who
+/// built* the filter, never what it contains.
+pub fn execute_with_filters(
+    cluster: &Cluster,
+    spec: &PlanSpec,
+    plan: &JoinPlan,
+    inputs: PlanInputs,
+    calibration: Option<&CostCalibration>,
+    filters: Option<&dyn FilterSource>,
+) -> PlanOutput {
     assert!(!plan.edges.is_empty(), "a plan needs at least one edge");
     let parts = spec.partitions.max(1);
     let PlanInputs { customer, orders, lineitem, part, supplier } = inputs;
@@ -727,7 +778,7 @@ pub fn execute_with(
                 });
                 let resize = decider.as_ref().map(|f| f as ResizeDecision<'_>);
                 let (m, resized) =
-                    run_star_edge(cluster, &edge, parts, &mut stream, &mut tables, resize);
+                    run_star_edge(cluster, &edge, parts, &mut stream, &mut tables, resize, filters);
                 let survivors = stream.len() as u64;
                 let obs = observe_edge(
                     cluster.config(),
@@ -817,7 +868,7 @@ pub fn execute_with(
                         let big: PartitionedTable<Keyed<(u64, i32)>> = o.map_partitions(|p| {
                             p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect()
                         });
-                        let (joined, m, r) = run_edge(cluster, &edge, big, c, resize);
+                        let (joined, m, r) = run_edge(cluster, &edge, big, c, resize, filters);
                         let survivors = joined.len() as u64;
                         // re-key the reduction by orderkey for the fact edge
                         reduced = Some(PartitionedTable::from_rows(
@@ -837,7 +888,7 @@ pub fn execute_with(
                         let big: PartitionedTable<Keyed<PlanRow>> = l.map_partitions(|p| {
                             p.iter().map(|f| (f.orderkey, seed_row(f))).collect()
                         });
-                        let (joined, m, r) = run_edge(cluster, &edge, big, small, resize);
+                        let (joined, m, r) = run_edge(cluster, &edge, big, small, resize, filters);
                         let survivors = joined.len() as u64;
                         rows_out = joined
                             .into_iter()

@@ -1,0 +1,259 @@
+//! Stable fingerprints for the server's cache keys.
+//!
+//! Three identities matter to a long-running query service:
+//!
+//! * [`spec_fingerprint`] — the *question*: every planning-relevant
+//!   field of a [`PlanSpec`].  Two requests with equal spec fingerprints
+//!   (over the same catalog and cluster economics) can share a
+//!   [`super::JoinPlan`].
+//! * [`catalog_fingerprint`] — the *data*: the generated/filtered base
+//!   relations a spec scans.  Generation is deterministic in
+//!   (sf, seed, partitions) and the predicate set, so this hash is the
+//!   data-version-independent part of the data's identity.
+//! * [`filter_context_fingerprint`] — one relation's *build side*: what
+//!   a dimension bloom filter summarises.  Combined with ε and the
+//!   relation's data version it keys the filter cache; two queries with
+//!   equal context fingerprints would build bit-identical filters.
+//!
+//! All three are FNV-1a, the same construction as
+//! [`super::cost_fingerprint`] — not cryptographic, just stable and
+//! cheap, with inputs structured (tagged per field) so field
+//! transpositions cannot collide trivially.
+
+use super::{EpsMode, PlanSpec, PushdownMode, Relation, ReplanPolicy, Topology};
+
+/// Incremental FNV-1a (64-bit) over tagged field bytes.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bytes(mut self, bytes: &[u8]) -> Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self
+    }
+
+    pub fn u64(self, v: u64) -> Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn i64(self, v: i64) -> Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn f64(self, v: f64) -> Self {
+        self.bytes(&v.to_bits().to_le_bytes())
+    }
+
+    /// An `Option` hashes its presence tag, then the value — so
+    /// `None` and `Some(0)` differ.
+    pub fn opt_i64(self, v: Option<i64>) -> Self {
+        match v {
+            Some(x) => self.u64(1).i64(x),
+            None => self.u64(0),
+        }
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+fn relation_tag(r: Relation) -> u64 {
+    match r {
+        Relation::Customer => 1,
+        Relation::Orders => 2,
+        Relation::Lineitem => 3,
+        Relation::Part => 4,
+        Relation::Supplier => 5,
+    }
+}
+
+/// The spec's full planning identity — every field that can change the
+/// planned edge list, order, strategy or ε.
+pub fn spec_fingerprint(spec: &PlanSpec) -> u64 {
+    let mut h = Fnv::new()
+        .f64(spec.sf)
+        .u64(spec.seed)
+        .u64(spec.partitions as u64)
+        .u64(match spec.topology {
+            Topology::Star => 1,
+            Topology::Chain => 2,
+        })
+        .u64(spec.dims.len() as u64);
+    for &d in &spec.dims {
+        h = h.u64(relation_tag(d));
+    }
+    h = predicate_fields(h, spec);
+    h = match spec.eps_mode {
+        EpsMode::PerFilter => h.u64(1),
+        EpsMode::Global(e) => h.u64(2).f64(e),
+    };
+    h = h.u64(match spec.pushdown {
+        PushdownMode::Ranked => 1,
+        PushdownMode::Unranked => 2,
+    });
+    h = h.u64(match spec.replan {
+        ReplanPolicy::Static => 1,
+        ReplanPolicy::Adaptive => 2,
+        ReplanPolicy::Regret => 3,
+    });
+    h.u64(spec.replan_floor).finish()
+}
+
+/// The identity of the data a spec scans: generator inputs + the
+/// predicate set `prepare` applies.  Deliberately *excludes* planning
+/// knobs (eps mode, pushdown, replan) — two specs that differ only in
+/// how they plan read the same tables.
+pub fn catalog_fingerprint(spec: &PlanSpec) -> u64 {
+    let h = Fnv::new().f64(spec.sf).u64(spec.seed).u64(spec.partitions as u64);
+    predicate_fields(h, spec).finish()
+}
+
+fn predicate_fields(h: Fnv, spec: &PlanSpec) -> Fnv {
+    h.i64(spec.order_date_window.0 as i64)
+        .i64(spec.order_date_window.1 as i64)
+        .i64(spec.ship_date_max as i64)
+        .opt_i64(spec.mktsegment.map(|v| v as i64))
+        .opt_i64(spec.part_brand.map(|v| v as i64))
+        .opt_i64(spec.supp_nationkey.map(|v| v as i64))
+}
+
+/// What `relation`'s bloom-filter build side contains under `spec`:
+/// the generator inputs plus exactly the predicates that shape that
+/// relation's dimension table.  Chain plans are special-cased for
+/// ORDERS: the chain's fact edge builds its filter over ORDERS′ — the
+/// *customer-reduced* orders — so its context also folds in the
+/// customer predicate and the chain topology tag.  A star ORDERS filter
+/// and a chain ORDERS′ filter therefore never share a cache slot.
+pub fn filter_context_fingerprint(spec: &PlanSpec, relation: Relation) -> u64 {
+    let mut h = Fnv::new()
+        .f64(spec.sf)
+        .u64(spec.seed)
+        .u64(spec.partitions as u64)
+        .u64(relation_tag(relation));
+    h = match relation {
+        Relation::Orders => {
+            let base =
+                h.i64(spec.order_date_window.0 as i64).i64(spec.order_date_window.1 as i64);
+            match spec.topology {
+                Topology::Star => base,
+                Topology::Chain => {
+                    base.u64(0xC4A1).opt_i64(spec.mktsegment.map(|v| v as i64))
+                }
+            }
+        }
+        Relation::Customer => h.opt_i64(spec.mktsegment.map(|v| v as i64)),
+        Relation::Part => h.opt_i64(spec.part_brand.map(|v| v as i64)),
+        Relation::Supplier => h.opt_i64(spec.supp_nationkey.map(|v| v as i64)),
+        // lineitem is always the probe side; give it a context anyway so
+        // the function is total
+        Relation::Lineitem => h.i64(spec.ship_date_max as i64),
+    };
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> PlanSpec {
+        PlanSpec {
+            dims: vec![Relation::Orders, Relation::Customer, Relation::Part],
+            ..PlanSpec::default()
+        }
+    }
+
+    #[test]
+    fn spec_fingerprint_is_stable_and_field_sensitive() {
+        assert_eq!(spec_fingerprint(&spec()), spec_fingerprint(&spec()));
+        let mut other = spec();
+        other.seed ^= 1;
+        assert_ne!(spec_fingerprint(&spec()), spec_fingerprint(&other));
+        let mut reordered = spec();
+        reordered.dims = vec![Relation::Part, Relation::Customer, Relation::Orders];
+        assert_ne!(
+            spec_fingerprint(&spec()),
+            spec_fingerprint(&reordered),
+            "dims order is the unranked probe order — it plans differently"
+        );
+        let mut replan = spec();
+        replan.replan = ReplanPolicy::Adaptive;
+        assert_ne!(spec_fingerprint(&spec()), spec_fingerprint(&replan));
+    }
+
+    #[test]
+    fn catalog_fingerprint_ignores_planning_knobs() {
+        let mut planned_differently = spec();
+        planned_differently.pushdown = PushdownMode::Unranked;
+        planned_differently.replan = ReplanPolicy::Regret;
+        planned_differently.eps_mode = EpsMode::Global(0.1);
+        assert_eq!(catalog_fingerprint(&spec()), catalog_fingerprint(&planned_differently));
+        assert_ne!(spec_fingerprint(&spec()), spec_fingerprint(&planned_differently));
+        let mut other_data = spec();
+        other_data.mktsegment = Some(3);
+        assert_ne!(catalog_fingerprint(&spec()), catalog_fingerprint(&other_data));
+    }
+
+    #[test]
+    fn filter_context_tracks_only_the_relations_own_predicate() {
+        // changing the PART predicate must not disturb ORDERS' context
+        let mut other = spec();
+        other.part_brand = Some(7);
+        assert_eq!(
+            filter_context_fingerprint(&spec(), Relation::Orders),
+            filter_context_fingerprint(&other, Relation::Orders)
+        );
+        assert_ne!(
+            filter_context_fingerprint(&spec(), Relation::Part),
+            filter_context_fingerprint(&other, Relation::Part)
+        );
+        // ...but the ORDERS window does
+        let mut window = spec();
+        window.order_date_window.1 += 30;
+        assert_ne!(
+            filter_context_fingerprint(&spec(), Relation::Orders),
+            filter_context_fingerprint(&window, Relation::Orders)
+        );
+    }
+
+    #[test]
+    fn chain_orders_context_folds_in_the_customer_reduction() {
+        let star = spec();
+        let mut chain = spec();
+        chain.topology = Topology::Chain;
+        chain.dims = vec![Relation::Orders, Relation::Customer];
+        assert_ne!(
+            filter_context_fingerprint(&star, Relation::Orders),
+            filter_context_fingerprint(&chain, Relation::Orders),
+            "chain builds over ORDERS′, not ORDERS"
+        );
+        let mut chain_seg = chain.clone();
+        chain_seg.mktsegment = Some(2);
+        assert_ne!(
+            filter_context_fingerprint(&chain, Relation::Orders),
+            filter_context_fingerprint(&chain_seg, Relation::Orders),
+            "the customer predicate shapes ORDERS′"
+        );
+        // the star ORDERS filter ignores the customer predicate: the
+        // reduction happens on the probe side there
+        let mut star_seg = star.clone();
+        star_seg.mktsegment = Some(2);
+        assert_eq!(
+            filter_context_fingerprint(&star, Relation::Orders),
+            filter_context_fingerprint(&star_seg, Relation::Orders)
+        );
+    }
+}

@@ -61,6 +61,8 @@ pub mod adaptive;
 pub mod catalog;
 pub mod costing;
 pub mod executor;
+pub mod fingerprint;
+pub mod report;
 
 pub use adaptive::{
     estimate_error, regret_flip, resize_epsilon, should_replan, trigger_bound, EdgeObservation,
@@ -71,12 +73,16 @@ pub use catalog::{
     chain_edge_stats, prepare, star_dim_stats, DimStats, EdgeStats, FactRow, PlanInputs, Relation,
 };
 pub use costing::{
-    derive_edge_stats, plan_edges, plan_edges_calibrated, price_edges_with, rank_dims,
-    star_edge_stats, CostCalibration, EdgePrediction, StrategyCost,
+    cost_fingerprint, derive_edge_stats, discount_cached_builds, plan_edges,
+    plan_edges_calibrated, price_edges_with, rank_dims, star_edge_stats, CostCalibration,
+    EdgePrediction, StrategyCost,
 };
 pub use executor::{
-    execute, execute_with, nested_loop_oracle, EdgeReport, PlanOutput, PlanRow, StreamIdx,
+    execute, execute_with, execute_with_filters, nested_loop_oracle, EdgeReport, FilterSource,
+    PlanOutput, PlanRow, StreamIdx,
 };
+pub use fingerprint::{catalog_fingerprint, filter_context_fingerprint, spec_fingerprint};
+pub use report::plan_report_json;
 
 use crate::tpch::ORDERDATE_RANGE_DAYS;
 

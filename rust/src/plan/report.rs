@@ -1,0 +1,80 @@
+//! The machine-readable plan payload.
+//!
+//! One JSON shape serves both front doors: `bloomjoin plan --json` on
+//! the CLI and every `plan` response from `bloomjoin serve`.  CI
+//! cross-checks the ledger in this payload against the metrics ledger,
+//! so the server must not invent its own envelope — it wraps this one.
+
+use super::{CostCalibration, EdgeReport, JoinPlan, PlanOutput, PlanSpec, PlannedEdge};
+use crate::util::Json;
+
+fn planned_edge_json(e: &PlannedEdge) -> Json {
+    Json::obj([
+        ("name", Json::str(e.name.clone())),
+        ("relation", Json::str(e.relation.name())),
+        ("strategy", Json::str(e.strategy.label())),
+        ("eps_star", Json::num(e.prediction.eps_star)),
+        ("interior", Json::Bool(e.prediction.interior)),
+        ("bloom_s", Json::num(e.prediction.bloom_s)),
+        ("bloom_partitioned_s", Json::num(e.prediction.bloom_partitioned_s)),
+        ("bloom_exchange_s", Json::num(e.prediction.bloom_exchange_s)),
+        ("broadcast_s", Json::num(e.prediction.broadcast_s)),
+        ("sortmerge_s", Json::num(e.prediction.sortmerge_s)),
+        ("est_probe_rows", Json::num(e.stats.probe_rows as f64)),
+        ("est_survivors", Json::num(e.stats.matched_rows as f64)),
+    ])
+}
+
+fn edge_report_json(r: &EdgeReport) -> Json {
+    Json::obj([
+        ("name", Json::str(r.name.clone())),
+        ("strategy", Json::str(r.strategy.clone())),
+        ("sim_s", Json::num(r.sim_s)),
+        ("output_rows", Json::num(r.output_rows as f64)),
+        ("probe_rows", Json::num(r.probe_rows as f64)),
+        ("probe_keys_per_s", Json::num(r.probe_keys_per_s())),
+    ])
+}
+
+/// The `plan --json` payload: spec + decided plan + calibration state,
+/// and (when executed) metrics, per-edge reports and the adaptive
+/// ledger.
+pub fn plan_report_json(
+    spec: &PlanSpec,
+    join_plan: &JoinPlan,
+    calibration: &CostCalibration,
+    out: Option<&PlanOutput>,
+) -> Json {
+    let dims: Vec<Json> = spec.dims.iter().map(|r| Json::str(r.name())).collect();
+    let spec_json = Json::obj([
+        ("topology", Json::str(spec.topology.name())),
+        ("pushdown", Json::str(spec.pushdown.name())),
+        ("replan", Json::str(spec.replan.name())),
+        ("replan_floor", Json::num(spec.replan_floor as f64)),
+        ("sf", Json::num(spec.sf)),
+        ("partitions", Json::num(spec.partitions as f64)),
+        ("dims", Json::Arr(dims)),
+    ]);
+    let edges: Vec<Json> = join_plan.edges.iter().map(planned_edge_json).collect();
+    let mut calib_fields = vec![("samples", Json::num(calibration.samples.len() as f64))];
+    if let Some((alpha, beta)) = calibration.factors() {
+        calib_fields.push(("alpha", Json::num(alpha)));
+        calib_fields.push(("beta", Json::num(beta)));
+    }
+    let calib_json = Json::obj(calib_fields);
+    let mut fields = vec![
+        ("spec", spec_json),
+        ("predicted_total_s", Json::num(join_plan.predicted_total_s())),
+        ("edges", Json::Arr(edges)),
+        ("calibration", calib_json),
+        ("executed", Json::Bool(out.is_some())),
+    ];
+    if let Some(out) = out {
+        let reports: Vec<Json> = out.edge_reports.iter().map(edge_report_json).collect();
+        fields.push(("rows", Json::num(out.rows.len() as f64)));
+        fields.push(("metrics", out.metrics.to_json()));
+        fields.push(("ledger", out.ledger.to_json()));
+        fields.push(("edge_reports", Json::Arr(reports)));
+    }
+    Json::obj(fields)
+}

@@ -1,0 +1,382 @@
+//! Cross-query caches: built bloom filters and decided plans.
+//!
+//! Both caches are identity-keyed on the fingerprints from
+//! [`crate::plan::fingerprint`] — a cache hit is a proof obligation, not
+//! a heuristic: two queries hit the same [`FilterCache`] slot only if
+//! they would build bit-identical filters (same build-side contents,
+//! same ε, same data version), and the same [`PlanCache`] slot only if
+//! the planner would reproduce the same [`JoinPlan`] from scratch (same
+//! spec, same catalog, same cluster economics and calibration state).
+//!
+//! The filter cache is **byte-budgeted** (filters dominate server
+//! memory; a 1 % ε filter over 10⁶ keys is ~1.2 MB) with tick-LRU
+//! eviction; the plan cache is entry-capped (plans are small).  Explicit
+//! invalidation is per-relation: [`FilterCache::bump_data_version`]
+//! retires every filter built over that relation without touching the
+//! others.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::bloom::BloomFilter;
+use crate::plan::{JoinPlan, Relation};
+
+/// Fixed per-entry overhead charged on top of the filter's bit array
+/// (key, Arc, map slot).
+const ENTRY_OVERHEAD_BYTES: u64 = 64;
+
+/// Identity of one cached filter: *which* build side ([`Relation`] +
+/// context fingerprint), at *what* ε (bit-exact), over *which* data
+/// version.  A version bump changes the key, so stale entries can never
+/// be served — removal is an eviction of garbage, not a correctness
+/// mechanism.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FilterKey {
+    pub relation: Relation,
+    pub context: u64,
+    pub eps_bits: u64,
+    pub data_version: u64,
+}
+
+struct FilterEntry {
+    filter: Arc<BloomFilter>,
+    cost_bytes: u64,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct FilterInner {
+    map: HashMap<FilterKey, FilterEntry>,
+    versions: HashMap<Relation, u64>,
+    bytes: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    invalidations: u64,
+}
+
+/// Counters a [`FilterCache`] exposes to the stats endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FilterCacheStats {
+    pub entries: usize,
+    pub bytes: u64,
+    pub budget_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub invalidations: u64,
+}
+
+/// Byte-budgeted LRU of built [`BloomFilter`]s, shared by every
+/// in-flight query.  All methods take `&self`; the cache is its own
+/// synchronisation domain (one short-held mutex — the filters themselves
+/// are shared out as `Arc`s, never copied or held locked).
+pub struct FilterCache {
+    budget_bytes: u64,
+    inner: Mutex<FilterInner>,
+}
+
+impl FilterCache {
+    pub fn new(budget_bytes: u64) -> FilterCache {
+        FilterCache { budget_bytes, inner: Mutex::new(FilterInner::default()) }
+    }
+
+    /// Current data version of `relation` (starts at 0).
+    pub fn data_version(&self, relation: Relation) -> u64 {
+        *self.inner.lock().unwrap().versions.get(&relation).unwrap_or(&0)
+    }
+
+    /// Declare `relation`'s underlying data changed: bump its version and
+    /// retire exactly the filters built over it.  Returns the new version.
+    pub fn bump_data_version(&self, relation: Relation) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let v = g.versions.entry(relation).or_insert(0);
+        *v += 1;
+        let v = *v;
+        let stale: Vec<FilterKey> =
+            g.map.keys().filter(|k| k.relation == relation).copied().collect();
+        for k in stale {
+            if let Some(e) = g.map.remove(&k) {
+                g.bytes -= e.cost_bytes;
+                g.invalidations += 1;
+            }
+        }
+        v
+    }
+
+    fn key(g: &FilterInner, relation: Relation, context: u64, eps: f64) -> FilterKey {
+        FilterKey {
+            relation,
+            context,
+            eps_bits: eps.to_bits(),
+            data_version: *g.versions.get(&relation).unwrap_or(&0),
+        }
+    }
+
+    /// Serve a filter if present (bumps LRU recency and the hit/miss
+    /// counters).
+    pub fn get(&self, relation: Relation, context: u64, eps: f64) -> Option<Arc<BloomFilter>> {
+        let mut g = self.inner.lock().unwrap();
+        let key = Self::key(&g, relation, context, eps);
+        g.tick += 1;
+        let tick = g.tick;
+        match g.map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = tick;
+                let f = Arc::clone(&e.filter);
+                g.hits += 1;
+                Some(f)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Pure peek for the planner's cache-aware pricing pass — no counter
+    /// or recency side effects, so pricing a plan doesn't distort the
+    /// hit rate or pin entries the execution may never touch.
+    pub fn contains(&self, relation: Relation, context: u64, eps: f64) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.map.contains_key(&Self::key(&g, relation, context, eps))
+    }
+
+    /// Admit a freshly built filter, evicting least-recently-used entries
+    /// until it fits.  A filter larger than the whole budget is simply
+    /// not admitted (the query already has its `Arc`; nothing breaks).
+    pub fn put(&self, relation: Relation, context: u64, eps: f64, filter: &Arc<BloomFilter>) {
+        let cost = filter.params().size_bytes() + ENTRY_OVERHEAD_BYTES;
+        if cost > self.budget_bytes {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let key = Self::key(&g, relation, context, eps);
+        if g.map.contains_key(&key) {
+            return;
+        }
+        while g.bytes + cost > self.budget_bytes {
+            let lru = match g.map.iter().min_by_key(|(_, e)| e.last_used) {
+                Some((k, _)) => *k,
+                None => break,
+            };
+            if let Some(e) = g.map.remove(&lru) {
+                g.bytes -= e.cost_bytes;
+                g.evictions += 1;
+            }
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        g.bytes += cost;
+        g.map.insert(
+            key,
+            FilterEntry { filter: Arc::clone(filter), cost_bytes: cost, last_used: tick },
+        );
+    }
+
+    pub fn stats(&self) -> FilterCacheStats {
+        let g = self.inner.lock().unwrap();
+        FilterCacheStats {
+            entries: g.map.len(),
+            bytes: g.bytes,
+            budget_bytes: self.budget_bytes,
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            invalidations: g.invalidations,
+        }
+    }
+
+    /// Drop every entry (bench cold-run hook).  Versions and counters
+    /// survive — a clear is not an invalidation.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.bytes = 0;
+    }
+}
+
+/// Identity of one cached plan: the spec (the question), the catalog
+/// (the data), and the pricing economics — cluster cost fingerprint
+/// folded with the calibration state, so a store that learns new stage
+/// factors stops serving plans priced under the old ones.
+pub type PlanKey = (u64, u64, u64);
+
+struct PlanEntry {
+    plan: Arc<JoinPlan>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct PlanInner {
+    map: HashMap<PlanKey, PlanEntry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlanCacheStats {
+    pub entries: usize,
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Entry-capped LRU of decided [`JoinPlan`]s.
+pub struct PlanCache {
+    capacity: usize,
+    inner: Mutex<PlanInner>,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache { capacity: capacity.max(1), inner: Mutex::new(PlanInner::default()) }
+    }
+
+    pub fn get(&self, key: PlanKey) -> Option<Arc<JoinPlan>> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = tick;
+                let p = Arc::clone(&e.plan);
+                g.hits += 1;
+                Some(p)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, key: PlanKey, plan: Arc<JoinPlan>) {
+        let mut g = self.inner.lock().unwrap();
+        while g.map.len() >= self.capacity && !g.map.contains_key(&key) {
+            let lru = match g.map.iter().min_by_key(|(_, e)| e.last_used) {
+                Some((k, _)) => *k,
+                None => break,
+            };
+            g.map.remove(&lru);
+            g.evictions += 1;
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        g.map.insert(key, PlanEntry { plan, last_used: tick });
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        let g = self.inner.lock().unwrap();
+        PlanCacheStats {
+            entries: g.map.len(),
+            capacity: self.capacity,
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+        }
+    }
+
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Topology;
+
+    fn filter(n: u64, eps: f64) -> Arc<BloomFilter> {
+        let mut f = BloomFilter::with_optimal(n, eps);
+        for k in 0..n {
+            f.insert(k);
+        }
+        Arc::new(f)
+    }
+
+    fn plan() -> Arc<JoinPlan> {
+        Arc::new(JoinPlan { topology: Topology::Star, edges: vec![], dim_stats: vec![] })
+    }
+
+    #[test]
+    fn filter_cache_hits_same_identity_only() {
+        let c = FilterCache::new(1 << 20);
+        let f = filter(100, 0.05);
+        c.put(Relation::Orders, 7, 0.05, &f);
+        assert!(c.get(Relation::Orders, 7, 0.05).is_some());
+        assert!(c.get(Relation::Orders, 8, 0.05).is_none(), "different context");
+        assert!(c.get(Relation::Orders, 7, 0.01).is_none(), "different eps");
+        assert!(c.get(Relation::Customer, 7, 0.05).is_none(), "different relation");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 3));
+    }
+
+    #[test]
+    fn version_bump_invalidates_exactly_that_relation() {
+        let c = FilterCache::new(1 << 20);
+        c.put(Relation::Orders, 1, 0.05, &filter(100, 0.05));
+        c.put(Relation::Part, 2, 0.05, &filter(100, 0.05));
+        assert_eq!(c.bump_data_version(Relation::Orders), 1);
+        assert!(c.get(Relation::Orders, 1, 0.05).is_none(), "bumped relation gone");
+        assert!(c.get(Relation::Part, 2, 0.05).is_some(), "other relation survives");
+        assert_eq!(c.stats().invalidations, 1);
+        // a rebuild under the new version is servable again
+        c.put(Relation::Orders, 1, 0.05, &filter(100, 0.05));
+        assert!(c.get(Relation::Orders, 1, 0.05).is_some());
+    }
+
+    #[test]
+    fn byte_budget_evicts_least_recently_used() {
+        let f = filter(1000, 0.05);
+        let cost = f.params().size_bytes() + ENTRY_OVERHEAD_BYTES;
+        // room for exactly two filters of this shape
+        let c = FilterCache::new(2 * cost);
+        c.put(Relation::Orders, 1, 0.05, &f);
+        c.put(Relation::Part, 2, 0.05, &filter(1000, 0.05));
+        // touch ORDERS so PART is the LRU victim
+        assert!(c.get(Relation::Orders, 1, 0.05).is_some());
+        c.put(Relation::Supplier, 3, 0.05, &filter(1000, 0.05));
+        assert!(c.get(Relation::Part, 2, 0.05).is_none(), "LRU evicted");
+        assert!(c.get(Relation::Orders, 1, 0.05).is_some());
+        assert!(c.get(Relation::Supplier, 3, 0.05).is_some());
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= s.budget_bytes);
+    }
+
+    #[test]
+    fn oversized_filter_is_not_admitted() {
+        let c = FilterCache::new(128);
+        c.put(Relation::Orders, 1, 0.05, &filter(100_000, 0.01));
+        assert_eq!(c.stats().entries, 0);
+        assert!(c.get(Relation::Orders, 1, 0.05).is_none());
+    }
+
+    #[test]
+    fn contains_peek_has_no_side_effects() {
+        let c = FilterCache::new(1 << 20);
+        c.put(Relation::Orders, 1, 0.05, &filter(100, 0.05));
+        assert!(c.contains(Relation::Orders, 1, 0.05));
+        assert!(!c.contains(Relation::Orders, 1, 0.01));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+    }
+
+    #[test]
+    fn plan_cache_caps_entries() {
+        let c = PlanCache::new(2);
+        c.put((1, 0, 0), plan());
+        c.put((2, 0, 0), plan());
+        assert!(c.get((1, 0, 0)).is_some());
+        c.put((3, 0, 0), plan());
+        assert!(c.get((2, 0, 0)).is_none(), "LRU evicted at capacity");
+        assert!(c.get((1, 0, 0)).is_some());
+        assert!(c.get((3, 0, 0)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+}

@@ -1,0 +1,32 @@
+//! `bloomjoin serve` — a long-running query service over the n-way
+//! planner.
+//!
+//! The CLI plans, executes, and exits; every query pays the full
+//! pipeline.  A service that stays up can remember: dimension bloom
+//! filters are deterministic functions of (build-side contents, ε, data
+//! version), and decided plans of (spec, catalog, pricing economics), so
+//! both are cacheable across queries with *identity* keys — fingerprints
+//! from [`crate::plan::fingerprint`] — rather than heuristic ones.
+//!
+//! Layout:
+//! * [`cache`] — the byte-budgeted filter LRU and the entry-capped plan
+//!   LRU, with per-relation data-version invalidation;
+//! * [`admission`] — bounded in-flight + bounded queue + typed shedding;
+//! * [`protocol`] — newline-delimited JSON requests/responses, shared by
+//!   stdin/stdout and TCP;
+//! * [`service`] — the [`Engine`] tying caches, admission, the shared
+//!   [`crate::cluster::Cluster`], and the calibration store together,
+//!   plus the `serve` front doors.
+//!
+//! See `docs/server.md` for the protocol reference and operational
+//! notes.
+
+pub mod admission;
+pub mod cache;
+pub mod protocol;
+pub mod service;
+
+pub use admission::{Admission, Shed, Ticket};
+pub use cache::{FilterCache, FilterCacheStats, FilterKey, PlanCache, PlanCacheStats};
+pub use protocol::{parse_request, ParsedRequest, PlanRequest, Request, RequestError};
+pub use service::{serve, serve_lines, CalibrationMode, Engine, ServerConfig};

@@ -1,0 +1,355 @@
+//! The service wire protocol: newline-delimited JSON requests and
+//! responses, identical over stdin/stdout and TCP.
+//!
+//! One request per line, one response line per request (responses carry
+//! the request's `id` and may complete out of order — concurrent plans
+//! finish when they finish).  The `plan` op accepts the same knobs as
+//! `bloomjoin plan` and answers with the same payload as
+//! `bloomjoin plan --json` ([`crate::plan::plan_report_json`]), plus a
+//! `cache` section.  Errors are typed: a shed rejection
+//! (`error.kind == "shed"`) is distinguishable from a malformed request
+//! (`"bad_request"`), so clients can retry the former and must fix the
+//! latter.
+
+use crate::plan::{
+    EpsMode, PlanSpec, PushdownMode, Relation, ReplanPolicy, StrategyKind, Topology,
+};
+use crate::util::Json;
+
+use super::admission::Shed;
+
+/// A validated `plan` request: the spec plus execution toggles.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub spec: PlanSpec,
+    pub no_execute: bool,
+    /// Mirror of the CLI's `--force-strategy` debug knob: override every
+    /// edge's strategy after pricing (bloom keeps its solved ε*).  How
+    /// the CI smoke guarantees filter-cache traffic on any workload.
+    pub force: Option<StrategyKind>,
+}
+
+#[derive(Clone, Debug)]
+pub enum Request {
+    Plan(Box<PlanRequest>),
+    /// Service counters: admission, caches, latency quantiles.
+    Stats,
+    /// Data-version bump for one relation (retires its cached filters).
+    Invalidate(Relation),
+    Ping,
+    /// Drain in-flight queries, answer with final stats, stop reading.
+    Shutdown,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParsedRequest {
+    pub id: String,
+    /// Test/bench hook: hold the execution slot this many extra
+    /// milliseconds after the query completes (lets a driver force
+    /// queueing and shedding deterministically).
+    pub hold_ms: u64,
+    pub req: Request,
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<Option<f64>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v.as_f64().map(Some).ok_or_else(|| format!("{key} must be a number")),
+    }
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<Option<u64>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            v.as_u64().map(Some).ok_or_else(|| format!("{key} must be a non-negative integer"))
+        }
+    }
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<Option<&'a str>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v.as_str().map(Some).ok_or_else(|| format!("{key} must be a string")),
+    }
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(false),
+        Some(v) => v.as_bool().ok_or_else(|| format!("{key} must be a boolean")),
+    }
+}
+
+/// Parse the `relations` field: a comma-separated string or an array of
+/// strings, validated exactly like `bloomjoin plan --relations`.
+fn parse_relations(j: &Json) -> Result<Vec<Relation>, String> {
+    let names: Vec<String> = match j.get("relations") {
+        Some(Json::Str(s)) => {
+            s.split(',').filter(|t| !t.is_empty()).map(|t| t.trim().to_string()).collect()
+        }
+        Some(Json::Arr(a)) => a
+            .iter()
+            .map(|v| v.as_str().map(str::to_string).ok_or("relations array must hold strings"))
+            .collect::<Result<_, _>>()?,
+        Some(_) => return Err("relations must be a string or array".into()),
+        None => vec!["customer".into(), "orders".into(), "lineitem".into()],
+    };
+    let mut dims: Vec<Relation> = Vec::new();
+    let mut has_fact = false;
+    for name in &names {
+        let rel = Relation::parse(name).ok_or_else(|| {
+            format!("unknown relation {name:?} (customer|orders|lineitem|part|supplier)")
+        })?;
+        if rel == Relation::Lineitem {
+            has_fact = true;
+        } else if !dims.contains(&rel) {
+            dims.push(rel);
+        }
+    }
+    if !has_fact {
+        return Err("relations must include lineitem (the fact table)".into());
+    }
+    if dims.is_empty() {
+        return Err("relations needs at least one dimension besides lineitem".into());
+    }
+    if dims.contains(&Relation::Customer) && !dims.contains(&Relation::Orders) {
+        return Err("customer joins the fact table through orders — add orders".into());
+    }
+    Ok(dims)
+}
+
+fn spec_from(j: &Json) -> Result<PlanSpec, String> {
+    let dims = parse_relations(j)?;
+    let t = get_str(j, "topology")?.unwrap_or("star");
+    let topology =
+        Topology::parse(t).ok_or_else(|| format!("unknown topology {t:?} (star|chain)"))?;
+    if topology == Topology::Chain
+        && !(dims.len() == 2
+            && dims.contains(&Relation::Orders)
+            && dims.contains(&Relation::Customer))
+    {
+        return Err("topology chain supports exactly customer,orders,lineitem".into());
+    }
+    let eps_mode = match get_str(j, "eps_mode")?.unwrap_or("per-filter") {
+        "per-filter" => EpsMode::PerFilter,
+        "global" => EpsMode::Global(get_f64(j, "eps")?.unwrap_or(0.05)),
+        other => return Err(format!("unknown eps_mode {other:?} (per-filter|global)")),
+    };
+    let pushdown = {
+        let s = get_str(j, "pushdown")?.unwrap_or("ranked");
+        PushdownMode::parse(s)
+            .ok_or_else(|| format!("unknown pushdown {s:?} (ranked|unranked)"))?
+    };
+    let replan = {
+        let s = get_str(j, "replan")?.unwrap_or("static");
+        ReplanPolicy::parse(s)
+            .ok_or_else(|| format!("unknown replan {s:?} (static|adaptive|regret)"))?
+    };
+    let mut spec = PlanSpec {
+        topology,
+        dims,
+        eps_mode,
+        pushdown,
+        replan,
+        ..PlanSpec::default()
+    };
+    if let Some(sf) = get_f64(j, "sf")? {
+        if !sf.is_finite() || sf <= 0.0 {
+            return Err("sf must be positive".into());
+        }
+        spec.sf = sf;
+    }
+    if let Some(seed) = get_u64(j, "seed")? {
+        spec.seed = seed;
+    }
+    if let Some(p) = get_u64(j, "partitions")? {
+        if p == 0 {
+            return Err("partitions must be at least 1".into());
+        }
+        spec.partitions = p as usize;
+    }
+    if let Some(floor) = get_u64(j, "replan_floor")? {
+        spec.replan_floor = floor;
+    }
+    if let Some(w) = get_f64(j, "order_window_days")? {
+        spec.order_date_window = (400, 400 + w as i32);
+    }
+    if j.get("mktsegment").is_some() {
+        spec.mktsegment = get_u64(j, "mktsegment")?.map(|v| v as u8);
+    }
+    if j.get("part_brand").is_some() {
+        spec.part_brand = get_u64(j, "part_brand")?.map(|v| v as u8);
+    }
+    if j.get("supp_nation").is_some() {
+        spec.supp_nationkey = get_u64(j, "supp_nation")?.map(|v| v as i32);
+    }
+    Ok(spec)
+}
+
+/// A rejected request line: the message plus whatever `id` could be
+/// recovered, so the `bad_request` response still correlates.
+#[derive(Clone, Debug)]
+pub struct RequestError {
+    pub id: String,
+    pub message: String,
+}
+
+/// Parse one request line.  The error becomes a `bad_request` response
+/// (carrying the request's `id` when one was readable) — it never kills
+/// the connection.
+pub fn parse_request(line: &str) -> Result<ParsedRequest, RequestError> {
+    let anon = |message: String| RequestError { id: "-".to_string(), message };
+    let j = Json::parse(line).map_err(|e| anon(e.to_string()))?;
+    if !matches!(j, Json::Obj(_)) {
+        return Err(anon("request must be a JSON object".into()));
+    }
+    let id = match get_str(&j, "id") {
+        Ok(v) => v.unwrap_or("-").to_string(),
+        Err(message) => return Err(anon(message)),
+    };
+    let fail = |message: String| RequestError { id: id.clone(), message };
+    parse_op(&j, &id).map_err(fail)
+}
+
+fn parse_op(j: &Json, id: &str) -> Result<ParsedRequest, String> {
+    let hold_ms = get_u64(j, "hold_ms")?.unwrap_or(0);
+    let op = get_str(j, "op")?.ok_or("missing op (plan|stats|invalidate|ping|shutdown)")?;
+    let req = match op {
+        "plan" => {
+            let force = match get_str(j, "force_strategy")? {
+                None => None,
+                Some(s) => Some(StrategyKind::parse(s).ok_or_else(|| {
+                    format!(
+                        "unknown force_strategy {s:?} \
+                         (bloom|bloom-partitioned|bloom-exchange|broadcast|sortmerge)"
+                    )
+                })?),
+            };
+            Request::Plan(Box::new(PlanRequest {
+                spec: spec_from(j)?,
+                no_execute: get_bool(j, "no_execute")?,
+                force,
+            }))
+        }
+        "stats" => Request::Stats,
+        "invalidate" => {
+            let name = get_str(j, "relation")?.ok_or("invalidate needs a relation")?;
+            let rel = Relation::parse(name).ok_or_else(|| format!("unknown relation {name:?}"))?;
+            Request::Invalidate(rel)
+        }
+        "ping" => Request::Ping,
+        "shutdown" => Request::Shutdown,
+        other => return Err(format!("unknown op {other:?} (plan|stats|invalidate|ping|shutdown)")),
+    };
+    Ok(ParsedRequest { id: id.to_string(), hold_ms, req })
+}
+
+/// `{"id":…,"ok":true,"result":…}`
+pub fn ok_response(id: &str, result: Json) -> Json {
+    Json::obj([("id", Json::str(id)), ("ok", Json::Bool(true)), ("result", result)])
+}
+
+/// `{"id":…,"ok":false,"error":{"kind":"bad_request","message":…}}`
+pub fn error_response(id: &str, kind: &str, message: &str) -> Json {
+    Json::obj([
+        ("id", Json::str(id)),
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::obj([("kind", Json::str(kind)), ("message", Json::str(message))]),
+        ),
+    ])
+}
+
+/// The typed shed rejection — `error.kind == "shed"` plus the occupancy
+/// that caused it, so a client can tell overload from a bad request.
+pub fn shed_response(id: &str, shed: &Shed) -> Json {
+    Json::obj([
+        ("id", Json::str(id)),
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::obj([
+                ("kind", Json::str("shed")),
+                ("message", Json::str("service at capacity; retry later")),
+                ("inflight", Json::num(shed.inflight as f64)),
+                ("queue_depth", Json::num(shed.queue_depth as f64)),
+                ("max_inflight", Json::num(shed.max_inflight as f64)),
+                ("max_queue", Json::num(shed.max_queue as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_request_parses_with_defaults_and_knobs() {
+        let p = parse_request(
+            r#"{"id":"q1","op":"plan","relations":"lineitem,orders,customer,part",
+                "topology":"star","eps_mode":"global","eps":0.02,"pushdown":"unranked",
+                "replan":"adaptive","sf":0.02,"partitions":4,"part_brand":7,
+                "force_strategy":"bloom","no_execute":true,"hold_ms":25}"#,
+        )
+        .expect("parses");
+        assert_eq!(p.id, "q1");
+        assert_eq!(p.hold_ms, 25);
+        let Request::Plan(req) = p.req else { panic!("not a plan") };
+        assert!(req.no_execute);
+        assert_eq!(req.spec.dims.len(), 3);
+        assert_eq!(req.spec.part_brand, Some(7));
+        assert_eq!(req.spec.partitions, 4);
+        assert!(matches!(req.spec.eps_mode, EpsMode::Global(e) if (e - 0.02).abs() < 1e-12));
+        assert_eq!(req.spec.pushdown, PushdownMode::Unranked);
+        assert_eq!(req.force, Some(StrategyKind::Bloom));
+    }
+
+    #[test]
+    fn plan_request_validation_mirrors_the_cli() {
+        for (line, needle) in [
+            (r#"{"op":"plan","relations":"orders"}"#, "lineitem"),
+            (r#"{"op":"plan","relations":"lineitem"}"#, "dimension"),
+            (r#"{"op":"plan","relations":"lineitem,customer"}"#, "orders"),
+            (r#"{"op":"plan","relations":"lineitem,part","topology":"chain"}"#, "chain"),
+            (r#"{"op":"plan","relations":"lineitem,orders","partitions":0}"#, "partitions"),
+            (r#"{"op":"teleport"}"#, "unknown op"),
+            (r#"not json"#, "parse error"),
+        ] {
+            let err = parse_request(line).expect_err(line);
+            assert!(err.message.contains(needle), "{line} -> {}", err.message);
+        }
+    }
+
+    #[test]
+    fn null_predicate_clears_the_default() {
+        let p = parse_request(r#"{"op":"plan","relations":"lineitem,orders,customer",
+                                  "mktsegment":null}"#)
+            .expect("parses");
+        let Request::Plan(req) = p.req else { panic!() };
+        assert_eq!(req.spec.mktsegment, None, "explicit null overrides the Some(0) default");
+        assert_ne!(PlanSpec::default().mktsegment, None);
+    }
+
+    #[test]
+    fn responses_are_single_line_and_typed() {
+        let shed = Shed { inflight: 2, queue_depth: 4, max_inflight: 2, max_queue: 4 };
+        for r in [
+            ok_response("a", Json::obj([("x", Json::num(1.0))])),
+            error_response("b", "bad_request", "nope"),
+            shed_response("c", &shed),
+        ] {
+            let line = r.to_string();
+            assert!(!line.contains('\n'));
+            let back = Json::parse(&line).expect("round-trips");
+            assert!(back.get("ok").and_then(Json::as_bool).is_some());
+        }
+        let s = shed_response("c", &shed);
+        assert_eq!(
+            s.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+            Some("shed")
+        );
+    }
+}

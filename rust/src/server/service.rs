@@ -1,0 +1,606 @@
+//! The query engine behind `bloomjoin serve`: one shared [`Cluster`]
+//! (and its thread pool), the cross-query caches, admission control,
+//! the calibration store, and the line-oriented front doors
+//! (stdin/stdout and TCP).
+//!
+//! A `plan` request flows: fingerprints → plan cache → cache-aware
+//! re-pricing ([`discount_cached_builds`] against the filter cache) →
+//! execution with a per-query [`FilterSource`] view of the filter cache
+//! → calibration fold-in → the `plan --json` payload plus a `cache`
+//! section.  Admission is decided in the *reader* thread (so shed
+//! responses keep arrival order); admitted plans run on handler threads
+//! against the shared engine.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::bloom::BloomFilter;
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::plan::fingerprint::Fnv;
+use crate::plan::{
+    catalog_fingerprint, cost_fingerprint, discount_cached_builds, execute_with_filters,
+    filter_context_fingerprint, plan_report_json, plan_edges_calibrated, spec_fingerprint,
+    CostCalibration, EdgeStrategy, FilterSource, PlanInputs, PlanOutput, PlanSpec, Relation,
+};
+use crate::util::Json;
+
+use super::admission::{Admission, Shed, Ticket};
+use super::cache::{FilterCache, PlanCache};
+use super::protocol::{self, PlanRequest, Request};
+
+/// Most distinct (catalog × data-version) input sets kept materialised.
+const INPUTS_CACHE_CAP: usize = 16;
+/// Latency samples retained for the p50/p99 window (ring buffer).
+const LATENCY_WINDOW: usize = 4096;
+
+/// Where the engine's calibration lives.
+#[derive(Clone, Debug, Default)]
+pub enum CalibrationMode {
+    /// No calibration at all — plans stay uncalibrated and observations
+    /// are discarded (the bench mode: every query priced identically).
+    Off,
+    /// In-memory only: the store learns across queries but dies with the
+    /// process.
+    #[default]
+    Memory,
+    /// Loaded from / saved to this file (the `--calibration auto` path).
+    Persistent(PathBuf),
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub cluster: ClusterConfig,
+    /// Plans executing at once (≥1).
+    pub max_inflight: usize,
+    /// Plans allowed to wait for a slot before shedding starts.
+    pub max_queue: usize,
+    /// Filter-cache byte budget.
+    pub filter_budget_bytes: u64,
+    /// Plan-cache entry cap.
+    pub plan_cache_entries: usize,
+    pub calibration: CalibrationMode,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            cluster: ClusterConfig::default(),
+            max_inflight: 4,
+            max_queue: 16,
+            filter_budget_bytes: 64 << 20,
+            plan_cache_entries: 64,
+            calibration: CalibrationMode::Memory,
+        }
+    }
+}
+
+/// Per-query view of the shared filter cache: resolves the spec's
+/// filter-context fingerprints and counts this query's hits/misses
+/// (the shared cache counts globally).
+struct QueryFilters<'a> {
+    cache: &'a FilterCache,
+    spec: &'a PlanSpec,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl FilterSource for QueryFilters<'_> {
+    fn fetch(&self, relation: Relation, eps: f64) -> Option<Arc<BloomFilter>> {
+        let ctx = filter_context_fingerprint(self.spec, relation);
+        match self.cache.get(relation, ctx, eps) {
+            Some(f) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(f)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn publish(&self, relation: Relation, eps: f64, filter: &Arc<BloomFilter>) {
+        let ctx = filter_context_fingerprint(self.spec, relation);
+        self.cache.put(relation, ctx, eps, filter);
+    }
+}
+
+#[derive(Default)]
+struct LatencyLedger {
+    ring: Vec<f64>,
+    next: usize,
+    completed: u64,
+}
+
+impl LatencyLedger {
+    fn push(&mut self, ms: f64) {
+        if self.ring.len() < LATENCY_WINDOW {
+            self.ring.push(ms);
+        } else {
+            self.ring[self.next] = ms;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+        self.completed += 1;
+    }
+
+    fn quantiles(&self) -> (f64, f64) {
+        if self.ring.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut sorted = self.ring.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let at = |q: f64| sorted[((sorted.len() - 1) as f64 * q).round() as usize];
+        (at(0.5), at(0.99))
+    }
+}
+
+/// The long-running query engine.  Every field is a `&self` concurrency
+/// domain, so one `Arc<Engine>` serves all reader, handler, and bench
+/// threads at once.
+pub struct Engine {
+    cluster: Cluster,
+    filters: FilterCache,
+    plans: PlanCache,
+    admission: Arc<Admission>,
+    calibration: Mutex<CostCalibration>,
+    mode: CalibrationMode,
+    inputs: Mutex<HashMap<u64, PlanInputs>>,
+    latency: Mutex<LatencyLedger>,
+}
+
+impl Engine {
+    pub fn new(config: ServerConfig) -> Engine {
+        let calibration = match &config.calibration {
+            CalibrationMode::Persistent(p) => CostCalibration::load(p).unwrap_or_default(),
+            _ => CostCalibration::default(),
+        };
+        Engine {
+            cluster: Cluster::new(config.cluster),
+            filters: FilterCache::new(config.filter_budget_bytes),
+            plans: PlanCache::new(config.plan_cache_entries),
+            admission: Admission::new(config.max_inflight, config.max_queue),
+            calibration: Mutex::new(calibration),
+            mode: config.calibration,
+            inputs: Mutex::new(HashMap::new()),
+            latency: Mutex::new(LatencyLedger::default()),
+        }
+    }
+
+    pub fn admission(&self) -> &Arc<Admission> {
+        &self.admission
+    }
+
+    pub fn filter_cache(&self) -> &FilterCache {
+        &self.filters
+    }
+
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plans
+    }
+
+    /// Every relation's current data version, folded — part of the plan
+    /// and input cache keys, so a version bump retires them by identity
+    /// instead of by scanning.
+    fn data_version_fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        for r in [
+            Relation::Customer,
+            Relation::Orders,
+            Relation::Lineitem,
+            Relation::Part,
+            Relation::Supplier,
+        ] {
+            h = h.u64(self.filters.data_version(r));
+        }
+        h.finish()
+    }
+
+    /// The pricing-economics fingerprint: cluster cost constants folded
+    /// with the calibration factors **quantized to 1/1024** — enough
+    /// hysteresis that each query's own observation doesn't retire every
+    /// cached plan, while a materially drifted fit still re-plans.
+    fn economics_fingerprint(&self, factors: Option<(f64, f64)>) -> u64 {
+        let h = Fnv::new().u64(cost_fingerprint(self.cluster.config()));
+        match factors {
+            Some((a, b)) => {
+                h.u64(1).i64((a * 1024.0).round() as i64).i64((b * 1024.0).round() as i64)
+            }
+            None => h.u64(0),
+        }
+        .finish()
+    }
+
+    /// Materialised (generated + filtered) inputs for a catalog
+    /// fingerprint, cloned out so each query owns its columns.
+    fn inputs_for(&self, spec: &PlanSpec, key: u64) -> (PlanInputs, bool) {
+        if let Some(i) = self.inputs.lock().unwrap().get(&key) {
+            return (i.clone(), true);
+        }
+        let built = crate::plan::prepare(spec);
+        let mut g = self.inputs.lock().unwrap();
+        if g.len() >= INPUTS_CACHE_CAP {
+            g.clear();
+        }
+        g.insert(key, built.clone());
+        (built, false)
+    }
+
+    /// Plan + (optionally) execute one request against the shared caches.
+    /// Returns the `plan --json` payload with a `cache` section appended.
+    pub fn run_plan(&self, req: &PlanRequest) -> Json {
+        let spec = &req.spec;
+        let calibrate = !matches!(self.mode, CalibrationMode::Off);
+        let snapshot = self.calibration.lock().unwrap().clone();
+        let factors = if calibrate { snapshot.factors() } else { None };
+
+        let data_fp = self.data_version_fingerprint();
+        let catalog_key = catalog_fingerprint(spec) ^ data_fp;
+        let plan_key =
+            (spec_fingerprint(spec), catalog_key, self.economics_fingerprint(factors));
+        let (inputs, catalog_hit) = self.inputs_for(spec, catalog_key);
+
+        let (cached_plan, plan_hit) = match self.plans.get(plan_key) {
+            Some(p) => (p, true),
+            None => {
+                let p = Arc::new(plan_edges_calibrated(
+                    &self.cluster,
+                    spec,
+                    &inputs,
+                    calibrate.then_some(&snapshot),
+                ));
+                self.plans.put(plan_key, Arc::clone(&p));
+                (p, false)
+            }
+        };
+
+        // cache-aware pricing on this query's own copy: a filter already
+        // in cache zeroes that edge's build stage (and may flip the edge
+        // to plain bloom — the strategy that can consume it)
+        let mut plan = (*cached_plan).clone();
+        if let Some(kind) = req.force {
+            // the cached entry stays canonical; only this query's copy is
+            // strategy-forced
+            for e in &mut plan.edges {
+                e.strategy = EdgeStrategy::for_kind(kind, e.prediction.eps_star);
+            }
+        }
+        let discounted = discount_cached_builds(
+            self.cluster.config(),
+            factors,
+            &mut plan,
+            &|rel, eps| self.filters.contains(rel, filter_context_fingerprint(spec, rel), eps),
+        );
+
+        let qf = QueryFilters {
+            cache: &self.filters,
+            spec,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        };
+        let out: Option<PlanOutput> = (!req.no_execute).then(|| {
+            execute_with_filters(
+                &self.cluster,
+                spec,
+                &plan,
+                inputs,
+                calibrate.then_some(&snapshot),
+                Some(&qf),
+            )
+        });
+
+        // fold this run's observations into the shared store (the CLI's
+        // post-run loop), then report the updated state
+        let report_calibration = match (&out, calibrate) {
+            (Some(out), true) => {
+                let mut g = self.calibration.lock().unwrap();
+                for obs in &out.ledger.observations {
+                    g.record(obs);
+                }
+                if let CalibrationMode::Persistent(p) = &self.mode {
+                    if let Err(e) = g.save(p) {
+                        eprintln!(
+                            "warning: could not save calibration store {}: {e}",
+                            p.display()
+                        );
+                    }
+                }
+                g.clone()
+            }
+            _ => snapshot,
+        };
+
+        let mut payload = plan_report_json(spec, &plan, &report_calibration, out.as_ref());
+        if let Json::Obj(m) = &mut payload {
+            m.insert(
+                "cache".to_string(),
+                Json::obj([
+                    ("filter_hits", Json::num(qf.hits.load(Ordering::Relaxed) as f64)),
+                    ("filter_misses", Json::num(qf.misses.load(Ordering::Relaxed) as f64)),
+                    ("plan_cache_hit", Json::Bool(plan_hit)),
+                    ("catalog_cache_hit", Json::Bool(catalog_hit)),
+                    ("discounted_edges", Json::num(discounted as f64)),
+                ]),
+            );
+        }
+        payload
+    }
+
+    /// Run an already-admitted request: wait for the slot, execute, record
+    /// latency, and (test/bench hook) hold the slot `hold_ms` longer.
+    pub fn run_admitted(&self, mut ticket: Ticket, req: &PlanRequest, hold_ms: u64) -> Json {
+        ticket.wait();
+        let t0 = Instant::now();
+        let payload = self.run_plan(req);
+        self.latency.lock().unwrap().push(t0.elapsed().as_secs_f64() * 1e3);
+        if hold_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+        }
+        payload
+    }
+
+    /// Admission + execution in one call (what a bench worker thread
+    /// does; the socket path splits these across reader and handler).
+    pub fn submit(&self, req: &PlanRequest) -> Result<Json, Shed> {
+        let ticket = self.admission.try_enter()?;
+        Ok(self.run_admitted(ticket, req, 0))
+    }
+
+    /// Bump `relation`'s data version: retires its cached filters now,
+    /// and (via the version fold in their keys) stops every cached plan
+    /// and input set that read it from being served again.
+    pub fn invalidate(&self, relation: Relation) -> u64 {
+        self.filters.bump_data_version(relation)
+    }
+
+    /// Drop all cached state (bench cold-run hook).  Admission and
+    /// latency counters survive.
+    pub fn clear_caches(&self) {
+        self.filters.clear();
+        self.plans.clear();
+        self.inputs.lock().unwrap().clear();
+        if !matches!(self.mode, CalibrationMode::Persistent(_)) {
+            *self.calibration.lock().unwrap() = CostCalibration::default();
+        }
+    }
+
+    /// The `stats` op payload: admission occupancy, shed count, cache
+    /// counters, and the latency quantiles over the recent window.
+    pub fn stats_json(&self) -> Json {
+        let (inflight, queued) = self.admission.snapshot();
+        let (max_inflight, max_queue) = self.admission.limits();
+        let f = self.filters.stats();
+        let p = self.plans.stats();
+        let (p50, p99, completed) = {
+            let g = self.latency.lock().unwrap();
+            let (p50, p99) = g.quantiles();
+            (p50, p99, g.completed)
+        };
+        Json::obj([
+            ("inflight", Json::num(inflight as f64)),
+            ("queued", Json::num(queued as f64)),
+            ("max_inflight", Json::num(max_inflight as f64)),
+            ("max_queue", Json::num(max_queue as f64)),
+            ("shed", Json::num(self.admission.shed_count() as f64)),
+            ("completed", Json::num(completed as f64)),
+            (
+                "latency_ms",
+                Json::obj([("p50", Json::num(p50)), ("p99", Json::num(p99))]),
+            ),
+            (
+                "filter_cache",
+                Json::obj([
+                    ("entries", Json::num(f.entries as f64)),
+                    ("bytes", Json::num(f.bytes as f64)),
+                    ("budget_bytes", Json::num(f.budget_bytes as f64)),
+                    ("hits", Json::num(f.hits as f64)),
+                    ("misses", Json::num(f.misses as f64)),
+                    ("evictions", Json::num(f.evictions as f64)),
+                    ("invalidations", Json::num(f.invalidations as f64)),
+                ]),
+            ),
+            (
+                "plan_cache",
+                Json::obj([
+                    ("entries", Json::num(p.entries as f64)),
+                    ("capacity", Json::num(p.capacity as f64)),
+                    ("hits", Json::num(p.hits as f64)),
+                    ("misses", Json::num(p.misses as f64)),
+                    ("evictions", Json::num(p.evictions as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
+
+fn respond(w: &SharedWriter, j: &Json) {
+    let mut g = w.lock().unwrap();
+    let _ = writeln!(g, "{j}");
+    let _ = g.flush();
+}
+
+/// Serve one line-oriented connection until EOF or a `shutdown` op.
+/// Non-plan ops answer inline; plans are admitted here (arrival order)
+/// and run on handler threads, so a held slot makes later requests
+/// queue and then shed exactly as configured.
+pub fn serve_lines<R: BufRead>(
+    engine: &Arc<Engine>,
+    reader: R,
+    writer: SharedWriter,
+) -> anyhow::Result<()> {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut shut = false;
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        handlers.retain(|h| !h.is_finished());
+        let parsed = match protocol::parse_request(line) {
+            Ok(p) => p,
+            Err(e) => {
+                respond(&writer, &protocol::error_response(&e.id, "bad_request", &e.message));
+                continue;
+            }
+        };
+        match parsed.req {
+            Request::Ping => respond(
+                &writer,
+                &protocol::ok_response(&parsed.id, Json::obj([("pong", Json::Bool(true))])),
+            ),
+            Request::Stats => {
+                respond(&writer, &protocol::ok_response(&parsed.id, engine.stats_json()))
+            }
+            Request::Invalidate(rel) => {
+                let v = engine.invalidate(rel);
+                respond(
+                    &writer,
+                    &protocol::ok_response(
+                        &parsed.id,
+                        Json::obj([
+                            ("relation", Json::str(rel.name())),
+                            ("data_version", Json::num(v as f64)),
+                        ]),
+                    ),
+                );
+            }
+            Request::Shutdown => {
+                for h in handlers.drain(..) {
+                    let _ = h.join();
+                }
+                respond(&writer, &protocol::ok_response(&parsed.id, engine.stats_json()));
+                shut = true;
+                break;
+            }
+            Request::Plan(req) => match engine.admission().try_enter() {
+                Err(shed) => respond(&writer, &protocol::shed_response(&parsed.id, &shed)),
+                Ok(ticket) => {
+                    let engine = Arc::clone(engine);
+                    let writer = Arc::clone(&writer);
+                    let id = parsed.id;
+                    let hold = parsed.hold_ms;
+                    handlers.push(std::thread::spawn(move || {
+                        let payload = engine.run_admitted(ticket, &req, hold);
+                        respond(&writer, &protocol::ok_response(&id, payload));
+                    }));
+                }
+            },
+        }
+    }
+    if !shut {
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+    Ok(())
+}
+
+/// `bloomjoin serve`: stdin/stdout NDJSON, plus a localhost TCP listener
+/// when `port` is given (each connection gets the same protocol against
+/// the same engine).  Returns when stdin reaches EOF or a stdin
+/// `shutdown` op drains the in-flight queries.
+pub fn serve(config: ServerConfig, port: Option<u16>) -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::new(config));
+    if let Some(p) = port {
+        let listener = TcpListener::bind(("127.0.0.1", p))?;
+        eprintln!("bloomjoin serve: listening on {}", listener.local_addr()?);
+        let e = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(stream) = conn else { break };
+                let e = Arc::clone(&e);
+                std::thread::spawn(move || {
+                    let Ok(read_half) = stream.try_clone() else { return };
+                    let writer: SharedWriter = Arc::new(Mutex::new(Box::new(stream)));
+                    let _ = serve_lines(&e, BufReader::new(read_half), writer);
+                });
+            }
+        });
+    }
+    let writer: SharedWriter = Arc::new(Mutex::new(Box::new(std::io::stdout())));
+    serve_lines(&engine, BufReader::new(std::io::stdin()), writer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Topology;
+
+    fn config() -> ServerConfig {
+        ServerConfig {
+            cluster: ClusterConfig::local(),
+            calibration: CalibrationMode::Off,
+            ..ServerConfig::default()
+        }
+    }
+
+    fn star_request(dims: &[Relation]) -> PlanRequest {
+        PlanRequest {
+            spec: PlanSpec {
+                sf: 0.002,
+                partitions: 2,
+                topology: Topology::Star,
+                dims: dims.to_vec(),
+                ..PlanSpec::default()
+            },
+            no_execute: false,
+            // pin every edge to plain bloom so filter-cache assertions
+            // don't depend on which strategy the cost model picks
+            force: Some(crate::plan::StrategyKind::Bloom),
+        }
+    }
+
+    #[test]
+    fn warm_query_hits_both_caches_and_matches_cold_rows() {
+        let engine = Engine::new(config());
+        let req = star_request(&[Relation::Orders, Relation::Customer]);
+        let cold = engine.run_plan(&req);
+        let warm = engine.run_plan(&req);
+        let rows = |j: &Json| j.get("rows").and_then(Json::as_f64).unwrap();
+        assert_eq!(rows(&cold), rows(&warm), "cache hits must not change the answer");
+        let cache = |j: &Json, k: &str| j.get("cache").and_then(|c| c.get(k)).cloned().unwrap();
+        assert_eq!(cache(&cold, "plan_cache_hit"), Json::Bool(false));
+        assert_eq!(cache(&warm, "plan_cache_hit"), Json::Bool(true));
+        assert_eq!(cache(&warm, "catalog_cache_hit"), Json::Bool(true));
+        assert!(
+            cache(&warm, "filter_hits").as_f64().unwrap() >= 1.0,
+            "warm run must serve at least one filter from cache"
+        );
+        assert_eq!(cache(&cold, "filter_hits").as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn invalidate_retires_exactly_the_bumped_relation() {
+        let engine = Engine::new(config());
+        let req = star_request(&[Relation::Orders, Relation::Part]);
+        engine.run_plan(&req);
+        assert!(engine.filter_cache().stats().entries >= 2);
+        engine.invalidate(Relation::Part);
+        let warm = engine.run_plan(&req);
+        let cache = |j: &Json, k: &str| {
+            j.get("cache").and_then(|c| c.get(k)).and_then(Json::as_f64).unwrap()
+        };
+        // ORDERS still served from cache; PART rebuilt under the new version
+        assert!(cache(&warm, "filter_hits") >= 1.0);
+        assert!(cache(&warm, "filter_misses") >= 1.0);
+    }
+
+    #[test]
+    fn stats_payload_carries_the_ledger() {
+        let engine = Engine::new(config());
+        let req = star_request(&[Relation::Orders]);
+        engine.submit(&req).expect("admitted");
+        let s = engine.stats_json();
+        assert_eq!(s.get("completed").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(s.get("shed").and_then(Json::as_f64), Some(0.0));
+        assert!(s.get("latency_ms").and_then(|l| l.get("p50")).is_some());
+        assert!(s.get("filter_cache").and_then(|f| f.get("hits")).is_some());
+    }
+}

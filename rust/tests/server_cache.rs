@@ -1,0 +1,267 @@
+//! Integration properties of `bloomjoin serve`'s engine: cache-served
+//! filters change nothing but the cost, invalidation is surgical,
+//! admission sheds deterministically, concurrent queries against one
+//! shared engine equal their sequential oracles, and the NDJSON
+//! front door round-trips all of it.
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use bloomjoin::cluster::ClusterConfig;
+use bloomjoin::plan::{
+    execute, filter_context_fingerprint, prepare, plan_edges, EdgeStrategy, PlanSpec, Relation,
+    StrategyKind, Topology,
+};
+use bloomjoin::server::{
+    serve_lines, CalibrationMode, Engine, FilterCache, PlanRequest, ServerConfig,
+};
+use bloomjoin::util::Json;
+
+fn config() -> ServerConfig {
+    ServerConfig {
+        cluster: ClusterConfig::local(),
+        calibration: CalibrationMode::Off,
+        ..ServerConfig::default()
+    }
+}
+
+fn spec(dims: &[Relation], topology: Topology) -> PlanSpec {
+    PlanSpec { sf: 0.002, partitions: 2, topology, dims: dims.to_vec(), ..PlanSpec::default() }
+}
+
+fn request(dims: &[Relation], topology: Topology) -> PlanRequest {
+    PlanRequest {
+        spec: spec(dims, topology),
+        no_execute: false,
+        force: Some(StrategyKind::Bloom),
+    }
+}
+
+fn cache_field(payload: &Json, key: &str) -> f64 {
+    payload.get("cache").and_then(|c| c.get(key)).and_then(Json::as_f64).unwrap()
+}
+
+/// The filter cache must be invisible in the answer: a warm run (every
+/// bloom filter served from cache) returns bit-identical rows to the
+/// cold run that populated it.  Checked below the engine, through the
+/// same `FilterSource` plumbing the server uses, so the rows themselves
+/// are comparable (the wire payload only carries the count).
+#[test]
+fn cache_served_filters_are_bit_identical_to_cold() {
+    use bloomjoin::bloom::BloomFilter;
+    use bloomjoin::plan::{execute_with_filters, FilterSource};
+
+    struct CacheSource<'a> {
+        cache: &'a FilterCache,
+        spec: &'a PlanSpec,
+    }
+    impl FilterSource for CacheSource<'_> {
+        fn fetch(&self, relation: Relation, eps: f64) -> Option<Arc<BloomFilter>> {
+            self.cache.get(relation, filter_context_fingerprint(self.spec, relation), eps)
+        }
+        fn publish(&self, relation: Relation, eps: f64, filter: &Arc<BloomFilter>) {
+            self.cache.put(
+                relation,
+                filter_context_fingerprint(self.spec, relation),
+                eps,
+                filter,
+            );
+        }
+    }
+
+    let cluster = bloomjoin::cluster::Cluster::new(ClusterConfig::local());
+    let s = spec(&[Relation::Orders, Relation::Customer], Topology::Star);
+    let inputs = prepare(&s);
+    let mut plan = plan_edges(&cluster, &s, &inputs);
+    for e in &mut plan.edges {
+        e.strategy = EdgeStrategy::for_kind(StrategyKind::Bloom, e.prediction.eps_star);
+    }
+    let cache = FilterCache::new(64 << 20);
+    let src = CacheSource { cache: &cache, spec: &s };
+
+    let cold = execute_with_filters(&cluster, &s, &plan, inputs.clone(), None, Some(&src));
+    assert!(cache.stats().entries >= 1, "cold run populates the cache");
+    let warm = execute_with_filters(&cluster, &s, &plan, inputs, None, Some(&src));
+    assert_eq!(cold.rows, warm.rows, "cache hits must not change a single row");
+    assert!(cache.stats().hits >= 1);
+    // the warm metrics carry the zero-cost marker instead of build stages
+    assert!(warm.metrics.stage("filter_cached").is_some());
+    assert!(warm.metrics.stage("bloom_build").is_none());
+}
+
+#[test]
+fn invalidation_retires_only_the_bumped_relation_across_queries() {
+    let engine = Engine::new(config());
+    let req = request(&[Relation::Orders, Relation::Part], Topology::Star);
+    engine.run_plan(&req);
+    let entries_after_cold = engine.filter_cache().stats().entries;
+    assert!(entries_after_cold >= 2, "one filter per dimension");
+
+    engine.invalidate(Relation::Part);
+    let warm = engine.run_plan(&req);
+    // ORDERS is still a hit; PART missed (new data version) and rebuilt
+    assert!(cache_field(&warm, "filter_hits") >= 1.0);
+    assert!(cache_field(&warm, "filter_misses") >= 1.0);
+
+    // a third run is all hits again — the rebuild repopulated the cache
+    let warm2 = engine.run_plan(&req);
+    assert_eq!(cache_field(&warm2, "filter_misses"), 0.0);
+    assert!(cache_field(&warm2, "filter_hits") >= 2.0);
+}
+
+#[test]
+fn plan_cache_key_separates_specs_and_survives_repeats() {
+    let engine = Engine::new(config());
+    let star = request(&[Relation::Orders, Relation::Customer], Topology::Star);
+    let chain = request(&[Relation::Orders, Relation::Customer], Topology::Chain);
+    assert_eq!(cache_field(&engine.run_plan(&star), "plan_cache_hit"), 0.0);
+    assert_eq!(cache_field(&engine.run_plan(&star), "plan_cache_hit"), 1.0);
+    // same relations, different topology — must not share a plan slot
+    assert_eq!(cache_field(&engine.run_plan(&chain), "plan_cache_hit"), 0.0);
+    assert_eq!(cache_field(&engine.run_plan(&chain), "plan_cache_hit"), 1.0);
+}
+
+/// Admission sheds deterministically: with the single slot occupied and
+/// a zero-length queue, a submit is rejected with the typed occupancy.
+#[test]
+fn admission_sheds_when_slot_and_queue_are_full() {
+    let engine = Engine::new(ServerConfig { max_inflight: 1, max_queue: 0, ..config() });
+    let held = engine.admission().try_enter().expect("first claim takes the slot");
+    let shed = engine
+        .submit(&request(&[Relation::Orders], Topology::Star))
+        .expect_err("no slot, no queue: must shed");
+    assert_eq!((shed.max_inflight, shed.max_queue), (1, 0));
+    assert_eq!(engine.admission().shed_count(), 1);
+    drop(held);
+    assert!(engine.submit(&request(&[Relation::Orders], Topology::Star)).is_ok());
+}
+
+/// N threads hammering one engine with a mixed star/chain workload get
+/// exactly the answers a sequential oracle computes — shared caches,
+/// shared pool, shared calibration store and all.
+#[test]
+fn concurrent_queries_match_sequential_oracle() {
+    let engine = Arc::new(Engine::new(config()));
+    let workload: Vec<PlanRequest> = vec![
+        request(&[Relation::Orders, Relation::Customer], Topology::Star),
+        request(&[Relation::Orders, Relation::Customer], Topology::Chain),
+        request(&[Relation::Orders, Relation::Part], Topology::Star),
+        request(&[Relation::Orders, Relation::Customer, Relation::Part], Topology::Star),
+    ];
+    // sequential oracle, computed without any server machinery
+    let oracle: Vec<usize> = workload
+        .iter()
+        .map(|r| {
+            let cluster = bloomjoin::cluster::Cluster::new(ClusterConfig::local());
+            let inputs = prepare(&r.spec);
+            let plan = plan_edges(&cluster, &r.spec, &inputs);
+            execute(&cluster, &r.spec, &plan, inputs).rows.len()
+        })
+        .collect();
+
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let engine = Arc::clone(&engine);
+            let workload = workload.clone();
+            let oracle = oracle.clone();
+            std::thread::spawn(move || {
+                for round in 0..2 {
+                    let idx = (i + round) % workload.len();
+                    let payload = loop {
+                        match engine.submit(&workload[idx]) {
+                            Ok(p) => break p,
+                            Err(_shed) => std::thread::yield_now(),
+                        }
+                    };
+                    let rows = payload.get("rows").and_then(Json::as_f64).unwrap() as usize;
+                    assert_eq!(rows, oracle[idx], "query {idx} diverged under concurrency");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// The NDJSON front door end-to-end over an in-memory reader/writer
+/// pair (exactly what the CI smoke drives over a pipe): ping,
+/// invalidate, bad request, then a cold plan that *holds* its slot
+/// while two more park on the queue and a fourth — past both bounds —
+/// sheds, and a shutdown that drains the queue before answering with
+/// the final service ledger.
+#[test]
+fn serve_lines_round_trips_the_protocol() {
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    let engine = Arc::new(Engine::new(ServerConfig {
+        max_inflight: 1,
+        max_queue: 2,
+        ..config()
+    }));
+    let plan_line = r#"{"id":"Q","op":"plan","relations":"lineitem,orders,customer",
+                        "sf":0.002,"partitions":2,"force_strategy":"bloom"}"#
+        .replace('\n', " ");
+    let script = [
+        r#"{"id":"p0","op":"ping"}"#.to_string(),
+        r#"{"id":"i1","op":"invalidate","relation":"orders"}"#.to_string(),
+        r#"{"id":"bad","op":"teleport"}"#.to_string(),
+        // q1 holds its slot well past the reader draining the rest of
+        // the script, so q2/q3 deterministically park on the queue and
+        // q4 — past both bounds — deterministically sheds
+        plan_line
+            .replace(r#""id":"Q""#, r#""id":"q1""#)
+            .replace(r#""op":"plan""#, r#""op":"plan","hold_ms":400"#),
+        plan_line.replace(r#""id":"Q""#, r#""id":"q2""#),
+        plan_line.replace(r#""id":"Q""#, r#""id":"q3""#),
+        plan_line.replace(r#""id":"Q""#, r#""id":"q4""#),
+        r#"{"id":"bye","op":"shutdown"}"#.to_string(),
+    ]
+    .join("\n");
+
+    let buf = SharedBuf::default();
+    let writer: Arc<Mutex<Box<dyn Write + Send>>> =
+        Arc::new(Mutex::new(Box::new(buf.clone())));
+    serve_lines(&engine, script.as_bytes(), writer).expect("serve loop runs to shutdown");
+
+    let raw = buf.0.lock().unwrap().clone();
+    let text = String::from_utf8(raw).unwrap();
+    let mut by_id = std::collections::HashMap::new();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every response line is JSON");
+        by_id.insert(j.get("id").and_then(Json::as_str).unwrap().to_string(), j);
+    }
+
+    assert_eq!(by_id["p0"].get("ok"), Some(&Json::Bool(true)));
+    let result = |id: &str| by_id[id].get("result").unwrap().clone();
+    assert_eq!(cache_field(&result("q1"), "filter_hits"), 0.0);
+    assert!(cache_field(&result("q2"), "filter_hits") >= 1.0, "q2 runs warm");
+    assert_eq!(
+        result("q1").get("rows"),
+        result("q2").get("rows"),
+        "warm and cold answers agree on the wire"
+    );
+    // q3 drained off the queue and completed; q4 was shed, typed
+    assert_eq!(by_id["q3"].get("ok"), Some(&Json::Bool(true)));
+    let q4_err = by_id["q4"].get("error").expect("q4 rejected");
+    assert_eq!(q4_err.get("kind").and_then(Json::as_str), Some("shed"));
+    assert_eq!(
+        by_id["bad"].get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+        Some("bad_request")
+    );
+    assert_eq!(result("i1").get("data_version"), Some(&Json::Num(1.0)));
+    // the shutdown ack carries the final service ledger
+    let finale = result("bye");
+    assert_eq!(finale.get("shed").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(finale.get("completed").and_then(Json::as_f64), Some(3.0));
+}

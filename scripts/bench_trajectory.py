@@ -42,6 +42,13 @@ TRACKED = {
         "partitioned ship win ratio (broadcast/partitioned bytes)",
         lambda p: p["broadcast_bytes"] / max(p["partitioned_bytes"], 1e-9),
     ),
+    # warm-over-cold p50 for the repeated 5-relation star through the
+    # server's filter+plan caches — a ratio of two timings from the same
+    # runner, like fig7
+    "fig11_server": (
+        "server cache win ratio (cold/warm p50)",
+        lambda p: p["cold_p50_ms"] / max(p["warm_p50_ms"], 1e-9),
+    ),
 }
 # fail when a metric drops below this fraction of the last committed point
 THRESHOLD = 0.8
