@@ -1,0 +1,135 @@
+//! F12 — the price of surviving faults: one star plan mixing a cascade
+//! edge with partitioned edges runs fault-free and then under every
+//! named fault profile, on the same inputs.  The simulated totals are
+//! deterministic (faults, backoffs, and recovery pricing all live in
+//! simulated time), so the overhead of each profile is exact — no
+//! timing noise.
+//!
+//! Asserted invariants (smoke and full shapes): every profile's rows are
+//! bit-identical to the fault-free run; the fault-free run books zero
+//! recovery seconds; every profile that can fire on this plan shape
+//! books at least one recovery stage, with injected and recovered
+//! counts equal; the chaos profile fires all five kinds.  Writes the
+//! `BENCH_fig12_faults.json` trajectory point with the clean and chaos
+//! simulated totals — the tracked metric is clean/chaos (recovery
+//! efficiency: it falls when surviving faults gets more expensive).
+
+use bloomjoin::bench_support::{secs, smoke_or, trajectory_point, Report};
+use bloomjoin::cluster::{Cluster, ClusterConfig, FaultKind, FaultPlan};
+use bloomjoin::plan::{
+    execute, prepare, EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, Relation, Topology,
+};
+use bloomjoin::util::Json;
+
+fn main() {
+    let sf = smoke_or(0.002, 0.01);
+    let spec = PlanSpec {
+        sf,
+        partitions: 4,
+        dims: vec![Relation::Orders, Relation::Customer, Relation::Part],
+        ..PlanSpec::default()
+    };
+    let cluster = Cluster::new(ClusterConfig::local());
+    let inputs = prepare(&spec);
+
+    // cascade on e1 (broadcast/build/probe points), partitioned on e2/e3
+    // (shard + node points): every fault kind has somewhere to land
+    let plan = JoinPlan {
+        topology: Topology::Star,
+        edges: vec![
+            PlannedEdge::forced(Relation::Orders, "e1", EdgeStrategy::Bloom { eps: 0.05 }),
+            PlannedEdge::forced(
+                Relation::Customer,
+                "e2",
+                EdgeStrategy::BloomPartitioned { eps: 0.05 },
+            ),
+            PlannedEdge::forced(
+                Relation::Part,
+                "e3",
+                EdgeStrategy::BloomPartitioned { eps: 0.05 },
+            ),
+        ],
+        dim_stats: Vec::new(),
+    };
+
+    let clean = execute(&cluster, &spec, &plan, inputs.clone());
+    let clean_sim = clean.metrics.total_sim_s();
+    assert_eq!(clean.metrics.recovery_s(), 0.0, "fault-free run must book zero recovery");
+    assert!(clean.injected_faults.is_empty() && clean.recovery.is_empty());
+    let mut clean_rows = clean.rows.clone();
+    clean_rows.sort_unstable();
+
+    let mut report = Report::new(
+        "fig12_faults",
+        &["profile", "sim_total", "recovery_s", "injected", "recovered", "net_bytes"],
+    );
+    report.row(vec![
+        "none".into(),
+        secs(clean_sim),
+        "0".into(),
+        "0".into(),
+        "0".into(),
+        clean.metrics.total_net_bytes().to_string(),
+    ]);
+
+    let mut chaos_sim = clean_sim;
+    let mut chaos_recovery = 0.0;
+    for profile in FaultPlan::PROFILES {
+        if profile == "none" {
+            continue;
+        }
+        let faulted_spec = PlanSpec {
+            faults: Some(FaultPlan::parse(profile).unwrap()),
+            ..spec.clone()
+        };
+        let out = execute(&cluster, &faulted_spec, &plan, inputs.clone());
+        let mut rows = out.rows.clone();
+        rows.sort_unstable();
+        assert_eq!(rows, clean_rows, "{profile}: recovered rows must match fault-free");
+        assert_eq!(
+            out.injected_faults.len(),
+            out.recovery.len(),
+            "{profile}: every injected fault books exactly one recovery action"
+        );
+        assert!(
+            !out.injected_faults.is_empty(),
+            "{profile}: this plan shape exposes every injection point"
+        );
+        assert!(out.metrics.recovery_s() > 0.0, "{profile}: recovery must be priced");
+        if profile == "chaos" {
+            chaos_sim = out.metrics.total_sim_s();
+            chaos_recovery = out.metrics.recovery_s();
+            let mut kinds: Vec<&str> =
+                out.injected_faults.iter().map(|f| f.kind.name()).collect();
+            kinds.sort_unstable();
+            kinds.dedup();
+            assert_eq!(kinds.len(), FaultKind::ALL.len(), "chaos fires all kinds: {kinds:?}");
+        }
+        report.row(vec![
+            profile.to_string(),
+            secs(out.metrics.total_sim_s()),
+            format!("{:.4}", out.metrics.recovery_s()),
+            out.injected_faults.len().to_string(),
+            out.recovery.len().to_string(),
+            out.metrics.total_net_bytes().to_string(),
+        ]);
+    }
+    report.finish();
+
+    let efficiency = clean_sim / chaos_sim.max(1e-9);
+    println!(
+        "\nchaos overhead: {:.4}s recovery on a {:.4}s clean plan \
+         (efficiency {:.3} = clean/chaos sim)",
+        chaos_recovery, clean_sim, efficiency
+    );
+
+    trajectory_point(
+        "fig12_faults",
+        Json::obj([
+            ("clean_sim_s", Json::num(clean_sim)),
+            ("chaos_sim_s", Json::num(chaos_sim)),
+            ("chaos_recovery_s", Json::num(chaos_recovery)),
+            ("recovery_efficiency", Json::num(efficiency)),
+        ]),
+    );
+}

@@ -76,6 +76,7 @@ pub fn poisoned_store(alpha: f64, beta: f64) -> crate::plan::CostCalibration {
             eps: Some(0.05),
             resized: false,
             cached: false,
+            recovered: false,
             estimated_probe_rows: 1,
             measured_probe_rows: 1,
             estimated_survivors: 1,

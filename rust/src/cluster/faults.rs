@@ -1,0 +1,431 @@
+//! Deterministic fault injection for the simulated cluster.
+//!
+//! The paper's pipeline assumes every executor survives
+//! build→broadcast→probe; a long-running service cannot.  This module is
+//! the controlled way to break that assumption: a seeded [`FaultPlan`]
+//! names which faults fire, how often, and (through the seed) where —
+//! node loss, BlockManager shard eviction, broadcast drop, worker panic,
+//! straggler delay — at named pipeline points (`broadcast`,
+//! `shard_ship`, `probe`, `assemble`).  Execution consults a per-query
+//! [`FaultSession`], which meters occurrences so a plan with
+//! `count = 1` fires exactly once no matter how many edges run, and
+//! records both the injected faults and every recovery action taken, so
+//! ledgers stay auditable.
+//!
+//! Everything is deterministic: firing is decided by occurrence
+//! counting in coordinator order (never by thread timing), placement
+//! (which partition panics, which shard is lost) comes from the seed,
+//! and retry backoff is *simulated* time ([`FaultSession::backoff`] —
+//! never a wall-clock sleep).  A query with no fault plan takes the
+//! exact code path it took before this module existed.
+
+use std::sync::Mutex;
+
+use super::time::SimDuration;
+use crate::util::Json;
+
+/// Base simulated backoff before the first retry, seconds.
+pub const BACKOFF_BASE_S: f64 = 0.05;
+/// Cap on one simulated backoff step, seconds.
+pub const BACKOFF_CAP_S: f64 = 1.0;
+/// Simulated extra seconds a straggling task is delayed by before
+/// speculation cuts it off.
+pub const STRAGGLER_DELAY_S: f64 = 2.0;
+
+/// The five injectable fault kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// A node dies mid-probe, taking its BlockManager (and any filter
+    /// shards placed there) with it.
+    NodeLoss,
+    /// One filter shard is evicted from its owner's BlockManager between
+    /// placement and probe.
+    ShardEviction,
+    /// A broadcast ship is dropped before every executor received it.
+    BroadcastDrop,
+    /// One worker task panics (a real `panic!` on the real pool, caught
+    /// as a typed [`super::pool::TaskFailed`]).
+    WorkerPanic,
+    /// One task straggles: its simulated completion is delayed until a
+    /// speculative re-run elsewhere overtakes it.
+    Straggler,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::NodeLoss,
+        FaultKind::ShardEviction,
+        FaultKind::BroadcastDrop,
+        FaultKind::WorkerPanic,
+        FaultKind::Straggler,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::NodeLoss => "node-loss",
+            FaultKind::ShardEviction => "shard-loss",
+            FaultKind::BroadcastDrop => "broadcast-drop",
+            FaultKind::WorkerPanic => "worker-panic",
+            FaultKind::Straggler => "straggler",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "node-loss" => Some(FaultKind::NodeLoss),
+            "shard-loss" | "shard-eviction" => Some(FaultKind::ShardEviction),
+            "broadcast-drop" => Some(FaultKind::BroadcastDrop),
+            "worker-panic" => Some(FaultKind::WorkerPanic),
+            "straggler" => Some(FaultKind::Straggler),
+            _ => None,
+        }
+    }
+}
+
+/// One fault directive: fire `kind` on its first `count` occurrences.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub count: u32,
+}
+
+/// An immutable, seeded fault configuration — what `--faults` and the
+/// server's `faults` request field parse into.  The seed steers
+/// placement (which partition/shard/node is hit), the specs steer which
+/// kinds fire and how often.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// The named profiles the CLI and server accept.
+    pub const PROFILES: [&'static str; 7] = [
+        "none",
+        "shard-loss",
+        "node-loss",
+        "broadcast-drop",
+        "worker-panic",
+        "straggler",
+        "chaos",
+    ];
+
+    /// A single-kind plan firing `count` times.
+    pub fn single(kind: FaultKind, count: u32) -> FaultPlan {
+        FaultPlan { seed: 0, specs: vec![FaultSpec { kind, count }] }
+    }
+
+    /// Parse `--faults <profile|json>`.  Profiles are the kind names
+    /// (one firing each), `none` (empty plan) and `chaos` (every kind
+    /// once).  The JSON form is
+    /// `{"seed":7,"faults":[{"kind":"broadcast-drop","count":2}]}`.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let s = s.trim();
+        match s {
+            "none" => return Ok(FaultPlan::default()),
+            "chaos" => {
+                return Ok(FaultPlan {
+                    seed: 0,
+                    specs: FaultKind::ALL.iter().map(|&kind| FaultSpec { kind, count: 1 }).collect(),
+                })
+            }
+            _ => {}
+        }
+        if let Some(kind) = FaultKind::parse(s) {
+            return Ok(FaultPlan::single(kind, 1));
+        }
+        if s.starts_with('{') {
+            let j = Json::parse(s).map_err(|e| format!("faults JSON: {e}"))?;
+            return FaultPlan::from_json(&j);
+        }
+        Err(format!(
+            "unknown faults profile {s:?} (none|shard-loss|node-loss|broadcast-drop|\
+             worker-panic|straggler|chaos, or a JSON object)"
+        ))
+    }
+
+    /// Parse the JSON object form (also the server request field shape).
+    pub fn from_json(j: &Json) -> Result<FaultPlan, String> {
+        let seed = match j.get("seed") {
+            None | Some(Json::Null) => 0,
+            Some(v) => v.as_u64().ok_or("faults.seed must be a non-negative integer")?,
+        };
+        let arr = match j.get("faults") {
+            Some(Json::Arr(a)) => a.as_slice(),
+            Some(_) => return Err("faults.faults must be an array".into()),
+            None => return Err("faults object needs a \"faults\" array".into()),
+        };
+        let mut specs = Vec::with_capacity(arr.len());
+        for e in arr {
+            let k = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or("each fault needs a string \"kind\"")?;
+            let kind = FaultKind::parse(k).ok_or_else(|| format!("unknown fault kind {k:?}"))?;
+            let count = match e.get("count") {
+                None | Some(Json::Null) => 1,
+                Some(v) => v.as_u64().ok_or("fault count must be a non-negative integer")? as u32,
+            };
+            specs.push(FaultSpec { kind, count });
+        }
+        Ok(FaultPlan { seed, specs })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.iter().all(|s| s.count == 0)
+    }
+
+    /// Total firing budget for `kind` across the plan's specs.
+    pub fn count_of(&self, kind: FaultKind) -> u32 {
+        self.specs.iter().filter(|s| s.kind == kind).map(|s| s.count).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let specs: Vec<Json> = self
+            .specs
+            .iter()
+            .map(|s| {
+                Json::obj([
+                    ("kind", Json::str(s.kind.name())),
+                    ("count", Json::num(s.count as f64)),
+                ])
+            })
+            .collect();
+        Json::obj([("seed", Json::num(self.seed as f64)), ("faults", Json::Arr(specs))])
+    }
+}
+
+/// One injected fault, for the ledger.
+#[derive(Clone, Debug)]
+pub struct InjectedFault {
+    pub kind: FaultKind,
+    /// The named pipeline point it fired at.
+    pub point: String,
+}
+
+impl InjectedFault {
+    pub fn to_json(&self) -> Json {
+        Json::obj([("kind", Json::str(self.kind.name())), ("point", Json::str(self.point.clone()))])
+    }
+}
+
+/// One recovery action taken in response, for the ledger.  `action` is
+/// the metrics stage name the cost was booked under (`retry_ship`,
+/// `retry_build`, `shard_rebuild`, `degrade_broadcast`,
+/// `speculative_rerun`).
+#[derive(Clone, Debug)]
+pub struct RecoveryAction {
+    pub action: String,
+    pub point: String,
+    pub detail: String,
+    /// Simulated seconds the recovery was priced at.
+    pub sim_s: f64,
+}
+
+impl RecoveryAction {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("action", Json::str(self.action.clone())),
+            ("point", Json::str(self.point.clone())),
+            ("detail", Json::str(self.detail.clone())),
+            ("sim_s", Json::num(self.sim_s)),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct SessionState {
+    /// Occurrences seen per kind, in [`FaultKind::ALL`] order.
+    seen: [u32; 5],
+    injected: Vec<InjectedFault>,
+    recovered: Vec<RecoveryAction>,
+}
+
+/// Per-execution fault state: meters the plan's firing counts and logs
+/// what was injected and how it was recovered.  Interior-mutable so the
+/// executor and the joins can share one session by reference; all
+/// `should_fire` calls happen on the coordinating thread in
+/// deterministic order, never inside pooled tasks.
+pub struct FaultSession {
+    plan: FaultPlan,
+    state: Mutex<SessionState>,
+}
+
+impl FaultSession {
+    pub fn new(plan: FaultPlan) -> FaultSession {
+        FaultSession { plan, state: Mutex::new(SessionState::default()) }
+    }
+
+    /// A session that never fires — the zero-fault fast path.
+    pub fn inactive() -> FaultSession {
+        FaultSession::new(FaultPlan::default())
+    }
+
+    pub fn is_active(&self) -> bool {
+        !self.plan.is_empty()
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Should this occurrence of `kind` (at pipeline point `point`)
+    /// fail?  Fires on the first `count` occurrences, where `count`
+    /// sums the plan's specs for the kind.  Logs the injection.
+    pub fn should_fire(&self, kind: FaultKind, point: &str) -> bool {
+        let budget = self.plan.count_of(kind);
+        if budget == 0 {
+            return false;
+        }
+        let idx = FaultKind::ALL.iter().position(|&k| k == kind).expect("kind in table");
+        let mut g = self.state.lock().unwrap();
+        let fire = g.seen[idx] < budget;
+        g.seen[idx] += 1;
+        if fire {
+            g.injected.push(InjectedFault { kind, point: point.to_string() });
+        }
+        fire
+    }
+
+    /// Deterministic placement pick in `0..n` (which partition panics,
+    /// which shard is evicted, which node dies) — pure seed arithmetic,
+    /// so the same plan always hits the same place.
+    pub fn target_index(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        // splitmix-style scramble so seed 0 and seed 1 pick different
+        // targets even for small n
+        let mut z = self.plan.seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        (z ^ (z >> 31)) as usize % n
+    }
+
+    /// Capped exponential backoff before retry `attempt` (1-based), in
+    /// **simulated** time — the recovery layer never sleeps.
+    pub fn backoff(&self, attempt: u32) -> SimDuration {
+        let exp = attempt.saturating_sub(1).min(16);
+        let s = (BACKOFF_BASE_S * f64::from(1u32 << exp)).min(BACKOFF_CAP_S);
+        SimDuration::from_secs(s)
+    }
+
+    /// Record one recovery action (named after its metrics stage).
+    pub fn log_recovery(&self, action: &str, point: &str, detail: String, sim_s: f64) {
+        self.state.lock().unwrap().recovered.push(RecoveryAction {
+            action: action.to_string(),
+            point: point.to_string(),
+            detail,
+            sim_s,
+        });
+    }
+
+    pub fn injected(&self) -> Vec<InjectedFault> {
+        self.state.lock().unwrap().injected.clone()
+    }
+
+    pub fn recovered(&self) -> Vec<RecoveryAction> {
+        self.state.lock().unwrap().recovered.clone()
+    }
+
+    /// Fold another session's logs into this one (the executor keeps one
+    /// session per query; per-edge helpers may use scratch sessions).
+    pub fn absorb(&self, other: &FaultSession) {
+        let theirs = other.state.lock().unwrap();
+        let mut g = self.state.lock().unwrap();
+        g.injected.extend(theirs.injected.iter().cloned());
+        g.recovered.extend(theirs.recovered.iter().cloned());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_parse_and_roundtrip() {
+        assert!(FaultPlan::parse("none").unwrap().is_empty());
+        for kind in FaultKind::ALL {
+            let p = FaultPlan::parse(kind.name()).unwrap();
+            assert_eq!(p.specs, vec![FaultSpec { kind, count: 1 }]);
+            assert_eq!(FaultKind::parse(kind.name()), Some(kind));
+        }
+        let chaos = FaultPlan::parse("chaos").unwrap();
+        assert_eq!(chaos.specs.len(), FaultKind::ALL.len());
+        assert!(FaultPlan::parse("meteor-strike").is_err());
+    }
+
+    #[test]
+    fn json_form_parses_seed_counts_and_rejects_garbage() {
+        let p = FaultPlan::parse(
+            r#"{"seed":7,"faults":[{"kind":"broadcast-drop","count":2},{"kind":"straggler"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.count_of(FaultKind::BroadcastDrop), 2);
+        assert_eq!(p.count_of(FaultKind::Straggler), 1);
+        assert_eq!(p.count_of(FaultKind::NodeLoss), 0);
+        // round-trips through its own JSON writer
+        let back = FaultPlan::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, p);
+        assert!(FaultPlan::parse(r#"{"faults":[{"kind":"nope"}]}"#).is_err());
+        assert!(FaultPlan::parse(r#"{"seed":1}"#).is_err());
+        assert!(FaultPlan::parse(r#"{"faults":"all"}"#).is_err());
+    }
+
+    #[test]
+    fn session_meters_occurrences_deterministically() {
+        let s = FaultSession::new(FaultPlan::single(FaultKind::BroadcastDrop, 2));
+        assert!(s.is_active());
+        assert!(s.should_fire(FaultKind::BroadcastDrop, "broadcast"));
+        assert!(s.should_fire(FaultKind::BroadcastDrop, "broadcast"));
+        assert!(!s.should_fire(FaultKind::BroadcastDrop, "broadcast"), "budget spent");
+        assert!(!s.should_fire(FaultKind::NodeLoss, "probe"), "other kinds never fire");
+        assert_eq!(s.injected().len(), 2);
+    }
+
+    #[test]
+    fn inactive_session_never_fires_and_logs_nothing() {
+        let s = FaultSession::inactive();
+        assert!(!s.is_active());
+        for kind in FaultKind::ALL {
+            assert!(!s.should_fire(kind, "anywhere"));
+        }
+        assert!(s.injected().is_empty());
+        assert!(s.recovered().is_empty());
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential_sim_time() {
+        let s = FaultSession::new(FaultPlan::default());
+        assert!((s.backoff(1).seconds() - BACKOFF_BASE_S).abs() < 1e-12);
+        assert!((s.backoff(2).seconds() - 2.0 * BACKOFF_BASE_S).abs() < 1e-12);
+        assert!((s.backoff(3).seconds() - 4.0 * BACKOFF_BASE_S).abs() < 1e-12);
+        assert!((s.backoff(30).seconds() - BACKOFF_CAP_S).abs() < 1e-12, "capped");
+    }
+
+    #[test]
+    fn target_index_is_seeded_and_in_range() {
+        let a = FaultSession::new(FaultPlan { seed: 0, ..FaultPlan::default() });
+        let b = FaultSession::new(FaultPlan { seed: 1, ..FaultPlan::default() });
+        for n in [1usize, 2, 7, 64] {
+            assert!(a.target_index(n) < n);
+            assert!(b.target_index(n) < n);
+        }
+        assert_eq!(a.target_index(64), a.target_index(64), "stable per seed");
+        assert_eq!(a.target_index(0), 0);
+    }
+
+    #[test]
+    fn absorb_merges_logs() {
+        let main = FaultSession::new(FaultPlan::single(FaultKind::WorkerPanic, 1));
+        let scratch = FaultSession::new(FaultPlan::single(FaultKind::WorkerPanic, 1));
+        assert!(scratch.should_fire(FaultKind::WorkerPanic, "probe"));
+        scratch.log_recovery("retry_build", "probe", "stage re-run".into(), 0.5);
+        main.absorb(&scratch);
+        assert_eq!(main.injected().len(), 1);
+        assert_eq!(main.recovered().len(), 1);
+        assert_eq!(main.recovered()[0].action, "retry_build");
+    }
+}

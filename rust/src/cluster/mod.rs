@@ -18,12 +18,15 @@
 pub mod blockmanager;
 pub mod broadcast;
 pub mod config;
+pub mod faults;
 pub mod pool;
 pub mod scheduler;
 pub mod shuffle;
 pub mod time;
 
 pub use config::ClusterConfig;
+pub use faults::{FaultKind, FaultPlan, FaultSession};
+pub use pool::TaskFailed;
 pub use scheduler::{Stage, StageResult, Task};
 pub use time::{Cost, SimDuration};
 
@@ -78,6 +81,16 @@ impl Cluster {
     /// the simulated executor slots to get the stage's cluster time.
     pub fn run_stage<T: Send + 'static>(&self, stage: Stage<T>) -> StageResult<T> {
         scheduler::run_stage(&self.cfg, &self.pool, stage)
+    }
+
+    /// Fallible [`Cluster::run_stage`]: a panicking task fails the stage
+    /// with the typed [`TaskFailed`] instead of aborting the process,
+    /// and the pool stays usable — the recovery layer's entry point.
+    pub fn try_run_stage<T: Send + 'static>(
+        &self,
+        stage: Stage<T>,
+    ) -> Result<StageResult<T>, TaskFailed> {
+        scheduler::try_run_stage(&self.cfg, &self.pool, stage)
     }
 
     /// Simulated peer-to-peer broadcast of `bytes` to every executor.

@@ -4,12 +4,43 @@
 //! channel-fed workers covers the engine's needs: run N task closures,
 //! collect results in task order, measure per-task wall time.)
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Typed failure of one pooled task.  A panicking closure no longer
+/// poisons the pool (the worker survives, the batch's other results are
+/// drained) — it surfaces here, with the lowest failing task index so
+/// the error is deterministic under any worker count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskFailed {
+    /// Input-order index of the failing task.
+    pub task: usize,
+    /// The panic payload, when it was a string.
+    pub message: String,
+}
+
+impl std::fmt::Display for TaskFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pooled task {} panicked: {}", self.task, self.message)
+    }
+}
+
+impl std::error::Error for TaskFailed {}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Worker count for per-partition build/probe work: the
 /// `BLOOMJOIN_THREADS` env var when set to a positive integer, otherwise
@@ -83,20 +114,35 @@ impl ThreadPool {
     }
 
     /// Run every task, returning `(result, wall_seconds)` per task in
-    /// input order.  Panics in tasks propagate as poisoned results.
+    /// input order.  A panicking task re-panics here, after the rest of
+    /// the batch drained — infallible call sites keep their signature;
+    /// recovery paths use [`ThreadPool::try_run_tasks`].
     pub fn run_tasks<T, F>(&self, tasks: Vec<F>) -> Vec<(T, f64)>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
+        self.try_run_tasks(tasks).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`ThreadPool::run_tasks`]: every task runs under
+    /// `catch_unwind`, so one panicking closure fails the batch with a
+    /// typed [`TaskFailed`] while the workers — and the other tasks'
+    /// results — survive.  The pool stays fully usable afterwards.
+    pub fn try_run_tasks<T, F>(&self, tasks: Vec<F>) -> Result<Vec<(T, f64)>, TaskFailed>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
         let n = tasks.len();
-        let (done_tx, done_rx) = mpsc::channel::<(usize, T, f64)>();
+        type Done<T> = (usize, Result<T, String>, f64);
+        let (done_tx, done_rx) = mpsc::channel::<Done<T>>();
         let tx = self.tx.lock().unwrap().clone().expect("pool alive");
         for (i, task) in tasks.into_iter().enumerate() {
             let done = done_tx.clone();
             let job: Job = Box::new(move || {
                 let t0 = Instant::now();
-                let out = task();
+                let out = catch_unwind(AssertUnwindSafe(task)).map_err(panic_message);
                 let dt = t0.elapsed().as_secs_f64();
                 let _ = done.send((i, out, dt));
             });
@@ -104,11 +150,23 @@ impl ThreadPool {
         }
         drop(done_tx);
         let mut slots: Vec<Option<(T, f64)>> = (0..n).map(|_| None).collect();
+        let mut failure: Option<TaskFailed> = None;
         for _ in 0..n {
-            let (i, out, dt) = done_rx.recv().expect("task panicked");
-            slots[i] = Some((out, dt));
+            let (i, out, dt) = done_rx.recv().expect("worker survives its task");
+            match out {
+                Ok(out) => slots[i] = Some((out, dt)),
+                // keep the lowest failing index so the reported error is
+                // deterministic under any worker count
+                Err(message) => match &failure {
+                    Some(f) if f.task <= i => {}
+                    _ => failure = Some(TaskFailed { task: i, message }),
+                },
+            }
         }
-        slots.into_iter().map(|s| s.expect("all tasks reported")).collect()
+        if let Some(f) = failure {
+            return Err(f);
+        }
+        Ok(slots.into_iter().map(|s| s.expect("all tasks reported")).collect())
     }
 
     /// Run `f` over `0..n` split into ~4 chunks per worker, concatenating
@@ -121,8 +179,19 @@ impl ThreadPool {
         T: Send + 'static,
         F: Fn(std::ops::Range<usize>) -> Vec<T> + Send + Sync + 'static,
     {
+        self.try_run_chunked(n, f).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`ThreadPool::run_chunked`]: one panicking chunk fails
+    /// the run with a typed [`TaskFailed`] (lowest chunk index) while the
+    /// pool stays usable for the next batch.
+    pub fn try_run_chunked<T, F>(&self, n: usize, f: F) -> Result<Vec<T>, TaskFailed>
+    where
+        T: Send + 'static,
+        F: Fn(std::ops::Range<usize>) -> Vec<T> + Send + Sync + 'static,
+    {
         if n == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let n_chunks = (self.size() * 4).min(n).max(1);
         let chunk = n.div_ceil(n_chunks);
@@ -135,7 +204,7 @@ impl ThreadPool {
                 move || f(start..end)
             })
             .collect();
-        self.run_tasks(tasks).into_iter().flat_map(|(v, _)| v).collect()
+        Ok(self.try_run_tasks(tasks)?.into_iter().flat_map(|(v, _)| v).collect())
     }
 }
 
@@ -221,6 +290,46 @@ mod tests {
         }
         let pool = ThreadPool::new(2);
         assert!(pool.run_chunked(0, |r| r.collect::<Vec<usize>>()).is_empty());
+    }
+
+    #[test]
+    fn panicking_chunk_fails_cleanly_and_pool_stays_usable() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .try_run_chunked(100, |range| {
+                if range.contains(&17) {
+                    panic!("injected chunk failure");
+                }
+                range.map(|i| i * 2).collect::<Vec<usize>>()
+            })
+            .expect_err("one panicking chunk must fail the run");
+        assert!(err.message.contains("injected chunk failure"), "{err}");
+        // the same pool immediately serves the next batch, workers intact
+        let ok = pool.run_chunked(100, |range| range.map(|i| i * 2).collect::<Vec<usize>>());
+        assert_eq!(ok, (0..100).map(|i| i * 2).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn try_run_tasks_reports_lowest_failing_index() {
+        let pool = ThreadPool::new(4);
+        for _ in 0..3 {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 5 || i == 11 {
+                            panic!("task {i} down");
+                        }
+                        i
+                    }) as Box<dyn FnOnce() -> usize + Send>
+                })
+                .collect();
+            let err = pool.try_run_tasks(tasks).expect_err("two tasks panic");
+            assert_eq!(err.task, 5, "deterministic: lowest failing index wins");
+            assert_eq!(err.message, "task 5 down");
+        }
+        // and the infallible path still works on the same pool
+        let ok = pool.run_tasks((0..8).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(ok.len(), 8);
     }
 
     #[test]

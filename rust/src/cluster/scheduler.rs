@@ -11,7 +11,7 @@
 //! slot finish + stage barrier overhead.
 
 use super::config::ClusterConfig;
-use super::pool::ThreadPool;
+use super::pool::{TaskFailed, ThreadPool};
 use super::time::{Cost, SimDuration};
 
 /// One task: real work + a simulated-cost descriptor.
@@ -66,12 +66,23 @@ pub(super) fn run_stage<T: Send + 'static>(
     pool: &ThreadPool,
     stage: Stage<T>,
 ) -> StageResult<T> {
+    try_run_stage(cfg, pool, stage).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible [`run_stage`]: a worker panic inside any task fails the
+/// stage with the pool's typed [`TaskFailed`] instead of aborting the
+/// process — the recovery layer retries the stage and books the cost.
+pub(super) fn try_run_stage<T: Send + 'static>(
+    cfg: &ClusterConfig,
+    pool: &ThreadPool,
+    stage: Stage<T>,
+) -> Result<StageResult<T>, TaskFailed> {
     let name = stage.name;
     let n_tasks = stage.tasks.len();
     let preferred: Vec<Option<usize>> = stage.tasks.iter().map(|t| t.preferred_node).collect();
 
     let t0 = std::time::Instant::now();
-    let ran = pool.run_tasks(stage.tasks.into_iter().map(|t| t.work).collect::<Vec<_>>());
+    let ran = pool.try_run_tasks(stage.tasks.into_iter().map(|t| t.work).collect::<Vec<_>>())?;
     let wall = t0.elapsed().as_secs_f64();
 
     let mut outputs = Vec::with_capacity(n_tasks);
@@ -89,7 +100,7 @@ pub(super) fn run_stage<T: Send + 'static>(
 
     let (sim, locality_hits) = simulate_placement(cfg, &costs, &preferred);
 
-    StageResult {
+    Ok(StageResult {
         name,
         outputs,
         sim_time: sim,
@@ -97,7 +108,7 @@ pub(super) fn run_stage<T: Send + 'static>(
         total_cost,
         n_tasks,
         locality_hit_rate: if n_tasks == 0 { 1.0 } else { locality_hits as f64 / n_tasks as f64 },
-    }
+    })
 }
 
 /// FIFO + locality-preferred placement onto simulated slots; returns

@@ -30,10 +30,12 @@ use std::sync::Arc;
 
 use crate::approx::approx_count;
 use crate::bloom::{BloomFilter, BloomParams, KeyFilter, SelectionVector};
+use crate::cluster::faults::STRAGGLER_DELAY_S;
 use crate::cluster::shuffle::{repartition, ShuffleCodec};
-use crate::cluster::{broadcast, Cluster, Cost, Stage, Task};
+use crate::cluster::{broadcast, Cluster, Cost, FaultKind, FaultSession, Stage, Task};
 use crate::dataset::PartitionedTable;
 use crate::metrics::{QueryMetrics, StageTiming};
+use crate::plan::costing::{retry_build_price, retry_ship_price, speculative_rerun_price};
 
 use super::sort_merge::sort_merge_join_partition;
 use super::{JoinedRow, Keyed, RowSize};
@@ -164,7 +166,7 @@ impl BloomCascadeJoin {
         S: Clone + Send + Sync + RowSize + 'static,
     {
         let (rows, metrics, resized, _) =
-            self.execute_phased(cluster, big, small, resize, None);
+            self.execute_phased(cluster, big, small, resize, None, None);
         (rows, metrics, resized)
     }
 
@@ -184,7 +186,7 @@ impl BloomCascadeJoin {
         B: Clone + Send + Sync + RowSize + 'static,
         S: Clone + Send + Sync + RowSize + 'static,
     {
-        self.execute_phased(cluster, big, small, resize, None)
+        self.execute_phased(cluster, big, small, resize, None, None)
     }
 
     /// Run the cascade with a filter already built by an earlier query
@@ -205,8 +207,36 @@ impl BloomCascadeJoin {
         B: Clone + Send + Sync + RowSize + 'static,
         S: Clone + Send + Sync + RowSize + 'static,
     {
-        let (rows, metrics, _, _) = self.execute_phased(cluster, big, small, None, Some(filter));
+        let (rows, metrics, _, _) =
+            self.execute_phased(cluster, big, small, None, Some(filter), None);
         (rows, metrics)
+    }
+
+    /// The fully general entry point: [`execute_returning_filter`] plus an
+    /// optional prebuilt filter (the cache-hit path) and an optional
+    /// fault-injection session (`cluster::faults`).  With an active
+    /// session the cascade injects and recovers from broadcast drops
+    /// (`retry_ship`), worker panics in the filtered scan (`retry_build`)
+    /// and stragglers (`speculative_rerun`); the recovered result is
+    /// always bit-identical to the fault-free run, only the booked
+    /// recovery stages differ.  `faults: None` is byte-for-byte the old
+    /// behaviour.
+    ///
+    /// [`execute_returning_filter`]: BloomCascadeJoin::execute_returning_filter
+    pub fn execute_faulted<B, S>(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<B>>,
+        small: PartitionedTable<Keyed<S>>,
+        resize: Option<ResizeDecision<'_>>,
+        prebuilt: Option<Arc<BloomFilter>>,
+        faults: Option<&FaultSession>,
+    ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>, Arc<BloomFilter>)
+    where
+        B: Clone + Send + Sync + RowSize + 'static,
+        S: Clone + Send + Sync + RowSize + 'static,
+    {
+        self.execute_phased(cluster, big, small, resize, prebuilt, faults)
     }
 
     fn execute_phased<B, S>(
@@ -216,6 +246,7 @@ impl BloomCascadeJoin {
         small: PartitionedTable<Keyed<S>>,
         resize: Option<ResizeDecision<'_>>,
         prebuilt: Option<Arc<BloomFilter>>,
+        faults: Option<&FaultSession>,
     ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>, Arc<BloomFilter>)
     where
         B: Clone + Send + Sync + RowSize + 'static,
@@ -305,49 +336,109 @@ impl BloomCascadeJoin {
                 ..Default::default()
             }),
         );
+        // injected fault: the ship is dropped before every executor has
+        // the filter — back off (simulated) and re-ship, paying the full
+        // duplicate broadcast traffic under the typed `retry_ship` stage
+        if let Some(fs) = faults {
+            let mut attempt = 0u32;
+            while fs.should_fire(FaultKind::BroadcastDrop, "broadcast") {
+                attempt += 1;
+                let backoff = fs.backoff(attempt);
+                let (sim, cost) = retry_ship_price(&cfg, filter_bytes, backoff.seconds());
+                metrics.push(StageTiming::new("retry_ship", sim).with_cost(&cost));
+                fs.log_recovery(
+                    "retry_ship",
+                    "broadcast",
+                    format!(
+                        "broadcast of {filter_bytes} B dropped; re-shipped after {:.3}s backoff",
+                        backoff.seconds()
+                    ),
+                    sim.seconds(),
+                );
+            }
+        }
 
         // -- step 5a: filtered scan ------------------------------------------
         let probe = self.cfg.probe_path.clone();
         let n_nodes = cfg.n_nodes;
-        let tasks: Vec<Task<Vec<Keyed<B>>>> = big
-            .into_partitions()
-            .into_iter()
-            .enumerate()
-            .map(|(p, part)| {
-                let filter = Arc::clone(&filter);
-                let probe = probe.clone();
-                let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
-                let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
-                // modeled JVM-scale scan cost (see ClusterConfig docs):
-                // keeps simulated time faithful to the paper's platform
-                // and identical across probe engines
-                let cpu_s = part.len() as f64 * cfg.scan_record_cost;
-                Task::new(move || {
-                    let survivors = match &probe {
-                        // vectorized native path: hash a chunk of keys up
-                        // front, keep survivors as a selection vector,
-                        // materialise only the surviving rows
-                        ProbePath::Native => {
-                            let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
-                            let mut sel = SelectionVector::with_capacity(keys.len());
-                            filter.probe_batch(&keys, &mut sel);
-                            sel.gather_owned(part)
+        let parts = big.into_partitions();
+        let part_lens: Vec<usize> = parts.iter().map(Vec::len).collect();
+        let n_parts = parts.len().max(1);
+        // fault decisions happen here on the coordinator, before any task
+        // is submitted, so firing is thread-count invariant
+        let panic_victim = faults.and_then(|fs| {
+            fs.should_fire(FaultKind::WorkerPanic, "filter_scan")
+                .then(|| fs.target_index(n_parts))
+        });
+        let straggler_victim = faults.and_then(|fs| {
+            fs.should_fire(FaultKind::Straggler, "filter_scan").then(|| fs.target_index(n_parts))
+        });
+        let make_tasks = |parts: Vec<Vec<Keyed<B>>>,
+                          victim: Option<usize>|
+         -> Vec<Task<Vec<Keyed<B>>>> {
+            parts
+                .into_iter()
+                .enumerate()
+                .map(|(p, part)| {
+                    let filter = Arc::clone(&filter);
+                    let probe = probe.clone();
+                    let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
+                    let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
+                    // modeled JVM-scale scan cost (see ClusterConfig docs):
+                    // keeps simulated time faithful to the paper's platform
+                    // and identical across probe engines
+                    let cpu_s = part.len() as f64 * cfg.scan_record_cost;
+                    Task::new(move || {
+                        if victim == Some(p) {
+                            panic!("injected worker panic in filter_scan partition {p}");
                         }
-                        ProbePath::Batch(engine) => {
-                            let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
-                            let mask = engine.probe(&keys, &filter);
-                            part.into_iter()
-                                .zip(mask)
-                                .filter_map(|(row, keep)| keep.then_some(row))
-                                .collect()
-                        }
-                    };
-                    (survivors, Cost { cpu_s, disk_s, disk_bytes, ..Default::default() })
+                        let survivors = match &probe {
+                            // vectorized native path: hash a chunk of keys up
+                            // front, keep survivors as a selection vector,
+                            // materialise only the surviving rows
+                            ProbePath::Native => {
+                                let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
+                                let mut sel = SelectionVector::with_capacity(keys.len());
+                                filter.probe_batch(&keys, &mut sel);
+                                sel.gather_owned(part)
+                            }
+                            ProbePath::Batch(engine) => {
+                                let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
+                                let mask = engine.probe(&keys, &filter);
+                                part.into_iter()
+                                    .zip(mask)
+                                    .filter_map(|(row, keep)| keep.then_some(row))
+                                    .collect()
+                            }
+                        };
+                        (survivors, Cost { cpu_s, disk_s, disk_bytes, ..Default::default() })
+                    })
+                    .with_locality(p % n_nodes)
                 })
-                .with_locality(p % n_nodes)
-            })
-            .collect();
-        let scan = cluster.run_stage(Stage::new("filter_scan", tasks));
+                .collect()
+        };
+        // injected fault: a real panic on the real pool in the seed-picked
+        // partition.  The failed attempt's outputs are discarded and only
+        // the typed `retry_build` recovery stage is booked, so the
+        // measured filter_scan split stays fault-free.
+        if let Some(v) = panic_victim {
+            let fs = faults.expect("victim implies an active session");
+            let failed = cluster
+                .try_run_stage(Stage::new("filter_scan", make_tasks(parts.clone(), Some(v))))
+                .map(|_| ())
+                .expect_err("injected panic must fail the stage");
+            let backoff = fs.backoff(1);
+            let sim =
+                retry_build_price(&cfg, part_lens[v] as f64 * cfg.scan_record_cost, backoff.seconds());
+            metrics.push(StageTiming { tasks: 1, ..StageTiming::new("retry_build", sim) });
+            fs.log_recovery(
+                "retry_build",
+                "filter_scan",
+                format!("{failed}; stage retried without the fault"),
+                sim.seconds(),
+            );
+        }
+        let scan = cluster.run_stage(Stage::new("filter_scan", make_tasks(parts, None)));
         let filtered: Vec<Vec<Keyed<B>>> = scan.outputs;
         metrics.big_rows_after_filter = filtered.iter().map(|p| p.len() as u64).sum();
         metrics.push(StageTiming {
@@ -358,6 +449,20 @@ impl BloomCascadeJoin {
             disk_bytes: scan.total_cost.disk_bytes,
             ..StageTiming::new("filter_scan", scan.sim_time)
         });
+        // injected fault: the seed-picked scan task straggles; a
+        // speculative copy elsewhere overtakes it, so the main stage keeps
+        // its fault-free timing and only the copy's price is booked
+        if let Some(v) = straggler_victim {
+            let fs = faults.expect("victim implies an active session");
+            let sim = speculative_rerun_price(&cfg, part_lens[v] as f64 * cfg.scan_record_cost);
+            metrics.push(StageTiming { tasks: 1, ..StageTiming::new("speculative_rerun", sim) });
+            fs.log_recovery(
+                "speculative_rerun",
+                "filter_scan",
+                format!("partition {v} straggled {STRAGGLER_DELAY_S}s; speculative copy won"),
+                sim.seconds(),
+            );
+        }
 
         // -- step 5b: shuffle both sides -------------------------------------
         let n_shuffle = cfg.shuffle_partitions;
@@ -654,6 +759,33 @@ mod tests {
         assert_eq!(marker.sim_s, 0.0);
         assert!(warm_m.stage("broadcast").is_some(), "the reused filter still ships");
         assert!(warm_m.bloom_creation_s() < cold_m.bloom_creation_s());
+    }
+
+    #[test]
+    fn injected_faults_recover_bit_identical() {
+        use crate::cluster::{FaultPlan, FaultSession};
+        let cluster = Cluster::new(ClusterConfig::local());
+        let join = BloomCascadeJoin::new(BloomCascadeConfig { fpr: 0.05, ..Default::default() });
+        let (big, small) = inputs(2_000, 200, 10_000);
+        let (clean_rows, clean_m) = join.execute(&cluster, big.clone(), small.clone());
+        assert_eq!(clean_m.recovery_s(), 0.0, "fault-free runs book zero recovery");
+
+        // chaos fires the cascade's three applicable kinds: broadcast
+        // drop, worker panic in the scan, straggler
+        let fs = FaultSession::new(FaultPlan::parse("chaos").unwrap());
+        let (rows, m, _, _) = join.execute_faulted(&cluster, big, small, None, None, Some(&fs));
+        assert_eq!(rows, clean_rows, "recovered result must be bit-identical");
+        for stage in ["retry_ship", "retry_build", "speculative_rerun"] {
+            assert!(m.stage(stage).is_some(), "missing recovery stage {stage}");
+        }
+        assert!(m.recovery_s() > 0.0);
+        assert_eq!(fs.injected().len(), 3);
+        assert_eq!(fs.recovered().len(), 3);
+        // shipped-byte conservation: the faulted run pays exactly one
+        // duplicate broadcast on top of the clean traffic
+        let dup = m.stage("retry_ship").unwrap().net_bytes;
+        assert_eq!(dup, clean_m.stage("broadcast").unwrap().net_bytes);
+        assert_eq!(m.total_net_bytes(), clean_m.total_net_bytes() + dup);
     }
 
     #[test]

@@ -33,12 +33,27 @@ use crate::approx::approx_count;
 use crate::bloom::{BloomFilter, BloomParams, KeyFilter, SelectionVector};
 use crate::cluster::blockmanager::BlockManager;
 use crate::cluster::shuffle::{partition_of, repartition, ShuffleCodec, ShuffleVolume};
-use crate::cluster::{broadcast, Cluster, Cost, SimDuration, Stage, Task};
+use crate::cluster::{broadcast, Cluster, Cost, FaultKind, FaultSession, SimDuration, Stage, Task};
 use crate::dataset::PartitionedTable;
 use crate::metrics::{QueryMetrics, StageTiming};
+use crate::plan::costing::shard_rebuild_price;
 
 use super::sort_merge::sort_merge_join_partition;
 use super::{JoinedRow, Keyed, RowSize};
+
+/// A fault-aware partitioned run that could not finish: the seed-picked
+/// node died mid-probe, taking its placed filter shard with it.  Carries
+/// the simulated work already paid so the executor can book it (plus the
+/// `degrade_broadcast` decision stage) before falling back to a plain
+/// broadcast-filter bloom join at the same ε.
+#[derive(Debug)]
+pub struct PartitionedAbort {
+    /// The node that was lost.
+    pub node: usize,
+    /// Stages completed before the loss (route/build/ship and any shard
+    /// rebuild) — absorbed into the degraded edge's ledger.
+    pub metrics: QueryMetrics,
+}
 
 /// Key-range-sharded bloom join: build one filter shard per node from
 /// hash-routed dimension keys, place (not broadcast) each shard at its
@@ -50,6 +65,32 @@ pub fn bloom_partitioned_join<B, S>(
     small: PartitionedTable<Keyed<S>>,
     fpr: f64,
 ) -> (Vec<JoinedRow<B, S>>, QueryMetrics)
+where
+    B: Clone + Send + Sync + RowSize + 'static,
+    S: Clone + Send + Sync + RowSize + 'static,
+{
+    match bloom_partitioned_join_faulted(cluster, big, small, fpr, None) {
+        Ok(r) => r,
+        Err(_) => unreachable!("fault-free partitioned runs never abort"),
+    }
+}
+
+/// [`bloom_partitioned_join`] with a fault-injection session attached
+/// (`cluster::faults`).  A fired shard eviction is recovered *in place*:
+/// the evicted shard is rebuilt from its owning dimension partition's
+/// retained keys (lineage) and re-shipped across its one link, booked as
+/// the `shard_rebuild` recovery stage.  A fired node loss mid-probe is
+/// not recoverable in place — the shard the probe needs is gone — so the
+/// run returns [`PartitionedAbort`] with the partial ledger and the
+/// caller degrades to a plain bloom join.  `faults: None` is
+/// byte-for-byte the old behaviour and never aborts.
+pub fn bloom_partitioned_join_faulted<B, S>(
+    cluster: &Cluster,
+    big: PartitionedTable<Keyed<B>>,
+    small: PartitionedTable<Keyed<S>>,
+    fpr: f64,
+    faults: Option<&FaultSession>,
+) -> Result<(Vec<JoinedRow<B, S>>, QueryMetrics), PartitionedAbort>
 where
     B: Clone + Send + Sync + RowSize + 'static,
     S: Clone + Send + Sync + RowSize + 'static,
@@ -96,6 +137,11 @@ where
     // each shard sizes for its slice of the estimate and builds where the
     // filter will live (locality = the shard's owner node)
     let params = BloomParams::sharded(est.estimate.max(1), n_shards, fpr);
+    // lineage: an eviction plan retains each shard's routed key slice so
+    // a lost shard can be rebuilt from its owning dimension partition
+    let lineage: Option<Vec<Vec<u64>>> = faults
+        .filter(|fs| fs.plan().count_of(FaultKind::ShardEviction) > 0)
+        .map(|_| shard_keys.clone());
     let tasks: Vec<Task<BloomFilter>> = shard_keys
         .into_iter()
         .enumerate()
@@ -114,7 +160,7 @@ where
         })
         .collect();
     let build = cluster.run_stage(Stage::new("shard_build", tasks));
-    let shard_filters = build.outputs;
+    let mut shard_filters = build.outputs;
     metrics.bloom_bits = params.m_bits * n_shards as u64;
     metrics.realized_fpr = params.realized_fpr((small.n_rows() / n_shards).max(1) as u64);
     metrics.push(StageTiming {
@@ -144,6 +190,38 @@ where
     metrics.push(StageTiming { tasks: n_shards, ..StageTiming::new("shard_ship", ship) }.with_cost(
         &Cost { net_bytes: total_fb, disk_bytes: spilled, ..Default::default() },
     ));
+
+    if let Some(fs) = faults {
+        // injected fault: one shard evicted from its owner's BlockManager
+        // between placement and probe — rebuild it from the retained
+        // lineage keys and re-ship it across its one link
+        if fs.should_fire(FaultKind::ShardEviction, "shard_ship") {
+            let victim = fs.target_index(n_shards);
+            let keys = &lineage.as_ref().expect("eviction plans retain lineage")[victim];
+            let mut rebuilt = BloomFilter::new(params);
+            for &k in keys {
+                rebuilt.insert(k);
+            }
+            shard_filters[victim] = rebuilt;
+            let (sim, cost) = shard_rebuild_price(&cfg, keys.len() as u64, shard_bytes[victim]);
+            metrics.push(
+                StageTiming { tasks: 1, ..StageTiming::new("shard_rebuild", sim) }.with_cost(&cost),
+            );
+            fs.log_recovery(
+                "shard_rebuild",
+                "shard_ship",
+                format!("shard {victim} evicted; rebuilt from {} retained keys", keys.len()),
+                sim.seconds(),
+            );
+        }
+        // injected fault: a node dies mid-probe, taking its placed shard
+        // with it — not recoverable in place; hand back the partial
+        // ledger so the caller can degrade the edge
+        if fs.should_fire(FaultKind::NodeLoss, "probe") {
+            let node = fs.target_index(cfg.n_nodes.max(1));
+            return Err(PartitionedAbort { node, metrics });
+        }
+    }
 
     // -- step 5: sharded filter scan ---------------------------------------
     // each fact partition routes its keys with the *same* hash the build
@@ -209,7 +287,7 @@ where
     // -- step 6: shuffle + sort-merge join (cascade tail) ------------------
     let rows = shuffle_and_join(cluster, filtered, small.into_partitions(), &mut metrics);
     metrics.output_rows = rows.len() as u64;
-    (rows, metrics)
+    Ok((rows, metrics))
 }
 
 /// Two-round exchange bloom join: the usual dimension filter prunes the
@@ -612,6 +690,42 @@ mod tests {
             e_shuffle < c_shuffle,
             "exchange shuffle {e_shuffle} must beat cascade shuffle {c_shuffle}"
         );
+    }
+
+    #[test]
+    fn shard_eviction_rebuilds_from_lineage_bit_identical() {
+        use crate::cluster::{FaultPlan, FaultSession};
+        let cluster = Cluster::new(ClusterConfig::default());
+        let (big, small) = inputs(2_000, 200, 10_000, 1_000);
+        let (clean_rows, clean_m) =
+            bloom_partitioned_join(&cluster, big.clone(), small.clone(), 0.05);
+        assert_eq!(clean_m.recovery_s(), 0.0);
+
+        let fs = FaultSession::new(FaultPlan::parse("shard-loss").unwrap());
+        let (rows, m) = bloom_partitioned_join_faulted(&cluster, big, small, 0.05, Some(&fs))
+            .expect("an evicted shard is recoverable in place");
+        assert_eq!(rows, clean_rows, "lineage rebuild must be bit-identical");
+        let rb = m.stage("shard_rebuild").expect("rebuild booked");
+        assert!(rb.net_bytes > 0, "the rebuilt shard re-ships across one link");
+        assert_eq!(m.total_net_bytes(), clean_m.total_net_bytes() + rb.net_bytes);
+        assert!(m.stage("broadcast").is_none(), "recovery must not broadcast");
+        assert_eq!(fs.injected().len(), 1);
+        assert_eq!(fs.recovered().len(), 1);
+    }
+
+    #[test]
+    fn node_loss_aborts_with_partial_metrics() {
+        use crate::cluster::{FaultPlan, FaultSession};
+        let cluster = Cluster::new(ClusterConfig::default());
+        let (big, small) = inputs(500, 50, 1_000, 100);
+        let fs = FaultSession::new(FaultPlan::parse("node-loss").unwrap());
+        let abort = bloom_partitioned_join_faulted(&cluster, big, small, 0.05, Some(&fs))
+            .expect_err("a lost node mid-probe cannot be finished in place");
+        assert!(abort.node < ClusterConfig::default().n_nodes);
+        for stage in ["approx_count", "shard_route", "shard_build", "shard_ship"] {
+            assert!(abort.metrics.stage(stage).is_some(), "partial ledger keeps {stage}");
+        }
+        assert!(abort.metrics.stage("filter_scan").is_none(), "the probe never ran");
     }
 
     #[test]

@@ -18,7 +18,9 @@ pub mod sort_merge;
 pub mod timsort;
 
 pub use bloom_cascade::{BloomCascadeConfig, BloomCascadeJoin, FilterBuildStyle, ProbePath};
-pub use bloom_partitioned::{bloom_exchange_join, bloom_partitioned_join};
+pub use bloom_partitioned::{
+    bloom_exchange_join, bloom_partitioned_join, bloom_partitioned_join_faulted, PartitionedAbort,
+};
 pub use exec::{broadcast_hash_join, sort_merge_join};
 pub use sort_merge::sort_merge_join_partition;
 

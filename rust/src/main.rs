@@ -276,6 +276,13 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     if let Some(n) = args.parse_as::<i32>("supp-nation")? {
         spec.supp_nationkey = Some(n);
     }
+    if let Some(f) = args.get("faults") {
+        spec.faults = match bloomjoin::cluster::FaultPlan::parse(f) {
+            Ok(p) if p.is_empty() => None,
+            Ok(p) => Some(p),
+            Err(e) => anyhow::bail!("--faults: {e}"),
+        };
+    }
 
     // per-cluster calibration store (§7 constants refined from observed
     // runs) — "auto" keys the file on the cluster topology under the
@@ -596,6 +603,13 @@ COMMANDS
               broadcast|sortmerge (debug: override every edge's strategy
               after pricing — bloom variants keep their per-edge ε*; how
               CI guarantees §7 calibration samples)
+             --faults none|shard-loss|node-loss|broadcast-drop|
+              worker-panic|straggler|chaos, or a JSON object like
+              '{{\"seed\":7,\"faults\":[{{\"kind\":\"broadcast-drop\",\"count\":2}}]}}'
+              (deterministic fault injection: retries, lineage shard
+              rebuilds and strategy degradation are booked as priced
+              recovery stages; the result rows stay bit-identical to the
+              fault-free run — see docs/faults.md)
              [--json] (machine-readable plan + metrics + ledger)
              [--no-execute]
              (n-way planner: ranked filter pushdown, per-edge strategy

@@ -86,6 +86,18 @@ fn is_stage1(name: &str) -> bool {
     )
 }
 
+/// Recovery stages booked by the fault layer (`cluster::faults`).  Like
+/// `filter_cached`, they live in *neither* §7 stage bucket — recovery is
+/// overhead the fault model added, not the paper's build or probe work —
+/// but they do count in `total_sim_s`/`total_net_bytes`, so ledgers and
+/// the adaptive loop see the full price of surviving a fault.
+fn is_recovery(name: &str) -> bool {
+    matches!(
+        base_name(name),
+        "retry_ship" | "retry_build" | "shard_rebuild" | "degrade_broadcast" | "speculative_rerun"
+    )
+}
+
 impl QueryMetrics {
     pub fn push(&mut self, s: StageTiming) {
         self.stages.push(s);
@@ -157,6 +169,18 @@ impl QueryMetrics {
     /// executor's per-edge build time observation.
     pub fn bloom_creation_wall_s(&self) -> f64 {
         self.stages.iter().filter(|s| is_stage1(&s.name)).map(|s| s.wall_s).sum()
+    }
+
+    /// Simulated seconds spent on fault recovery (`retry_ship`,
+    /// `retry_build`, `shard_rebuild`, `degrade_broadcast`,
+    /// `speculative_rerun`).  Zero on every fault-free run.
+    pub fn recovery_s(&self) -> f64 {
+        self.stages.iter().filter(|s| is_recovery(&s.name)).map(|s| s.sim_s).sum()
+    }
+
+    /// The recovery stages themselves, for ledger audits.
+    pub fn recovery_stages(&self) -> Vec<&StageTiming> {
+        self.stages.iter().filter(|s| is_recovery(&s.name)).collect()
     }
 
     pub fn markdown(&self) -> String {
@@ -233,6 +257,27 @@ mod tests {
         assert!((m.bloom_creation_s() - 1.7).abs() < 1e-12);
         assert!((m.filter_join_s() - 7.0).abs() < 1e-12);
         assert!((m.total_sim_s() - 8.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovery_stages_count_in_totals_but_neither_paper_bucket() {
+        let mut m = metrics();
+        let base = (m.bloom_creation_s(), m.filter_join_s(), m.total_sim_s());
+        for name in
+            ["retry_ship", "retry_build", "shard_rebuild", "degrade_broadcast", "speculative_rerun"]
+        {
+            m.push(StageTiming { sim_s: 0.1, ..StageTiming::new(name, SimDuration::ZERO) });
+        }
+        assert!((m.bloom_creation_s() - base.0).abs() < 1e-12, "not stage 1");
+        assert!((m.filter_join_s() - base.1).abs() < 1e-12, "not stage 2");
+        assert!((m.total_sim_s() - base.2 - 0.5).abs() < 1e-12, "but fully in the total");
+        assert!((m.recovery_s() - 0.5).abs() < 1e-12);
+        assert_eq!(m.recovery_stages().len(), 5);
+        // prefixed (absorbed) recovery stages classify the same way
+        let mut plan = QueryMetrics::default();
+        plan.absorb("e1", m);
+        assert!((plan.recovery_s() - 0.5).abs() < 1e-12);
+        assert_eq!(metrics().recovery_s(), 0.0, "fault-free ledgers book zero recovery");
     }
 
     #[test]

@@ -189,6 +189,12 @@ pub struct EdgeObservation {
     /// stages entirely, so their measured stage split is not the §7
     /// model's shape either — excluded from the calibration fit.
     pub cached: bool,
+    /// Whether fault-recovery stages were booked while running the edge
+    /// (injected faults — [`crate::cluster::faults`]).  Recovered edges
+    /// pay work the §7 model does not describe (retries, rebuilds, a
+    /// degraded strategy switch), so they too are excluded from the
+    /// calibration fit.
+    pub recovered: bool,
     pub estimated_probe_rows: u64,
     pub measured_probe_rows: u64,
     /// The planner's `matched_rows` estimate for this edge.
@@ -224,6 +230,7 @@ impl EdgeObservation {
             ("eps", self.eps.map_or(Json::Null, Json::num)),
             ("resized", Json::Bool(self.resized)),
             ("cached", Json::Bool(self.cached)),
+            ("recovered", Json::Bool(self.recovered)),
             ("estimated_probe_rows", Json::num(self.estimated_probe_rows as f64)),
             ("measured_probe_rows", Json::num(self.measured_probe_rows as f64)),
             ("estimated_survivors", Json::num(self.estimated_survivors as f64)),

@@ -26,7 +26,7 @@
 //!    stage structure (SBFCJ pays six stage barriers, broadcast two,
 //!    sort-merge three).
 
-use crate::cluster::{Cluster, ClusterConfig};
+use crate::cluster::{Cluster, ClusterConfig, Cost, SimDuration};
 use crate::model::{fit, newton, CostModel};
 use crate::util::Json;
 
@@ -440,6 +440,69 @@ pub fn predict_sortmerge_s(cfg: &ClusterConfig, e: &EdgeStats) -> f64 {
     3.0 * cfg.stage_overhead + scan + shuffled + waves_s(cfg, p, per_task)
 }
 
+// ---------------------------------------------------------------------
+// Recovery-stage pricing.  Every recovery action the fault layer books
+// (`retry_ship`, `retry_build`, `shard_rebuild`, `degrade_broadcast`,
+// `speculative_rerun`) is priced here from the same [`ClusterConfig`]
+// constants as the a-priori models, so the adaptive/regret loop sees
+// recovery cost in the same currency as planned cost and a fault
+// profile's overhead is explainable from the cluster's economics.
+
+/// Price of re-shipping a dropped broadcast: the simulated capped-backoff
+/// wait plus one full extra p2p round of the filter's bytes.  The
+/// returned [`Cost`] carries the duplicate wire traffic — a retried
+/// broadcast really does cross every link again.
+pub fn retry_ship_price(
+    cfg: &ClusterConfig,
+    filter_bytes: u64,
+    backoff_s: f64,
+) -> (SimDuration, Cost) {
+    let ship = crate::cluster::broadcast::p2p_broadcast_cost(cfg, filter_bytes);
+    let net_bytes = filter_bytes.saturating_mul(cfg.total_executors() as u64);
+    let sim = SimDuration::from_secs(backoff_s) + ship;
+    (sim, Cost { net_s: ship.seconds(), net_bytes, ..Default::default() })
+}
+
+/// Price of relaunching a panicked task after the backoff wait: one
+/// fresh task launch re-doing the same compute.  The failed attempt's
+/// partial work was already measured into the stage that caught it.
+pub fn retry_build_price(cfg: &ClusterConfig, task_cpu_s: f64, backoff_s: f64) -> SimDuration {
+    SimDuration::from_secs(backoff_s + cfg.task_overhead + task_cpu_s.max(0.0) * cfg.cpu_scale)
+}
+
+/// Price of the lineage rebuild of one lost filter shard: re-insert the
+/// shard's keys from the owning dimension partition, then ship the
+/// rebuilt shard once over the owner's link.  The [`Cost`] carries the
+/// one-link re-ship bytes (a shard ships to exactly one node).
+pub fn shard_rebuild_price(
+    cfg: &ClusterConfig,
+    shard_keys: u64,
+    shard_bytes: u64,
+) -> (SimDuration, Cost) {
+    let cpu = shard_keys as f64 * cfg.hash_insert_cost;
+    let ship_s = cfg.transfer_seconds(shard_bytes);
+    let sim = SimDuration::from_secs(cfg.task_overhead + cpu * cfg.cpu_scale + ship_s);
+    (sim, Cost { net_s: ship_s, net_bytes: shard_bytes, ..Default::default() })
+}
+
+/// Price of the degrade decision itself: the coordination barrier spent
+/// abandoning a partitioned probe after a node loss and re-dispatching
+/// the edge as a plain broadcast-shipped cascade.  Deliberately carries
+/// zero bytes — the fallback run books its own broadcast stage, so
+/// pricing the wire here would double-count the traffic.
+pub fn degrade_broadcast_price(cfg: &ClusterConfig) -> SimDuration {
+    SimDuration::from_secs(cfg.stage_overhead)
+}
+
+/// Price of a speculative copy of a straggling task: one extra launch
+/// re-doing the task's compute on another slot (Spark's
+/// `spark.speculation`).  The copy wins, so the straggler's would-be
+/// delay never reaches the main stage — main stages keep their
+/// fault-free timings and the calibration's stage splits stay clean.
+pub fn speculative_rerun_price(cfg: &ClusterConfig, task_cpu_s: f64) -> SimDuration {
+    SimDuration::from_secs(cfg.task_overhead + task_cpu_s.max(0.0) * cfg.cpu_scale)
+}
+
 /// Decide every edge: probe order (star topologies), per-edge optimal ε
 /// (or the global ε), and the cheapest predicted strategy.
 pub fn plan_edges(cluster: &Cluster, spec: &PlanSpec, inputs: &PlanInputs) -> JoinPlan {
@@ -590,17 +653,22 @@ impl CostCalibration {
     /// store, contaminated samples), so the whole fit is discarded
     /// rather than applied.
     pub const FACTOR_RANGE: (f64, f64) = (0.05, 20.0);
+    /// Most quarantined `.corrupt` files kept per store (newest first);
+    /// older evidence is deleted rather than accumulated forever.
+    pub const CORRUPT_KEEP: usize = 8;
 
     /// Fold one executed edge into the store (bloom edges only — the §7
     /// stage models are the bloom cascade's).  Re-sized edges paid stage
-    /// 1 twice (build + rebuild) and cache-served edges paid it not at
-    /// all (the filter came from the server's filter cache), so neither
-    /// measured split is the model's shape; both are excluded from the
-    /// fit.
+    /// 1 twice (build + rebuild), cache-served edges paid it not at
+    /// all (the filter came from the server's filter cache), and
+    /// fault-recovered edges paid retry/rebuild/degrade work on top —
+    /// none of those measured splits is the model's shape, so all three
+    /// are excluded from the fit.
     pub fn record(&mut self, obs: &EdgeObservation) {
         let Some(eps) = obs.eps else { return };
         if obs.resized
             || obs.cached
+            || obs.recovered
             || obs.predicted_stage1_s <= 0.0
             || obs.predicted_stage2_s <= 0.0
         {
@@ -738,28 +806,75 @@ impl CostCalibration {
     /// is *not* silently discarded: it is moved aside to
     /// `<name>.json.corrupt` with a stderr warning, so the evidence
     /// survives and the recalibration from scratch is visible instead of
-    /// mysterious.
+    /// mysterious.  Quarantine history is capped at
+    /// [`Self::CORRUPT_KEEP`] files — see [`Self::quarantine_corrupt`].
     pub fn load(path: &std::path::Path) -> Option<CostCalibration> {
         let text = std::fs::read_to_string(path).ok()?;
         match Json::parse(&text).ok().as_ref().and_then(Self::from_json) {
             Some(store) => Some(store),
             None => {
-                let mut quarantine = path.as_os_str().to_os_string();
-                quarantine.push(".corrupt");
-                let moved = std::fs::rename(path, &quarantine).is_ok();
+                let moved = Self::quarantine_corrupt(path);
                 eprintln!(
                     "bloomjoin: calibration store {} is malformed; {} — \
                      recalibrating from scratch",
                     path.display(),
-                    if moved {
-                        format!("quarantined to {}", std::path::Path::new(&quarantine).display())
-                    } else {
-                        "quarantine rename failed, leaving it in place".to_string()
+                    match &moved {
+                        Some(q) => format!("quarantined to {}", q.display()),
+                        None => "quarantine rename failed, leaving it in place".to_string(),
                     }
                 );
                 None
             }
         }
+    }
+
+    /// Move a malformed store aside without destroying earlier evidence
+    /// or accumulating it forever.  The newest corruption always lands
+    /// at `<name>.corrupt`; the previous holder of that name is shifted
+    /// to a numbered sibling `<name>.corrupt.<seq>` first; then the
+    /// history is pruned oldest-first so at most [`Self::CORRUPT_KEEP`]
+    /// quarantine files survive.  (A single fixed quarantine name would
+    /// silently overwrite the previous evidence on every corruption;
+    /// unique names without the cap would grow without bound on a
+    /// long-lived server.)
+    fn quarantine_corrupt(path: &std::path::Path) -> Option<std::path::PathBuf> {
+        let mut newest = path.as_os_str().to_os_string();
+        newest.push(".corrupt");
+        let newest = std::path::PathBuf::from(newest);
+        let base = newest.file_name()?.to_string_lossy().into_owned();
+        let dir = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => std::path::PathBuf::from("."),
+        };
+
+        // numbered siblings `<base>.<seq>`; lowest seq = oldest evidence
+        let mut seqs: Vec<u64> = std::fs::read_dir(&dir)
+            .map(|it| {
+                it.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        let name = e.file_name().to_string_lossy().into_owned();
+                        name.strip_prefix(&format!("{base}."))?.parse::<u64>().ok()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        seqs.sort_unstable();
+
+        // shift the previous newest into the numbered history
+        if newest.exists() {
+            let next = seqs.last().map_or(1, |s| s + 1);
+            if std::fs::rename(&newest, dir.join(format!("{base}.{next}"))).is_ok() {
+                seqs.push(next);
+            }
+        }
+
+        // cap: numbered history + the plain name ≤ CORRUPT_KEEP
+        while seqs.len() + 1 > Self::CORRUPT_KEEP {
+            let oldest = seqs.remove(0);
+            std::fs::remove_file(dir.join(format!("{base}.{oldest}"))).ok();
+        }
+
+        std::fs::rename(path, &newest).ok().map(|()| newest)
     }
 
     /// Write-then-rename with a per-call unique temp name, so a killed
@@ -1018,6 +1133,7 @@ mod tests {
             eps: Some(0.05),
             resized: false,
             cached: false,
+            recovered: false,
             estimated_probe_rows: 100,
             measured_probe_rows: 100,
             estimated_survivors: 50,
@@ -1179,6 +1295,67 @@ mod tests {
     }
 
     #[test]
+    fn quarantine_history_rotates_to_newest_eight() {
+        let dir = std::env::temp_dir()
+            .join(format!("bloomjoin_rotate_{}_{:p}", std::process::id(), &0));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.json");
+        for i in 0..12 {
+            std::fs::write(&path, format!("{{\"samples\": [corrupt #{i}")).unwrap();
+            assert!(CostCalibration::load(&path).is_none());
+            assert!(!path.exists(), "round {i}: bad file must be moved aside");
+        }
+        // the newest evidence always sits at the plain quarantine name
+        let newest = std::fs::read_to_string(dir.join("store.json.corrupt")).unwrap();
+        assert!(newest.contains("corrupt #11"), "{newest}");
+        // total quarantine files are capped at CORRUPT_KEEP
+        let corrupt: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("store.json.corrupt"))
+            .collect();
+        assert_eq!(corrupt.len(), CostCalibration::CORRUPT_KEEP, "{corrupt:?}");
+        // the numbered history holds the next-newest, oldest pruned first
+        let shifted = std::fs::read_to_string(dir.join("store.json.corrupt.11")).unwrap();
+        assert!(shifted.contains("corrupt #10"), "{shifted}");
+        let oldest_kept = std::fs::read_to_string(dir.join("store.json.corrupt.5")).unwrap();
+        assert!(oldest_kept.contains("corrupt #4"), "{oldest_kept}");
+        assert!(
+            !dir.join("store.json.corrupt.4").exists(),
+            "evidence beyond the cap must be deleted"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recovery_prices_scale_with_work_and_conserve_bytes() {
+        let cfg = ClusterConfig::default();
+        let (ship_small, cost_small) = retry_ship_price(&cfg, 1 << 10, 0.05);
+        let (ship_large, cost_large) = retry_ship_price(&cfg, 64 << 20, 0.05);
+        assert!(ship_large.seconds() > ship_small.seconds());
+        // a retried broadcast crosses every link again
+        assert_eq!(cost_large.net_bytes, (64u64 << 20) * cfg.total_executors() as u64);
+        assert!(cost_small.net_bytes > 0);
+
+        let (reb_small, reb_cost_small) = shard_rebuild_price(&cfg, 1_000, 1 << 10);
+        let (reb_large, reb_cost_large) = shard_rebuild_price(&cfg, 10_000_000, 1 << 20);
+        assert!(reb_large.seconds() > reb_small.seconds());
+        // a rebuilt shard ships once, over one link — not to every executor
+        assert_eq!(reb_cost_large.net_bytes, 1 << 20);
+        assert_eq!(reb_cost_small.net_bytes, 1 << 10);
+
+        // the degrade decision itself is a barrier with zero bytes: the
+        // fallback run books its own broadcast traffic
+        assert_eq!(degrade_broadcast_price(&cfg).seconds(), cfg.stage_overhead);
+
+        // a retry pays the backoff a speculative copy does not
+        let retry = retry_build_price(&cfg, 0.2, 0.1);
+        let spec = speculative_rerun_price(&cfg, 0.2);
+        assert!((retry.seconds() - spec.seconds() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
     fn concurrent_saves_never_interleave() {
         let dir = std::env::temp_dir()
             .join(format!("bloomjoin_saves_{}_{:p}", std::process::id(), &0));
@@ -1220,6 +1397,10 @@ mod tests {
         cached.cached = true;
         store.record(&cached);
         assert!(store.samples.is_empty(), "cache-served edges never paid stage 1");
+        let mut recovered = obs_with(1.0, 1.0, 1.0, 1.0);
+        recovered.recovered = true;
+        store.record(&recovered);
+        assert!(store.samples.is_empty(), "fault-recovered edges paid extra recovery work");
         for i in 0..4 {
             let p1 = 1.0 + i as f64;
             store.record(&obs_with(p1, 2.0 * p1, 1.1 * p1, 2.0 * p1));

@@ -28,14 +28,17 @@
 //! whole subject.
 
 use crate::bloom::BloomFilter;
+use crate::cluster::faults::{InjectedFault, RecoveryAction};
 use crate::cluster::pool::ThreadPool;
-use crate::cluster::{Cluster, ClusterConfig};
+use crate::cluster::{Cluster, ClusterConfig, FaultKind, FaultSession};
 use crate::dataset::PartitionedTable;
 use crate::joins::bloom_cascade::{
     BloomCascadeConfig, BloomCascadeJoin, FilterResize, ResizeDecision,
 };
-use crate::joins::{bloom_exchange_join, bloom_partitioned_join, exec, JoinedRow, Keyed, RowSize};
-use crate::metrics::QueryMetrics;
+use crate::joins::{
+    bloom_exchange_join, bloom_partitioned_join_faulted, exec, JoinedRow, Keyed, RowSize,
+};
+use crate::metrics::{QueryMetrics, StageTiming};
 
 use super::adaptive::{
     estimate_error, expected_survivors, regret_flip, replan_chain_tail, replan_remaining,
@@ -43,7 +46,7 @@ use super::adaptive::{
     ReplanPolicy, ReplanTrigger, ResizeEvent, REGRET_MARGIN,
 };
 use super::catalog::{EdgeStats, FactRow, PlanInputs, STREAM_ROW_BYTES};
-use super::costing::{edge_cost_model, CostCalibration};
+use super::costing::{degrade_broadcast_price, edge_cost_model, CostCalibration};
 use super::{EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, Relation, Topology};
 
 /// One row of the n-way join result: the fact columns plus every joined
@@ -254,12 +257,17 @@ fn edge_report(edge: &PlannedEdge, m: &QueryMetrics, probe_rows: u64) -> EdgeRep
 }
 
 /// Execution result: rows + composed metrics + per-edge breakdown + the
-/// adaptive loop's observation/re-plan ledger.
+/// adaptive loop's observation/re-plan ledger + the fault session's logs.
 pub struct PlanOutput {
     pub rows: Vec<PlanRow>,
     pub metrics: QueryMetrics,
     pub edge_reports: Vec<EdgeReport>,
     pub ledger: ReplanLedger,
+    /// Faults the spec's `faults` plan injected during this execution.
+    /// Always empty on fault-free runs.
+    pub injected_faults: Vec<InjectedFault>,
+    /// Recovery actions taken, one per booked recovery stage.
+    pub recovery: Vec<RecoveryAction>,
 }
 
 impl PlanOutput {
@@ -373,6 +381,14 @@ pub trait FilterSource: Sync {
 /// it (skipping the build stages entirely) and publishes a cold build's
 /// filter back — except re-sized filters, whose ε no longer matches the
 /// fetch key the next query would look up.
+///
+/// With an active [`FaultSession`], bloom edges run the fault-aware
+/// cascade (retry/speculation recovery happens inside the strategy) and
+/// a partitioned edge that loses a node mid-probe **degrades**: the
+/// executor books the partial work plus a `degrade_broadcast` decision
+/// stage, then re-runs the edge as a plain broadcast bloom join at the
+/// same ε on inputs retained for exactly this case.
+#[allow(clippy::too_many_arguments)]
 fn run_edge<B, S>(
     cluster: &Cluster,
     edge: &PlannedEdge,
@@ -380,6 +396,7 @@ fn run_edge<B, S>(
     small: PartitionedTable<Keyed<S>>,
     resize: Option<ResizeDecision<'_>>,
     filters: Option<&dyn FilterSource>,
+    faults: Option<&FaultSession>,
 ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>)
 where
     B: Clone + Send + Sync + RowSize + 'static,
@@ -391,21 +408,67 @@ where
                 BloomCascadeJoin::new(BloomCascadeConfig { fpr: *eps, ..Default::default() });
             if let Some(src) = filters {
                 if let Some(f) = src.fetch(edge.relation, *eps) {
-                    let (rows, m) = join.execute_with_prebuilt(cluster, big, small, f);
+                    let (rows, m, _, _) =
+                        join.execute_faulted(cluster, big, small, None, Some(f), faults);
                     return (rows, m, None);
                 }
                 let (rows, m, resized, built) =
-                    join.execute_returning_filter(cluster, big, small, resize);
+                    join.execute_faulted(cluster, big, small, resize, None, faults);
                 if resized.is_none() {
                     src.publish(edge.relation, *eps, &built);
                 }
                 return (rows, m, resized);
             }
-            join.execute_with_resize(cluster, big, small, resize)
+            let (rows, m, resized, _) =
+                join.execute_faulted(cluster, big, small, resize, None, faults);
+            (rows, m, resized)
         }
         EdgeStrategy::BloomPartitioned { eps } => {
-            let (rows, m) = bloom_partitioned_join(cluster, big, small, *eps);
-            (rows, m, None)
+            // retain the inputs only when the fault plan can actually
+            // abort the edge — fault-free runs keep the move-only path
+            let backup = faults
+                .filter(|fs| fs.plan().count_of(FaultKind::NodeLoss) > 0)
+                .map(|_| (big.clone(), small.clone()));
+            match bloom_partitioned_join_faulted(cluster, big, small, *eps, faults) {
+                Ok((rows, m)) => (rows, m, None),
+                Err(abort) => {
+                    let fs = faults.expect("partitioned edges only abort under a fault session");
+                    let (big, small) = backup.expect("node-loss plans retain the edge inputs");
+                    // keep the partial work already paid, book the
+                    // degrade decision, then fall back to the plain
+                    // broadcast cascade at the same ε
+                    let mut m = abort.metrics;
+                    let sim = degrade_broadcast_price(cluster.config());
+                    m.push(StageTiming { tasks: 1, ..StageTiming::new("degrade_broadcast", sim) });
+                    fs.log_recovery(
+                        "degrade_broadcast",
+                        "probe",
+                        format!(
+                            "node {} lost mid-probe; degraded to plain bloom at eps={:.4}",
+                            abort.node, eps
+                        ),
+                        sim.seconds(),
+                    );
+                    let join = BloomCascadeJoin::new(BloomCascadeConfig {
+                        fpr: *eps,
+                        ..Default::default()
+                    });
+                    let (rows, fb, _, _) =
+                        join.execute_faulted(cluster, big, small, None, None, faults);
+                    // the fallback run is the edge's true data story; the
+                    // aborted attempt contributes only its booked stages
+                    m.big_rows_scanned = fb.big_rows_scanned;
+                    m.big_rows_after_filter = fb.big_rows_after_filter;
+                    m.output_rows = fb.output_rows;
+                    m.bloom_bits += fb.bloom_bits;
+                    m.requested_fpr = fb.requested_fpr;
+                    m.realized_fpr = fb.realized_fpr;
+                    for s in fb.stages {
+                        m.push(s);
+                    }
+                    (rows, m, None)
+                }
+            }
         }
         EdgeStrategy::BloomExchange { eps } => {
             let (rows, m) = bloom_exchange_join(cluster, big, small, *eps);
@@ -439,6 +502,7 @@ struct DimTables {
 /// dimension's payload column.  Returns the edge's metrics (and what the
 /// mid-build re-plan point did, for bloom edges); the measured survivor
 /// count is the stream's new length.
+#[allow(clippy::too_many_arguments)]
 fn run_star_edge(
     cluster: &Cluster,
     edge: &PlannedEdge,
@@ -447,6 +511,7 @@ fn run_star_edge(
     tables: &mut DimTables,
     resize: Option<ResizeDecision<'_>>,
     filters: Option<&dyn FilterSource>,
+    faults: Option<&FaultSession>,
 ) -> (QueryMetrics, Option<FilterResize>) {
     // the edge's big side: the gathered key column + stream indices —
     // survivors come back as indices + payloads
@@ -464,7 +529,7 @@ fn run_star_edge(
             let dim = tables.orders.take().expect("star plans join orders at most once");
             let small: PartitionedTable<Keyed<(u64, i32)>> =
                 dim.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect());
-            let (joined, m, resized) = run_edge(cluster, edge, big, small, resize, filters);
+            let (joined, m, resized) = run_edge(cluster, edge, big, small, resize, filters, faults);
             tables.orders_joined = true;
             let mut inner = Vec::with_capacity(joined.len());
             let mut ck = Vec::with_capacity(joined.len());
@@ -485,7 +550,7 @@ fn run_star_edge(
                 "a customer edge requires an orders edge upstream (custkey comes from ORDERS)"
             );
             let dim = tables.customer.take().expect("star plans join customer at most once");
-            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters);
+            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters, faults);
             let mut inner = Vec::with_capacity(joined.len());
             let mut nk = Vec::with_capacity(joined.len());
             for (_, idx, n) in joined {
@@ -498,7 +563,7 @@ fn run_star_edge(
         }
         Relation::Part => {
             let dim = tables.part.take().expect("star plans join part at most once");
-            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters);
+            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters, faults);
             let mut inner = Vec::with_capacity(joined.len());
             let mut brand = Vec::with_capacity(joined.len());
             for (_, idx, b) in joined {
@@ -511,7 +576,7 @@ fn run_star_edge(
         }
         Relation::Supplier => {
             let dim = tables.supplier.take().expect("star plans join supplier at most once");
-            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters);
+            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters, faults);
             let mut inner = Vec::with_capacity(joined.len());
             let mut nk = Vec::with_capacity(joined.len());
             for (_, idx, n) in joined {
@@ -573,6 +638,7 @@ fn observe_edge(
         eps,
         resized: resized.is_some(),
         cached: m.stage("filter_cached").is_some(),
+        recovered: m.recovery_s() > 0.0,
         estimated_probe_rows: edge.stats.probe_rows,
         measured_probe_rows: probe_rows,
         estimated_survivors: edge.stats.matched_rows,
@@ -749,6 +815,15 @@ pub fn execute_with_filters(
     // else — under the regret policy these outrank the persistent store
     let mut run_calib = CostCalibration::default();
     let persistent_factors = calibration.and_then(|c| c.factors());
+    // per-query fault session: meters the spec's injection plan across
+    // every edge and collects the injection/recovery logs for the
+    // report.  Inactive (all `should_fire` false, zero overhead) when
+    // the spec carries no faults.
+    let fault_session = match &spec.faults {
+        Some(p) if !p.is_empty() => FaultSession::new(p.clone()),
+        _ => FaultSession::inactive(),
+    };
+    let faults = fault_session.is_active().then_some(&fault_session);
 
     let rows: Vec<PlanRow> = match plan.topology {
         Topology::Star => {
@@ -777,8 +852,9 @@ pub fn execute_with_filters(
                     )
                 });
                 let resize = decider.as_ref().map(|f| f as ResizeDecision<'_>);
-                let (m, resized) =
-                    run_star_edge(cluster, &edge, parts, &mut stream, &mut tables, resize, filters);
+                let (m, resized) = run_star_edge(
+                    cluster, &edge, parts, &mut stream, &mut tables, resize, filters, faults,
+                );
                 let survivors = stream.len() as u64;
                 let obs = observe_edge(
                     cluster.config(),
@@ -868,7 +944,8 @@ pub fn execute_with_filters(
                         let big: PartitionedTable<Keyed<(u64, i32)>> = o.map_partitions(|p| {
                             p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect()
                         });
-                        let (joined, m, r) = run_edge(cluster, &edge, big, c, resize, filters);
+                        let (joined, m, r) =
+                            run_edge(cluster, &edge, big, c, resize, filters, faults);
                         let survivors = joined.len() as u64;
                         // re-key the reduction by orderkey for the fact edge
                         reduced = Some(PartitionedTable::from_rows(
@@ -888,7 +965,8 @@ pub fn execute_with_filters(
                         let big: PartitionedTable<Keyed<PlanRow>> = l.map_partitions(|p| {
                             p.iter().map(|f| (f.orderkey, seed_row(f))).collect()
                         });
-                        let (joined, m, r) = run_edge(cluster, &edge, big, small, resize, filters);
+                        let (joined, m, r) =
+                            run_edge(cluster, &edge, big, small, resize, filters, faults);
                         let survivors = joined.len() as u64;
                         rows_out = joined
                             .into_iter()
@@ -965,7 +1043,14 @@ pub fn execute_with_filters(
     };
 
     metrics.output_rows = rows.len() as u64;
-    PlanOutput { rows, metrics, edge_reports, ledger }
+    PlanOutput {
+        rows,
+        metrics,
+        edge_reports,
+        ledger,
+        injected_faults: fault_session.injected(),
+        recovery: fault_session.recovered(),
+    }
 }
 
 #[cfg(test)]
@@ -1135,6 +1220,90 @@ mod tests {
         assert_eq!(a.metrics.output_rows, b.metrics.output_rows);
         assert_eq!(a.metrics.big_rows_scanned, b.metrics.big_rows_scanned);
         assert_eq!(a.metrics.big_rows_after_filter, b.metrics.big_rows_after_filter);
+    }
+
+    /// A forced plan whose strategies expose every injection point:
+    /// a plain bloom edge (broadcast-drop / worker-panic / straggler)
+    /// and a partitioned edge (shard-loss / node-loss).
+    fn forced_fault_plan() -> JoinPlan {
+        JoinPlan {
+            topology: Topology::Star,
+            edges: vec![
+                PlannedEdge::forced(Relation::Orders, "e1", EdgeStrategy::Bloom { eps: 0.05 }),
+                PlannedEdge::forced(
+                    Relation::Customer,
+                    "e2",
+                    EdgeStrategy::BloomPartitioned { eps: 0.05 },
+                ),
+            ],
+            dim_stats: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn chaos_star_recovers_bit_identical_with_prefixed_recovery_stages() {
+        use crate::cluster::FaultPlan;
+        let clean_spec = tiny_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&clean_spec);
+        let plan = forced_fault_plan();
+        let mut clean = execute(&cluster, &clean_spec, &plan, inputs.clone());
+        assert!(clean.injected_faults.is_empty() && clean.recovery.is_empty());
+
+        let spec = PlanSpec { faults: FaultPlan::parse("chaos").ok(), ..clean_spec };
+        let mut out = execute(&cluster, &spec, &plan, inputs);
+        clean.rows.sort_unstable();
+        out.rows.sort_unstable();
+        assert_eq!(out.rows, clean.rows, "recovered run must match the fault-free rows");
+        // both strategies expose every chaos kind, so all five fire
+        assert_eq!(out.injected_faults.len(), FaultKind::ALL.len());
+        assert_eq!(out.injected_faults.len(), out.recovery.len(), "every fault recovered");
+        // recovery stages land under the owning edge's e{i}/ prefix, so
+        // per-edge ledger slices stay consistent with the observations
+        let recovery: Vec<&str> =
+            out.metrics.recovery_stages().iter().map(|s| s.name.as_str()).collect();
+        assert!(!recovery.is_empty());
+        let prefixes: Vec<String> = (1..=plan.edges.len()).map(|i| format!("e{i}/")).collect();
+        assert!(recovery.iter().all(|n| prefixes.iter().any(|p| n.starts_with(p.as_str()))));
+        for (i, r) in out.edge_reports.iter().enumerate() {
+            let slice = out.metrics.prefix_sim_s(&format!("e{}", i + 1));
+            assert!((slice - r.sim_s).abs() < 1e-9, "edge {i}: {slice} vs {}", r.sim_s);
+        }
+        // recovered edges are flagged so calibration skips them
+        assert!(out.ledger.observations.iter().any(|o| o.recovered));
+        assert!(clean.ledger.observations.iter().all(|o| !o.recovered));
+    }
+
+    #[test]
+    fn node_loss_degrades_partitioned_edge_to_plain_bloom() {
+        use crate::cluster::FaultPlan;
+        let base = tiny_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&base);
+        let plan = forced_fault_plan();
+        let mut clean = execute(&cluster, &base, &plan, inputs.clone());
+
+        let spec =
+            PlanSpec { faults: Some(FaultPlan::single(FaultKind::NodeLoss, 1)), ..base };
+        let mut out = execute(&cluster, &spec, &plan, inputs);
+        clean.rows.sort_unstable();
+        out.rows.sort_unstable();
+        assert_eq!(out.rows, clean.rows, "degraded run must match the fault-free rows");
+        let degrade = out
+            .metrics
+            .stages
+            .iter()
+            .find(|s| s.name.ends_with("degrade_broadcast"))
+            .expect("degrade stage booked");
+        assert_eq!(degrade.net_bytes, 0, "the degrade decision ships nothing itself");
+        assert!(out.recovery.iter().any(|r| r.action == "degrade_broadcast"));
+        // the fallback cascade broadcasts where the partitioned edge
+        // would not (the no-broadcast invariant holds fault-free)
+        let broadcasts = |o: &PlanOutput| {
+            o.metrics.stages.iter().filter(|s| s.name.ends_with("/broadcast")).count()
+        };
+        assert!(broadcasts(&out) > 0);
+        assert_eq!(broadcasts(&clean), 0);
     }
 
     #[test]

@@ -73,9 +73,10 @@ pub use catalog::{
     chain_edge_stats, prepare, star_dim_stats, DimStats, EdgeStats, FactRow, PlanInputs, Relation,
 };
 pub use costing::{
-    cost_fingerprint, derive_edge_stats, discount_cached_builds, plan_edges,
-    plan_edges_calibrated, price_edges_with, rank_dims, star_edge_stats, CostCalibration,
-    EdgePrediction, StrategyCost,
+    cost_fingerprint, degrade_broadcast_price, derive_edge_stats, discount_cached_builds,
+    plan_edges, plan_edges_calibrated, price_edges_with, rank_dims, retry_build_price,
+    retry_ship_price, shard_rebuild_price, speculative_rerun_price, star_edge_stats,
+    CostCalibration, EdgePrediction, StrategyCost,
 };
 pub use executor::{
     execute, execute_with, execute_with_filters, nested_loop_oracle, EdgeReport, FilterSource,
@@ -182,6 +183,12 @@ pub struct PlanSpec {
     /// Absolute row floor both re-plan triggers must clear — a relative
     /// breach on fewer residual rows than this is noise, not information.
     pub replan_floor: u64,
+    /// Deterministic fault-injection plan for this execution (`--faults`
+    /// / the server request's `faults` field); `None` = fault-free.
+    /// Excluded from [`spec_fingerprint`] on purpose: faults are a
+    /// runtime injection, not a planning identity, and fragmenting the
+    /// plan cache by fault profile would defeat the cache.
+    pub faults: Option<crate::cluster::FaultPlan>,
 }
 
 impl Default for PlanSpec {
@@ -203,6 +210,7 @@ impl Default for PlanSpec {
             pushdown: PushdownMode::Ranked,
             replan: ReplanPolicy::Static,
             replan_floor: DEFAULT_ROW_FLOOR,
+            faults: None,
         }
     }
 }

@@ -75,6 +75,15 @@ pub fn plan_report_json(
         fields.push(("metrics", out.metrics.to_json()));
         fields.push(("ledger", out.ledger.to_json()));
         fields.push(("edge_reports", Json::Arr(reports)));
+        // fault sections appear only when something actually fired, so
+        // fault-free payloads stay byte-identical to the pre-fault shape
+        if !out.injected_faults.is_empty() || !out.recovery.is_empty() {
+            let injected: Vec<Json> = out.injected_faults.iter().map(|f| f.to_json()).collect();
+            let recovery: Vec<Json> = out.recovery.iter().map(|r| r.to_json()).collect();
+            fields.push(("injected_faults", Json::Arr(injected)));
+            fields.push(("recovery", Json::Arr(recovery)));
+            fields.push(("recovery_s", Json::num(out.metrics.recovery_s())));
+        }
     }
     Json::obj(fields)
 }

@@ -11,12 +11,67 @@
 //! (`"bad_request"`), so clients can retry the former and must fix the
 //! latter.
 
+use crate::cluster::FaultPlan;
 use crate::plan::{
     EpsMode, PlanSpec, PushdownMode, Relation, ReplanPolicy, StrategyKind, Topology,
 };
 use crate::util::Json;
 
 use super::admission::Shed;
+
+/// Hard cap on one request line.  A line-oriented protocol that buffers
+/// until `\n` is an invitation to exhaust memory with a newline-free
+/// stream; past this many bytes the rest of the line is *drained*
+/// (never buffered) and the request is rejected with a typed
+/// `bad_request` — the connection survives.
+pub const MAX_REQUEST_LINE_BYTES: usize = 1 << 20;
+
+/// Read one `\n`-terminated request line from `reader`, buffering at
+/// most [`MAX_REQUEST_LINE_BYTES`].
+///
+/// * `Ok(None)` — clean EOF (no pending bytes);
+/// * `Ok(Some(Ok(line)))` — a complete line within the cap (also the
+///   final unterminated line before EOF);
+/// * `Ok(Some(Err(bytes)))` — the line ran past the cap; `bytes` is how
+///   long it actually was.  The oversized tail was consumed chunk by
+///   chunk, so the next call starts at the next line.
+pub fn read_bounded_line<R: std::io::BufRead>(
+    reader: &mut R,
+) -> std::io::Result<Option<Result<String, usize>>> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut total: usize = 0;
+    let mut overlong = false;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(match (total, overlong) {
+                (0, _) => None,
+                (_, true) => Some(Err(total)),
+                (_, false) => Some(Ok(String::from_utf8_lossy(&buf).into_owned())),
+            });
+        }
+        let newline = chunk.iter().position(|&b| b == b'\n');
+        let take = newline.map_or(chunk.len(), |p| p);
+        total = total.saturating_add(take);
+        if !overlong {
+            if buf.len() + take > MAX_REQUEST_LINE_BYTES {
+                overlong = true;
+                buf = Vec::new(); // free what was buffered before the cap hit
+            } else {
+                buf.extend_from_slice(&chunk[..take]);
+            }
+        }
+        let done = newline.is_some();
+        reader.consume(take + usize::from(done));
+        if done {
+            return Ok(Some(if overlong {
+                Err(total)
+            } else {
+                Ok(String::from_utf8_lossy(&buf).into_owned())
+            }));
+        }
+    }
+}
 
 /// A validated `plan` request: the spec plus execution toggles.
 #[derive(Clone, Debug)]
@@ -184,6 +239,20 @@ fn spec_from(j: &Json) -> Result<PlanSpec, String> {
     if j.get("supp_nation").is_some() {
         spec.supp_nationkey = get_u64(j, "supp_nation")?.map(|v| v as i32);
     }
+    match j.get("faults") {
+        None | Some(Json::Null) => {}
+        Some(Json::Str(s)) => {
+            let plan = FaultPlan::parse(s).map_err(|e| format!("faults: {e}"))?;
+            spec.faults = (!plan.is_empty()).then_some(plan);
+        }
+        Some(obj @ Json::Obj(_)) => {
+            let plan = FaultPlan::from_json(obj).map_err(|e| format!("faults: {e}"))?;
+            spec.faults = (!plan.is_empty()).then_some(plan);
+        }
+        Some(_) => {
+            return Err("faults must be a profile string or a fault-plan object".into());
+        }
+    }
     Ok(spec)
 }
 
@@ -331,6 +400,72 @@ mod tests {
         let Request::Plan(req) = p.req else { panic!() };
         assert_eq!(req.spec.mktsegment, None, "explicit null overrides the Some(0) default");
         assert_ne!(PlanSpec::default().mktsegment, None);
+    }
+
+    #[test]
+    fn faults_field_accepts_profiles_and_objects() {
+        let p = parse_request(
+            r#"{"op":"plan","relations":"lineitem,orders","faults":"chaos"}"#,
+        )
+        .expect("profile string parses");
+        let Request::Plan(req) = p.req else { panic!() };
+        let plan = req.spec.faults.expect("chaos is a non-empty plan");
+        assert!(!plan.is_empty());
+
+        let p = parse_request(
+            r#"{"op":"plan","relations":"lineitem,orders",
+                "faults":{"seed":7,"faults":[{"kind":"broadcast-drop","count":2}]}}"#,
+        )
+        .expect("object parses");
+        let Request::Plan(req) = p.req else { panic!() };
+        let plan = req.spec.faults.expect("object plan kept");
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.count_of(crate::cluster::FaultKind::BroadcastDrop), 2);
+
+        // "none" and explicit null both leave the spec fault-free
+        for line in [
+            r#"{"op":"plan","relations":"lineitem,orders","faults":"none"}"#,
+            r#"{"op":"plan","relations":"lineitem,orders","faults":null}"#,
+        ] {
+            let p = parse_request(line).expect(line);
+            let Request::Plan(req) = p.req else { panic!() };
+            assert!(req.spec.faults.is_none(), "{line}");
+        }
+
+        for (line, needle) in [
+            (r#"{"op":"plan","relations":"lineitem,orders","faults":"meteor"}"#, "faults"),
+            (r#"{"op":"plan","relations":"lineitem,orders","faults":3}"#, "faults"),
+        ] {
+            let err = parse_request(line).expect_err(line);
+            assert!(err.message.contains(needle), "{line} -> {}", err.message);
+        }
+    }
+
+    #[test]
+    fn bounded_line_reader_rejects_oversized_lines_and_keeps_reading() {
+        use std::io::BufReader;
+        let oversized = "x".repeat(MAX_REQUEST_LINE_BYTES + 10);
+        let input = format!("{oversized}\n{{\"op\":\"ping\"}}\nshort tail");
+        // tiny BufReader capacity forces the chunk-at-a-time drain path
+        let mut r = BufReader::with_capacity(64, input.as_bytes());
+
+        let first = read_bounded_line(&mut r).unwrap().expect("not eof");
+        let bytes = first.expect_err("oversized line must be rejected");
+        assert_eq!(bytes, MAX_REQUEST_LINE_BYTES + 10);
+
+        let second = read_bounded_line(&mut r).unwrap().expect("not eof");
+        assert_eq!(second.expect("fits"), r#"{"op":"ping"}"#, "next line survives the drain");
+
+        let third = read_bounded_line(&mut r).unwrap().expect("not eof");
+        assert_eq!(third.expect("fits"), "short tail", "unterminated final line is delivered");
+
+        assert!(read_bounded_line(&mut r).unwrap().is_none(), "clean EOF");
+
+        // exactly at the cap is allowed
+        let at_cap = "y".repeat(MAX_REQUEST_LINE_BYTES);
+        let mut r = BufReader::with_capacity(64, at_cap.as_bytes());
+        let line = read_bounded_line(&mut r).unwrap().expect("not eof").expect("at cap fits");
+        assert_eq!(line.len(), MAX_REQUEST_LINE_BYTES);
     }
 
     #[test]

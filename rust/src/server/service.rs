@@ -326,6 +326,24 @@ impl Engine {
                     ("discounted_edges", Json::num(discounted as f64)),
                 ]),
             );
+            // a faulted query is answered, not shed: the `degraded` ledger
+            // says what it cost.  Absent on fault-free runs, so those
+            // payloads are byte-identical to the pre-fault protocol.
+            if let Some(out) = &out {
+                if !out.recovery.is_empty() || !out.injected_faults.is_empty() {
+                    let strategy_degraded =
+                        out.recovery.iter().any(|r| r.action == "degrade_broadcast");
+                    m.insert(
+                        "degraded".to_string(),
+                        Json::obj([
+                            ("strategy_degraded", Json::Bool(strategy_degraded)),
+                            ("injected_faults", Json::num(out.injected_faults.len() as f64)),
+                            ("recovery_actions", Json::num(out.recovery.len() as f64)),
+                            ("recovery_s", Json::num(out.metrics.recovery_s())),
+                        ]),
+                    );
+                }
+            }
         }
         payload
     }
@@ -431,13 +449,26 @@ fn respond(w: &SharedWriter, j: &Json) {
 /// queue and then shed exactly as configured.
 pub fn serve_lines<R: BufRead>(
     engine: &Arc<Engine>,
-    reader: R,
+    mut reader: R,
     writer: SharedWriter,
 ) -> anyhow::Result<()> {
     let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let mut shut = false;
-    for line in reader.lines() {
-        let line = line?;
+    while let Some(read) = protocol::read_bounded_line(&mut reader)? {
+        let line = match read {
+            Ok(l) => l,
+            Err(bytes) => {
+                // bounded buffering (protocol::MAX_REQUEST_LINE_BYTES):
+                // the oversized line was drained, not stored — reject it
+                // and keep serving the connection
+                let msg = format!(
+                    "request line of {bytes} bytes exceeds the {} byte limit",
+                    protocol::MAX_REQUEST_LINE_BYTES
+                );
+                respond(&writer, &protocol::error_response("-", "bad_request", &msg));
+                continue;
+            }
+        };
         let line = line.trim();
         if line.is_empty() {
             continue;

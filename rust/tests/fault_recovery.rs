@@ -1,0 +1,335 @@
+//! Fault-recovery integration properties: under **every** named fault
+//! profile (`cluster::faults`), a star plan forced onto each of the five
+//! strategies returns exactly the rows of its fault-free run (itself
+//! checked against the nested-loop oracle), recovery actions are booked
+//! as priced, prefixed metrics stages with conserved shipped bytes, and
+//! zero-fault runs book zero recovery with unchanged stage ledgers.
+//! Deterministic: the same seeded plan injects at the same points twice.
+
+use bloomjoin::cluster::{Cluster, ClusterConfig, FaultKind, FaultPlan};
+use bloomjoin::dataset::PartitionedTable;
+use bloomjoin::plan::{
+    execute, nested_loop_oracle, EdgeStrategy, FactRow, JoinPlan, PlanInputs, PlanOutput,
+    PlanSpec, PlannedEdge, Relation, Topology,
+};
+use bloomjoin::testkit::check;
+
+struct StarCase {
+    customer: Vec<(u64, i32)>,
+    orders: Vec<(u64, u64, i32)>,
+    lineitem: Vec<FactRow>,
+}
+
+fn gen_star(g: &mut bloomjoin::testkit::Gen) -> StarCase {
+    let cust_space = 1 + g.u64_below(40);
+    let order_space = 1 + g.u64_below(120);
+    StarCase {
+        customer: (0..g.size)
+            .map(|_| (g.rng.below(cust_space), g.rng.next_u32() as i32 % 25))
+            .collect(),
+        orders: (0..g.size * 2)
+            .map(|_| {
+                (g.rng.below(order_space), g.rng.below(cust_space), g.rng.below(2_000) as i32)
+            })
+            .collect(),
+        lineitem: (0..g.size * 5)
+            .map(|_| FactRow {
+                orderkey: g.rng.below(order_space),
+                partkey: 1 + g.rng.below(10),
+                suppkey: 1 + g.rng.below(5),
+                price_cents: g.rng.next_u64() as i64,
+            })
+            .collect(),
+    }
+}
+
+fn star_inputs(case: &StarCase) -> PlanInputs {
+    PlanInputs {
+        customer: PartitionedTable::from_rows(case.customer.clone(), 3),
+        orders: PartitionedTable::from_rows(case.orders.clone(), 4),
+        lineitem: PartitionedTable::from_rows(case.lineitem.clone(), 5),
+        part: PartitionedTable::from_rows(Vec::new(), 2),
+        supplier: PartitionedTable::from_rows(Vec::new(), 2),
+    }
+}
+
+const DIMS: [Relation; 2] = [Relation::Orders, Relation::Customer];
+
+fn star_plan(strat: &EdgeStrategy) -> JoinPlan {
+    JoinPlan {
+        topology: Topology::Star,
+        edges: DIMS
+            .iter()
+            .enumerate()
+            .map(|(i, &rel)| PlannedEdge::forced(rel, format!("e{}", i + 1), strat.clone()))
+            .collect(),
+        dim_stats: Vec::new(),
+    }
+}
+
+fn strategies() -> [EdgeStrategy; 5] {
+    [
+        EdgeStrategy::Bloom { eps: 0.05 },
+        EdgeStrategy::BloomPartitioned { eps: 0.05 },
+        EdgeStrategy::BloomExchange { eps: 0.05 },
+        EdgeStrategy::Broadcast,
+        EdgeStrategy::SortMerge,
+    ]
+}
+
+/// Which profiles can actually fire on a plan forced onto `strat`:
+/// the cascade exposes broadcast/build/probe points, the partitioned
+/// strategy exposes shard and node points, and the exchange, broadcast
+/// and sort-merge paths carry no injection points at all.
+fn fires(strat: &EdgeStrategy, profile: &str) -> bool {
+    match strat {
+        EdgeStrategy::Bloom { .. } => {
+            matches!(profile, "broadcast-drop" | "worker-panic" | "straggler" | "chaos")
+        }
+        EdgeStrategy::BloomPartitioned { .. } => {
+            matches!(profile, "shard-loss" | "node-loss" | "chaos")
+        }
+        _ => false,
+    }
+}
+
+fn faulted_spec(profile: &str) -> PlanSpec {
+    let plan = FaultPlan::parse(profile).expect("named profiles always parse");
+    PlanSpec {
+        partitions: 4,
+        faults: (!plan.is_empty()).then_some(plan),
+        ..Default::default()
+    }
+}
+
+fn sorted_rows(out: &PlanOutput) -> Vec<bloomjoin::plan::PlanRow> {
+    let mut rows = out.rows.clone();
+    rows.sort_unstable();
+    rows
+}
+
+#[test]
+fn every_fault_profile_recovers_bit_identical_for_every_strategy() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("fault profile × strategy ≡ fault-free oracle", 3, gen_star, |case| {
+        let want = nested_loop_oracle(&star_inputs(case), &DIMS);
+        for strat in strategies() {
+            let plan = star_plan(&strat);
+            let clean = execute(&cluster, &faulted_spec("none"), &plan, star_inputs(case));
+            let clean_rows = sorted_rows(&clean);
+            if clean_rows != want {
+                return Err(format!("{}: fault-free run diverges from oracle", strat.label()));
+            }
+            if !clean.injected_faults.is_empty() || !clean.recovery.is_empty() {
+                return Err("zero-fault run must carry empty fault ledgers".into());
+            }
+            if clean.metrics.recovery_s() != 0.0 {
+                return Err("zero-fault run booked recovery seconds".into());
+            }
+            for profile in FaultPlan::PROFILES {
+                if profile == "none" {
+                    continue;
+                }
+                let out = execute(&cluster, &faulted_spec(profile), &plan, star_inputs(case));
+                if sorted_rows(&out) != clean_rows {
+                    return Err(format!(
+                        "{} × {profile}: recovered rows differ from fault-free",
+                        strat.label()
+                    ));
+                }
+                if out.injected_faults.len() != out.recovery.len() {
+                    return Err(format!(
+                        "{} × {profile}: {} faults but {} recoveries",
+                        strat.label(),
+                        out.injected_faults.len(),
+                        out.recovery.len()
+                    ));
+                }
+                let expect_fire = fires(&strat, profile);
+                if expect_fire != !out.injected_faults.is_empty() {
+                    return Err(format!(
+                        "{} × {profile}: expected fire={expect_fire}, injected {}",
+                        strat.label(),
+                        out.injected_faults.len()
+                    ));
+                }
+                let booked = out.metrics.recovery_s();
+                if expect_fire && booked <= 0.0 {
+                    return Err(format!(
+                        "{} × {profile}: faults fired but no recovery stage booked",
+                        strat.label()
+                    ));
+                }
+                if !expect_fire && (booked != 0.0 || !out.metrics.recovery_stages().is_empty()) {
+                    return Err(format!(
+                        "{} × {profile}: no fault applies yet recovery was booked",
+                        strat.label()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Shipped-byte conservation on the wire-heavy recovery paths: a dropped
+/// broadcast pays exactly one duplicate ship (same bytes as the original
+/// broadcast stage), and the strategy-degrade stage ships zero bytes —
+/// the fallback re-ships through its own broadcast stage instead.
+#[test]
+fn recovery_stages_conserve_shipped_bytes() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("recovery byte conservation", 3, gen_star, |case| {
+        let bloom = star_plan(&EdgeStrategy::Bloom { eps: 0.05 });
+        let clean = execute(&cluster, &faulted_spec("none"), &bloom, star_inputs(case));
+        let dropped =
+            execute(&cluster, &faulted_spec("broadcast-drop"), &bloom, star_inputs(case));
+        let stage = |out: &PlanOutput, suffix: &str| {
+            out.metrics
+                .stages
+                .iter()
+                .filter(|s| s.name.ends_with(suffix))
+                .map(|s| s.net_bytes)
+                .sum::<u64>()
+        };
+        let dup = stage(&dropped, "retry_ship");
+        if dup == 0 {
+            return Err("retry_ship must re-pay the broadcast bytes".into());
+        }
+        // the drop hit exactly one of the two broadcasts; the duplicate
+        // equals that edge's original ship, and the total is clean + dup
+        let clean_total: u64 = clean.metrics.stages.iter().map(|s| s.net_bytes).sum();
+        let faulted_total: u64 = dropped.metrics.stages.iter().map(|s| s.net_bytes).sum();
+        if faulted_total != clean_total + dup {
+            return Err(format!(
+                "net bytes not conserved: clean {clean_total} + dup {dup} != {faulted_total}"
+            ));
+        }
+
+        let part = star_plan(&EdgeStrategy::BloomPartitioned { eps: 0.05 });
+        let degraded = execute(&cluster, &faulted_spec("node-loss"), &part, star_inputs(case));
+        let degrade_stages: Vec<_> = degraded
+            .metrics
+            .stages
+            .iter()
+            .filter(|s| s.name.ends_with("degrade_broadcast"))
+            .collect();
+        if degrade_stages.is_empty() {
+            return Err("node loss on a partitioned edge must book degrade_broadcast".into());
+        }
+        if degrade_stages.iter().any(|s| s.net_bytes != 0) {
+            return Err("degrade_broadcast is a barrier, not a ship: zero bytes".into());
+        }
+        Ok(())
+    });
+}
+
+/// The same seeded fault plan replayed against the same inputs injects
+/// at the same points, books the same recovery ledger, and returns the
+/// same rows — fault runs are replayable, not merely tolerated.
+#[test]
+fn fault_injection_is_deterministic_across_replays() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("seeded fault replay determinism", 3, gen_star, |case| {
+        for strat in [
+            EdgeStrategy::Bloom { eps: 0.05 },
+            EdgeStrategy::BloomPartitioned { eps: 0.05 },
+        ] {
+            let plan = star_plan(&strat);
+            let spec = faulted_spec("chaos");
+            let a = execute(&cluster, &spec, &plan, star_inputs(case));
+            let b = execute(&cluster, &spec, &plan, star_inputs(case));
+            if sorted_rows(&a) != sorted_rows(&b) {
+                return Err(format!("{}: replay changed the rows", strat.label()));
+            }
+            let points = |out: &PlanOutput| {
+                out.injected_faults
+                    .iter()
+                    .map(|f| (f.kind.name().to_string(), f.point.clone()))
+                    .collect::<Vec<_>>()
+            };
+            if points(&a) != points(&b) {
+                return Err(format!("{}: replay injected at different points", strat.label()));
+            }
+            let actions = |out: &PlanOutput| {
+                out.recovery
+                    .iter()
+                    .map(|r| (r.action.clone(), r.point.clone(), r.sim_s.to_bits()))
+                    .collect::<Vec<_>>()
+            };
+            if actions(&a) != actions(&b) {
+                return Err(format!("{}: replay recovered differently", strat.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// An explicit `none` profile (an empty plan) must execute the exact
+/// stage ledger of a spec with no faults field at all — the fault path
+/// costs nothing when nothing is injected.
+#[test]
+fn none_profile_leaves_the_stage_ledger_unchanged() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("none ≡ absent faults field", 3, gen_star, |case| {
+        for strat in strategies() {
+            let plan = star_plan(&strat);
+            let absent = PlanSpec { partitions: 4, ..Default::default() };
+            let explicit = PlanSpec {
+                partitions: 4,
+                faults: Some(FaultPlan::parse("none").unwrap()),
+                ..Default::default()
+            };
+            let a = execute(&cluster, &absent, &plan, star_inputs(case));
+            let b = execute(&cluster, &explicit, &plan, star_inputs(case));
+            if sorted_rows(&a) != sorted_rows(&b) {
+                return Err(format!("{}: empty fault plan changed the rows", strat.label()));
+            }
+            let names = |out: &PlanOutput| {
+                out.metrics.stages.iter().map(|s| s.name.clone()).collect::<Vec<_>>()
+            };
+            if names(&a) != names(&b) {
+                return Err(format!("{}: empty fault plan changed the stages", strat.label()));
+            }
+            if !b.injected_faults.is_empty() || !b.recovery.is_empty() {
+                return Err("empty fault plan must stay inactive".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A plan mixing a cascade edge with a partitioned edge exposes every
+/// injection point, so the `chaos` profile must fire all five fault
+/// kinds — the profile's coverage is a property of the plan shape, not
+/// luck.
+#[test]
+fn chaos_on_mixed_plan_fires_every_kind_once() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("mixed plan chaos coverage", 3, gen_star, |case| {
+        let plan = JoinPlan {
+            topology: Topology::Star,
+            edges: vec![
+                PlannedEdge::forced(Relation::Orders, "e1", EdgeStrategy::Bloom { eps: 0.05 }),
+                PlannedEdge::forced(
+                    Relation::Customer,
+                    "e2",
+                    EdgeStrategy::BloomPartitioned { eps: 0.05 },
+                ),
+            ],
+            dim_stats: Vec::new(),
+        };
+        let clean = execute(&cluster, &faulted_spec("none"), &plan, star_inputs(case));
+        let out = execute(&cluster, &faulted_spec("chaos"), &plan, star_inputs(case));
+        if sorted_rows(&out) != sorted_rows(&clean) {
+            return Err("chaos run diverged from fault-free rows".into());
+        }
+        let mut kinds: Vec<&str> = out.injected_faults.iter().map(|f| f.kind.name()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        if kinds.len() != FaultKind::ALL.len() {
+            return Err(format!("chaos fired only {kinds:?} on a bloom+partitioned plan"));
+        }
+        Ok(())
+    });
+}

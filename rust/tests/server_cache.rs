@@ -7,7 +7,7 @@
 use std::io::Write;
 use std::sync::{Arc, Mutex};
 
-use bloomjoin::cluster::ClusterConfig;
+use bloomjoin::cluster::{ClusterConfig, FaultPlan};
 use bloomjoin::plan::{
     execute, filter_context_fingerprint, prepare, plan_edges, EdgeStrategy, PlanSpec, Relation,
     StrategyKind, Topology,
@@ -182,6 +182,97 @@ fn concurrent_queries_match_sequential_oracle() {
     for h in handles {
         h.join().unwrap();
     }
+}
+
+/// A request carrying a fault plan is *answered*, not shed: the rows
+/// match the fault-free run bit-for-bit and the payload carries the
+/// `degraded` ledger (injected faults, recovery actions, priced
+/// recovery seconds).  Fault-free payloads never grow the section.
+#[test]
+fn faulted_request_degrades_instead_of_shedding() {
+    let engine = Engine::new(config());
+    let clean_req = request(&[Relation::Orders, Relation::Customer], Topology::Star);
+    let mut chaos_req = clean_req.clone();
+    chaos_req.spec.faults = Some(FaultPlan::parse("chaos").unwrap());
+
+    let clean = engine.run_plan(&clean_req);
+    let faulted = engine.run_plan(&chaos_req);
+    assert_eq!(
+        clean.get("rows"),
+        faulted.get("rows"),
+        "recovered answer must match the fault-free answer"
+    );
+    assert!(clean.get("degraded").is_none(), "fault-free payloads carry no degraded section");
+    let degraded = faulted.get("degraded").expect("faulted payload carries the ledger");
+    assert!(
+        degraded.get("recovery_actions").and_then(Json::as_f64).unwrap() >= 1.0,
+        "chaos on a bloom-forced plan must recover at least once"
+    );
+    assert!(degraded.get("recovery_s").and_then(Json::as_f64).unwrap() > 0.0);
+    // the wire report also itemises the actions
+    let recovery = faulted.get("recovery").expect("wire report itemises actions");
+    assert!(matches!(recovery, Json::Arr(a) if !a.is_empty()));
+}
+
+/// Shutdown under load: with every slot busy and the queue full, a
+/// `shutdown` op drains all admitted queries — every one of them is
+/// answered before the final stats ack, nothing is dropped, and the
+/// ack's ledger counts them all as completed.
+#[test]
+fn shutdown_under_load_drains_every_admitted_query() {
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    let engine = Arc::new(Engine::new(ServerConfig {
+        max_inflight: 2,
+        max_queue: 2,
+        ..config()
+    }));
+    let plan_line = r#"{"id":"Q","op":"plan","relations":"lineitem,orders",
+                        "sf":0.002,"partitions":2,"force_strategy":"bloom","hold_ms":150}"#
+        .replace('\n', " ");
+    // 4 concurrent plans saturate both slots and the whole queue; the
+    // shutdown arrives while all of them are still holding/queued
+    let script = [
+        plan_line.replace(r#""id":"Q""#, r#""id":"q1""#),
+        plan_line.replace(r#""id":"Q""#, r#""id":"q2""#),
+        plan_line.replace(r#""id":"Q""#, r#""id":"q3""#),
+        plan_line.replace(r#""id":"Q""#, r#""id":"q4""#),
+        r#"{"id":"bye","op":"shutdown"}"#.to_string(),
+    ]
+    .join("\n");
+
+    let buf = SharedBuf::default();
+    let writer: Arc<Mutex<Box<dyn Write + Send>>> = Arc::new(Mutex::new(Box::new(buf.clone())));
+    serve_lines(&engine, script.as_bytes(), writer).expect("serve loop shuts down cleanly");
+
+    let raw = buf.0.lock().unwrap().clone();
+    let text = String::from_utf8(raw).unwrap();
+    let mut order = Vec::new();
+    let mut by_id = std::collections::HashMap::new();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every response line is JSON");
+        let id = j.get("id").and_then(Json::as_str).unwrap().to_string();
+        order.push(id.clone());
+        by_id.insert(id, j);
+    }
+    for q in ["q1", "q2", "q3", "q4"] {
+        assert_eq!(by_id[q].get("ok"), Some(&Json::Bool(true)), "{q} must be answered");
+    }
+    assert_eq!(order.last().map(String::as_str), Some("bye"), "the ack is the final line");
+    let finale = by_id["bye"].get("result").unwrap();
+    assert_eq!(finale.get("completed").and_then(Json::as_f64), Some(4.0));
+    assert_eq!(finale.get("shed").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(finale.get("inflight").and_then(Json::as_f64), Some(0.0));
 }
 
 /// The NDJSON front door end-to-end over an in-memory reader/writer

@@ -49,6 +49,14 @@ TRACKED = {
         "server cache win ratio (cold/warm p50)",
         lambda p: p["cold_p50_ms"] / max(p["warm_p50_ms"], 1e-9),
     ),
+    # fault-recovery efficiency: the clean plan's simulated total over the
+    # same plan under the chaos profile.  Both totals are simulated, so
+    # the ratio is exact and deterministic; it falls (trips the gate) when
+    # surviving faults gets more expensive relative to the clean run
+    "fig12_faults": (
+        "fault recovery efficiency (clean/chaos sim)",
+        lambda p: p["clean_sim_s"] / max(p["chaos_sim_s"], 1e-9),
+    ),
 }
 # fail when a metric drops below this fraction of the last committed point
 THRESHOLD = 0.8
