@@ -31,13 +31,21 @@ GOLDEN_FOLD64 = {
 
 
 # key_u64 -> wide64(key): (h1 << 32) | (h2 | 1) of the folded key — the
-# shared quotienting hash (Pagh filter); rust/src/bloom/hash.rs pins the
-# same table in golden_wide64_match_python.
+# shared quotienting hash (Pagh filter) and the word memoized per lane by
+# the fused pipeline's hash cache; rust/src/bloom/hash.rs pins the same
+# table in golden_wide64_match_python and rust/src/bloom/batch.rs pins it
+# through HashedChunk (hashed_chunk_golden_wide64_match_python), so the
+# memoized chunk path can never silently diverge from the scalar probe.
+# 7/63/64 pin the chunk-lane boundaries, 123456789 a mid-range key.
 GOLDEN_WIDE64 = {
     0: 0x6E7B9CBBFC9FF8FF,
     1: 0xDC725748FE6AB465,
+    7: 0x0FB02A5BFE1052F1,
     42: 0x2119E8C3B6ED9779,
+    63: 0x6CB97E822DDA3137,
+    64: 0x6CB73CCD65856AC5,
     6000000: 0xA76AAA86A693F51F,
+    123456789: 0xADC55054570A4885,
     0xDEADBEEF: 0xA613392890A569E1,
     0xFFFFFFFFFFFFFFFF: 0x16F2A371CDF4283B,
 }

@@ -1,0 +1,123 @@
+//! F13 — the fused probe pipeline vs edge-at-a-time on the full
+//! 5-relation star, all edges forced to the bloom cascade on the same
+//! inputs.  Edge mode re-scans the fact stream once per edge; fused mode
+//! groups the consecutive bloom edges into ONE pass per partition (each
+//! 64-key chunk hashed once per member column, every group filter
+//! testing the cached hashes, payload gathers deferred past the group).
+//! Both totals are simulated, so the comparison is exact — no timing
+//! noise.
+//!
+//! Asserted invariants (smoke and full shapes): fused output rows are
+//! bit-identical (as multisets) to edge-at-a-time; the fused total is
+//! strictly lower; the fused run books a `probe_fused` stage; and the
+//! adaptive ledger still carries one observation per edge — members of
+//! a fused group stay individually visible to the cardinality/regret
+//! triggers and the calibration fit.  Writes the `BENCH_fig13_fused.json`
+//! trajectory point; the tracked metric is edge/fused simulated seconds
+//! (it falls when the fused pass loses its one-scan advantage).
+
+use std::time::Instant;
+
+use bloomjoin::bench_support::{secs, smoke_or, trajectory_point, Report};
+use bloomjoin::cluster::{Cluster, ClusterConfig};
+use bloomjoin::plan::{
+    execute, prepare, EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, ProbeMode, Relation,
+    Topology,
+};
+use bloomjoin::util::Json;
+
+fn main() {
+    let sf = smoke_or(0.01, 0.02);
+    let base = PlanSpec {
+        sf,
+        partitions: 4,
+        dims: vec![
+            Relation::Orders,
+            Relation::Customer,
+            Relation::Part,
+            Relation::Supplier,
+        ],
+        ..PlanSpec::default()
+    };
+    let cluster = Cluster::new(ClusterConfig::local());
+    let inputs = prepare(&base);
+
+    // all-bloom forced plan: ORDERS runs alone (custkeys only exist on
+    // the stream after the snowflake edge joins), then CUSTOMER, PART
+    // and SUPPLIER fuse into a single three-filter pass in fused mode
+    let plan = JoinPlan {
+        topology: Topology::Star,
+        edges: vec![
+            PlannedEdge::forced(Relation::Orders, "e1", EdgeStrategy::Bloom { eps: 0.05 }),
+            PlannedEdge::forced(Relation::Customer, "e2", EdgeStrategy::Bloom { eps: 0.05 }),
+            PlannedEdge::forced(Relation::Part, "e3", EdgeStrategy::Bloom { eps: 0.05 }),
+            PlannedEdge::forced(Relation::Supplier, "e4", EdgeStrategy::Bloom { eps: 0.05 }),
+        ],
+        dim_stats: Vec::new(),
+    };
+
+    let mut report = Report::new("fig13_fused", &["probe mode", "sim_total", "wall", "rows"]);
+    let mut run = |probe: ProbeMode| {
+        let spec = PlanSpec { probe, ..base.clone() };
+        let t0 = Instant::now();
+        let out = execute(&cluster, &spec, &plan, inputs.clone());
+        let wall = t0.elapsed();
+        report.row(vec![
+            probe.name().into(),
+            secs(out.metrics.total_sim_s()),
+            format!("{:.1}ms", wall.as_secs_f64() * 1e3),
+            out.rows.len().to_string(),
+        ]);
+        out
+    };
+
+    let edge_out = run(ProbeMode::Edge);
+    let fused_out = run(ProbeMode::Fused);
+    report.finish();
+
+    let mut edge_rows = edge_out.rows.clone();
+    let mut fused_rows = fused_out.rows.clone();
+    edge_rows.sort_unstable();
+    fused_rows.sort_unstable();
+    assert_eq!(edge_rows, fused_rows, "fused rows must be bit-identical to edge-at-a-time");
+    assert!(!edge_rows.is_empty(), "the star must produce rows at this shape");
+
+    let edge_sim = edge_out.metrics.total_sim_s();
+    let fused_sim = fused_out.metrics.total_sim_s();
+    assert!(
+        fused_sim < edge_sim,
+        "fused ({fused_sim:.4}s) must strictly beat edge-at-a-time ({edge_sim:.4}s)"
+    );
+    assert!(
+        fused_out.metrics.stage("probe_fused").is_some(),
+        "fused mode books its one-pass probe stage"
+    );
+    assert!(
+        edge_out.metrics.stage("probe_fused").is_none(),
+        "edge mode never fuses"
+    );
+
+    // the fused group stays transparent to the adaptive loop: one
+    // observation per edge, in plan order, in both modes
+    let names = |o: &bloomjoin::plan::PlanOutput| {
+        o.ledger.observations.iter().map(|ob| ob.edge.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(names(&edge_out), vec!["e1", "e2", "e3", "e4"]);
+    assert_eq!(names(&fused_out), names(&edge_out));
+
+    let speedup = edge_sim / fused_sim.max(1e-9);
+    println!(
+        "\nfused probe win: {edge_sim:.4}s edge-at-a-time vs {fused_sim:.4}s fused \
+         (speedup {speedup:.3} = edge/fused sim)"
+    );
+
+    trajectory_point(
+        "fig13_fused",
+        Json::obj([
+            ("edge_sim_s", Json::num(edge_sim)),
+            ("fused_sim_s", Json::num(fused_sim)),
+            ("fused_speedup", Json::num(speedup)),
+            ("rows", Json::num(edge_rows.len() as f64)),
+        ]),
+    );
+}

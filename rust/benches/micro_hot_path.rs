@@ -1,10 +1,11 @@
 //! Micro-benchmarks of the L3 hot path, used by the §Perf iteration loop:
-//! hash/fold, native probe, filter build, TimSort vs std sort, and the
-//! per-partition sort-merge join.
+//! hash/fold, native probe, the fused pipeline's memoized chunk probe,
+//! filter build, TimSort vs std sort, and the per-partition sort-merge
+//! join.
 
 use bloomjoin::bench_support::{measure, secs, smoke_or, Report};
 use bloomjoin::bloom::hash::fold64;
-use bloomjoin::bloom::BloomFilter;
+use bloomjoin::bloom::{BloomFilter, HashedChunk, PROBE_CHUNK};
 use bloomjoin::joins::sort_merge::sort_merge_join_partition;
 use bloomjoin::joins::timsort::timsort_by_key;
 use bloomjoin::util::Rng;
@@ -35,6 +36,29 @@ fn main() {
         let st = measure(2, 9, || k.iter().filter(|&&x| f.contains_key(x)).count());
         report.row(vec![
             format!("native probe ({n_keys} keys)"),
+            secs(st.p50),
+            format!("{:.2e}/s", n_keys as f64 / st.p50),
+        ]);
+    }
+    {
+        // the fused pipeline's probe point: hash a 64-key chunk once,
+        // then test cached hashes (per-key re-hashing is what the fused
+        // group amortises away when several filters share a pass)
+        let f = &filter;
+        let k = &keys;
+        let st = measure(2, 9, || {
+            let mut hashed = HashedChunk::new();
+            let mut survivors = 0u32;
+            for chunk in k.chunks(PROBE_CHUNK) {
+                let live =
+                    if chunk.len() == 64 { u64::MAX } else { (1u64 << chunk.len()) - 1 };
+                hashed.fill(chunk);
+                survivors += f.test_hashed(&hashed, live).count_ones();
+            }
+            survivors
+        });
+        report.row(vec![
+            format!("memoized chunk probe ({n_keys} keys)"),
             secs(st.p50),
             format!("{:.2e}/s", n_keys as f64 / st.p50),
         ]);

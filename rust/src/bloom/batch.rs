@@ -17,10 +17,91 @@
 //! — `probe_batch` selects exactly the keys `contains` accepts — is
 //! pinned by `rust/tests/probe_batch_equivalence.rs`.
 
+use super::hash::HashPair;
+
 /// Keys hashed per chunk: one `u64` survivor mask covers the chunk, so
 /// the inner bit-test loop is branch-light and the mask early-exits as
 /// soon as a chunk has no survivors left.
 pub const PROBE_CHUNK: usize = 64;
+
+/// A chunk's worth of memoized hash pairs — the shared `wide64` hash
+/// cache of the fused probe pipeline.
+///
+/// A chunk of up to [`PROBE_CHUNK`] keys is hashed **once**; every
+/// filter that tests the chunk afterwards ([`super::BloomFilter::
+/// test_hashed`]) reuses the stored [`HashPair`]s and only clears bits
+/// from a live mask.  The single-filter `probe_batch` path goes through
+/// the same cache ([`HashedChunk::fill`] + `test_hashed`), and a fused
+/// group refreshes only the still-live lanes per edge
+/// ([`HashedChunk::fill_live`]) — dead lanes are never re-hashed.
+///
+/// The memoized word for a lane is exactly [`super::hash::wide64`]
+/// (`(h1 << 32) | h2`), pinned by the same golden vectors as the scalar
+/// path, so a cache bug cannot silently diverge from `contains_key`.
+#[derive(Clone, Debug)]
+pub struct HashedChunk {
+    pairs: [HashPair; PROBE_CHUNK],
+    len: usize,
+}
+
+impl Default for HashedChunk {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HashedChunk {
+    pub fn new() -> Self {
+        HashedChunk { pairs: [HashPair { h1: 0, h2: 1 }; PROBE_CHUNK], len: 0 }
+    }
+
+    /// Hash every lane of `keys` (≤ [`PROBE_CHUNK`]) into the cache.
+    #[inline]
+    pub fn fill(&mut self, keys: &[u64]) {
+        debug_assert!(keys.len() <= PROBE_CHUNK);
+        self.len = keys.len();
+        for (slot, &key) in self.pairs.iter_mut().zip(keys) {
+            *slot = HashPair::of_key(key);
+        }
+    }
+
+    /// Hash only the lanes of `keys` still set in `live` — what a fused
+    /// group's non-leading edge does: lanes an earlier filter already
+    /// rejected are never hashed for this edge's key column.
+    #[inline]
+    pub fn fill_live(&mut self, keys: &[u64], live: u64) {
+        debug_assert!(keys.len() <= PROBE_CHUNK);
+        self.len = keys.len();
+        let mut m = live & live_mask(keys.len());
+        while m != 0 {
+            let i = m.trailing_zeros() as usize;
+            m &= m - 1;
+            self.pairs[i] = HashPair::of_key(keys[i]);
+        }
+    }
+
+    /// Lanes currently cached.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The memoized double-hash pair of lane `i`.
+    #[inline(always)]
+    pub fn pair(&self, i: usize) -> HashPair {
+        self.pairs[i]
+    }
+
+    /// The packed 64-bit hash word of lane `i` — identical to
+    /// [`super::hash::wide64`] of the lane's key (golden-pinned).
+    #[inline(always)]
+    pub fn wide64(&self, i: usize) -> u64 {
+        ((self.pairs[i].h1 as u64) << 32) | self.pairs[i].h2 as u64
+    }
+}
 
 /// Indices of surviving rows, in ascending order — the unit every stage
 /// of the vectorized pipeline passes downstream instead of cloned rows.
@@ -145,5 +226,55 @@ mod tests {
         let mut s = SelectionVector::new();
         push_live(&mut s, 1, 0b101);
         assert_eq!(s.indices(), &[64, 66]);
+    }
+
+    #[test]
+    fn hashed_chunk_matches_scalar_hash() {
+        let keys: Vec<u64> = (0..50u64).map(|i| i * 31 + 7).collect();
+        let mut c = HashedChunk::new();
+        c.fill(&keys);
+        assert_eq!(c.len(), keys.len());
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(c.pair(i), HashPair::of_key(k));
+            assert_eq!(c.wide64(i), crate::bloom::hash::wide64(k));
+        }
+    }
+
+    /// The memoized path is pinned by the same golden vectors as the
+    /// scalar `wide64` (mirrors python/tests/test_golden.py).
+    #[test]
+    fn hashed_chunk_golden_wide64_match_python() {
+        let keys =
+            [0u64, 1, 7, 42, 63, 64, 6_000_000, 123_456_789, 0xDEAD_BEEF, u64::MAX];
+        let mut c = HashedChunk::new();
+        c.fill(&keys);
+        let want: [u64; 10] = [
+            0x6E7B_9CBB_FC9F_F8FF,
+            0xDC72_5748_FE6A_B465,
+            0x0FB0_2A5B_FE10_52F1,
+            0x2119_E8C3_B6ED_9779,
+            0x6CB9_7E82_2DDA_3137,
+            0x6CB7_3CCD_6585_6AC5,
+            0xA76A_AA86_A693_F51F,
+            0xADC5_5054_570A_4885,
+            0xA613_3928_90A5_69E1,
+            0x16F2_A371_CDF4_283B,
+        ];
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(c.wide64(i), *w, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn fill_live_hashes_only_live_lanes() {
+        let keys: Vec<u64> = (0..8u64).collect();
+        let mut c = HashedChunk::new();
+        c.fill_live(&keys, 0b1010_1010);
+        for i in [1usize, 3, 5, 7] {
+            assert_eq!(c.pair(i), HashPair::of_key(keys[i]), "live lane {i} hashed");
+        }
+        for i in [0usize, 2, 4, 6] {
+            assert_eq!(c.pair(i), HashPair { h1: 0, h2: 1 }, "dead lane {i} untouched");
+        }
     }
 }

@@ -2,7 +2,7 @@
 //! OR-merge, and a fast native probe (the XLA-kernel probe path lives in
 //! `runtime::probe`; both share `bloom::hash`).
 
-use super::batch::{live_mask, push_live, SelectionVector, PROBE_CHUNK};
+use super::batch::{live_mask, push_live, HashedChunk, SelectionVector, PROBE_CHUNK};
 use super::hash::{HashPair, K_MAX};
 use super::KeyFilter;
 
@@ -133,6 +133,34 @@ impl BloomFilter {
         true
     }
 
+    /// Test a memoized chunk against this filter: the `k` bit tests run
+    /// position-major over the chunk's cached [`HashPair`]s, clearing
+    /// lanes from `live` — no key is re-hashed.  Returns the surviving
+    /// mask (always a subset of `live`).  This is the per-filter half of
+    /// the fused probe pipeline: one [`HashedChunk`] fill serves every
+    /// filter in a fused group, and `probe_batch` itself is this method
+    /// looped over chunks.
+    ///
+    /// [`HashedChunk`]: super::batch::HashedChunk
+    #[inline]
+    pub fn test_hashed(&self, chunk: &HashedChunk, mut live: u64) -> u64 {
+        for j in 0..self.params.k {
+            if live == 0 {
+                break;
+            }
+            let mut m = live;
+            while m != 0 {
+                let i = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let p = chunk.pair(i).position(j, self.mask);
+                if self.words[(p >> 5) as usize] & (1 << (p & 31)) == 0 {
+                    live &= !(1u64 << i);
+                }
+            }
+        }
+        live
+    }
+
     /// OR-merge a partial filter built with identical params (paper §5.1
     /// change #1: per-partition partials merged on the way to the driver).
     pub fn merge(&mut self, other: &BloomFilter) -> Result<(), MergeError> {
@@ -204,32 +232,20 @@ impl KeyFilter for BloomFilter {
         self.params.m_bits
     }
 
-    /// Chunked probe: hash [`PROBE_CHUNK`] keys up front, then run the
-    /// `k` bit tests position-major over the chunk with one survivor
-    /// bitmask — the mask early-exits dead lanes and whole dead chunks,
-    /// and the selection is filled without any per-key allocation.
+    /// Chunked probe: hash [`PROBE_CHUNK`] keys once into a
+    /// [`HashedChunk`], then run the `k` bit tests position-major over
+    /// the cached pairs with one survivor bitmask ([`Self::test_hashed`])
+    /// — the mask early-exits dead lanes and whole dead chunks, and the
+    /// selection is filled without any per-key allocation.  Single-filter
+    /// probes and fused multi-filter groups share this exact code path.
+    ///
+    /// [`HashedChunk`]: super::batch::HashedChunk
     fn probe_batch(&self, keys: &[u64], sel: &mut SelectionVector) {
         sel.clear();
-        let mut hp = [HashPair { h1: 0, h2: 1 }; PROBE_CHUNK];
+        let mut hashed = HashedChunk::new();
         for (chunk_no, chunk) in keys.chunks(PROBE_CHUNK).enumerate() {
-            for (slot, &key) in hp.iter_mut().zip(chunk) {
-                *slot = HashPair::of_key(key);
-            }
-            let mut live = live_mask(chunk.len());
-            for j in 0..self.params.k {
-                if live == 0 {
-                    break;
-                }
-                let mut m = live;
-                while m != 0 {
-                    let i = m.trailing_zeros() as usize;
-                    m &= m - 1;
-                    let p = hp[i].position(j, self.mask);
-                    if self.words[(p >> 5) as usize] & (1 << (p & 31)) == 0 {
-                        live &= !(1u64 << i);
-                    }
-                }
-            }
+            hashed.fill(chunk);
+            let live = self.test_hashed(&hashed, live_mask(chunk.len()));
             push_live(sel, chunk_no, live);
         }
     }
@@ -433,5 +449,31 @@ mod tests {
         let p = BloomParams::optimal(10_000, 0.01);
         assert!(p.realized_fpr(10_000) <= 0.011);
         assert!(p.realized_fpr(100_000) > p.realized_fpr(10_000));
+    }
+
+    #[test]
+    fn test_hashed_matches_scalar_and_respects_live_mask() {
+        use crate::bloom::batch::HashedChunk;
+        let mut f = BloomFilter::with_optimal(2_000, 0.03);
+        let mut rng = Rng::new(17);
+        for _ in 0..2_000 {
+            f.insert(rng.below(50_000));
+        }
+        let keys: Vec<u64> = (0..64).map(|_| rng.below(50_000)).collect();
+        let mut c = HashedChunk::new();
+        c.fill(&keys);
+        let live = f.test_hashed(&c, u64::MAX);
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(live & (1 << i) != 0, f.contains_key(k), "lane {i}");
+        }
+        // a pre-masked lane stays dead even when the key is a member
+        let member = keys.iter().position(|&k| f.contains_key(k)).unwrap_or(0) as u64;
+        let masked = !(1u64 << member);
+        assert_eq!(f.test_hashed(&c, masked) & (1 << member), 0);
+        assert_eq!(f.test_hashed(&c, masked), live & masked);
+        // fill_live-refreshed lanes test identically to a full fill
+        let mut partial = HashedChunk::new();
+        partial.fill_live(&keys, live);
+        assert_eq!(f.test_hashed(&partial, live), live);
     }
 }

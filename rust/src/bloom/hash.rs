@@ -113,13 +113,20 @@ mod tests {
         assert_eq!(fold64(u64::MAX), 0xE4D9_7177);
     }
 
-    /// Mirrors python/tests/test_golden.py::GOLDEN_WIDE64 exactly.
+    /// Mirrors python/tests/test_golden.py::GOLDEN_WIDE64 exactly.  The
+    /// memoized chunk path (`HashedChunk::wide64`) is pinned against the
+    /// same table in `bloom/batch.rs`, so the hash cache cannot drift
+    /// from this scalar source of truth.
     #[test]
     fn golden_wide64_match_python() {
         assert_eq!(wide64(0), 0x6E7B_9CBB_FC9F_F8FF);
         assert_eq!(wide64(1), 0xDC72_5748_FE6A_B465);
+        assert_eq!(wide64(7), 0x0FB0_2A5B_FE10_52F1);
         assert_eq!(wide64(42), 0x2119_E8C3_B6ED_9779);
+        assert_eq!(wide64(63), 0x6CB9_7E82_2DDA_3137);
+        assert_eq!(wide64(64), 0x6CB7_3CCD_6585_6AC5);
         assert_eq!(wide64(6_000_000), 0xA76A_AA86_A693_F51F);
+        assert_eq!(wide64(123_456_789), 0xADC5_5054_570A_4885);
         assert_eq!(wide64(0xDEAD_BEEF), 0xA613_3928_90A5_69E1);
         assert_eq!(wide64(u64::MAX), 0x16F2_A371_CDF4_283B);
     }

@@ -19,7 +19,7 @@ pub mod filter;
 pub mod hash;
 pub mod pagh;
 
-pub use batch::{SelectionVector, PROBE_CHUNK};
+pub use batch::{HashedChunk, SelectionVector, PROBE_CHUNK};
 pub use blocked::BlockedBloomFilter;
 pub use filter::{BloomFilter, BloomParams};
 pub use hash::{fold64, probe_positions, wide64, HashPair};

@@ -26,6 +26,27 @@ impl<T> PartitionedTable<T> {
         PartitionedTable { parts }
     }
 
+    /// [`PartitionedTable::from_rows`] through a reusable staging
+    /// buffer: drains `rows` into the partitions and leaves the (empty)
+    /// allocation behind for the caller's next round.  Hot-path callers
+    /// that rebuild a keyed probe side per edge (the plan executor's
+    /// star loop) stage into one scratch vector instead of allocating a
+    /// fresh one each time.
+    pub fn from_rows_reusing(rows: &mut Vec<T>, n: usize) -> Self {
+        let n = n.max(1);
+        let total = rows.len();
+        let base = total / n;
+        let rem = total % n;
+        let mut parts = Vec::with_capacity(n);
+        let mut it = rows.drain(..);
+        for p in 0..n {
+            let len = base + usize::from(p < rem);
+            parts.push(it.by_ref().take(len).collect());
+        }
+        drop(it);
+        PartitionedTable { parts }
+    }
+
     pub fn n_partitions(&self) -> usize {
         self.parts.len()
     }
@@ -74,6 +95,20 @@ mod tests {
         assert_eq!(t.n_partitions(), 3);
         assert_eq!(t.partitions().iter().map(Vec::len).collect::<Vec<_>>(), vec![4, 3, 3]);
         assert_eq!(t.into_rows(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn from_rows_reusing_matches_from_rows_and_keeps_the_buffer() {
+        let mut staging: Vec<i32> = (0..10).collect();
+        let cap = staging.capacity();
+        let t = PartitionedTable::from_rows_reusing(&mut staging, 3);
+        assert_eq!(t, PartitionedTable::from_rows((0..10).collect(), 3));
+        assert!(staging.is_empty(), "rows are drained into the partitions");
+        assert_eq!(staging.capacity(), cap, "the staging allocation survives for reuse");
+        // empty input still deals out n partitions
+        let t: PartitionedTable<i32> = PartitionedTable::from_rows_reusing(&mut staging, 4);
+        assert_eq!(t.n_partitions(), 4);
+        assert_eq!(t.n_rows(), 0);
     }
 
     #[test]

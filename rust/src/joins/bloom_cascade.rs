@@ -239,23 +239,30 @@ impl BloomCascadeJoin {
         self.execute_phased(cluster, big, small, resize, prebuilt, faults)
     }
 
-    fn execute_phased<B, S>(
+    /// Steps 1–4 of the cascade — approximate count, optimal sizing (with
+    /// the XLA artifact-ladder snap when a batch engine is configured),
+    /// distributed/driver-side build, the mid-build re-size point, and the
+    /// p2p broadcast with `BroadcastDrop` recovery — booked into `metrics`,
+    /// **without** the probe/shuffle/join tail.  This is the build-only
+    /// entry the fused probe pipeline uses to materialise each group
+    /// filter before its single pass over the fact stream; `execute_*`
+    /// runs through exactly this code, so a fused build is stage-for-stage
+    /// identical to an edge-at-a-time one.  `prebuilt` is the cache-hit
+    /// path (zero-cost `filter_cached` marker, straight to broadcast).
+    pub fn build_filter_faulted<S>(
         &self,
         cluster: &Cluster,
-        big: PartitionedTable<Keyed<B>>,
-        small: PartitionedTable<Keyed<S>>,
+        small: &PartitionedTable<Keyed<S>>,
         resize: Option<ResizeDecision<'_>>,
         prebuilt: Option<Arc<BloomFilter>>,
         faults: Option<&FaultSession>,
-    ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>, Arc<BloomFilter>)
+        metrics: &mut QueryMetrics,
+    ) -> (Arc<BloomFilter>, Option<FilterResize>)
     where
-        B: Clone + Send + Sync + RowSize + 'static,
-        S: Clone + Send + Sync + RowSize + 'static,
+        S: Clone + Send + Sync + 'static,
     {
         let cfg = cluster.config().clone();
-        let mut metrics = QueryMetrics::default();
         metrics.requested_fpr = self.cfg.fpr;
-        metrics.big_rows_scanned = big.n_rows() as u64;
 
         let mut resized: Option<FilterResize> = None;
         let filter: Arc<BloomFilter> = if let Some(cached) = prebuilt {
@@ -299,8 +306,8 @@ impl BloomCascadeJoin {
 
             // -- step 3: build ------------------------------------------------
             let build = |params: BloomParams| match self.cfg.build_style {
-                FilterBuildStyle::Distributed => self.build_distributed(cluster, &small, params),
-                FilterBuildStyle::DriverSide => self.build_driver_side(cluster, &small, params),
+                FilterBuildStyle::Distributed => self.build_distributed(cluster, small, params),
+                FilterBuildStyle::DriverSide => self.build_driver_side(cluster, small, params),
             };
             let (mut filter, build_timing) = build(params);
             metrics.realized_fpr = params.realized_fpr(small.n_rows() as u64);
@@ -357,6 +364,28 @@ impl BloomCascadeJoin {
                 );
             }
         }
+        (filter, resized)
+    }
+
+    fn execute_phased<B, S>(
+        &self,
+        cluster: &Cluster,
+        big: PartitionedTable<Keyed<B>>,
+        small: PartitionedTable<Keyed<S>>,
+        resize: Option<ResizeDecision<'_>>,
+        prebuilt: Option<Arc<BloomFilter>>,
+        faults: Option<&FaultSession>,
+    ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>, Arc<BloomFilter>)
+    where
+        B: Clone + Send + Sync + RowSize + 'static,
+        S: Clone + Send + Sync + RowSize + 'static,
+    {
+        let cfg = cluster.config().clone();
+        let mut metrics = QueryMetrics::default();
+        metrics.big_rows_scanned = big.n_rows() as u64;
+
+        let (filter, resized) =
+            self.build_filter_faulted(cluster, &small, resize, prebuilt, faults, &mut metrics);
 
         // -- step 5a: filtered scan ------------------------------------------
         let probe = self.cfg.probe_path.clone();

@@ -97,8 +97,104 @@ where
 {
     let cfg = cluster.config().clone();
     let mut metrics = QueryMetrics::default();
-    metrics.requested_fpr = fpr;
     metrics.big_rows_scanned = big.n_rows() as u64;
+
+    let shard_filters = build_shard_filters_faulted(cluster, &small, fpr, faults, &mut metrics);
+
+    if let Some(fs) = faults {
+        // injected fault: a node dies mid-probe, taking its placed shard
+        // with it — not recoverable in place; hand back the partial
+        // ledger so the caller can degrade the edge
+        if fs.should_fire(FaultKind::NodeLoss, "probe") {
+            let node = fs.target_index(cfg.n_nodes.max(1));
+            return Err(PartitionedAbort { node, metrics });
+        }
+    }
+
+    // -- step 5: sharded filter scan ---------------------------------------
+    // each fact partition routes its keys with the *same* hash the build
+    // used, probes shard-major, and streams only 8-byte keys out plus a
+    // 1-bit-per-key verdict bitmap back
+    let filters = Arc::new(shard_filters);
+    let n_nodes = cfg.n_nodes;
+    let tasks: Vec<Task<Vec<Keyed<B>>>> = big
+        .into_partitions()
+        .into_iter()
+        .enumerate()
+        .map(|(p, part)| {
+            let filters = Arc::clone(&filters);
+            let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
+            let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
+            let cpu_s = part.len() as f64 * cfg.scan_record_cost;
+            let wire = 8 * part.len() as u64 + part.len() as u64 / 8;
+            let net_s = wire as f64 / cfg.net_bandwidth;
+            Task::new(move || {
+                let n_shards = filters.len();
+                let mut shard_keys: Vec<Vec<u64>> = vec![Vec::new(); n_shards];
+                let mut shard_idx: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+                for (i, (k, _)) in part.iter().enumerate() {
+                    let s = partition_of(*k, n_shards);
+                    shard_keys[s].push(*k);
+                    shard_idx[s].push(i as u32);
+                }
+                let mut keep = vec![false; part.len()];
+                let mut sel = SelectionVector::new();
+                for ((filter, keys), idx) in filters.iter().zip(&shard_keys).zip(&shard_idx) {
+                    filter.probe_batch(keys, &mut sel);
+                    for &j in sel.indices() {
+                        keep[idx[j as usize] as usize] = true;
+                    }
+                }
+                let survivors: Vec<Keyed<B>> =
+                    part.into_iter().zip(keep).filter_map(|(row, k)| k.then_some(row)).collect();
+                let cost = Cost {
+                    cpu_s,
+                    net_s,
+                    net_bytes: wire,
+                    disk_s,
+                    disk_bytes,
+                    ..Default::default()
+                };
+                (survivors, cost)
+            })
+            .with_locality(p % n_nodes)
+        })
+        .collect();
+    let scan = cluster.run_stage(Stage::new("filter_scan", tasks));
+    let filtered: Vec<Vec<Keyed<B>>> = scan.outputs;
+    metrics.big_rows_after_filter = filtered.iter().map(|p| p.len() as u64).sum();
+    metrics.push(StageTiming {
+        tasks: scan.n_tasks,
+        wall_s: scan.wall_time.seconds(),
+        cpu_s: scan.total_cost.cpu_s,
+        net_bytes: scan.total_cost.net_bytes,
+        disk_bytes: scan.total_cost.disk_bytes,
+        ..StageTiming::new("filter_scan", scan.sim_time)
+    });
+
+    // -- step 6: shuffle + sort-merge join (cascade tail) ------------------
+    let rows = shuffle_and_join(cluster, filtered, small.into_partitions(), &mut metrics);
+    metrics.output_rows = rows.len() as u64;
+    Ok((rows, metrics))
+}
+
+/// Steps 1–4 of the partitioned strategy — approximate count, key-range
+/// shard routing, per-shard build at the owner node, one-link shard ship,
+/// plus the in-place `ShardEviction` lineage rebuild — booked into
+/// `metrics`, without the probe/shuffle/join tail.  Shared by
+/// [`bloom_partitioned_join_faulted`] and the fused probe pipeline's
+/// build stage (which additionally pays a `shard_fetch` to make every
+/// shard resident on the probing nodes and leaves `NodeLoss` handling to
+/// its group-eligibility rules).
+pub(crate) fn build_shard_filters_faulted<S>(
+    cluster: &Cluster,
+    small: &PartitionedTable<Keyed<S>>,
+    fpr: f64,
+    faults: Option<&FaultSession>,
+    metrics: &mut QueryMetrics,
+) -> Vec<BloomFilter> {
+    let cfg = cluster.config().clone();
+    metrics.requested_fpr = fpr;
 
     // -- step 1: approximate count ----------------------------------------
     let sizes: Vec<usize> = small.partitions().iter().map(Vec::len).collect();
@@ -214,80 +310,9 @@ where
                 sim.seconds(),
             );
         }
-        // injected fault: a node dies mid-probe, taking its placed shard
-        // with it — not recoverable in place; hand back the partial
-        // ledger so the caller can degrade the edge
-        if fs.should_fire(FaultKind::NodeLoss, "probe") {
-            let node = fs.target_index(cfg.n_nodes.max(1));
-            return Err(PartitionedAbort { node, metrics });
-        }
     }
 
-    // -- step 5: sharded filter scan ---------------------------------------
-    // each fact partition routes its keys with the *same* hash the build
-    // used, probes shard-major, and streams only 8-byte keys out plus a
-    // 1-bit-per-key verdict bitmap back
-    let filters = Arc::new(shard_filters);
-    let n_nodes = cfg.n_nodes;
-    let tasks: Vec<Task<Vec<Keyed<B>>>> = big
-        .into_partitions()
-        .into_iter()
-        .enumerate()
-        .map(|(p, part)| {
-            let filters = Arc::clone(&filters);
-            let disk_bytes: u64 = part.iter().map(|(_, b)| 8 + b.row_bytes()).sum();
-            let disk_s = disk_bytes as f64 / cfg.disk_bandwidth;
-            let cpu_s = part.len() as f64 * cfg.scan_record_cost;
-            let wire = 8 * part.len() as u64 + part.len() as u64 / 8;
-            let net_s = wire as f64 / cfg.net_bandwidth;
-            Task::new(move || {
-                let n_shards = filters.len();
-                let mut shard_keys: Vec<Vec<u64>> = vec![Vec::new(); n_shards];
-                let mut shard_idx: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
-                for (i, (k, _)) in part.iter().enumerate() {
-                    let s = partition_of(*k, n_shards);
-                    shard_keys[s].push(*k);
-                    shard_idx[s].push(i as u32);
-                }
-                let mut keep = vec![false; part.len()];
-                let mut sel = SelectionVector::new();
-                for ((filter, keys), idx) in filters.iter().zip(&shard_keys).zip(&shard_idx) {
-                    filter.probe_batch(keys, &mut sel);
-                    for &j in sel.indices() {
-                        keep[idx[j as usize] as usize] = true;
-                    }
-                }
-                let survivors: Vec<Keyed<B>> =
-                    part.into_iter().zip(keep).filter_map(|(row, k)| k.then_some(row)).collect();
-                let cost = Cost {
-                    cpu_s,
-                    net_s,
-                    net_bytes: wire,
-                    disk_s,
-                    disk_bytes,
-                    ..Default::default()
-                };
-                (survivors, cost)
-            })
-            .with_locality(p % n_nodes)
-        })
-        .collect();
-    let scan = cluster.run_stage(Stage::new("filter_scan", tasks));
-    let filtered: Vec<Vec<Keyed<B>>> = scan.outputs;
-    metrics.big_rows_after_filter = filtered.iter().map(|p| p.len() as u64).sum();
-    metrics.push(StageTiming {
-        tasks: scan.n_tasks,
-        wall_s: scan.wall_time.seconds(),
-        cpu_s: scan.total_cost.cpu_s,
-        net_bytes: scan.total_cost.net_bytes,
-        disk_bytes: scan.total_cost.disk_bytes,
-        ..StageTiming::new("filter_scan", scan.sim_time)
-    });
-
-    // -- step 6: shuffle + sort-merge join (cascade tail) ------------------
-    let rows = shuffle_and_join(cluster, filtered, small.into_partitions(), &mut metrics);
-    metrics.output_rows = rows.len() as u64;
-    Ok((rows, metrics))
+    shard_filters
 }
 
 /// Two-round exchange bloom join: the usual dimension filter prunes the
@@ -458,8 +483,9 @@ fn distributed_filter_build(
 
 /// The cascade's tail: 200-partition shuffle of both (already filtered)
 /// sides plus the per-partition sort-merge join, with the usual
-/// accounting.
-fn shuffle_and_join<B, S>(
+/// accounting.  `pub(crate)` so the fused probe pipeline's late
+/// materialisation step can reuse the exact tail each unfused edge runs.
+pub(crate) fn shuffle_and_join<B, S>(
     cluster: &Cluster,
     filtered: Vec<Vec<Keyed<B>>>,
     small_parts: Vec<Vec<Keyed<S>>>,

@@ -14,7 +14,8 @@
 //!              `bloomjoin plan --relations lineitem,orders,part,supplier
 //!              [--topology star|chain] [--eps-mode per-filter|global]
 //!              [--pushdown ranked|unranked] [--part-brand N]
-//!              [--supp-nation N] [--no-execute]`
+//!              [--supp-nation N] [--probe edge|fused]
+//!              [--probe-path native|kernel] [--no-execute]`
 //!   sweep      the paper's §6 experiment series (ε sweep, CSV output)
 //!   calibrate  fit the §7 cost model from a sweep
 //!   optimal    solve for ε* (§7.2) and validate with a run
@@ -257,6 +258,14 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         Some(p) => p,
         None => anyhow::bail!("unknown replan policy (static|adaptive|regret)"),
     };
+    let probe = match plan::ProbeMode::parse(args.get_or("probe", "edge")) {
+        Some(m) => m,
+        None => anyhow::bail!("unknown probe mode (edge|fused)"),
+    };
+    let probe_path = match plan::ProbePathChoice::parse(args.get_or("probe-path", "native")) {
+        Some(p) => p,
+        None => anyhow::bail!("unknown probe path (native|kernel)"),
+    };
     let json_mode = args.flag("json");
     let mut spec = PlanSpec {
         sf: args.parse_or("sf", 0.01)?,
@@ -268,6 +277,8 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         pushdown,
         replan,
         replan_floor: args.parse_or("replan-floor", plan::DEFAULT_ROW_FLOOR)?,
+        probe,
+        probe_path,
         ..Default::default()
     };
     if let Some(b) = args.parse_as::<u8>("part-brand")? {
@@ -594,6 +605,16 @@ COMMANDS
              --replan-floor N (absolute row floor both triggers must
               clear, default 64 — single-digit residual noise never
               re-plans a cheap tail)
+             --probe edge|fused (fused groups consecutive bloom-class
+              edges with resident filters into ONE pass over the fact
+              stream: each 64-key chunk is hashed once per member column,
+              every group filter tests the cached hashes, payload
+              gathers happen once after the group — rows stay
+              bit-identical to edge-at-a-time; see docs/perf.md)
+             --probe-path native|kernel (probe engine at the fused probe
+              point: the AOT Pallas kernel when its artifacts exist,
+              warning + native fallback otherwise; never changes rows or
+              simulated cost)
              --calibration auto|off|<path-or-dir> (per-cluster K/L/C
               store refined from observed runs, kept under the state dir
               — BLOOMJOIN_STATE_DIR or ./.bloomjoin — when auto; a

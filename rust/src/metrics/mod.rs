@@ -81,6 +81,7 @@ fn is_stage1(name: &str) -> bool {
             | "shard_route"
             | "shard_build"
             | "shard_ship"
+            | "shard_fetch"
             | "exchange_build"
             | "exchange_ship"
     )
@@ -157,10 +158,17 @@ impl QueryMetrics {
     }
 
     /// The paper's "stage 2": filter + shuffle + sort-merge join + write.
+    /// `probe_fused` is the fused pipeline's per-edge split of its single
+    /// group scan — probe-side work, so it buckets with `filter_scan`.
     pub fn filter_join_s(&self) -> f64 {
         self.stages
             .iter()
-            .filter(|s| matches!(base_name(&s.name), "filter_scan" | "shuffle" | "join" | "write"))
+            .filter(|s| {
+                matches!(
+                    base_name(&s.name),
+                    "filter_scan" | "probe_fused" | "shuffle" | "join" | "write"
+                )
+            })
             .map(|s| s.sim_s)
             .sum()
     }

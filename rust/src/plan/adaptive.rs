@@ -171,6 +171,24 @@ pub fn expected_survivors(stats: &EdgeStats, measured_probe: u64) -> u64 {
     ((measured_probe as f64 * frac).round() as u64).min(measured_probe)
 }
 
+/// The fraction of probed rows a bloom filter at `eps` is expected to
+/// *pass* — true matches plus the ε share of the non-matches:
+/// `frac + ε·(1−frac)`.
+///
+/// This is the filter-level analogue of [`expected_survivors`], used by
+/// the fused probe pipeline: inner edges of a fused group observe their
+/// filter's pass count (false positives included) rather than a
+/// join-level survivor count, because the group's single pass never
+/// materialises per-edge join output.  Comparing that measurement against
+/// a join-level expectation would mis-fire the cardinality trigger by
+/// exactly the ε share, so the expectation is ε-inflated to match what
+/// the filter can actually be wrong about.
+pub fn filter_pass_fraction(stats: &EdgeStats, eps: f64) -> f64 {
+    let frac = stats.matched_rows as f64 / stats.probe_rows.max(1) as f64;
+    let frac = frac.clamp(0.0, 1.0);
+    frac + eps.clamp(0.0, 1.0) * (1.0 - frac)
+}
+
 /// What the executor measured while running one edge.
 #[derive(Clone, Debug)]
 pub struct EdgeObservation {
@@ -559,6 +577,20 @@ mod tests {
         assert!(!ReplanPolicy::Static.is_adaptive());
         assert!(ReplanPolicy::Adaptive.is_adaptive());
         assert!(ReplanPolicy::Regret.is_adaptive());
+    }
+
+    #[test]
+    fn filter_pass_fraction_is_eps_inflated_selectivity() {
+        let stats = EdgeStats { probe_rows: 1_000, matched_rows: 200, ..EdgeStats::default() };
+        // ε = 0: exactly the join selectivity
+        assert!((filter_pass_fraction(&stats, 0.0) - 0.2).abs() < 1e-12);
+        // ε = 1: everything passes the filter
+        assert!((filter_pass_fraction(&stats, 1.0) - 1.0).abs() < 1e-12);
+        // in between: frac + ε·(1−frac)
+        assert!((filter_pass_fraction(&stats, 0.05) - (0.2 + 0.05 * 0.8)).abs() < 1e-12);
+        // monotone in ε and never below the true selectivity
+        assert!(filter_pass_fraction(&stats, 0.1) > filter_pass_fraction(&stats, 0.01));
+        assert!(filter_pass_fraction(&stats, 0.01) >= 0.2);
     }
 
     #[test]

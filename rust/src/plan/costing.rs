@@ -35,8 +35,8 @@ use super::catalog::{
     chain_edge_stats, star_dim_stats, DimStats, EdgeStats, PlanInputs, STREAM_ROW_BYTES,
 };
 use super::{
-    EdgeStrategy, EpsMode, JoinPlan, PlanSpec, PlannedEdge, PushdownMode, Relation, StrategyKind,
-    Topology,
+    EdgeStrategy, EpsMode, JoinPlan, PlanSpec, PlannedEdge, ProbeMode, PushdownMode, Relation,
+    StrategyKind, Topology,
 };
 
 /// One row of an edge's strategy pricing table: a strategy identity and
@@ -343,6 +343,57 @@ pub fn discount_cached_builds(
     discounted
 }
 
+/// Fusion-aware re-pricing pass: under [`super::ProbeMode::Fused`] a run
+/// of consecutive bloom-class edges (plain or key-sharded — the two
+/// kinds whose filters can be resident before the scan) probes in **one
+/// pass** over the fact stream, so every non-leading member of such a
+/// run stops paying its own stream-scan term — the group leader's scan
+/// reads the rows once for everyone.  This subtracts that term
+/// (β-scaled when calibrated, matching where it sits in the §7 model's
+/// `L1`) from the member's `bloom_s` and `bloom_partitioned_s`
+/// predictions, clamped at zero.  A CUSTOMER edge can only lead or join
+/// a group when ORDERS was executed *before* the run (its probe keys
+/// come from the ORDERS payload), mirroring the executor's grouping.
+/// Strategies are deliberately **not** re-picked from the discounted
+/// table: the discount applies equally to both fusable kinds and never
+/// to the unfusable ones, so a flip could only move an edge *out* of
+/// the fused class — dissolving the very group that justified the
+/// discount.  Returns how many edges were discounted.
+pub fn discount_fused_probes(
+    cfg: &ClusterConfig,
+    factors: Option<(f64, f64)>,
+    plan: &mut JoinPlan,
+) -> usize {
+    let slots = cfg.total_slots().max(1) as f64;
+    let beta = factors.map_or(1.0, |f| f.1);
+    let fusable = |e: &PlannedEdge, orders_before: bool| {
+        matches!(e.strategy.kind(), StrategyKind::Bloom | StrategyKind::BloomPartitioned)
+            && (e.relation != Relation::Customer || orders_before)
+    };
+    let mut discounted = 0;
+    let mut i = 0;
+    while i < plan.edges.len() {
+        let orders_before = plan.edges[..i].iter().any(|e| e.relation == Relation::Orders);
+        let run =
+            plan.edges[i..].iter().take_while(|e| fusable(e, orders_before)).count();
+        if run >= 2 {
+            for e in &mut plan.edges[i + 1..i + run] {
+                if !e.has_estimates() {
+                    continue;
+                }
+                let scan_term =
+                    e.stats.probe_rows as f64 * cfg.scan_record_cost / slots * beta;
+                e.prediction.bloom_s = (e.prediction.bloom_s - scan_term).max(0.0);
+                e.prediction.bloom_partitioned_s =
+                    (e.prediction.bloom_partitioned_s - scan_term).max(0.0);
+                discounted += 1;
+            }
+        }
+        i += run.max(1);
+    }
+    discounted
+}
+
 /// The §7 model for the key-range-sharded variant: same stage structure
 /// as [`edge_cost_model`], with the filter's broadcast leg (every bit to
 /// every executor, `2·rounds·bytes/bw` in `K2`) replaced by three
@@ -533,7 +584,12 @@ pub fn plan_edges_calibrated(
         }
     };
     let edges = price_edges(cluster.config(), spec.eps_mode, calibration, edge_list);
-    JoinPlan { topology: spec.topology, edges, dim_stats }
+    let mut plan = JoinPlan { topology: spec.topology, edges, dim_stats };
+    if spec.probe == ProbeMode::Fused {
+        let factors = calibration.and_then(|c| c.factors());
+        discount_fused_probes(cluster.config(), factors, &mut plan);
+    }
+    plan
 }
 
 /// Price an edge list: build each edge's §7 model (calibrated when a
@@ -990,6 +1046,82 @@ mod tests {
         let model = edge_cost_model(cfg, e);
         let opt = newton::optimal_epsilon(&model);
         predict_all(cfg, e, None, &model, opt.eps, opt.interior, opt.eps)
+    }
+
+    fn planned(cfg: &ClusterConfig, rel: Relation, stats: &EdgeStats) -> PlannedEdge {
+        let prediction = table_for(cfg, stats);
+        PlannedEdge {
+            name: format!("⋈{}", rel.name()),
+            relation: rel,
+            strategy: EdgeStrategy::Bloom { eps: prediction.eps_star },
+            stats: stats.clone(),
+            prediction,
+        }
+    }
+
+    #[test]
+    fn fused_discount_drops_the_followers_scan_term_only() {
+        let cfg = ClusterConfig::default();
+        let stats = edge(10_000_000, 500_000, 1_000_000);
+        let mut plan = JoinPlan {
+            topology: Topology::Star,
+            edges: vec![
+                planned(&cfg, Relation::Orders, &stats),
+                planned(&cfg, Relation::Part, &stats),
+                planned(&cfg, Relation::Supplier, &stats),
+            ],
+            dim_stats: Vec::new(),
+        };
+        let before: Vec<f64> = plan.edges.iter().map(|e| e.prediction.bloom_s).collect();
+        assert_eq!(discount_fused_probes(&cfg, None, &mut plan), 2);
+        // the leader keeps its price — its scan feeds the whole group
+        assert_eq!(plan.edges[0].prediction.bloom_s, before[0]);
+        let slots = cfg.total_slots().max(1) as f64;
+        let scan_term = stats.probe_rows as f64 * cfg.scan_record_cost / slots;
+        for j in 1..3 {
+            let after = plan.edges[j].prediction.bloom_s;
+            assert!(
+                (before[j] - after - scan_term).abs() < 1e-12,
+                "follower {j}: {} - {} should drop exactly the scan term {scan_term}",
+                before[j],
+                after,
+            );
+        }
+    }
+
+    #[test]
+    fn fused_discount_respects_group_boundaries() {
+        let cfg = ClusterConfig::default();
+        let stats = edge(10_000_000, 500_000, 1_000_000);
+        // CUSTOMER cannot lead or join a run before ORDERS executes, so
+        // [ORDERS, CUSTOMER, PART] splits into a lone leader and a
+        // CUSTOMER-led pair — exactly one discounted follower
+        let mut orders_first = JoinPlan {
+            topology: Topology::Star,
+            edges: vec![
+                planned(&cfg, Relation::Orders, &stats),
+                planned(&cfg, Relation::Customer, &stats),
+                planned(&cfg, Relation::Part, &stats),
+            ],
+            dim_stats: Vec::new(),
+        };
+        assert_eq!(discount_fused_probes(&cfg, None, &mut orders_first), 1);
+        // an unfusable strategy in the middle leaves runs of one on both
+        // sides — nothing to discount
+        let mut broken = JoinPlan {
+            topology: Topology::Star,
+            edges: vec![
+                planned(&cfg, Relation::Orders, &stats),
+                {
+                    let mut e = planned(&cfg, Relation::Part, &stats);
+                    e.strategy = EdgeStrategy::Broadcast;
+                    e
+                },
+                planned(&cfg, Relation::Supplier, &stats),
+            ],
+            dim_stats: Vec::new(),
+        };
+        assert_eq!(discount_fused_probes(&cfg, None, &mut broken), 0);
     }
 
     #[test]

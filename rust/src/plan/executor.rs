@@ -26,28 +26,55 @@
 //! [`nested_loop_oracle`], with and without re-planning); what differs
 //! is the simulated cost of the composition — which is the planner's
 //! whole subject.
+//!
+//! Under [`ProbeMode::Fused`] the star loop additionally groups runs of
+//! consecutive bloom-class edges whose filters can be made resident
+//! before the scan (broadcast filters, and key-sharded filters after a
+//! `shard_fetch`), builds every group filter up front, and probes the
+//! whole group in **one pass** over the fact stream per partition: each
+//! 64-key chunk is hashed once per member column into a shared
+//! [`HashedChunk`] (dead lanes skipped), every member filter tests the
+//! cached hashes while the chunk is hot, and the payload joins run once
+//! against the conjunctively pre-filtered stream (`probe_fused` +
+//! per-member `shuffle`/`join` stages).  Rows are bit-identical to
+//! [`ProbeMode::Edge`]; the fused pass still emits one
+//! [`EdgeObservation`] per member (filter-level survivor counts for
+//! inner members), so re-plan triggers, mid-build ε re-sizing and
+//! calibration keep working inside a group.
 
-use crate::bloom::BloomFilter;
+use std::sync::Arc;
+
+use crate::bloom::batch::live_mask;
+use crate::bloom::{BloomFilter, HashedChunk, PROBE_CHUNK};
 use crate::cluster::faults::{InjectedFault, RecoveryAction};
 use crate::cluster::pool::ThreadPool;
-use crate::cluster::{Cluster, ClusterConfig, FaultKind, FaultSession};
+use crate::cluster::shuffle::partition_of;
+use crate::cluster::{
+    Cluster, ClusterConfig, Cost, FaultKind, FaultSession, SimDuration, Stage, Task,
+};
 use crate::dataset::PartitionedTable;
 use crate::joins::bloom_cascade::{
-    BloomCascadeConfig, BloomCascadeJoin, FilterResize, ResizeDecision,
+    BloomCascadeConfig, BloomCascadeJoin, FilterResize, ProbePath, ResizeDecision,
 };
+use crate::joins::bloom_partitioned::{build_shard_filters_faulted, shuffle_and_join};
 use crate::joins::{
     bloom_exchange_join, bloom_partitioned_join_faulted, exec, JoinedRow, Keyed, RowSize,
 };
 use crate::metrics::{QueryMetrics, StageTiming};
 
 use super::adaptive::{
-    estimate_error, expected_survivors, regret_flip, replan_chain_tail, replan_remaining,
-    resize_epsilon, should_replan, tail_labels, EdgeObservation, ReplanEvent, ReplanLedger,
-    ReplanPolicy, ReplanTrigger, ResizeEvent, REGRET_MARGIN,
+    estimate_error, expected_survivors, filter_pass_fraction, regret_flip, replan_chain_tail,
+    replan_remaining, resize_epsilon, should_replan, tail_labels, EdgeObservation, ReplanEvent,
+    ReplanLedger, ReplanPolicy, ReplanTrigger, ResizeEvent, REGRET_MARGIN,
 };
 use super::catalog::{EdgeStats, FactRow, PlanInputs, STREAM_ROW_BYTES};
-use super::costing::{degrade_broadcast_price, edge_cost_model, CostCalibration};
-use super::{EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, Relation, Topology};
+use super::costing::{
+    degrade_broadcast_price, edge_cost_model, retry_build_price, speculative_rerun_price,
+    CostCalibration,
+};
+use super::{
+    EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, ProbeMode, ProbePathChoice, Relation, Topology,
+};
 
 /// One row of the n-way join result: the fact columns plus every joined
 /// dimension's payload.  Dimensions a plan does not join stay at their
@@ -227,8 +254,9 @@ pub struct EdgeReport {
     pub output_rows: u64,
     /// Stream rows probed at this edge (the big side of the edge join).
     pub probe_rows: u64,
-    /// Real wall seconds of the edge's probe-side stage (`filter_scan`
-    /// for bloom edges, the `join` stage otherwise).
+    /// Real wall seconds of the edge's probe-side stage (`probe_fused`
+    /// for members of a fused group, `filter_scan` for edge-at-a-time
+    /// bloom edges, the `join` stage otherwise).
     pub probe_wall_s: f64,
 }
 
@@ -252,7 +280,10 @@ fn edge_report(edge: &PlannedEdge, m: &QueryMetrics, probe_rows: u64) -> EdgeRep
         sim_s: m.total_sim_s(),
         output_rows: m.output_rows,
         probe_rows,
-        probe_wall_s: m.stage(probe_stage).map_or(0.0, |s| s.wall_s),
+        probe_wall_s: m
+            .stage("probe_fused")
+            .or_else(|| m.stage(probe_stage))
+            .map_or(0.0, |s| s.wall_s),
     }
 }
 
@@ -397,6 +428,7 @@ fn run_edge<B, S>(
     resize: Option<ResizeDecision<'_>>,
     filters: Option<&dyn FilterSource>,
     faults: Option<&FaultSession>,
+    probe_path: &ProbePath,
 ) -> (Vec<JoinedRow<B, S>>, QueryMetrics, Option<FilterResize>)
 where
     B: Clone + Send + Sync + RowSize + 'static,
@@ -404,8 +436,11 @@ where
 {
     match &edge.strategy {
         EdgeStrategy::Bloom { eps } => {
-            let join =
-                BloomCascadeJoin::new(BloomCascadeConfig { fpr: *eps, ..Default::default() });
+            let join = BloomCascadeJoin::new(BloomCascadeConfig {
+                fpr: *eps,
+                probe_path: probe_path.clone(),
+                ..Default::default()
+            });
             if let Some(src) = filters {
                 if let Some(f) = src.fetch(edge.relation, *eps) {
                     let (rows, m, _, _) =
@@ -451,6 +486,7 @@ where
                     );
                     let join = BloomCascadeJoin::new(BloomCascadeConfig {
                         fpr: *eps,
+                        probe_path: probe_path.clone(),
                         ..Default::default()
                     });
                     let (rows, fb, _, _) =
@@ -512,24 +548,19 @@ fn run_star_edge(
     resize: Option<ResizeDecision<'_>>,
     filters: Option<&dyn FilterSource>,
     faults: Option<&FaultSession>,
+    probe_path: &ProbePath,
+    scratch: &mut EdgeScratch,
 ) -> (QueryMetrics, Option<FilterResize>) {
     // the edge's big side: the gathered key column + stream indices —
     // survivors come back as indices + payloads
-    let big: PartitionedTable<Keyed<StreamIdx>> = PartitionedTable::from_rows(
-        stream
-            .keys_for(edge.relation)
-            .into_iter()
-            .enumerate()
-            .map(|(j, k)| (k, StreamIdx(j as u32)))
-            .collect(),
-        parts,
-    );
+    let big = keyed_probe_side(stream, edge.relation, parts, scratch);
     match edge.relation {
         Relation::Orders => {
             let dim = tables.orders.take().expect("star plans join orders at most once");
             let small: PartitionedTable<Keyed<(u64, i32)>> =
                 dim.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect());
-            let (joined, m, resized) = run_edge(cluster, edge, big, small, resize, filters, faults);
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, small, resize, filters, faults, probe_path);
             tables.orders_joined = true;
             let mut inner = Vec::with_capacity(joined.len());
             let mut ck = Vec::with_capacity(joined.len());
@@ -550,7 +581,8 @@ fn run_star_edge(
                 "a customer edge requires an orders edge upstream (custkey comes from ORDERS)"
             );
             let dim = tables.customer.take().expect("star plans join customer at most once");
-            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters, faults);
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, dim, resize, filters, faults, probe_path);
             let mut inner = Vec::with_capacity(joined.len());
             let mut nk = Vec::with_capacity(joined.len());
             for (_, idx, n) in joined {
@@ -563,7 +595,8 @@ fn run_star_edge(
         }
         Relation::Part => {
             let dim = tables.part.take().expect("star plans join part at most once");
-            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters, faults);
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, dim, resize, filters, faults, probe_path);
             let mut inner = Vec::with_capacity(joined.len());
             let mut brand = Vec::with_capacity(joined.len());
             for (_, idx, b) in joined {
@@ -576,7 +609,8 @@ fn run_star_edge(
         }
         Relation::Supplier => {
             let dim = tables.supplier.take().expect("star plans join supplier at most once");
-            let (joined, m, resized) = run_edge(cluster, edge, big, dim, resize, filters, faults);
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, dim, resize, filters, faults, probe_path);
             let mut inner = Vec::with_capacity(joined.len());
             let mut nk = Vec::with_capacity(joined.len());
             for (_, idx, n) in joined {
@@ -591,6 +625,697 @@ fn run_star_edge(
             panic!("lineitem is the fact side of a star plan, not a dimension")
         }
     }
+}
+
+/// Resolve the spec's [`ProbePathChoice`] into a concrete engine, once
+/// per execution.  `Kernel` loads the PJRT-compiled Pallas batch probe
+/// from the default artifact location; when no artifact is present the
+/// executor warns and falls back to the native path rather than failing
+/// the query — output rows and simulated cost are engine-invariant, so
+/// the fallback only changes wall-clock measurements.
+fn resolve_probe_path(choice: ProbePathChoice) -> ProbePath {
+    match choice {
+        ProbePathChoice::Native => ProbePath::Native,
+        ProbePathChoice::Kernel => match crate::runtime::XlaProbe::from_default_location() {
+            Some(engine) => ProbePath::Batch(Arc::new(engine)),
+            None => {
+                eprintln!(
+                    "warning: probe-path kernel requested but no XLA probe artifacts found; \
+                     falling back to the native probe"
+                );
+                ProbePath::Native
+            }
+        },
+    }
+}
+
+/// Per-query scratch for the star loop's hot path: the (key, stream
+/// index) rows every edge stages before partitioning its probe side.
+/// One buffer serves the whole query, so steady-state edges reuse the
+/// first edge's allocation instead of growing a fresh vector each time.
+#[derive(Default)]
+struct EdgeScratch {
+    keyed: Vec<Keyed<StreamIdx>>,
+}
+
+/// Build one edge's big side — the gathered probe-key column zipped
+/// with stream indices — through the reusable scratch buffer.
+fn keyed_probe_side(
+    stream: &FactStream,
+    rel: Relation,
+    parts: usize,
+    scratch: &mut EdgeScratch,
+) -> PartitionedTable<Keyed<StreamIdx>> {
+    let mut rows = std::mem::take(&mut scratch.keyed);
+    rows.clear();
+    rows.extend(
+        stream.keys_for(rel).into_iter().enumerate().map(|(j, k)| (k, StreamIdx(j as u32))),
+    );
+    let table = PartitionedTable::from_rows_reusing(&mut rows, parts);
+    scratch.keyed = rows;
+    table
+}
+
+// ---------------------------------------------------------------------
+// Fused multi-filter probe pipeline (ProbeMode::Fused)
+// ---------------------------------------------------------------------
+
+/// One fused group member's resident filter.
+#[derive(Clone)]
+enum GroupFilter {
+    /// A broadcast bloom filter (plain `Bloom` members).
+    Single(Arc<BloomFilter>),
+    /// Key-sharded filters, replicated to every probing node by the
+    /// group's `shard_fetch` stage (`BloomPartitioned` members).
+    Sharded(Arc<Vec<BloomFilter>>),
+}
+
+/// The dimension table a fused member joins in the tail step, held
+/// between the filter build (which borrows it) and the deferred
+/// `shuffle_and_join` (which consumes it).
+enum GroupSmall {
+    Orders(PartitionedTable<Keyed<(u64, i32)>>),
+    Dim(PartitionedTable<Keyed<i32>>),
+}
+
+/// The ε a bloom-class strategy was planned at.
+fn strategy_eps(strategy: &EdgeStrategy) -> Option<f64> {
+    match strategy {
+        EdgeStrategy::Bloom { eps }
+        | EdgeStrategy::BloomPartitioned { eps }
+        | EdgeStrategy::BloomExchange { eps } => Some(*eps),
+        _ => None,
+    }
+}
+
+/// Whether `edge` can join a fused probe group.  Plain bloom edges
+/// always can; partitioned edges can unless the fault plan carries a
+/// `NodeLoss` (that recovery degrades the edge to a broadcast cascade,
+/// which needs the edge-at-a-time path's input retention); a CUSTOMER
+/// edge needs its custkey column, which only exists if ORDERS was
+/// joined *before the group started* — an ORDERS member of the same
+/// group appends the column in the tail step, after the fused scan
+/// already gathered every member's keys.
+fn fused_eligible(edge: &PlannedEdge, orders_joined: bool, faults: Option<&FaultSession>) -> bool {
+    let strategy_ok = match edge.strategy {
+        EdgeStrategy::Bloom { .. } => true,
+        EdgeStrategy::BloomPartitioned { .. } => {
+            !faults.is_some_and(|fs| fs.plan().count_of(FaultKind::NodeLoss) > 0)
+        }
+        _ => false,
+    };
+    strategy_ok && (!matches!(edge.relation, Relation::Customer) || orders_joined)
+}
+
+/// Length of the maximal fused group starting at `pending[i]`.  Groups
+/// of one fall back to the edge-at-a-time path — fusion only pays when
+/// at least two filters share the pass.
+fn fused_group_len(
+    pending: &[PlannedEdge],
+    i: usize,
+    orders_joined: bool,
+    faults: Option<&FaultSession>,
+) -> usize {
+    pending[i..].iter().take_while(|e| fused_eligible(e, orders_joined, faults)).count()
+}
+
+/// Materialise one fused member's filter before the group scan.  Plain
+/// bloom members run the cascade's build phase (steps 1–4 plus the
+/// mid-build re-size point and `BroadcastDrop` recovery) — stage-for-
+/// stage identical to an edge-at-a-time build, including the
+/// [`FilterSource`] fetch/publish protocol.  Partitioned members build
+/// their key-sharded filters and then pay a `shard_fetch`: the fused
+/// pass probes *every* group filter on every node, so each node pulls
+/// the shards it does not own before the scan — replication the
+/// edge-at-a-time path never needs.
+#[allow(clippy::too_many_arguments)]
+fn build_group_filter<S>(
+    cluster: &Cluster,
+    edge: &PlannedEdge,
+    small: &PartitionedTable<Keyed<S>>,
+    resize: Option<ResizeDecision<'_>>,
+    probe_path: &ProbePath,
+    filters: Option<&dyn FilterSource>,
+    faults: Option<&FaultSession>,
+    metrics: &mut QueryMetrics,
+) -> (GroupFilter, Option<FilterResize>)
+where
+    S: Clone + Send + Sync + 'static,
+{
+    match &edge.strategy {
+        EdgeStrategy::Bloom { eps } => {
+            let join = BloomCascadeJoin::new(BloomCascadeConfig {
+                fpr: *eps,
+                probe_path: probe_path.clone(),
+                ..Default::default()
+            });
+            if let Some(src) = filters {
+                if let Some(f) = src.fetch(edge.relation, *eps) {
+                    let (filter, _) =
+                        join.build_filter_faulted(cluster, small, None, Some(f), faults, metrics);
+                    return (GroupFilter::Single(filter), None);
+                }
+                let (filter, resized) =
+                    join.build_filter_faulted(cluster, small, resize, None, faults, metrics);
+                if resized.is_none() {
+                    src.publish(edge.relation, *eps, &filter);
+                }
+                return (GroupFilter::Single(filter), resized);
+            }
+            let (filter, resized) =
+                join.build_filter_faulted(cluster, small, resize, None, faults, metrics);
+            (GroupFilter::Single(filter), resized)
+        }
+        EdgeStrategy::BloomPartitioned { eps } => {
+            let shards = build_shard_filters_faulted(cluster, small, *eps, faults, metrics);
+            let cfg = cluster.config();
+            let total_fb: u64 = shards.iter().map(|s| s.to_bytes().len() as u64).sum();
+            let n_nodes = cfg.n_nodes.max(1) as u64;
+            // every node ends up holding all shards; it already owns
+            // ~1/n of them, so it fetches the rest over its one link
+            let fetched_per_node = total_fb - total_fb / n_nodes;
+            let sim =
+                SimDuration::from_secs(cfg.transfer_seconds(fetched_per_node) + cfg.net_latency);
+            metrics.push(
+                StageTiming { tasks: n_nodes as usize, ..StageTiming::new("shard_fetch", sim) }
+                    .with_cost(&Cost {
+                        net_bytes: total_fb * n_nodes.saturating_sub(1),
+                        ..Default::default()
+                    }),
+            );
+            (GroupFilter::Sharded(Arc::new(shards)), None)
+        }
+        other => {
+            unreachable!("fused groups only contain bloom-class edges, not {}", other.label())
+        }
+    }
+}
+
+/// Everything the single fused pass measured, before the tail joins.
+struct FusedScan {
+    /// Surviving stream indices (ascending) — the conjunction of every
+    /// member filter's verdict over the entering stream.
+    inner: Vec<u32>,
+    /// Live lanes entering each member's filter, in group order.
+    entering: Vec<u64>,
+    /// Live lanes surviving each member's filter.
+    exiting: Vec<u64>,
+    /// Per-member stage bookings: `fragments[j]` belongs to member `j`'s
+    /// metrics.  The one `probe_fused` stage is split across members by
+    /// their modeled share of the fused work (leader: the stream scan
+    /// and the disk read; followers: their memoized probe term), and the
+    /// leader's list also carries any `retry_build`/`speculative_rerun`
+    /// recovery in stage order.  The raw stage is never booked whole, so
+    /// a composed ledger sums to exactly the stage's simulated time.
+    fragments: Vec<Vec<StageTiming>>,
+}
+
+/// The fused pass itself: one `probe_fused` stage, one task per
+/// partition range of the entering stream.  Each task walks its range
+/// in 64-key chunks; per chunk, every member filter tests in group
+/// order against a live-lane mask, with the member's key column hashed
+/// once into a shared [`HashedChunk`] (dead lanes skipped via
+/// [`HashedChunk::fill_live`]) and all `k` probes reusing the cached
+/// hash pair.  Survivor indices come back ascending per partition and
+/// concatenate in task order, so the result is thread-count invariant.
+fn run_fused_scan(
+    cluster: &Cluster,
+    stream: &FactStream,
+    group: &[PlannedEdge],
+    group_filters: &[GroupFilter],
+    parts: usize,
+    probe_path: &ProbePath,
+    faults: Option<&FaultSession>,
+) -> FusedScan {
+    let cfg = cluster.config().clone();
+    let n_edges = group.len();
+    let n_rows = stream.len();
+    // per-member probe-key columns, each gathered once from the
+    // entering stream — the only per-member pass over the stream
+    let key_cols: Vec<Arc<Vec<u64>>> =
+        group.iter().map(|e| Arc::new(stream.keys_for(e.relation))).collect();
+    let ks: Vec<u32> = group_filters
+        .iter()
+        .map(|f| match f {
+            GroupFilter::Single(f) => f.params().k,
+            GroupFilter::Sharded(s) => s.first().map_or(1, |f| f.params().k),
+        })
+        .collect();
+    // the same row ranges `PartitionedTable::from_rows` would deal out
+    let n_parts = parts.max(1);
+    let (base, rem) = (n_rows / n_parts, n_rows % n_parts);
+    let mut ranges = Vec::with_capacity(n_parts);
+    let mut start = 0usize;
+    for p in 0..n_parts {
+        let len = base + usize::from(p < rem);
+        ranges.push(start..start + len);
+        start += len;
+    }
+    // fault decisions on the coordinator, pre-submission, so firing is
+    // thread-count invariant (mirrors the cascade's filter_scan)
+    let panic_victim = faults.and_then(|fs| {
+        fs.should_fire(FaultKind::WorkerPanic, "probe_fused").then(|| fs.target_index(n_parts))
+    });
+    let straggler_victim = faults.and_then(|fs| {
+        fs.should_fire(FaultKind::Straggler, "probe_fused").then(|| fs.target_index(n_parts))
+    });
+    let n_nodes = cfg.n_nodes;
+    type PartOut = (Vec<u32>, Vec<u64>, Vec<u64>);
+    let make_tasks = |victim: Option<usize>| -> Vec<Task<PartOut>> {
+        ranges
+            .iter()
+            .enumerate()
+            .map(|(p, range)| {
+                let range = range.clone();
+                let key_cols = key_cols.clone();
+                let filters = group_filters.to_vec();
+                let probe = probe_path.clone();
+                let ks = ks.clone();
+                let scan_c = cfg.scan_record_cost;
+                let hash_c = cfg.hash_insert_cost;
+                let disk_bw = cfg.disk_bandwidth;
+                Task::new(move || {
+                    if victim == Some(p) {
+                        panic!("injected worker panic in probe_fused partition {p}");
+                    }
+                    let n = range.len();
+                    // kernel engine: one batch-probe call per broadcast
+                    // filter per partition — the same PJRT call count as
+                    // the edge-at-a-time pipeline; lanes an earlier
+                    // member already killed are wasted kernel lanes, but
+                    // the simulated cost is engine-invariant regardless
+                    let verdicts: Vec<Option<Vec<bool>>> = match &probe {
+                        ProbePath::Native => filters.iter().map(|_| None).collect(),
+                        ProbePath::Batch(engine) => filters
+                            .iter()
+                            .zip(&key_cols)
+                            .map(|(f, keys)| match f {
+                                GroupFilter::Single(f) => {
+                                    Some(engine.probe(&keys[range.clone()], f))
+                                }
+                                GroupFilter::Sharded(_) => None,
+                            })
+                            .collect(),
+                    };
+                    let mut inner: Vec<u32> = Vec::new();
+                    let mut entering = vec![0u64; filters.len()];
+                    let mut exiting = vec![0u64; filters.len()];
+                    let mut hashed = HashedChunk::new();
+                    let mut off = 0usize;
+                    while off < n {
+                        let clen = (n - off).min(PROBE_CHUNK);
+                        let mut live = live_mask(clen);
+                        for (j, gf) in filters.iter().enumerate() {
+                            entering[j] += u64::from(live.count_ones());
+                            if live == 0 {
+                                continue;
+                            }
+                            let keys =
+                                &key_cols[j][range.start + off..range.start + off + clen];
+                            match (gf, &verdicts[j]) {
+                                (GroupFilter::Single(_), Some(v)) => {
+                                    for i in 0..clen {
+                                        if live & (1u64 << i) != 0 && !v[off + i] {
+                                            live &= !(1u64 << i);
+                                        }
+                                    }
+                                }
+                                (GroupFilter::Single(f), None) => {
+                                    // this member's keys hash once for
+                                    // the chunk; the filter's k probes
+                                    // all reuse the cached pair
+                                    if j == 0 {
+                                        hashed.fill(keys);
+                                    } else {
+                                        hashed.fill_live(keys, live);
+                                    }
+                                    live = f.test_hashed(&hashed, live);
+                                }
+                                (GroupFilter::Sharded(shards), _) => {
+                                    if j == 0 {
+                                        hashed.fill(keys);
+                                    } else {
+                                        hashed.fill_live(keys, live);
+                                    }
+                                    for i in 0..clen {
+                                        if live & (1u64 << i) == 0 {
+                                            continue;
+                                        }
+                                        let s = partition_of(keys[i], shards.len());
+                                        if shards[s].test_hashed(&hashed, 1u64 << i) == 0 {
+                                            live &= !(1u64 << i);
+                                        }
+                                    }
+                                }
+                            }
+                            exiting[j] += u64::from(live.count_ones());
+                        }
+                        let mut lanes = live;
+                        while lanes != 0 {
+                            let i = lanes.trailing_zeros() as usize;
+                            inner.push((range.start + off + i) as u32);
+                            lanes &= lanes - 1;
+                        }
+                        off += clen;
+                    }
+                    // modeled cost: one stream scan (the leader's term)
+                    // plus each follower's memoized probe on the lanes
+                    // still live when its turn came
+                    let cpu_s = n as f64 * scan_c
+                        + entering
+                            .iter()
+                            .zip(&ks)
+                            .skip(1)
+                            .map(|(&e, &k)| e as f64 * hash_c * f64::from(k))
+                            .sum::<f64>();
+                    let disk_bytes = n as u64 * (8 + STREAM_ROW_BYTES as u64);
+                    let disk_s = disk_bytes as f64 / disk_bw;
+                    (
+                        (inner, entering, exiting),
+                        Cost { cpu_s, disk_s, disk_bytes, ..Default::default() },
+                    )
+                })
+                .with_locality(p % n_nodes)
+            })
+            .collect()
+    };
+    // injected fault: a real panic on the real pool in the seed-picked
+    // partition; the failed attempt's outputs are discarded and only the
+    // typed `retry_build` recovery stage is booked (on the leader), so
+    // the measured probe_fused split stays fault-free
+    let mut recovery_pre: Vec<StageTiming> = Vec::new();
+    let mut recovery_post: Vec<StageTiming> = Vec::new();
+    if let Some(v) = panic_victim {
+        let fs = faults.expect("victim implies an active session");
+        let failed = cluster
+            .try_run_stage(Stage::new("probe_fused", make_tasks(Some(v))))
+            .map(|_| ())
+            .expect_err("injected panic must fail the stage");
+        let backoff = fs.backoff(1);
+        let sim = retry_build_price(
+            &cfg,
+            ranges[v].len() as f64 * cfg.scan_record_cost,
+            backoff.seconds(),
+        );
+        recovery_pre.push(StageTiming { tasks: 1, ..StageTiming::new("retry_build", sim) });
+        fs.log_recovery(
+            "retry_build",
+            "probe_fused",
+            format!("{failed}; stage retried without the fault"),
+            sim.seconds(),
+        );
+    }
+    let scan = cluster.run_stage(Stage::new("probe_fused", make_tasks(None)));
+    // injected fault: the seed-picked task straggles; a speculative copy
+    // elsewhere overtakes it, so the main stage keeps its fault-free
+    // timing and only the copy's price is booked
+    if let Some(v) = straggler_victim {
+        let fs = faults.expect("victim implies an active session");
+        let sim = speculative_rerun_price(&cfg, ranges[v].len() as f64 * cfg.scan_record_cost);
+        recovery_post
+            .push(StageTiming { tasks: 1, ..StageTiming::new("speculative_rerun", sim) });
+        fs.log_recovery(
+            "speculative_rerun",
+            "probe_fused",
+            format!("partition {v} straggled; speculative copy won"),
+            sim.seconds(),
+        );
+    }
+    // aggregate in task order — partition ranges are ordered, so the
+    // concatenated survivor indices are strictly ascending
+    let mut inner: Vec<u32> = Vec::new();
+    let mut entering = vec![0u64; n_edges];
+    let mut exiting = vec![0u64; n_edges];
+    for (part_inner, part_entering, part_exiting) in &scan.outputs {
+        inner.extend_from_slice(part_inner);
+        for j in 0..n_edges {
+            entering[j] += part_entering[j];
+            exiting[j] += part_exiting[j];
+        }
+    }
+    let weights: Vec<f64> = (0..n_edges)
+        .map(|j| {
+            if j == 0 {
+                (n_rows as f64 * cfg.scan_record_cost).max(1e-12)
+            } else {
+                entering[j] as f64 * cfg.hash_insert_cost * f64::from(ks[j])
+            }
+        })
+        .collect();
+    let total_w: f64 = weights.iter().sum::<f64>().max(1e-12);
+    let mut fragments: Vec<Vec<StageTiming>> = Vec::with_capacity(n_edges);
+    for (j, w) in weights.iter().enumerate() {
+        let share = w / total_w;
+        let frag = StageTiming {
+            tasks: scan.n_tasks,
+            wall_s: scan.wall_time.seconds() * share,
+            cpu_s: scan.total_cost.cpu_s * share,
+            disk_bytes: if j == 0 { scan.total_cost.disk_bytes } else { 0 },
+            ..StageTiming::new(
+                "probe_fused",
+                SimDuration::from_secs(scan.sim_time.seconds() * share),
+            )
+        };
+        if j == 0 {
+            let mut list = std::mem::take(&mut recovery_pre);
+            list.push(frag);
+            list.append(&mut recovery_post);
+            fragments.push(list);
+        } else {
+            fragments.push(vec![frag]);
+        }
+    }
+    FusedScan { inner, entering, exiting, fragments }
+}
+
+/// One fused member's deferred payload join: partition the surviving
+/// stream's key column, shuffle it against the member's dimension table
+/// (held since the build step) and contract the stream through the join
+/// survivors, appending the member's payload column — the same
+/// `shuffle`/`join` tail the edge-at-a-time cascade runs, against the
+/// conjunctively pre-filtered stream.  The pre-filter only removes rows
+/// some member's filter rejected (bloom filters have no false
+/// negatives), so running the joins in group order reproduces the
+/// edge-at-a-time multiset exactly.
+#[allow(clippy::too_many_arguments)]
+fn fused_tail_join(
+    cluster: &Cluster,
+    edge: &PlannedEdge,
+    parts: usize,
+    stream: &mut FactStream,
+    tables: &mut DimTables,
+    scratch: &mut EdgeScratch,
+    small: GroupSmall,
+    metrics: &mut QueryMetrics,
+) {
+    let big = keyed_probe_side(stream, edge.relation, parts, scratch);
+    match (edge.relation, small) {
+        (Relation::Orders, GroupSmall::Orders(dim)) => {
+            let joined =
+                shuffle_and_join(cluster, big.into_partitions(), dim.into_partitions(), metrics);
+            tables.orders_joined = true;
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut ck = Vec::with_capacity(joined.len());
+            let mut od = Vec::with_capacity(joined.len());
+            for (_, idx, (c, d)) in joined {
+                inner.push(idx.0);
+                ck.push(c);
+                od.push(d);
+            }
+            stream.contract(&inner);
+            stream.custkey = Some(ck);
+            stream.orderdate = Some(od);
+        }
+        (rel, GroupSmall::Dim(dim)) => {
+            let joined =
+                shuffle_and_join(cluster, big.into_partitions(), dim.into_partitions(), metrics);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut col = Vec::with_capacity(joined.len());
+            for (_, idx, v) in joined {
+                inner.push(idx.0);
+                col.push(v);
+            }
+            stream.contract(&inner);
+            match rel {
+                Relation::Customer => stream.nationkey = Some(col),
+                Relation::Part => stream.p_brand = Some(col),
+                Relation::Supplier => stream.s_nationkey = Some(col),
+                _ => unreachable!("fused group smalls are built per relation"),
+            }
+        }
+        _ => unreachable!("fused group smalls are built per relation"),
+    }
+}
+
+/// What one fused member contributed, in the shape the star loop's
+/// observe/re-plan bookkeeping expects.
+struct GroupEdgeResult {
+    metrics: QueryMetrics,
+    resized: Option<FilterResize>,
+    /// Live lanes entering this member's filter in the fused pass.
+    probe_rows: u64,
+    /// Measured survivors: the member's filter-level pass count, except
+    /// for the group's last member, which owns the join-level count (the
+    /// stream length after every tail join) — so the ledger's final
+    /// observation still equals the plan's output rows.
+    survivors: u64,
+    /// The expectation matching `survivors`' level: ε-inflated filter
+    /// pass fractions for inner members, pure join selectivities for the
+    /// last.
+    expected: u64,
+    /// Predicted rows entering this member's filter — what its resize
+    /// decider was armed with (the group builds every filter before any
+    /// member's measured survivors exist).
+    est_entering: u64,
+}
+
+/// Run one fused group: build every member filter (A), probe them all
+/// in one pass over the fact stream (B), then run the deferred payload
+/// joins on the contracted stream (C).
+#[allow(clippy::too_many_arguments)]
+fn run_fused_group(
+    cluster: &Cluster,
+    spec: &PlanSpec,
+    group: &[PlannedEdge],
+    parts: usize,
+    stream: &mut FactStream,
+    tables: &mut DimTables,
+    scratch: &mut EdgeScratch,
+    probe_path: &ProbePath,
+    filters: Option<&dyn FilterSource>,
+    faults: Option<&FaultSession>,
+    run_calib: &CostCalibration,
+) -> Vec<GroupEdgeResult> {
+    let cfg = cluster.config().clone();
+    let entry_rows = stream.len() as u64;
+    let n_edges = group.len();
+
+    // -- A: build every member's filter up front -----------------------
+    let mut group_metrics: Vec<QueryMetrics> =
+        (0..n_edges).map(|_| QueryMetrics::default()).collect();
+    let mut group_filters: Vec<GroupFilter> = Vec::with_capacity(n_edges);
+    let mut smalls: Vec<GroupSmall> = Vec::with_capacity(n_edges);
+    let mut resizes: Vec<Option<FilterResize>> = Vec::with_capacity(n_edges);
+    let mut est_enterings: Vec<u64> = Vec::with_capacity(n_edges);
+    // a member's resize decider sees the *predicted* residual: the entry
+    // stream times every earlier member's filter pass fraction
+    let mut est = entry_rows as f64;
+    for (j, edge) in group.iter().enumerate() {
+        let est_entering = est.round().max(0.0) as u64;
+        est_enterings.push(est_entering);
+        let decider = wants_resize(spec, edge, est_entering).then(|| {
+            resize_decider(
+                cfg.clone(),
+                edge.stats.clone(),
+                est_entering,
+                run_calib.factors_with_min(1),
+            )
+        });
+        let resize = decider.as_ref().map(|f| f as ResizeDecision<'_>);
+        let m = &mut group_metrics[j];
+        let (gf, resized) = match edge.relation {
+            Relation::Orders => {
+                let dim = tables.orders.take().expect("star plans join orders at most once");
+                let small: PartitionedTable<Keyed<(u64, i32)>> = dim.map_partitions(|p| {
+                    p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect()
+                });
+                let r = build_group_filter(
+                    cluster, edge, &small, resize, probe_path, filters, faults, m,
+                );
+                smalls.push(GroupSmall::Orders(small));
+                r
+            }
+            Relation::Customer => {
+                let dim = tables.customer.take().expect("star plans join customer at most once");
+                let r = build_group_filter(
+                    cluster, edge, &dim, resize, probe_path, filters, faults, m,
+                );
+                smalls.push(GroupSmall::Dim(dim));
+                r
+            }
+            Relation::Part => {
+                let dim = tables.part.take().expect("star plans join part at most once");
+                let r = build_group_filter(
+                    cluster, edge, &dim, resize, probe_path, filters, faults, m,
+                );
+                smalls.push(GroupSmall::Dim(dim));
+                r
+            }
+            Relation::Supplier => {
+                let dim = tables.supplier.take().expect("star plans join supplier at most once");
+                let r = build_group_filter(
+                    cluster, edge, &dim, resize, probe_path, filters, faults, m,
+                );
+                smalls.push(GroupSmall::Dim(dim));
+                r
+            }
+            Relation::Lineitem => {
+                panic!("lineitem is the fact side of a star plan, not a dimension")
+            }
+        };
+        let eps = resized
+            .as_ref()
+            .map(|r| r.new_fpr)
+            .or_else(|| strategy_eps(&edge.strategy))
+            .unwrap_or(0.0);
+        est *= filter_pass_fraction(&edge.stats, eps);
+        group_filters.push(gf);
+        resizes.push(resized);
+    }
+
+    // -- B: one pass over the stream through every filter --------------
+    let FusedScan { inner, entering, exiting, fragments } =
+        run_fused_scan(cluster, stream, group, &group_filters, parts, probe_path, faults);
+    for (j, frags) in fragments.into_iter().enumerate() {
+        for frag in frags {
+            group_metrics[j].push(frag);
+        }
+    }
+    stream.contract(&inner);
+
+    // -- C: deferred payload joins on the contracted stream ------------
+    for (j, (edge, small)) in group.iter().zip(smalls).enumerate() {
+        fused_tail_join(
+            cluster, edge, parts, stream, tables, scratch, small, &mut group_metrics[j],
+        );
+    }
+
+    // attribution: inner members report filter-level counts (their pass
+    // counts against ε-inflated expectations — the fused pass never
+    // materialises their join-level survivors); the last member owns the
+    // join-level story so the final observation equals the output rows
+    let final_survivors = stream.len() as u64;
+    let mut pass_filter = 1.0;
+    let mut pass_join = 1.0;
+    let mut results = Vec::with_capacity(n_edges);
+    for (j, edge) in group.iter().enumerate() {
+        let eps = resizes[j]
+            .as_ref()
+            .map(|r| r.new_fpr)
+            .or_else(|| strategy_eps(&edge.strategy))
+            .unwrap_or(0.0);
+        pass_filter *= filter_pass_fraction(&edge.stats, eps);
+        pass_join *= edge.stats.matched_rows as f64 / edge.stats.probe_rows.max(1) as f64;
+        let probe_rows = entering[j];
+        let (survivors, expected) = if j == n_edges - 1 {
+            (final_survivors, ((entry_rows as f64 * pass_join).round() as u64).min(entry_rows))
+        } else {
+            (exiting[j], ((entry_rows as f64 * pass_filter).round() as u64).min(probe_rows))
+        };
+        let mut m = std::mem::take(&mut group_metrics[j]);
+        m.big_rows_scanned = probe_rows;
+        m.big_rows_after_filter = exiting[j];
+        m.output_rows = survivors;
+        results.push(GroupEdgeResult {
+            metrics: m,
+            resized: resizes[j].take(),
+            probe_rows,
+            survivors,
+            expected,
+            est_entering: est_enterings[j],
+        });
+    }
+    results
 }
 
 /// What the executor measured running one edge — the adaptive loop's
@@ -644,7 +1369,10 @@ fn observe_edge(
         estimated_survivors: edge.stats.matched_rows,
         measured_survivors: survivors,
         build_wall_s: m.bloom_creation_wall_s(),
-        probe_wall_s: m.stage(probe_stage).map_or(0.0, |s| s.wall_s),
+        probe_wall_s: m
+            .stage("probe_fused")
+            .or_else(|| m.stage(probe_stage))
+            .map_or(0.0, |s| s.wall_s),
         shipped_bytes: m.total_net_bytes(),
         sim_s: m.total_sim_s(),
         measured_stage1_s: m.bloom_creation_s(),
@@ -824,6 +1552,7 @@ pub fn execute_with_filters(
         _ => FaultSession::inactive(),
     };
     let faults = fault_session.is_active().then_some(&fault_session);
+    let probe_path = resolve_probe_path(spec.probe_path);
 
     let rows: Vec<PlanRow> = match plan.topology {
         Topology::Star => {
@@ -839,7 +1568,94 @@ pub fn execute_with_filters(
             // the edge that just completed
             let mut pending: Vec<PlannedEdge> = plan.edges.clone();
             let mut i = 0;
+            let mut scratch = EdgeScratch::default();
             while i < pending.len() {
+                // fused mode: a run of ≥ 2 consecutive bloom-class edges
+                // probes as one group — one pass over the stream, one
+                // observation per member, re-plans resume past the group
+                let glen = if spec.probe == ProbeMode::Fused {
+                    fused_group_len(&pending, i, tables.orders_joined, faults)
+                } else {
+                    0
+                };
+                if glen >= 2 {
+                    let group: Vec<PlannedEdge> = pending[i..i + glen].to_vec();
+                    let group_end = i + glen;
+                    let results = run_fused_group(
+                        cluster,
+                        spec,
+                        &group,
+                        parts,
+                        &mut stream,
+                        &mut tables,
+                        &mut scratch,
+                        &probe_path,
+                        filters,
+                        faults,
+                        &run_calib,
+                    );
+                    let final_survivors = results.last().map_or(0, |r| r.survivors);
+                    for (j, r) in results.into_iter().enumerate() {
+                        let edge = &group[j];
+                        let GroupEdgeResult {
+                            metrics: m,
+                            resized,
+                            probe_rows,
+                            survivors,
+                            expected,
+                            est_entering,
+                        } = r;
+                        let obs = observe_edge(
+                            cluster.config(),
+                            edge,
+                            &m,
+                            probe_rows,
+                            survivors,
+                            resized.as_ref(),
+                        );
+                        if let Some(rz) = &resized {
+                            ledger.resizes.push(ResizeEvent {
+                                edge: edge.name.clone(),
+                                old_eps: rz.old_fpr,
+                                new_eps: rz.new_fpr,
+                                build_estimate: rz.build_estimate,
+                                probe_rows: est_entering,
+                            });
+                        }
+                        run_calib.record(&obs);
+                        let replan = |factors: Option<(f64, f64)>| {
+                            replan_remaining(
+                                cluster,
+                                spec,
+                                factors,
+                                &plan.dim_stats,
+                                &pending[group_end..],
+                                final_survivors,
+                            )
+                        };
+                        let new_tail = trigger_tail(
+                            cluster.config(),
+                            spec,
+                            persistent_factors,
+                            &run_calib,
+                            &mut ledger,
+                            edge,
+                            &pending[group_end..],
+                            survivors,
+                            expected,
+                            &replan,
+                        );
+                        if let Some(new_tail) = new_tail {
+                            pending.truncate(group_end);
+                            pending.extend(new_tail);
+                        }
+                        ledger.observations.push(obs);
+                        edge_reports.push(edge_report(edge, &m, probe_rows));
+                        metrics.absorb(&format!("e{}", i + 1 + j), m);
+                    }
+                    i += glen;
+                    continue;
+                }
                 let edge = pending[i].clone();
                 let probe_rows = stream.len() as u64;
                 // mid-build re-plan point (regret bloom edges only)
@@ -853,7 +1669,16 @@ pub fn execute_with_filters(
                 });
                 let resize = decider.as_ref().map(|f| f as ResizeDecision<'_>);
                 let (m, resized) = run_star_edge(
-                    cluster, &edge, parts, &mut stream, &mut tables, resize, filters, faults,
+                    cluster,
+                    &edge,
+                    parts,
+                    &mut stream,
+                    &mut tables,
+                    resize,
+                    filters,
+                    faults,
+                    &probe_path,
+                    &mut scratch,
                 );
                 let survivors = stream.len() as u64;
                 let obs = observe_edge(
@@ -945,7 +1770,7 @@ pub fn execute_with_filters(
                             p.into_iter().map(|(ok, ck, od)| (ck, (ok, od))).collect()
                         });
                         let (joined, m, r) =
-                            run_edge(cluster, &edge, big, c, resize, filters, faults);
+                            run_edge(cluster, &edge, big, c, resize, filters, faults, &probe_path);
                         let survivors = joined.len() as u64;
                         // re-key the reduction by orderkey for the fact edge
                         reduced = Some(PartitionedTable::from_rows(
@@ -965,8 +1790,9 @@ pub fn execute_with_filters(
                         let big: PartitionedTable<Keyed<PlanRow>> = l.map_partitions(|p| {
                             p.iter().map(|f| (f.orderkey, seed_row(f))).collect()
                         });
-                        let (joined, m, r) =
-                            run_edge(cluster, &edge, big, small, resize, filters, faults);
+                        let (joined, m, r) = run_edge(
+                            cluster, &edge, big, small, resize, filters, faults, &probe_path,
+                        );
                         let survivors = joined.len() as u64;
                         rows_out = joined
                             .into_iter()

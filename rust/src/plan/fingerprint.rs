@@ -20,7 +20,7 @@
 //! cheap, with inputs structured (tagged per field) so field
 //! transpositions cannot collide trivially.
 
-use super::{EpsMode, PlanSpec, PushdownMode, Relation, ReplanPolicy, Topology};
+use super::{EpsMode, PlanSpec, ProbeMode, PushdownMode, Relation, ReplanPolicy, Topology};
 
 /// Incremental FNV-1a (64-bit) over tagged field bytes.
 #[derive(Clone, Copy, Debug)]
@@ -110,6 +110,14 @@ pub fn spec_fingerprint(spec: &PlanSpec) -> u64 {
         ReplanPolicy::Adaptive => 2,
         ReplanPolicy::Regret => 3,
     });
+    // fusion changes the priced plan shape (grouped edges share one
+    // stream scan), so it is planning identity; the probe *engine*
+    // (`spec.probe_path`) changes neither rows nor simulated cost and is
+    // deliberately excluded, like `faults`.
+    h = h.u64(match spec.probe {
+        ProbeMode::Edge => 1,
+        ProbeMode::Fused => 2,
+    });
     h.u64(spec.replan_floor).finish()
 }
 
@@ -192,6 +200,20 @@ mod tests {
         let mut replan = spec();
         replan.replan = ReplanPolicy::Adaptive;
         assert_ne!(spec_fingerprint(&spec()), spec_fingerprint(&replan));
+        let mut fused = spec();
+        fused.probe = ProbeMode::Fused;
+        assert_ne!(
+            spec_fingerprint(&spec()),
+            spec_fingerprint(&fused),
+            "fusion regroups the priced plan — planning identity"
+        );
+        let mut kernel = spec();
+        kernel.probe_path = super::super::ProbePathChoice::Kernel;
+        assert_eq!(
+            spec_fingerprint(&spec()),
+            spec_fingerprint(&kernel),
+            "the probe engine changes neither rows nor simulated cost"
+        );
     }
 
     #[test]

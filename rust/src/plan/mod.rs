@@ -65,18 +65,18 @@ pub mod fingerprint;
 pub mod report;
 
 pub use adaptive::{
-    estimate_error, regret_flip, resize_epsilon, should_replan, trigger_bound, EdgeObservation,
-    RegretFinding, ReplanEvent, ReplanLedger, ReplanPolicy, ReplanTrigger, ResizeEvent,
-    DEFAULT_ROW_FLOOR, REGRET_MARGIN, RESIZE_RATIO,
+    estimate_error, filter_pass_fraction, regret_flip, resize_epsilon, should_replan,
+    trigger_bound, EdgeObservation, RegretFinding, ReplanEvent, ReplanLedger, ReplanPolicy,
+    ReplanTrigger, ResizeEvent, DEFAULT_ROW_FLOOR, REGRET_MARGIN, RESIZE_RATIO,
 };
 pub use catalog::{
     chain_edge_stats, prepare, star_dim_stats, DimStats, EdgeStats, FactRow, PlanInputs, Relation,
 };
 pub use costing::{
     cost_fingerprint, degrade_broadcast_price, derive_edge_stats, discount_cached_builds,
-    plan_edges, plan_edges_calibrated, price_edges_with, rank_dims, retry_build_price,
-    retry_ship_price, shard_rebuild_price, speculative_rerun_price, star_edge_stats,
-    CostCalibration, EdgePrediction, StrategyCost,
+    discount_fused_probes, plan_edges, plan_edges_calibrated, price_edges_with, rank_dims,
+    retry_build_price, retry_ship_price, shard_rebuild_price, speculative_rerun_price,
+    star_edge_stats, CostCalibration, EdgePrediction, StrategyCost,
 };
 pub use executor::{
     execute, execute_with, execute_with_filters, nested_loop_oracle, EdgeReport, FilterSource,
@@ -151,6 +151,69 @@ impl PushdownMode {
     }
 }
 
+/// How the executor probes bloom-class edges against the fact stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeMode {
+    /// One full filter pass (scan + materialise + join) per edge — the
+    /// historical edge-at-a-time pipeline.
+    Edge,
+    /// Consecutive bloom-class edges whose filters are resident on the
+    /// probing node are grouped and probed in a single pass over the
+    /// fact stream per partition: each 64-key chunk is hashed once into
+    /// a shared [`crate::bloom::HashedChunk`], every filter in the group
+    /// tests the cached hashes while the chunk is hot, and payload
+    /// gathers are deferred to one late-materialisation step per group.
+    /// Output rows are bit-identical to [`ProbeMode::Edge`].
+    Fused,
+}
+
+impl ProbeMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProbeMode::Edge => "edge",
+            ProbeMode::Fused => "fused",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProbeMode> {
+        match s {
+            "edge" => Some(ProbeMode::Edge),
+            "fused" => Some(ProbeMode::Fused),
+            _ => None,
+        }
+    }
+}
+
+/// Which engine the probe point dispatches filter membership tests to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbePathChoice {
+    /// The native Rust probe (`BloomFilter::probe_batch`).
+    Native,
+    /// The AOT-compiled Pallas kernel (`runtime::XlaProbe`) when its
+    /// artifacts are present; the executor warns and falls back to
+    /// [`ProbePathChoice::Native`] otherwise.  Simulated cost and output
+    /// rows are engine-invariant, so this knob is excluded from
+    /// [`spec_fingerprint`].
+    Kernel,
+}
+
+impl ProbePathChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProbePathChoice::Native => "native",
+            ProbePathChoice::Kernel => "kernel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProbePathChoice> {
+        match s {
+            "native" => Some(ProbePathChoice::Native),
+            "kernel" => Some(ProbePathChoice::Kernel),
+            _ => None,
+        }
+    }
+}
+
 /// The parameterised n-way query (predicates mirror `query::JoinQuery`).
 #[derive(Clone, Debug)]
 pub struct PlanSpec {
@@ -183,6 +246,14 @@ pub struct PlanSpec {
     /// Absolute row floor both re-plan triggers must clear — a relative
     /// breach on fewer residual rows than this is noise, not information.
     pub replan_floor: u64,
+    /// Edge-at-a-time or fused group probing (`--probe`).  Part of the
+    /// plan identity ([`spec_fingerprint`]): fusion changes the priced
+    /// shape of the plan even though output rows are identical.
+    pub probe: ProbeMode,
+    /// Native or kernel probe engine (`--probe-path`).  *Not* part of
+    /// the plan identity: the engine changes neither rows nor simulated
+    /// cost.
+    pub probe_path: ProbePathChoice,
     /// Deterministic fault-injection plan for this execution (`--faults`
     /// / the server request's `faults` field); `None` = fault-free.
     /// Excluded from [`spec_fingerprint`] on purpose: faults are a
@@ -210,6 +281,8 @@ impl Default for PlanSpec {
             pushdown: PushdownMode::Ranked,
             replan: ReplanPolicy::Static,
             replan_floor: DEFAULT_ROW_FLOOR,
+            probe: ProbeMode::Edge,
+            probe_path: ProbePathChoice::Native,
             faults: None,
         }
     }
@@ -398,6 +471,29 @@ mod tests {
             assert_eq!(PushdownMode::parse(m.name()), Some(m));
         }
         assert_eq!(PushdownMode::parse("random"), None);
+    }
+
+    #[test]
+    fn probe_mode_parse_roundtrips() {
+        for m in [ProbeMode::Edge, ProbeMode::Fused] {
+            assert_eq!(ProbeMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ProbeMode::parse("vector"), None);
+    }
+
+    #[test]
+    fn probe_path_parse_roundtrips() {
+        for p in [ProbePathChoice::Native, ProbePathChoice::Kernel] {
+            assert_eq!(ProbePathChoice::parse(p.name()), Some(p));
+        }
+        assert_eq!(ProbePathChoice::parse("xla"), None);
+    }
+
+    #[test]
+    fn spec_defaults_to_edge_probing_on_the_native_path() {
+        let spec = PlanSpec::default();
+        assert_eq!(spec.probe, ProbeMode::Edge);
+        assert_eq!(spec.probe_path, ProbePathChoice::Native);
     }
 
     #[test]

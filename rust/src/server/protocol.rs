@@ -13,7 +13,8 @@
 
 use crate::cluster::FaultPlan;
 use crate::plan::{
-    EpsMode, PlanSpec, PushdownMode, Relation, ReplanPolicy, StrategyKind, Topology,
+    EpsMode, PlanSpec, ProbeMode, ProbePathChoice, PushdownMode, Relation, ReplanPolicy,
+    StrategyKind, Topology,
 };
 use crate::util::Json;
 
@@ -201,12 +202,23 @@ fn spec_from(j: &Json) -> Result<PlanSpec, String> {
         ReplanPolicy::parse(s)
             .ok_or_else(|| format!("unknown replan {s:?} (static|adaptive|regret)"))?
     };
+    let probe = {
+        let s = get_str(j, "probe")?.unwrap_or("edge");
+        ProbeMode::parse(s).ok_or_else(|| format!("unknown probe {s:?} (edge|fused)"))?
+    };
+    let probe_path = {
+        let s = get_str(j, "probe_path")?.unwrap_or("native");
+        ProbePathChoice::parse(s)
+            .ok_or_else(|| format!("unknown probe_path {s:?} (native|kernel)"))?
+    };
     let mut spec = PlanSpec {
         topology,
         dims,
         eps_mode,
         pushdown,
         replan,
+        probe,
+        probe_path,
         ..PlanSpec::default()
     };
     if let Some(sf) = get_f64(j, "sf")? {
@@ -361,6 +373,7 @@ mod tests {
             r#"{"id":"q1","op":"plan","relations":"lineitem,orders,customer,part",
                 "topology":"star","eps_mode":"global","eps":0.02,"pushdown":"unranked",
                 "replan":"adaptive","sf":0.02,"partitions":4,"part_brand":7,
+                "probe":"fused","probe_path":"kernel",
                 "force_strategy":"bloom","no_execute":true,"hold_ms":25}"#,
         )
         .expect("parses");
@@ -373,7 +386,14 @@ mod tests {
         assert_eq!(req.spec.partitions, 4);
         assert!(matches!(req.spec.eps_mode, EpsMode::Global(e) if (e - 0.02).abs() < 1e-12));
         assert_eq!(req.spec.pushdown, PushdownMode::Unranked);
+        assert_eq!(req.spec.probe, ProbeMode::Fused);
+        assert_eq!(req.spec.probe_path, ProbePathChoice::Kernel);
         assert_eq!(req.force, Some(StrategyKind::Bloom));
+        // both knobs default off the wire
+        let p = parse_request(r#"{"op":"plan","relations":"lineitem,orders"}"#).expect("parses");
+        let Request::Plan(req) = p.req else { panic!("not a plan") };
+        assert_eq!(req.spec.probe, ProbeMode::Edge);
+        assert_eq!(req.spec.probe_path, ProbePathChoice::Native);
     }
 
     #[test]
@@ -384,6 +404,8 @@ mod tests {
             (r#"{"op":"plan","relations":"lineitem,customer"}"#, "orders"),
             (r#"{"op":"plan","relations":"lineitem,part","topology":"chain"}"#, "chain"),
             (r#"{"op":"plan","relations":"lineitem,orders","partitions":0}"#, "partitions"),
+            (r#"{"op":"plan","relations":"lineitem,orders","probe":"vector"}"#, "probe"),
+            (r#"{"op":"plan","relations":"lineitem,orders","probe_path":"xla"}"#, "probe_path"),
             (r#"{"op":"teleport"}"#, "unknown op"),
             (r#"not json"#, "parse error"),
         ] {

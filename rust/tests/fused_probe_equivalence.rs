@@ -1,0 +1,268 @@
+//! Fused-probe equivalence properties: `--probe fused` is a pure
+//! execution-strategy change.  Across strategy assignments (groups of
+//! every shape, including runs broken by broadcast/sort-merge/exchange
+//! edges), every named fault profile, and every re-plan policy, the
+//! fused pipeline returns exactly the rows of the edge-at-a-time run
+//! (itself checked against the nested-loop oracle), and the adaptive
+//! ledger still carries one observation per executed edge — a fused
+//! group never hides its members from the cardinality/regret triggers.
+//!
+//! Deliberately NOT asserted: per-stage attribution inside a fused
+//! group (the one-pass scan is split across members by modeled work,
+//! which is the point of fusing), and inner members' survivor counts
+//! across modes (fused members observe filter-level survivors; edge
+//! mode observes post-join counts).
+
+use bloomjoin::cluster::{Cluster, ClusterConfig, FaultPlan};
+use bloomjoin::dataset::PartitionedTable;
+use bloomjoin::plan::{
+    execute, nested_loop_oracle, plan_edges, prepare, EdgeStrategy, FactRow, JoinPlan,
+    PlanInputs, PlanOutput, PlanSpec, PlannedEdge, ProbeMode, Relation, ReplanPolicy,
+    Topology,
+};
+use bloomjoin::testkit::{check, Gen};
+
+struct WideCase {
+    customer: Vec<(u64, i32)>,
+    orders: Vec<(u64, u64, i32)>,
+    lineitem: Vec<FactRow>,
+    part: Vec<(u64, i32)>,
+    supplier: Vec<(u64, i32)>,
+}
+
+fn gen_wide(g: &mut Gen) -> WideCase {
+    let cust_space = 1 + g.u64_below(40);
+    let order_space = 1 + g.u64_below(120);
+    let part_space = 1 + g.u64_below(30);
+    let supp_space = 1 + g.u64_below(12);
+    WideCase {
+        customer: (0..g.size)
+            .map(|_| (g.rng.below(cust_space), g.rng.next_u32() as i32 % 25))
+            .collect(),
+        orders: (0..g.size * 2)
+            .map(|_| {
+                (g.rng.below(order_space), g.rng.below(cust_space), g.rng.below(2_000) as i32)
+            })
+            .collect(),
+        lineitem: (0..g.size * 5)
+            .map(|_| FactRow {
+                orderkey: g.rng.below(order_space),
+                partkey: g.rng.below(part_space),
+                suppkey: g.rng.below(supp_space),
+                price_cents: g.rng.next_u64() as i64,
+            })
+            .collect(),
+        part: (0..g.size)
+            .map(|_| (g.rng.below(part_space), g.rng.next_u32() as i32 % 7))
+            .collect(),
+        supplier: (0..g.size)
+            .map(|_| (g.rng.below(supp_space), g.rng.next_u32() as i32 % 5))
+            .collect(),
+    }
+}
+
+fn wide_inputs(case: &WideCase) -> PlanInputs {
+    PlanInputs {
+        customer: PartitionedTable::from_rows(case.customer.clone(), 3),
+        orders: PartitionedTable::from_rows(case.orders.clone(), 4),
+        lineitem: PartitionedTable::from_rows(case.lineitem.clone(), 5),
+        part: PartitionedTable::from_rows(case.part.clone(), 2),
+        supplier: PartitionedTable::from_rows(case.supplier.clone(), 2),
+    }
+}
+
+const DIMS: [Relation; 4] =
+    [Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier];
+
+fn forced_plan(strats: &[EdgeStrategy; 4]) -> JoinPlan {
+    JoinPlan {
+        topology: Topology::Star,
+        edges: DIMS
+            .iter()
+            .zip(strats)
+            .enumerate()
+            .map(|(i, (&rel, s))| PlannedEdge::forced(rel, format!("e{}", i + 1), s.clone()))
+            .collect(),
+        dim_stats: Vec::new(),
+    }
+}
+
+fn spec(probe: ProbeMode) -> PlanSpec {
+    PlanSpec { partitions: 4, probe, ..Default::default() }
+}
+
+fn sorted_rows(out: &PlanOutput) -> Vec<bloomjoin::plan::PlanRow> {
+    let mut rows = out.rows.clone();
+    rows.sort_unstable();
+    rows
+}
+
+fn obs_names(out: &PlanOutput) -> Vec<String> {
+    out.ledger.observations.iter().map(|o| o.edge.clone()).collect()
+}
+
+/// Strategy assignments covering every group shape: full fused runs,
+/// mixed bloom/partitioned groups, and runs broken by unfusable edges.
+fn assignments() -> Vec<[EdgeStrategy; 4]> {
+    let b = EdgeStrategy::Bloom { eps: 0.05 };
+    let p = EdgeStrategy::BloomPartitioned { eps: 0.05 };
+    let x = EdgeStrategy::BloomExchange { eps: 0.05 };
+    vec![
+        [b.clone(), b.clone(), b.clone(), b.clone()],
+        [p.clone(), p.clone(), p.clone(), p.clone()],
+        [b.clone(), p.clone(), b.clone(), p.clone()],
+        [b.clone(), b.clone(), EdgeStrategy::Broadcast, b.clone()],
+        [EdgeStrategy::SortMerge, b.clone(), x, p],
+    ]
+}
+
+#[test]
+fn fused_rows_match_edge_mode_for_every_group_shape() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("fused ≡ edge across strategy assignments", 3, gen_wide, |case| {
+        let want = nested_loop_oracle(&wide_inputs(case), &DIMS);
+        for strats in assignments() {
+            let plan = forced_plan(&strats);
+            let edge = execute(&cluster, &spec(ProbeMode::Edge), &plan, wide_inputs(case));
+            let fused = execute(&cluster, &spec(ProbeMode::Fused), &plan, wide_inputs(case));
+            let label: Vec<String> = strats.iter().map(|s| s.label()).collect();
+            if sorted_rows(&edge) != want {
+                return Err(format!("{label:?}: edge mode diverges from oracle"));
+            }
+            if sorted_rows(&fused) != sorted_rows(&edge) {
+                return Err(format!("{label:?}: fused rows differ from edge mode"));
+            }
+            // every edge stays individually observed, same names and
+            // strategies, and the last observation's measured survivors
+            // are the output rows in both modes
+            if obs_names(&fused) != obs_names(&edge) {
+                return Err(format!(
+                    "{label:?}: observation ledgers diverge: {:?} vs {:?}",
+                    obs_names(&fused),
+                    obs_names(&edge)
+                ));
+            }
+            for out in [&edge, &fused] {
+                let strat_seen: Vec<String> =
+                    out.ledger.observations.iter().map(|o| o.strategy.clone()).collect();
+                let strat_planned: Vec<String> =
+                    plan.edges.iter().map(|e| e.strategy.label()).collect();
+                if strat_seen != strat_planned {
+                    return Err(format!(
+                        "{label:?}: observed strategies {strat_seen:?} != planned"
+                    ));
+                }
+                let last = out.ledger.observations.last().expect("non-empty plan");
+                if last.measured_survivors != out.rows.len() as u64 {
+                    return Err(format!(
+                        "{label:?}: final observation measured {} but {} rows came out",
+                        last.measured_survivors,
+                        out.rows.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_bloom_star_actually_fuses() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("fused group forms and books one probe pass", 3, gen_wide, |case| {
+        let b = EdgeStrategy::Bloom { eps: 0.05 };
+        let plan = forced_plan(&[b.clone(), b.clone(), b.clone(), b]);
+        let fused = execute(&cluster, &spec(ProbeMode::Fused), &plan, wide_inputs(case));
+        if fused.metrics.stage("probe_fused").is_none() {
+            return Err("all-bloom star must form a fused group past ORDERS".into());
+        }
+        let edge = execute(&cluster, &spec(ProbeMode::Edge), &plan, wide_inputs(case));
+        if edge.metrics.stage("probe_fused").is_some() {
+            return Err("edge mode must never book a fused probe stage".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_mode_recovers_bit_identical_under_every_fault_profile() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("fused × fault profiles ≡ fault-free", 3, gen_wide, |case| {
+        let b = EdgeStrategy::Bloom { eps: 0.05 };
+        let p = EdgeStrategy::BloomPartitioned { eps: 0.05 };
+        for strats in
+            [[b.clone(), b.clone(), b.clone(), b.clone()], [b.clone(), p.clone(), p.clone(), p]]
+        {
+            let plan = forced_plan(&strats);
+            let clean = execute(&cluster, &spec(ProbeMode::Fused), &plan, wide_inputs(case));
+            let clean_rows = sorted_rows(&clean);
+            for profile in FaultPlan::PROFILES {
+                if profile == "none" {
+                    continue;
+                }
+                let fault_plan = FaultPlan::parse(profile).expect("named profile");
+                let faulted = PlanSpec {
+                    faults: (!fault_plan.is_empty()).then_some(fault_plan),
+                    ..spec(ProbeMode::Fused)
+                };
+                let out = execute(&cluster, &faulted, &plan, wide_inputs(case));
+                if sorted_rows(&out) != clean_rows {
+                    return Err(format!("{profile}: fused recovery changed the rows"));
+                }
+                if out.injected_faults.len() != out.recovery.len() {
+                    return Err(format!(
+                        "{profile}: {} faults but {} recoveries in fused mode",
+                        out.injected_faults.len(),
+                        out.recovery.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Re-plan policies run against real planner output (forced edges carry
+/// no estimates, so triggers never arm on them).  Re-planning replaces
+/// tail *strategies*, never relations, so edge names must agree across
+/// modes even when the two modes' mid-run measurements differ.
+#[test]
+fn fused_mode_agrees_with_edge_mode_under_every_replan_policy() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    for replan in [ReplanPolicy::Static, ReplanPolicy::Adaptive, ReplanPolicy::Regret] {
+        let base = PlanSpec {
+            sf: 0.005,
+            partitions: 4,
+            dims: DIMS.to_vec(),
+            replan,
+            ..Default::default()
+        };
+        let inputs = prepare(&base);
+        let plan = plan_edges(&cluster, &base, &inputs);
+        let edge_spec = PlanSpec { probe: ProbeMode::Edge, ..base.clone() };
+        let fused_spec = PlanSpec { probe: ProbeMode::Fused, ..base.clone() };
+        let edge = execute(&cluster, &edge_spec, &plan, inputs.clone());
+        let fused = execute(&cluster, &fused_spec, &plan, inputs.clone());
+        assert_eq!(
+            sorted_rows(&fused),
+            sorted_rows(&edge),
+            "{}: fused rows differ from edge mode",
+            replan.name()
+        );
+        assert_eq!(
+            obs_names(&fused),
+            obs_names(&edge),
+            "{}: observation ledgers name different edges",
+            replan.name()
+        );
+        for out in [&edge, &fused] {
+            let last = out.ledger.observations.last().expect("non-empty plan");
+            assert_eq!(
+                last.measured_survivors,
+                out.rows.len() as u64,
+                "{}: final observation must measure the output rows",
+                replan.name()
+            );
+        }
+    }
+}

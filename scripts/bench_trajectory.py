@@ -57,6 +57,14 @@ TRACKED = {
         "fault recovery efficiency (clean/chaos sim)",
         lambda p: p["clean_sim_s"] / max(p["chaos_sim_s"], 1e-9),
     ),
+    # fused-probe win: the same forced all-bloom 5-relation star run
+    # edge-at-a-time and fused.  Both totals are simulated, so the ratio
+    # is exact; it falls when the fused pipeline loses its one-scan /
+    # hash-once advantage over per-edge stream passes
+    "fig13_fused": (
+        "fused probe win ratio (edge/fused sim)",
+        lambda p: p["edge_sim_s"] / max(p["fused_sim_s"], 1e-9),
+    ),
 }
 # fail when a metric drops below this fraction of the last committed point
 THRESHOLD = 0.8
