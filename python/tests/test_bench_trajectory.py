@@ -29,6 +29,7 @@ def write_fresh_points(results_dir):
         "fig11_server": {"cold_p50_ms": 20.0, "warm_p50_ms": 5.0},
         "fig12_faults": {"clean_sim_s": 2.0, "chaos_sim_s": 4.0},
         "fig13_fused": {"edge_sim_s": 3.0, "fused_sim_s": 1.5},
+        "fig14_graph": {"dp_sim_s": 1.0, "greedy_sim_s": 1.8},
     }
     assert set(payloads) == set(bt.TRACKED), "keep the test's fresh points in sync"
     for name, payload in payloads.items():

@@ -10,9 +10,13 @@
 //!              partitioned bloom / exchange bloom / broadcast hash /
 //!              sort-merge) from the §7 cost model, and
 //!              every bloom edge solves its own optimal ε from HLL
-//!              cardinality estimates —
-//!              `bloomjoin plan --relations lineitem,orders,part,supplier
-//!              [--topology star|chain] [--eps-mode per-filter|global]
+//!              cardinality estimates; arbitrary acyclic join graphs run
+//!              the bloom full reducer —
+//!              `bloomjoin plan --graph lineitem-orders,orders-customer`
+//!              (or the legacy shims
+//!              `--relations lineitem,orders,part,supplier
+//!              [--topology star|chain]`)
+//!              `[--eps-mode per-filter|global]
 //!              [--pushdown ranked|unranked] [--part-brand N]
 //!              [--supp-nation N] [--probe edge|fused]
 //!              [--probe-path native|kernel] [--no-execute]`
@@ -205,46 +209,73 @@ fn query(args: &Args) -> anyhow::Result<()> {
 }
 
 fn plan_cmd(args: &Args) -> anyhow::Result<()> {
-    use bloomjoin::plan::{self, EpsMode, PlanSpec, PushdownMode, Relation, Topology};
+    use bloomjoin::plan::{
+        self, EpsMode, GraphShape, JoinGraph, PlanSpec, PushdownMode, Relation, Topology,
+    };
 
-    let rels = args.get_or("relations", "customer,orders,lineitem");
-    let mut dims: Vec<Relation> = Vec::new();
-    let mut has_fact = false;
-    for r in rels.split(',').filter(|s| !s.is_empty()) {
-        let rel = match Relation::parse(r.trim()) {
-            Some(rel) => rel,
-            None => {
-                anyhow::bail!("unknown relation {r:?} (customer|orders|lineitem|part|supplier)")
-            }
-        };
-        if rel == Relation::Lineitem {
-            has_fact = true;
-        } else if !dims.contains(&rel) {
-            dims.push(rel);
+    // `--graph` is the general front door; `--relations`/`--topology`
+    // are thin shims over it (every legacy spelling denotes a star or
+    // chain graph).  The two forms are mutually exclusive.
+    let (topology, dims, graph) = if let Some(compact) = args.get("graph") {
+        if args.get("relations").is_some() || args.get("topology").is_some() {
+            anyhow::bail!("--graph replaces --relations/--topology; pass one form, not both");
         }
-    }
-    if !has_fact {
-        anyhow::bail!("--relations must include lineitem (the fact table)");
-    }
-    if dims.is_empty() {
-        anyhow::bail!("--relations needs at least one dimension besides lineitem");
-    }
-    if dims.contains(&Relation::Customer) && !dims.contains(&Relation::Orders) {
-        anyhow::bail!("customer joins the fact table through orders — add orders to --relations");
-    }
+        let g = match JoinGraph::parse_compact(compact) {
+            Ok(g) => g,
+            Err(e) => anyhow::bail!("--graph: {e}"),
+        };
+        match g.classify() {
+            // star-isomorphic graphs run the legacy star planner so
+            // ledgers and cache keys are unchanged
+            GraphShape::Star(dims) => (Topology::Star, dims, None),
+            GraphShape::General => (Topology::Graph, g.dims(), Some(g)),
+        }
+    } else {
+        let rels = args.get_or("relations", "customer,orders,lineitem");
+        let mut dims: Vec<Relation> = Vec::new();
+        let mut has_fact = false;
+        for r in rels.split(',').filter(|s| !s.is_empty()) {
+            let rel = match Relation::parse(r.trim()) {
+                Some(rel) => rel,
+                None => anyhow::bail!(
+                    "unknown relation {r:?} (customer|orders|lineitem|part|supplier)"
+                ),
+            };
+            if rel == Relation::Lineitem {
+                has_fact = true;
+            } else if !dims.contains(&rel) {
+                dims.push(rel);
+            }
+        }
+        if !has_fact {
+            anyhow::bail!("--relations must include lineitem (the fact table)");
+        }
+        if dims.is_empty() {
+            anyhow::bail!("--relations needs at least one dimension besides lineitem");
+        }
+        if dims.contains(&Relation::Customer) && !dims.contains(&Relation::Orders) {
+            anyhow::bail!(
+                "customer joins the fact table through orders — add orders to --relations"
+            );
+        }
+        let topology = match Topology::parse(args.get_or("topology", "star")) {
+            Some(Topology::Graph) => {
+                anyhow::bail!("--topology graph needs the edge list — pass --graph instead")
+            }
+            Some(t) => t,
+            None => anyhow::bail!("unknown topology (star|chain|graph)"),
+        };
+        if topology == Topology::Chain
+            && !(dims.len() == 2
+                && dims.contains(&Relation::Orders)
+                && dims.contains(&Relation::Customer))
+        {
+            anyhow::bail!("--topology chain supports exactly customer,orders,lineitem");
+        }
+        (topology, dims, None)
+    };
 
     let cluster = cluster_from(args)?;
-    let topology = match Topology::parse(args.get_or("topology", "star")) {
-        Some(t) => t,
-        None => anyhow::bail!("unknown topology (star|chain)"),
-    };
-    if topology == Topology::Chain
-        && !(dims.len() == 2
-            && dims.contains(&Relation::Orders)
-            && dims.contains(&Relation::Customer))
-    {
-        anyhow::bail!("--topology chain supports exactly customer,orders,lineitem");
-    }
     let eps_mode = match args.get_or("eps-mode", "per-filter") {
         "per-filter" => EpsMode::PerFilter,
         "global" => EpsMode::Global(args.parse_or("eps", 0.05)?),
@@ -273,6 +304,7 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         partitions: args.parse_or("partitions", 8)?,
         topology,
         dims,
+        graph,
         eps_mode,
         pushdown,
         replan,
@@ -591,8 +623,16 @@ USAGE: bloomjoin <command> [options]
 COMMANDS
   generate   --sf 0.01 --block-mb 128
   query      --sf 0.01 --strategy bloom|broadcast|sortmerge --eps 0.05 [--xla] [--driver-side]
-  plan       --relations lineitem,orders,customer,part,supplier (any 2–5
+  plan       --graph lineitem-orders,orders-customer,customer-supplier:nationkey
+              (any acyclic join graph as comma-separated a-b or a-b:key
+              edges; keys are inferred when a pair shares exactly one.
+              Non-star shapes run the bloom full reducer: a bottom-up
+              semi-join sweep of bloom messages sized by the §5 solver,
+              then the root-first join sweep — see docs/graphs.md)
+             --relations lineitem,orders,customer,part,supplier (any 2–5
              incl. lineitem; customer needs orders) --topology star|chain
+              (deprecated shims: every legacy spelling denotes a star or
+              chain graph — prefer --graph; mutually exclusive with it)
              --eps-mode per-filter|global [--eps 0.05]
              --pushdown ranked|unranked [--part-brand N] [--supp-nation N]
              --replan static|adaptive|regret (adaptive re-plans the

@@ -171,6 +171,16 @@ pub fn expected_survivors(stats: &EdgeStats, measured_probe: u64) -> u64 {
     ((measured_probe as f64 * frac).round() as u64).min(measured_probe)
 }
 
+/// [`expected_survivors`] without the probe clamp.  A graph edge on a
+/// non-unique key (e.g. nationkey) legitimately fans the stream *out*
+/// (`matched > probe`), so its expectation must be allowed to exceed
+/// the probe count — clamping would make every fan-out edge look like a
+/// cardinality miss and fire spurious re-plans.
+pub fn graph_expected_survivors(stats: &EdgeStats, measured_probe: u64) -> u64 {
+    let frac = stats.matched_rows as f64 / stats.probe_rows.max(1) as f64;
+    (measured_probe as f64 * frac).round() as u64
+}
+
 /// The fraction of probed rows a bloom filter at `eps` is expected to
 /// *pass* — true matches plus the ε share of the non-matches:
 /// `frac + ε·(1−frac)`.
@@ -562,6 +572,37 @@ pub fn replan_chain_tail(
     price_edges_with(cfg, eps_mode, factors, list)
 }
 
+/// Re-plan a graph-sweep tail mid-sweep: the remaining edges keep their
+/// order (a suffix of a tree-valid order is tree-valid — every parent
+/// either already joined or sits earlier in the suffix), but each edge's
+/// probe-side workload is rescaled by the measured contraction `ratio`
+/// (measured / expected survivors of the edge that fired) before
+/// strategy and ε* are re-decided under `factors`.  The per-edge
+/// `matched / probe` ratio is preserved rather than clamped — graph
+/// edges on non-unique keys legitimately fan the stream out — and the
+/// build sides stay as the bottom-up sweep left them: phase A already
+/// ran, so reduction costs are sunk and only the stream-join legs are
+/// worth re-pricing.
+pub fn replan_graph_tail(
+    cfg: &ClusterConfig,
+    eps_mode: EpsMode,
+    factors: Option<(f64, f64)>,
+    remaining: &[PlannedEdge],
+    ratio: f64,
+) -> Vec<PlannedEdge> {
+    let list = remaining
+        .iter()
+        .map(|e| {
+            let mut st = e.stats.clone();
+            let sel = st.matched_rows as f64 / st.probe_rows.max(1) as f64;
+            st.probe_rows = ((st.probe_rows as f64 * ratio).round() as u64).max(1);
+            st.matched_rows = ((st.probe_rows as f64 * sel).round() as u64).max(1);
+            (e.name.clone(), e.relation, st)
+        })
+        .collect();
+    price_edges_with(cfg, eps_mode, factors, list)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -746,6 +787,37 @@ mod tests {
         assert_eq!(new[0].stats.matched_rows, 300_000);
         // probe side is unchanged — the fact scan is what it is
         assert_eq!(new[0].stats.probe_rows, 6_000_000);
+    }
+
+    #[test]
+    fn graph_tail_replan_rescales_probe_and_keeps_fanout() {
+        let cfg = ClusterConfig::default();
+        // a fan-out edge: nationkey-style, matched > probe
+        let tail = vec![PlannedEdge {
+            stats: EdgeStats {
+                build_rows: 50,
+                build_distinct: 25,
+                build_row_bytes: 12.0,
+                probe_rows: 10_000,
+                probe_row_bytes: 56.0,
+                matched_rows: 20_000,
+            },
+            ..PlannedEdge::forced(
+                Relation::Supplier,
+                "⋈supplier",
+                EdgeStrategy::Bloom { eps: 0.05 },
+            )
+        }];
+        let new = replan_graph_tail(&cfg, EpsMode::PerFilter, None, &tail, 0.5);
+        assert_eq!(new.len(), 1);
+        assert_eq!(new[0].stats.probe_rows, 5_000);
+        // matched / probe preserved (still 2.0) — no clamp to probe
+        assert_eq!(new[0].stats.matched_rows, 10_000);
+        // build side untouched: the bottom-up sweep already ran
+        assert_eq!(new[0].stats.build_rows, 50);
+        // and the unclamped expectation tracks the fan-out
+        assert_eq!(graph_expected_survivors(&tail[0].stats, 1_000), 2_000);
+        assert_eq!(expected_survivors(&tail[0].stats, 1_000), 1_000, "the star helper clamps");
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::dataset::PartitionedTable;
 use crate::joins::Keyed;
 use crate::tpch::{Customer, GenConfig, Lineitem, Order, Part, Supplier, TpchGenerator};
 
+use super::graph::{JoinKey, JoinTree};
 use super::PlanSpec;
 
 /// The five relations the planner knows.  LINEITEM is the fact table of
@@ -400,6 +401,161 @@ pub fn chain_edge_stats(
     ]
 }
 
+/// Workload features of one rooted-tree edge of a graph plan: the child
+/// relation's (bottom-up-reduced) build side plus the expected
+/// matched/probe ratio its fact-stream join sees.  This is the graph
+/// analogue of [`DimStats`] — what the bottom-up plan enumeration prices
+/// with and what the adaptive re-planner rescales mid-sweep.
+#[derive(Clone, Debug)]
+pub struct GraphEdgeInfo {
+    /// The child relation this edge joins into the fact stream.
+    pub relation: Relation,
+    pub parent: Relation,
+    /// The key equated with the parent.
+    pub key: JoinKey,
+    /// Child rows after its own subtree's bottom-up reduction (estimate).
+    pub build_rows: u64,
+    /// Distinct child keys on `key` after reduction (estimate).
+    pub build_distinct: u64,
+    pub build_row_bytes: f64,
+    /// Expected `matched / probe` for the fact-stream join: the semijoin
+    /// pass fraction times the child's fan-out on `key` (> 1 possible on
+    /// a non-unique key like nationkey — one-to-many matches multiply
+    /// stream rows).
+    pub ratio: f64,
+    /// Parent-table rows the bottom-up reduction sweep scans for this
+    /// edge; `None` when the parent is the fact (fact children are not
+    /// reduction edges — the stream join itself is their top-down pass).
+    pub reduce_parent_rows: Option<u64>,
+}
+
+/// Serialized bytes per build row of a graph node keyed by `key` — the
+/// key plus the payload columns the executor attaches for that variant.
+pub fn graph_build_row_bytes(r: Relation, key: JoinKey) -> f64 {
+    match (r, key) {
+        (Relation::Orders, JoinKey::OrderKey) => 8.0 + 12.0, // (custkey, orderdate)
+        (Relation::Orders, JoinKey::CustKey) => 8.0 + 4.0,   // orderdate
+        (Relation::Customer, JoinKey::CustKey) => 8.0 + 4.0, // nationkey
+        (Relation::Customer, JoinKey::NationKey) => 8.0 + 12.0, // (custkey, nationkey)
+        (Relation::Part, JoinKey::PartKey) => 8.0 + 4.0,     // brand
+        (Relation::Supplier, JoinKey::SuppKey) => 8.0 + 4.0, // nationkey
+        (Relation::Supplier, JoinKey::NationKey) => 8.0 + 4.0, // nationkey (= key)
+        _ => 16.0,
+    }
+}
+
+fn relation_rows(inputs: &PlanInputs, r: Relation) -> u64 {
+    (match r {
+        Relation::Lineitem => inputs.lineitem.n_rows(),
+        Relation::Orders => inputs.orders.n_rows(),
+        Relation::Customer => inputs.customer.n_rows(),
+        Relation::Part => inputs.part.n_rows(),
+        Relation::Supplier => inputs.supplier.n_rows(),
+    }) as u64
+}
+
+/// The values of one relation's join-key column (nationkeys are small
+/// non-negative i32s, widened losslessly).
+fn key_column(inputs: &PlanInputs, r: Relation, k: JoinKey) -> Vec<u64> {
+    match (r, k) {
+        (Relation::Lineitem, JoinKey::OrderKey) => {
+            inputs.lineitem.iter().map(|f| f.orderkey).collect()
+        }
+        (Relation::Lineitem, JoinKey::PartKey) => {
+            inputs.lineitem.iter().map(|f| f.partkey).collect()
+        }
+        (Relation::Lineitem, JoinKey::SuppKey) => {
+            inputs.lineitem.iter().map(|f| f.suppkey).collect()
+        }
+        (Relation::Orders, JoinKey::OrderKey) => {
+            inputs.orders.iter().map(|(ok, _, _)| *ok).collect()
+        }
+        (Relation::Orders, JoinKey::CustKey) => {
+            inputs.orders.iter().map(|(_, ck, _)| *ck).collect()
+        }
+        (Relation::Customer, JoinKey::CustKey) => inputs.customer.iter().map(|(k, _)| *k).collect(),
+        (Relation::Customer, JoinKey::NationKey) => {
+            inputs.customer.iter().map(|(_, n)| *n as u64).collect()
+        }
+        (Relation::Part, JoinKey::PartKey) => inputs.part.iter().map(|(k, _)| *k).collect(),
+        (Relation::Supplier, JoinKey::SuppKey) => {
+            inputs.supplier.iter().map(|(k, _)| *k).collect()
+        }
+        (Relation::Supplier, JoinKey::NationKey) => {
+            inputs.supplier.iter().map(|(_, n)| *n as u64).collect()
+        }
+        _ => panic!("{} has no {} column (validated at graph build)", r.name(), k.name()),
+    }
+}
+
+/// Estimate every tree edge's workload features for a graph plan, in the
+/// tree's pre-order.  Bottom-up reduction factors are folded in: a
+/// node's build side is its table *after* its own children's semi-joins
+/// have reduced it (the independence-assumption product of its subtree's
+/// pass fractions), which is exactly what the full-reducer executor
+/// materialises before the fact stream arrives.
+pub fn graph_edge_infos(inputs: &PlanInputs, tree: &JoinTree) -> Vec<GraphEdgeInfo> {
+    let n = tree.nodes.len();
+    // sketch cache: each (relation, key) column is sketched once even
+    // when it serves as both a parent column and a child column
+    let mut cache: Vec<((Relation, JoinKey), HyperLogLog)> = Vec::new();
+    let mut sketch_of = |inputs: &PlanInputs, r: Relation, k: JoinKey| -> usize {
+        if let Some(i) = cache.iter().position(|((cr, ck), _)| *cr == r && *ck == k) {
+            return i;
+        }
+        cache.push(((r, k), sketch(key_column(inputs, r, k).into_iter())));
+        cache.len() - 1
+    };
+    let pairs: Vec<(usize, usize)> = tree
+        .nodes
+        .iter()
+        .map(|node| {
+            (
+                sketch_of(inputs, node.parent, node.key),
+                sketch_of(inputs, node.relation, node.key),
+            )
+        })
+        .collect();
+    // per-edge semijoin pass fraction of the (unreduced) parent column
+    let mf: Vec<f64> =
+        pairs.iter().map(|&(p, c)| survive_frac(&cache[p].1, &cache[c].1)).collect();
+    // per-node subtree reduction factor: what fraction of the node's
+    // rows survive its children's (already-reduced) semi-joins.  Nodes
+    // are in pre-order, so a reverse walk sees children before parents.
+    let mut red = vec![1.0f64; n];
+    for i in (0..n).rev() {
+        for (j, child) in tree.nodes.iter().enumerate() {
+            if child.parent == tree.nodes[i].relation {
+                red[i] *= (mf[j] * red[j]).min(1.0);
+            }
+        }
+    }
+    tree.nodes
+        .iter()
+        .enumerate()
+        .map(|(i, node)| {
+            let rows = relation_rows(inputs, node.relation);
+            let distinct = cache[pairs[i].1].1.estimate().max(1);
+            // average child rows per distinct key on the edge key — the
+            // one-to-many multiplicity a stream row fans out into
+            let fanout = (rows as f64 / distinct as f64).max(1.0);
+            let build_rows = ((rows as f64 * red[i]).round() as u64).max(1);
+            let build_distinct = ((distinct as f64 * red[i]).round() as u64).max(1);
+            GraphEdgeInfo {
+                relation: node.relation,
+                parent: node.parent,
+                key: node.key,
+                build_rows,
+                build_distinct,
+                build_row_bytes: graph_build_row_bytes(node.relation, node.key),
+                ratio: (mf[i] * red[i]).min(1.0) * fanout,
+                reduce_parent_rows: (node.parent != Relation::Lineitem)
+                    .then(|| relation_rows(inputs, node.parent)),
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -495,6 +651,31 @@ mod tests {
         let part = dims.iter().find(|d| d.relation == Relation::Part).unwrap();
         assert!(orders.match_frac < 0.5, "orders frac {}", orders.match_frac);
         assert!(part.match_frac > 0.9, "part frac {}", part.match_frac);
+    }
+
+    #[test]
+    fn graph_edge_infos_fold_reductions_and_fanout() {
+        use super::super::graph::JoinGraph;
+        let spec = wide_spec();
+        let inputs = prepare(&spec);
+        let g = JoinGraph::parse_compact(
+            "lineitem-orders,orders-customer,customer-supplier,lineitem-part",
+        )
+        .unwrap();
+        let infos = graph_edge_infos(&inputs, &g.tree());
+        assert_eq!(infos.len(), 4);
+        // fact children are not reduction edges; internal edges name the
+        // parent table the bottom-up sweep scans
+        let o = infos.iter().find(|i| i.relation == Relation::Orders).unwrap();
+        assert!(o.reduce_parent_rows.is_none());
+        assert!(o.build_rows <= inputs.orders.n_rows() as u64);
+        let c = infos.iter().find(|i| i.relation == Relation::Customer).unwrap();
+        assert_eq!(c.reduce_parent_rows, Some(inputs.orders.n_rows() as u64));
+        // supplier joined on the non-unique nationkey fans out: the
+        // expected matched/probe ratio exceeds a pure semijoin's 1.0
+        let s = infos.iter().find(|i| i.relation == Relation::Supplier).unwrap();
+        assert_eq!(s.parent, Relation::Customer);
+        assert!(s.ratio > 1.0, "nationkey fanout should multiply: {}", s.ratio);
     }
 
     #[test]

@@ -32,7 +32,8 @@ use crate::util::Json;
 
 use super::adaptive::EdgeObservation;
 use super::catalog::{
-    chain_edge_stats, star_dim_stats, DimStats, EdgeStats, PlanInputs, STREAM_ROW_BYTES,
+    chain_edge_stats, graph_edge_infos, star_dim_stats, DimStats, EdgeStats, GraphEdgeInfo,
+    PlanInputs, STREAM_ROW_BYTES,
 };
 use super::{
     EdgeStrategy, EpsMode, JoinPlan, PlanSpec, PlannedEdge, ProbeMode, PushdownMode, Relation,
@@ -582,6 +583,30 @@ pub fn plan_edges_calibrated(
             );
             (chain_edge_stats(spec, inputs), Vec::new())
         }
+        Topology::Graph => {
+            let graph = spec
+                .effective_graph()
+                .expect("graph specs are validated at the CLI/server boundary");
+            let tree = graph.tree();
+            let infos = graph_edge_infos(inputs, &tree);
+            let fact_rows = inputs.lineitem.n_rows().max(1) as f64;
+            let factors = calibration.and_then(|c| c.factors());
+            let (edges, dim_stats) = plan_graph_edges_with(
+                cluster.config(),
+                spec.eps_mode,
+                factors,
+                &infos,
+                fact_rows,
+                spec.pushdown,
+            );
+            let mut plan = JoinPlan { topology: spec.topology, edges, dim_stats };
+            if spec.probe == ProbeMode::Fused {
+                let parents: Vec<(Relation, Relation)> =
+                    infos.iter().map(|i| (i.relation, i.parent)).collect();
+                discount_fused_probes_graph(cluster.config(), factors, &mut plan, &parents);
+            }
+            return plan;
+        }
     };
     let edges = price_edges(cluster.config(), spec.eps_mode, calibration, edge_list);
     let mut plan = JoinPlan { topology: spec.topology, edges, dim_stats };
@@ -590,6 +615,337 @@ pub fn plan_edges_calibrated(
         discount_fused_probes(cluster.config(), factors, &mut plan);
     }
     plan
+}
+
+// ---------------------------------------------------------------------
+// Graph planning: the Yannakakis bloom full reducer's cost side.  A
+// general acyclic graph executes as a bottom-up reduction sweep (every
+// internal edge sends a reduction message — a bloom filter, or an exact
+// key set under the non-bloom kinds — that semi-joins its parent's
+// table) followed by a root-first stream sweep that realises the
+// top-down pass.  Each edge is priced as the usual §7 stage pair *plus*
+// its reduction sweep step, all five kinds eligible, and the join order
+// is chosen by bottom-up enumeration over downward-closed edge subsets
+// (memoized on the subset) instead of the greedy `rank_dims` score.
+
+/// Residual fact-stream estimate after the edges in `mask` have joined:
+/// each edge multiplies the stream by its `ratio` (semijoin pass × key
+/// fan-out — a product, so order inside the subset is irrelevant and
+/// the DP can memoize on the subset alone).
+fn graph_residual(infos: &[GraphEdgeInfo], fact_rows: f64, mask: u32) -> f64 {
+    let mut r = fact_rows;
+    for (i, info) in infos.iter().enumerate() {
+        if mask & (1 << i) != 0 {
+            r *= info.ratio;
+        }
+    }
+    r.max(1.0)
+}
+
+/// Whether edge `i` may join next: its probe keys must be on the stream,
+/// i.e. its parent is the fact or the parent's own edge already joined.
+fn graph_parent_satisfied(infos: &[GraphEdgeInfo], mask: u32, i: usize) -> bool {
+    infos[i].parent == Relation::Lineitem
+        || infos
+            .iter()
+            .enumerate()
+            .any(|(j, p)| p.relation == infos[i].parent && mask & (1 << j) != 0)
+}
+
+fn add_kind_cost(p: &mut EdgePrediction, kind: StrategyKind, s: f64) {
+    match kind {
+        StrategyKind::Bloom => p.bloom_s += s,
+        StrategyKind::BloomPartitioned => p.bloom_partitioned_s += s,
+        StrategyKind::BloomExchange => p.bloom_exchange_s += s,
+        StrategyKind::Broadcast => p.broadcast_s += s,
+        StrategyKind::SortMerge => p.sortmerge_s += s,
+    }
+}
+
+/// Price one bottom-up reduction sweep step: build the child's reduction
+/// message, ship it, scan the parent's table through it.  Bloom kinds
+/// ship `1.44·n·log2(1/ε)` filter bits; the non-bloom kinds fall back to
+/// an exact key-set semi-join message (8 bytes per distinct key — no
+/// false positives, but nothing to tune either).  Returns `0.0` for
+/// fact-child edges: their stream join *is* their top-down pass, there
+/// is no table to pre-reduce.  `factors` applies the calibrated α to the
+/// build/ship leg and β to the scan leg, matching where those terms sit
+/// in the §7 stage split.
+pub fn reduction_price(
+    cfg: &ClusterConfig,
+    factors: Option<(f64, f64)>,
+    info: &GraphEdgeInfo,
+    kind: StrategyKind,
+    eps: f64,
+) -> f64 {
+    let parent_rows = match info.reduce_parent_rows {
+        Some(r) => r as f64,
+        None => return 0.0,
+    };
+    let slots = cfg.total_slots().max(1) as f64;
+    let rounds = ((cfg.total_executors().max(1) as f64) + 1.0).log2().ceil().max(1.0);
+    let n = info.build_distinct.max(1) as f64;
+    let (alpha, beta) = factors.unwrap_or((1.0, 1.0));
+    let ship_bytes = if kind.is_bloom() {
+        1.44 * n * (1.0 / eps.clamp(1e-9, 0.5)).log2().max(1.0) / 8.0
+    } else {
+        8.0 * n
+    };
+    let build_s = n * cfg.hash_insert_cost / slots;
+    let ship_s = 2.0 * rounds * (cfg.net_latency + ship_bytes / cfg.net_bandwidth);
+    let scan_s = parent_rows * cfg.scan_record_cost / slots;
+    alpha * (cfg.stage_overhead + build_s + ship_s) + beta * (cfg.stage_overhead + scan_s)
+}
+
+/// Price one graph edge against a `probe_rows` stream estimate: the §7
+/// model on the post-reduction [`EdgeStats`], ε* solved per edge, all
+/// five kinds priced with the edge's reduction sweep step folded into
+/// each kind's total (a kind choice governs *both* the reduction message
+/// style and the stream join), cheapest kind picked.
+fn price_graph_edge(
+    cfg: &ClusterConfig,
+    eps_mode: EpsMode,
+    factors: Option<(f64, f64)>,
+    info: &GraphEdgeInfo,
+    probe_rows: f64,
+) -> PlannedEdge {
+    let probe_u = (probe_rows.round() as u64).max(1);
+    // ratio > 1 is a real stream expansion (one-to-many key): matched
+    // deliberately exceeds probe, zeroing the model's filtrable term
+    let matched = ((probe_rows * info.ratio).round() as u64).max(1);
+    let stats = EdgeStats {
+        build_rows: info.build_rows,
+        build_distinct: info.build_distinct,
+        build_row_bytes: info.build_row_bytes,
+        probe_rows: probe_u,
+        probe_row_bytes: STREAM_ROW_BYTES,
+        matched_rows: matched,
+    };
+    let mut model = edge_cost_model(cfg, &stats);
+    if let Some(f) = factors {
+        model = CostCalibration::scale(model, f);
+    }
+    let opt = newton::optimal_epsilon(&model);
+    let eps = match eps_mode {
+        EpsMode::PerFilter => opt.eps,
+        EpsMode::Global(g) => g,
+    };
+    let mut prediction = predict_all(cfg, &stats, factors, &model, opt.eps, opt.interior, eps);
+    for kind in StrategyKind::ALL {
+        let add = reduction_price(cfg, factors, info, kind, eps);
+        if add > 0.0 {
+            add_kind_cost(&mut prediction, kind, add);
+        }
+    }
+    let strategy = EdgeStrategy::for_kind(prediction.cheapest().kind, eps);
+    PlannedEdge {
+        name: format!("⋈{}", info.relation.name()),
+        relation: info.relation,
+        strategy,
+        stats,
+        prediction,
+    }
+}
+
+/// Bottom-up enumeration over downward-closed edge subsets: the DP's
+/// state is the subset of edges already on the stream (its residual is
+/// order-independent, so the best cost per subset is memoized on the
+/// mask), transitions add any edge whose parent is satisfied, and each
+/// transition is priced through [`price_graph_edge`] — so strategy, ε
+/// and join order are chosen jointly, replacing the greedy `rank_dims`
+/// score for graph plans.  Returns indices into `infos` in join order.
+pub fn plan_graph_order(
+    cfg: &ClusterConfig,
+    eps_mode: EpsMode,
+    factors: Option<(f64, f64)>,
+    infos: &[GraphEdgeInfo],
+    fact_rows: f64,
+) -> Vec<usize> {
+    let n = infos.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let full: u32 = (1u32 << n) - 1;
+    let mut best = vec![f64::INFINITY; 1 << n];
+    let mut last = vec![usize::MAX; 1 << n];
+    best[0] = 0.0;
+    for mask in 0..=full {
+        let m = mask as usize;
+        if !best[m].is_finite() {
+            continue;
+        }
+        let residual = graph_residual(infos, fact_rows, mask);
+        for i in 0..n {
+            if mask & (1 << i) != 0 || !graph_parent_satisfied(infos, mask, i) {
+                continue;
+            }
+            let e = price_graph_edge(cfg, eps_mode, factors, &infos[i], residual);
+            let cost = best[m] + e.prediction.cost_of(e.strategy.kind());
+            let nm = (mask | (1 << i)) as usize;
+            if cost < best[nm] {
+                best[nm] = cost;
+                last[nm] = i;
+            }
+        }
+    }
+    let mut order = Vec::with_capacity(n);
+    let mut mask = full;
+    while mask != 0 {
+        let i = last[mask as usize];
+        debug_assert!(i != usize::MAX, "a valid join tree always reaches the full subset");
+        order.push(i);
+        mask &= !(1 << i);
+    }
+    order.reverse();
+    order
+}
+
+/// The greedy-legacy order: repeatedly add the parent-satisfied edge
+/// with the best [`pushdown_score`]-style (rows removed per probe
+/// lookup) score against the running residual — exactly the ranking a
+/// star plan would use, lifted to graphs.  Kept as the baseline
+/// `benches/fig14_graph.rs` compares the DP against.
+pub fn plan_graph_order_greedy(infos: &[GraphEdgeInfo], fact_rows: f64) -> Vec<usize> {
+    let n = infos.len();
+    let score = |residual: f64, info: &GraphEdgeInfo| {
+        let per_row_lookups = 1.0 + info.build_rows as f64 / residual.max(1.0);
+        (1.0 - info.ratio.min(1.0)).max(0.0) / per_row_lookups
+    };
+    let mut order = Vec::with_capacity(n);
+    let mut mask: u32 = 0;
+    let mut residual = fact_rows;
+    while order.len() < n {
+        let pick = (0..n)
+            .filter(|&i| mask & (1 << i) == 0 && graph_parent_satisfied(infos, mask, i))
+            .max_by(|&x, &y| {
+                score(residual, &infos[x])
+                    .partial_cmp(&score(residual, &infos[y]))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    // ties keep the lexicographically-earlier relation,
+                    // like `rank_dims`
+                    .then_with(|| infos[y].relation.name().cmp(infos[x].relation.name()))
+            })
+            .expect("a valid join tree always has an addable edge");
+        mask |= 1 << pick;
+        residual = (residual * infos[pick].ratio).max(1.0);
+        order.push(pick);
+    }
+    order
+}
+
+/// Price `infos` in an explicit join `order`: ranked mode walks the
+/// residual-stream estimate through the order, unranked prices every
+/// edge against the full scan (static propagation — the same contract
+/// as [`derive_edge_stats`]).  Also derives the per-edge [`DimStats`]
+/// the adaptive re-planner rescales a graph tail from (`match_frac`
+/// holds the edge's `ratio`, which may exceed 1 on a fan-out key).
+pub fn graph_edges_for_order(
+    cfg: &ClusterConfig,
+    eps_mode: EpsMode,
+    factors: Option<(f64, f64)>,
+    infos: &[GraphEdgeInfo],
+    fact_rows: f64,
+    mode: PushdownMode,
+    order: &[usize],
+) -> (Vec<PlannedEdge>, Vec<DimStats>) {
+    let mut residual = fact_rows;
+    let mut edges = Vec::with_capacity(order.len());
+    let mut dim_stats = Vec::with_capacity(order.len());
+    for &i in order {
+        let info = &infos[i];
+        let probe = match mode {
+            PushdownMode::Ranked => residual,
+            PushdownMode::Unranked => fact_rows,
+        };
+        edges.push(price_graph_edge(cfg, eps_mode, factors, info, probe));
+        dim_stats.push(DimStats {
+            relation: info.relation,
+            build_rows: info.build_rows,
+            build_distinct: info.build_distinct,
+            build_row_bytes: info.build_row_bytes,
+            match_frac: info.ratio,
+        });
+        residual = (residual * info.ratio).max(1.0);
+    }
+    (edges, dim_stats)
+}
+
+/// Plan a graph's edges: DP order under [`PushdownMode::Ranked`], the
+/// tree's canonical pre-order (full-scan pricing) under `Unranked`.
+pub fn plan_graph_edges_with(
+    cfg: &ClusterConfig,
+    eps_mode: EpsMode,
+    factors: Option<(f64, f64)>,
+    infos: &[GraphEdgeInfo],
+    fact_rows: f64,
+    mode: PushdownMode,
+) -> (Vec<PlannedEdge>, Vec<DimStats>) {
+    let order = match mode {
+        PushdownMode::Ranked => plan_graph_order(cfg, eps_mode, factors, infos, fact_rows),
+        PushdownMode::Unranked => (0..infos.len()).collect(),
+    };
+    graph_edges_for_order(cfg, eps_mode, factors, infos, fact_rows, mode, &order)
+}
+
+/// [`plan_graph_edges_with`] under the greedy-legacy order — the
+/// baseline planner `benches/fig14_graph.rs` times against the DP.
+pub fn plan_graph_edges_greedy(
+    cfg: &ClusterConfig,
+    eps_mode: EpsMode,
+    factors: Option<(f64, f64)>,
+    infos: &[GraphEdgeInfo],
+    fact_rows: f64,
+) -> (Vec<PlannedEdge>, Vec<DimStats>) {
+    let order = plan_graph_order_greedy(infos, fact_rows);
+    graph_edges_for_order(cfg, eps_mode, factors, infos, fact_rows, PushdownMode::Ranked, &order)
+}
+
+/// [`discount_fused_probes`] generalised to graph plans: a member joins
+/// a fused run when its strategy is a resident-filter kind **and** its
+/// probe keys are available before the run starts — its parent is the
+/// fact, or the parent's edge executed before the run's leader (the
+/// graph analogue of the ORDERS-before-CUSTOMER gate).  `parents` maps
+/// each relation to its tree parent.
+pub fn discount_fused_probes_graph(
+    cfg: &ClusterConfig,
+    factors: Option<(f64, f64)>,
+    plan: &mut JoinPlan,
+    parents: &[(Relation, Relation)],
+) -> usize {
+    let slots = cfg.total_slots().max(1) as f64;
+    let beta = factors.map_or(1.0, |f| f.1);
+    let parent_of = |r: Relation| {
+        parents
+            .iter()
+            .find(|(c, _)| *c == r)
+            .map(|(_, p)| *p)
+            .unwrap_or(Relation::Lineitem)
+    };
+    let mut discounted = 0;
+    let mut i = 0;
+    while i < plan.edges.len() {
+        let before = &plan.edges[..i];
+        let fusable = |e: &PlannedEdge| {
+            matches!(e.strategy.kind(), StrategyKind::Bloom | StrategyKind::BloomPartitioned)
+                && (parent_of(e.relation) == Relation::Lineitem
+                    || before.iter().any(|x| x.relation == parent_of(e.relation)))
+        };
+        let run = plan.edges[i..].iter().take_while(|e| fusable(e)).count();
+        if run >= 2 {
+            for e in &mut plan.edges[i + 1..i + run] {
+                if !e.has_estimates() {
+                    continue;
+                }
+                let scan_term = e.stats.probe_rows as f64 * cfg.scan_record_cost / slots * beta;
+                e.prediction.bloom_s = (e.prediction.bloom_s - scan_term).max(0.0);
+                e.prediction.bloom_partitioned_s =
+                    (e.prediction.bloom_partitioned_s - scan_term).max(0.0);
+                discounted += 1;
+            }
+        }
+        i += run.max(1);
+    }
+    discounted
 }
 
 /// Price an edge list: build each edge's §7 model (calibrated when a
@@ -1577,5 +1933,137 @@ mod tests {
             let ci = edges.iter().position(|(_, r, _)| *r == Relation::Customer).unwrap();
             assert!(oi < ci, "orders must precede customer ({mode:?})");
         }
+    }
+
+    /// Hand-built edge infos for the snowflake-with-a-tail shape:
+    /// L–O, O–C, C–S:nationkey, L–P.
+    fn tail_infos() -> Vec<GraphEdgeInfo> {
+        use crate::plan::graph::JoinKey;
+        let info = |relation, parent, key, build, ratio, reduce: Option<u64>| GraphEdgeInfo {
+            relation,
+            parent,
+            key,
+            build_rows: build,
+            build_distinct: build,
+            build_row_bytes: 12.0,
+            ratio,
+            reduce_parent_rows: reduce,
+        };
+        vec![
+            info(Relation::Orders, Relation::Lineitem, JoinKey::OrderKey, 100, 0.5, None),
+            info(Relation::Customer, Relation::Orders, JoinKey::CustKey, 40, 0.9, Some(100)),
+            info(Relation::Supplier, Relation::Customer, JoinKey::NationKey, 50, 8.0, Some(40)),
+            info(Relation::Part, Relation::Lineitem, JoinKey::PartKey, 20, 0.02, None),
+        ]
+    }
+
+    #[test]
+    fn graph_dp_respects_tree_dependencies_and_prices_reductions() {
+        let cfg = ClusterConfig::default();
+        let infos = tail_infos();
+        for order in [
+            plan_graph_order(&cfg, EpsMode::PerFilter, None, &infos, 4000.0),
+            plan_graph_order_greedy(&infos, 4000.0),
+        ] {
+            assert_eq!(order.len(), infos.len());
+            let pos = |r: Relation| {
+                order.iter().position(|&i| infos[i].relation == r).unwrap()
+            };
+            assert!(pos(Relation::Orders) < pos(Relation::Customer));
+            assert!(pos(Relation::Customer) < pos(Relation::Supplier));
+        }
+        // fact children have no table to pre-reduce; internal edges do
+        assert_eq!(
+            reduction_price(&cfg, None, &infos[0], StrategyKind::Bloom, 0.05),
+            0.0
+        );
+        for kind in StrategyKind::ALL {
+            assert!(reduction_price(&cfg, None, &infos[1], kind, 0.05) > 0.0);
+        }
+        // a tighter reduction filter ships more bits
+        let loose = reduction_price(&cfg, None, &infos[2], StrategyKind::Bloom, 0.1);
+        let tight = reduction_price(&cfg, None, &infos[2], StrategyKind::Bloom, 0.001);
+        assert!(tight > loose);
+    }
+
+    #[test]
+    fn graph_pricing_folds_the_reduction_into_every_kind() {
+        let cfg = ClusterConfig::default();
+        let infos = tail_infos();
+        let (edges, dims) = plan_graph_edges_with(
+            &cfg,
+            EpsMode::PerFilter,
+            None,
+            &infos,
+            4000.0,
+            PushdownMode::Ranked,
+        );
+        assert_eq!(edges.len(), 4);
+        assert_eq!(dims.len(), 4);
+        // dim_stats rides in plan order and carries the fan-out ratio
+        let supp = dims.iter().find(|d| d.relation == Relation::Supplier).unwrap();
+        assert!(supp.match_frac > 1.0, "nationkey fan-out survives in match_frac");
+        for e in &edges {
+            assert!(e.prediction.eps_star > 0.0 && e.prediction.eps_star < 1.0);
+            assert!(e.prediction.cost_of(e.strategy.kind()) > 0.0);
+        }
+        // unranked keeps the canonical pre-order and full-scan pricing
+        let (unranked, _) = plan_graph_edges_with(
+            &cfg,
+            EpsMode::PerFilter,
+            None,
+            &infos,
+            4000.0,
+            PushdownMode::Unranked,
+        );
+        let rels: Vec<Relation> = unranked.iter().map(|e| e.relation).collect();
+        assert_eq!(
+            rels,
+            vec![Relation::Orders, Relation::Customer, Relation::Supplier, Relation::Part]
+        );
+        assert!(unranked.iter().all(|e| e.stats.probe_rows == 4000));
+    }
+
+    #[test]
+    fn graph_spec_plans_through_plan_edges() {
+        use crate::cluster::Cluster;
+        use crate::plan::JoinGraph;
+        let lineitem: Vec<FactRow> = (0..4000u64)
+            .map(|i| FactRow {
+                orderkey: (i % 200) + 1,
+                partkey: (i % 1000) + 1,
+                suppkey: (i % 50) + 1,
+                price_cents: i as i64,
+            })
+            .collect();
+        let orders: Vec<(u64, u64, i32)> = (1..=100u64).map(|ok| (ok, ok % 40 + 1, 0)).collect();
+        let customer: Vec<(u64, i32)> = (1..=40u64).map(|ck| (ck, (ck % 5) as i32)).collect();
+        let supplier: Vec<(u64, i32)> = (1..=50u64).map(|sk| (sk, (sk % 5) as i32)).collect();
+        let part: Vec<(u64, i32)> = (1..=20u64).map(|pk| (pk, 11)).collect();
+        let inputs = PlanInputs {
+            customer: PartitionedTable::from_rows(customer, 2),
+            orders: PartitionedTable::from_rows(orders, 2),
+            lineitem: PartitionedTable::from_rows(lineitem, 4),
+            part: PartitionedTable::from_rows(part, 2),
+            supplier: PartitionedTable::from_rows(supplier, 2),
+        };
+        let graph = JoinGraph::parse_compact(
+            "lineitem-orders,orders-customer,customer-supplier,lineitem-part",
+        )
+        .unwrap();
+        let spec = PlanSpec {
+            topology: Topology::Graph,
+            dims: graph.dims(),
+            graph: Some(graph),
+            ..Default::default()
+        };
+        let cluster = Cluster::new(ClusterConfig::local());
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        assert_eq!(plan.topology, Topology::Graph);
+        assert_eq!(plan.edges.len(), 4);
+        assert_eq!(plan.dim_stats.len(), 4);
+        let pos = |r: Relation| plan.edges.iter().position(|e| e.relation == r).unwrap();
+        assert!(pos(Relation::Orders) < pos(Relation::Customer));
+        assert!(pos(Relation::Customer) < pos(Relation::Supplier));
     }
 }

@@ -63,15 +63,17 @@ use crate::joins::{
 use crate::metrics::{QueryMetrics, StageTiming};
 
 use super::adaptive::{
-    estimate_error, expected_survivors, filter_pass_fraction, regret_flip, replan_chain_tail,
-    replan_remaining, resize_epsilon, should_replan, tail_labels, EdgeObservation, ReplanEvent,
-    ReplanLedger, ReplanPolicy, ReplanTrigger, ResizeEvent, REGRET_MARGIN,
+    estimate_error, expected_survivors, filter_pass_fraction, graph_expected_survivors,
+    regret_flip, replan_chain_tail, replan_graph_tail, replan_remaining, resize_epsilon,
+    should_replan, tail_labels, EdgeObservation, ReplanEvent, ReplanLedger, ReplanPolicy,
+    ReplanTrigger, ResizeEvent, REGRET_MARGIN,
 };
 use super::catalog::{EdgeStats, FactRow, PlanInputs, STREAM_ROW_BYTES};
 use super::costing::{
     degrade_broadcast_price, edge_cost_model, retry_build_price, speculative_rerun_price,
     CostCalibration,
 };
+use super::graph::{JoinKey, JoinTree, TreeNode};
 use super::{
     EdgeStrategy, JoinPlan, PlanSpec, PlannedEdge, ProbeMode, ProbePathChoice, Relation, Topology,
 };
@@ -391,6 +393,142 @@ pub fn nested_loop_oracle(inputs: &PlanInputs, dims: &[Relation]) -> Vec<PlanRow
     out
 }
 
+/// Reference semantics of an arbitrary acyclic graph plan: expand the
+/// fact rows through the join tree's nodes in pre-order, probing each
+/// node's incoming key against a plain multimap index of its table.
+/// Exact multiset semantics, no reduction, no filters — what the bloom
+/// full reducer must reproduce bit-for-bit (bloom reduction messages are
+/// conservative: false positives survive phase A but the exact stream
+/// joins remove them).  Payload columns attach per (relation, incoming
+/// key); when two edges attach the same [`PlanRow`] field (e.g. ORDERS
+/// and CUSTOMER both carry custkey), the later edge in pre-order wins —
+/// the same last-writer rule the executor's stream columns follow.
+pub fn graph_oracle(inputs: &PlanInputs, tree: &JoinTree) -> Vec<PlanRow> {
+    use std::collections::HashMap;
+    let mut out: Vec<PlanRow> = inputs.lineitem.iter().map(seed_row).collect();
+    for node in &tree.nodes {
+        let mut next = Vec::new();
+        match (node.relation, node.key) {
+            (Relation::Orders, JoinKey::OrderKey) => {
+                let mut idx: HashMap<u64, Vec<(u64, i32)>> = HashMap::new();
+                for (ok, ck, od) in inputs.orders.iter() {
+                    idx.entry(*ok).or_default().push((*ck, *od));
+                }
+                for r in &out {
+                    if let Some(ms) = idx.get(&r.orderkey) {
+                        for &(ck, od) in ms {
+                            let mut r2 = *r;
+                            r2.custkey = ck;
+                            r2.orderdate = od;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            (Relation::Orders, JoinKey::CustKey) => {
+                // parent CUSTOMER: orders hang off the stream's custkey
+                let mut idx: HashMap<u64, Vec<i32>> = HashMap::new();
+                for (_, ck, od) in inputs.orders.iter() {
+                    idx.entry(*ck).or_default().push(*od);
+                }
+                for r in &out {
+                    if let Some(ms) = idx.get(&r.custkey) {
+                        for &od in ms {
+                            let mut r2 = *r;
+                            r2.orderdate = od;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            (Relation::Customer, JoinKey::CustKey) => {
+                let mut idx: HashMap<u64, Vec<i32>> = HashMap::new();
+                for (ck, nk) in inputs.customer.iter() {
+                    idx.entry(*ck).or_default().push(*nk);
+                }
+                for r in &out {
+                    if let Some(ms) = idx.get(&r.custkey) {
+                        for &nk in ms {
+                            let mut r2 = *r;
+                            r2.nationkey = nk;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            (Relation::Customer, JoinKey::NationKey) => {
+                // parent SUPPLIER: probe the supplier's nationkey
+                let mut idx: HashMap<u64, Vec<(u64, i32)>> = HashMap::new();
+                for (ck, nk) in inputs.customer.iter() {
+                    idx.entry(*nk as u64).or_default().push((*ck, *nk));
+                }
+                for r in &out {
+                    if let Some(ms) = idx.get(&(r.s_nationkey as u64)) {
+                        for &(ck, nk) in ms {
+                            let mut r2 = *r;
+                            r2.custkey = ck;
+                            r2.nationkey = nk;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            (Relation::Part, JoinKey::PartKey) => {
+                let mut idx: HashMap<u64, Vec<i32>> = HashMap::new();
+                for (pk, b) in inputs.part.iter() {
+                    idx.entry(*pk).or_default().push(*b);
+                }
+                for r in &out {
+                    if let Some(ms) = idx.get(&r.partkey) {
+                        for &b in ms {
+                            let mut r2 = *r;
+                            r2.p_brand = b;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            (Relation::Supplier, JoinKey::SuppKey) => {
+                let mut idx: HashMap<u64, Vec<i32>> = HashMap::new();
+                for (sk, nk) in inputs.supplier.iter() {
+                    idx.entry(*sk).or_default().push(*nk);
+                }
+                for r in &out {
+                    if let Some(ms) = idx.get(&r.suppkey) {
+                        for &nk in ms {
+                            let mut r2 = *r;
+                            r2.s_nationkey = nk;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            (Relation::Supplier, JoinKey::NationKey) => {
+                // parent CUSTOMER: probe the customer's nationkey
+                let mut idx: HashMap<u64, Vec<i32>> = HashMap::new();
+                for (_, nk) in inputs.supplier.iter() {
+                    idx.entry(*nk as u64).or_default().push(*nk);
+                }
+                for r in &out {
+                    if let Some(ms) = idx.get(&(r.nationkey as u64)) {
+                        for &nk in ms {
+                            let mut r2 = *r;
+                            r2.s_nationkey = nk;
+                            next.push(r2);
+                        }
+                    }
+                }
+            }
+            (rel, key) => {
+                panic!("graph oracle: no executor variant joins {} via {}", rel.name(), key.name())
+            }
+        }
+        out = next;
+    }
+    out.sort_unstable();
+    out
+}
+
 /// Cross-query dimension-filter reuse hook (implemented by the server's
 /// filter cache).  `fetch` may return a filter built by an earlier query
 /// over the **same build side** — same relation, predicates, ε and data
@@ -403,6 +541,36 @@ pub fn nested_loop_oracle(inputs: &PlanInputs, dims: &[Relation]) -> Vec<PlanRow
 pub trait FilterSource: Sync {
     fn fetch(&self, relation: Relation, eps: f64) -> Option<std::sync::Arc<BloomFilter>>;
     fn publish(&self, relation: Relation, eps: f64, filter: &std::sync::Arc<BloomFilter>);
+}
+
+/// Cross-query filter reuse is keyed by (relation, ε) alone, which
+/// assumes the canonical star build side.  A graph plan may join a
+/// relation at a non-star key (a different key column in the filter) or
+/// over a table its bottom-up sweep already reduced (a subset of the
+/// canonical keys — probing a cached unreduced filter would be correct
+/// but publishing the reduced one would poison later star queries).
+/// This wrapper keeps the cache for exactly the relations whose build
+/// side matches the canonical one and blocks both directions for
+/// everything else.
+struct GatedFilterSource<'a> {
+    inner: &'a dyn FilterSource,
+    allow: Vec<Relation>,
+}
+
+impl FilterSource for GatedFilterSource<'_> {
+    fn fetch(&self, relation: Relation, eps: f64) -> Option<std::sync::Arc<BloomFilter>> {
+        if self.allow.contains(&relation) {
+            self.inner.fetch(relation, eps)
+        } else {
+            None
+        }
+    }
+
+    fn publish(&self, relation: Relation, eps: f64, filter: &std::sync::Arc<BloomFilter>) {
+        if self.allow.contains(&relation) {
+            self.inner.publish(relation, eps, filter);
+        }
+    }
 }
 
 /// Dispatch one edge to its strategy's executor.  Bloom edges run the
@@ -674,6 +842,454 @@ fn keyed_probe_side(
     let table = PartitionedTable::from_rows_reusing(&mut rows, parts);
     scratch.keyed = rows;
     table
+}
+
+// ---------------------------------------------------------------------
+// Graph plans: the bloom full reducer (Topology::Graph)
+// ---------------------------------------------------------------------
+
+/// The key a relation joins at in the legacy star planner — the shape
+/// the fused scan's `keys_for`, the filter cache and the oracle's star
+/// path all assume.
+fn star_key(rel: Relation) -> Option<JoinKey> {
+    match rel {
+        Relation::Orders => Some(JoinKey::OrderKey),
+        Relation::Customer => Some(JoinKey::CustKey),
+        Relation::Part => Some(JoinKey::PartKey),
+        Relation::Supplier => Some(JoinKey::SuppKey),
+        Relation::Lineitem => None,
+    }
+}
+
+/// The probe-key column a graph edge gathers from the current stream:
+/// the *parent's* value of the edge key.  Fact parents read the base
+/// columns; dimension parents read the payload column their own edge
+/// attached (pre-order guarantees it exists by the time a child runs).
+fn graph_stream_keys(stream: &FactStream, parent: Relation, key: JoinKey) -> Vec<u64> {
+    match (parent, key) {
+        (Relation::Lineitem, JoinKey::OrderKey) => exec::gather(&stream.orderkey, &stream.sel),
+        (Relation::Lineitem, JoinKey::PartKey) => exec::gather(&stream.partkey, &stream.sel),
+        (Relation::Lineitem, JoinKey::SuppKey) => exec::gather(&stream.suppkey, &stream.sel),
+        (Relation::Orders, JoinKey::CustKey) | (Relation::Customer, JoinKey::CustKey) => stream
+            .custkey
+            .clone()
+            .expect("a custkey edge needs its parent's custkey column on the stream"),
+        (Relation::Customer, JoinKey::NationKey) => stream
+            .nationkey
+            .as_ref()
+            .expect("a customer-parent nationkey edge needs the customer edge upstream")
+            .iter()
+            .map(|&n| n as u64)
+            .collect(),
+        (Relation::Supplier, JoinKey::NationKey) => stream
+            .s_nationkey
+            .as_ref()
+            .expect("a supplier-parent nationkey edge needs the supplier edge upstream")
+            .iter()
+            .map(|&n| n as u64)
+            .collect(),
+        (p, k) => panic!("the stream carries no {} column from {}", k.name(), p.name()),
+    }
+}
+
+/// [`keyed_probe_side`] for a graph edge: the parent's key-column values
+/// zipped with stream indices, through the same reusable scratch.
+fn graph_probe_side(
+    stream: &FactStream,
+    parent: Relation,
+    key: JoinKey,
+    parts: usize,
+    scratch: &mut EdgeScratch,
+) -> PartitionedTable<Keyed<StreamIdx>> {
+    let mut rows = std::mem::take(&mut scratch.keyed);
+    rows.clear();
+    rows.extend(
+        graph_stream_keys(stream, parent, key)
+            .into_iter()
+            .enumerate()
+            .map(|(j, k)| (k, StreamIdx(j as u32))),
+    );
+    let table = PartitionedTable::from_rows_reusing(&mut rows, parts);
+    scratch.keyed = rows;
+    table
+}
+
+/// The relations of a graph plan whose bloom builds match the canonical
+/// star build side — unreduced tables joined at their star key.  Only
+/// these may touch the cross-query filter cache ([`GatedFilterSource`]),
+/// and only these may be priced as cache hits by the server's
+/// cache-aware re-pricing; everything else would fetch a wrong filter or
+/// publish a poisoned one.
+pub fn graph_filter_allowlist(tree: &JoinTree) -> Vec<Relation> {
+    tree.nodes
+        .iter()
+        .filter(|n| !tree.is_internal_parent(n.relation) && star_key(n.relation) == Some(n.key))
+        .map(|n| n.relation)
+        .collect()
+}
+
+/// Run one graph edge of the top-down sweep: probe the parent's key
+/// column against the edge's (bottom-up-reduced) table, contract the
+/// stream and attach the payload columns of the `(relation, key)`
+/// variant.  Star-keyed variants are column-for-column identical to
+/// [`run_star_edge`]; the non-star variants re-key the dimension by the
+/// edge key first (one-to-many matches fan the stream out, which
+/// [`FactStream::contract`] supports via repeated indices).
+#[allow(clippy::too_many_arguments)]
+fn run_graph_edge(
+    cluster: &Cluster,
+    edge: &PlannedEdge,
+    node: &TreeNode,
+    parts: usize,
+    stream: &mut FactStream,
+    tables: &mut DimTables,
+    resize: Option<ResizeDecision<'_>>,
+    filters: Option<&dyn FilterSource>,
+    faults: Option<&FaultSession>,
+    probe_path: &ProbePath,
+    scratch: &mut EdgeScratch,
+) -> (QueryMetrics, Option<FilterResize>) {
+    let big = graph_probe_side(stream, node.parent, node.key, parts, scratch);
+    match (edge.relation, node.key) {
+        (Relation::Orders, JoinKey::OrderKey) => {
+            let dim = tables.orders.take().expect("graph plans join orders at most once");
+            let small: PartitionedTable<Keyed<(u64, i32)>> =
+                dim.map_partitions(|p| p.into_iter().map(|(ok, ck, od)| (ok, (ck, od))).collect());
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, small, resize, filters, faults, probe_path);
+            tables.orders_joined = true;
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut ck = Vec::with_capacity(joined.len());
+            let mut od = Vec::with_capacity(joined.len());
+            for (_, idx, (c, d)) in joined {
+                inner.push(idx.0);
+                ck.push(c);
+                od.push(d);
+            }
+            stream.contract(&inner);
+            stream.custkey = Some(ck);
+            stream.orderdate = Some(od);
+            (m, resized)
+        }
+        (Relation::Orders, JoinKey::CustKey) => {
+            // parent CUSTOMER: orders re-keyed by custkey, orderdate
+            // payload (custkey is already on the stream — the probe key)
+            let dim = tables.orders.take().expect("graph plans join orders at most once");
+            let small: PartitionedTable<Keyed<i32>> =
+                dim.map_partitions(|p| p.into_iter().map(|(_, ck, od)| (ck, od)).collect());
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, small, resize, filters, faults, probe_path);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut od = Vec::with_capacity(joined.len());
+            for (_, idx, d) in joined {
+                inner.push(idx.0);
+                od.push(d);
+            }
+            stream.contract(&inner);
+            stream.orderdate = Some(od);
+            (m, resized)
+        }
+        (Relation::Customer, JoinKey::CustKey) => {
+            let dim = tables.customer.take().expect("graph plans join customer at most once");
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, dim, resize, filters, faults, probe_path);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut nk = Vec::with_capacity(joined.len());
+            for (_, idx, n) in joined {
+                inner.push(idx.0);
+                nk.push(n);
+            }
+            stream.contract(&inner);
+            stream.nationkey = Some(nk);
+            (m, resized)
+        }
+        (Relation::Customer, JoinKey::NationKey) => {
+            // parent SUPPLIER: customers re-keyed by nationkey, custkey
+            // and nationkey payloads (last writer wins on custkey)
+            let dim = tables.customer.take().expect("graph plans join customer at most once");
+            let small: PartitionedTable<Keyed<(u64, i32)>> = dim
+                .map_partitions(|p| p.into_iter().map(|(ck, nk)| (nk as u64, (ck, nk))).collect());
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, small, resize, filters, faults, probe_path);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut ck = Vec::with_capacity(joined.len());
+            let mut nk = Vec::with_capacity(joined.len());
+            for (_, idx, (c, n)) in joined {
+                inner.push(idx.0);
+                ck.push(c);
+                nk.push(n);
+            }
+            stream.contract(&inner);
+            stream.custkey = Some(ck);
+            stream.nationkey = Some(nk);
+            (m, resized)
+        }
+        (Relation::Part, JoinKey::PartKey) => {
+            let dim = tables.part.take().expect("graph plans join part at most once");
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, dim, resize, filters, faults, probe_path);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut brand = Vec::with_capacity(joined.len());
+            for (_, idx, b) in joined {
+                inner.push(idx.0);
+                brand.push(b);
+            }
+            stream.contract(&inner);
+            stream.p_brand = Some(brand);
+            (m, resized)
+        }
+        (Relation::Supplier, JoinKey::SuppKey) => {
+            let dim = tables.supplier.take().expect("graph plans join supplier at most once");
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, dim, resize, filters, faults, probe_path);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut nk = Vec::with_capacity(joined.len());
+            for (_, idx, n) in joined {
+                inner.push(idx.0);
+                nk.push(n);
+            }
+            stream.contract(&inner);
+            stream.s_nationkey = Some(nk);
+            (m, resized)
+        }
+        (Relation::Supplier, JoinKey::NationKey) => {
+            // parent CUSTOMER: suppliers re-keyed by nationkey; the
+            // attached s_nationkey equals the probe key by construction
+            let dim = tables.supplier.take().expect("graph plans join supplier at most once");
+            let small: PartitionedTable<Keyed<i32>> =
+                dim.map_partitions(|p| p.into_iter().map(|(_, nk)| (nk as u64, nk)).collect());
+            let (joined, m, resized) =
+                run_edge(cluster, edge, big, small, resize, filters, faults, probe_path);
+            let mut inner = Vec::with_capacity(joined.len());
+            let mut nk = Vec::with_capacity(joined.len());
+            for (_, idx, n) in joined {
+                inner.push(idx.0);
+                nk.push(n);
+            }
+            stream.contract(&inner);
+            stream.s_nationkey = Some(nk);
+            (m, resized)
+        }
+        (rel, key) => {
+            panic!("no graph executor variant joins {} via {}", rel.name(), key.name())
+        }
+    }
+}
+
+/// One relation's values of `key`, read from its current (possibly
+/// already reduced) table — the reduction sweep's message source and
+/// scan column.
+fn table_key_values(tables: &DimTables, rel: Relation, key: JoinKey) -> Vec<u64> {
+    match rel {
+        Relation::Orders => tables
+            .orders
+            .as_ref()
+            .expect("the reduction sweep runs before any edge consumes its table")
+            .iter()
+            .map(|(ok, ck, _)| if key == JoinKey::OrderKey { *ok } else { *ck })
+            .collect(),
+        Relation::Customer => tables
+            .customer
+            .as_ref()
+            .expect("the reduction sweep runs before any edge consumes its table")
+            .iter()
+            .map(|(ck, nk)| if key == JoinKey::CustKey { *ck } else { *nk as u64 })
+            .collect(),
+        Relation::Part => tables
+            .part
+            .as_ref()
+            .expect("the reduction sweep runs before any edge consumes its table")
+            .iter()
+            .map(|(pk, _)| *pk)
+            .collect(),
+        Relation::Supplier => tables
+            .supplier
+            .as_ref()
+            .expect("the reduction sweep runs before any edge consumes its table")
+            .iter()
+            .map(|(sk, nk)| if key == JoinKey::SuppKey { *sk } else { *nk as u64 })
+            .collect(),
+        Relation::Lineitem => panic!("the fact table is never a reduction endpoint"),
+    }
+}
+
+/// Filter `rel`'s table in place, keeping rows whose `key` value passes
+/// `keep`.  Returns (rows before, rows after) for the scan booking.
+fn retain_table(
+    tables: &mut DimTables,
+    rel: Relation,
+    key: JoinKey,
+    keep: &dyn Fn(u64) -> bool,
+) -> (u64, u64) {
+    match rel {
+        Relation::Orders => {
+            let t = tables.orders.take().expect("reduction targets a live table");
+            let before = t.n_rows() as u64;
+            let t = t.map_partitions(|p| {
+                p.into_iter()
+                    .filter(|(ok, ck, _)| keep(if key == JoinKey::OrderKey { *ok } else { *ck }))
+                    .collect()
+            });
+            let after = t.n_rows() as u64;
+            tables.orders = Some(t);
+            (before, after)
+        }
+        Relation::Customer => {
+            let t = tables.customer.take().expect("reduction targets a live table");
+            let before = t.n_rows() as u64;
+            let t = t.map_partitions(|p| {
+                p.into_iter()
+                    .filter(|(ck, nk)| keep(if key == JoinKey::CustKey { *ck } else { *nk as u64 }))
+                    .collect()
+            });
+            let after = t.n_rows() as u64;
+            tables.customer = Some(t);
+            (before, after)
+        }
+        Relation::Supplier => {
+            let t = tables.supplier.take().expect("reduction targets a live table");
+            let before = t.n_rows() as u64;
+            let t = t.map_partitions(|p| {
+                p.into_iter()
+                    .filter(|(sk, nk)| keep(if key == JoinKey::SuppKey { *sk } else { *nk as u64 }))
+                    .collect()
+            });
+            let after = t.n_rows() as u64;
+            tables.supplier = Some(t);
+            (before, after)
+        }
+        Relation::Part => {
+            let t = tables.part.take().expect("reduction targets a live table");
+            let before = t.n_rows() as u64;
+            let t = t.map_partitions(|p| p.into_iter().filter(|(pk, _)| keep(*pk)).collect());
+            let after = t.n_rows() as u64;
+            tables.part = Some(t);
+            (before, after)
+        }
+        Relation::Lineitem => panic!("the fact table is never a reduction endpoint"),
+    }
+}
+
+/// Phase A of the full reducer: the bottom-up semi-join sweep.  Every
+/// internal tree edge (child, parent≠fact) sends the child's key set up
+/// as a reduction message and the parent's table is filtered through it
+/// — bloom messages at the child edge's planned ε for bloom-class
+/// strategies (false positives conservatively retained; the exact
+/// stream joins remove them later), exact key sets for the rest.
+/// Deepest edges run first, so a child's own subtree has already
+/// reduced it before its key set reduces the parent — Yannakakis'
+/// bottom-up order on the reversed pre-order.
+///
+/// Each sweep step books the stage pair the planner priced
+/// (`reduce_build` = message build + ship, `reduce_scan` = the parent
+/// scan) from the cluster constants at actual table sizes.  The names
+/// deliberately sit in *neither* §7 stage bucket, so calibration's
+/// stage-1/stage-2 split never sees reduction work.  Returns the booked
+/// metrics per child relation; phase B merges them into the owning
+/// edge's ledger slice.  Reductions run on the coordinator outside the
+/// fault session — phase B's strategy executors remain the fault-aware
+/// path.
+fn reduce_sweep(
+    cluster: &Cluster,
+    edges: &[PlannedEdge],
+    tree: &JoinTree,
+    tables: &mut DimTables,
+) -> Vec<(Relation, QueryMetrics)> {
+    let cfg = cluster.config();
+    let slots = cfg.total_slots().max(1) as f64;
+    let rounds = ((cfg.total_executors().max(1) as f64) + 1.0).log2().ceil().max(1.0);
+    let mut out: Vec<(Relation, QueryMetrics)> = Vec::new();
+    for node in tree.nodes.iter().rev().filter(|n| n.parent != Relation::Lineitem) {
+        let eps = edges
+            .iter()
+            .find(|e| e.relation == node.relation)
+            .and_then(|e| strategy_eps(&e.strategy));
+        let distinct: std::collections::HashSet<u64> =
+            table_key_values(tables, node.relation, node.key).into_iter().collect();
+        let n = distinct.len().max(1) as f64;
+        let (ship_bytes, scanned) = match eps {
+            Some(eps) => {
+                let mut f = BloomFilter::with_optimal(distinct.len().max(1) as u64, eps);
+                for k in &distinct {
+                    f.insert(*k);
+                }
+                let bytes = f.to_bytes().len() as u64;
+                let (before, _) = retain_table(tables, node.parent, node.key, &|k| {
+                    f.contains_key(k)
+                });
+                (bytes, before)
+            }
+            None => {
+                let bytes = 8 * distinct.len() as u64;
+                let (before, _) =
+                    retain_table(tables, node.parent, node.key, &|k| distinct.contains(&k));
+                (bytes, before)
+            }
+        };
+        let mut m = QueryMetrics::default();
+        let build_s = n * cfg.hash_insert_cost / slots;
+        let ship_s = 2.0 * rounds * (cfg.net_latency + ship_bytes as f64 / cfg.net_bandwidth);
+        m.push(
+            StageTiming {
+                tasks: 1,
+                ..StageTiming::new(
+                    "reduce_build",
+                    SimDuration::from_secs(cfg.stage_overhead + build_s + ship_s),
+                )
+            }
+            .with_cost(&Cost {
+                cpu_s: n * cfg.hash_insert_cost,
+                net_bytes: ship_bytes * cfg.total_executors().max(1) as u64,
+                ..Default::default()
+            }),
+        );
+        let scan_s = scanned as f64 * cfg.scan_record_cost / slots;
+        m.push(
+            StageTiming {
+                tasks: 1,
+                ..StageTiming::new(
+                    "reduce_scan",
+                    SimDuration::from_secs(cfg.stage_overhead + scan_s),
+                )
+            }
+            .with_cost(&Cost {
+                cpu_s: scanned as f64 * cfg.scan_record_cost,
+                ..Default::default()
+            }),
+        );
+        out.push((node.relation, m));
+    }
+    out
+}
+
+/// Pop the reduction-sweep metrics owned by `rel`'s edge, if any.
+fn take_reduction(
+    reductions: &mut Vec<(Relation, QueryMetrics)>,
+    rel: Relation,
+) -> Option<QueryMetrics> {
+    reductions.iter().position(|(r, _)| *r == rel).map(|i| reductions.remove(i).1)
+}
+
+/// Length of the maximal fused group starting at `pending[i]` in a graph
+/// plan.  On top of [`fused_eligible`], graph members must join at their
+/// star key: the fused scan gathers keys and attaches payloads with star
+/// semantics, which is exactly right for star-keyed edges over the
+/// (already reduced) tables and wrong for re-keyed variants — those run
+/// edge-at-a-time.
+fn graph_fused_group_len(
+    pending: &[PlannedEdge],
+    i: usize,
+    tree: &JoinTree,
+    orders_joined: bool,
+    faults: Option<&FaultSession>,
+) -> usize {
+    pending[i..]
+        .iter()
+        .take_while(|e| {
+            tree.node(e.relation).is_some_and(|n| star_key(e.relation) == Some(n.key))
+                && fused_eligible(e, orders_joined, faults)
+        })
+        .count()
 }
 
 // ---------------------------------------------------------------------
@@ -1866,6 +2482,216 @@ pub fn execute_with_filters(
             }
             rows_out
         }
+        Topology::Graph => {
+            let graph = spec
+                .effective_graph()
+                .expect("graph specs are validated at the CLI/server boundary");
+            let tree = graph.tree();
+            let mut stream = FactStream::seed(&lineitem);
+            let mut tables = DimTables {
+                orders: Some(orders),
+                customer: Some(customer),
+                part: Some(part),
+                supplier: Some(supplier),
+                orders_joined: false,
+            };
+            // cross-query filters apply only where the build side matches
+            // the canonical star one: unreduced tables at their star key
+            let allow = graph_filter_allowlist(&tree);
+            let gated = filters.map(|inner| GatedFilterSource { inner, allow });
+            let filters: Option<&dyn FilterSource> =
+                gated.as_ref().map(|g| g as &dyn FilterSource);
+            // phase A: the bottom-up semi-join sweep, over the initial
+            // plan's strategies — re-plans only rewrite the
+            // not-yet-run stream tail, by which point every reduction
+            // is sunk cost
+            let mut reductions = reduce_sweep(cluster, &plan.edges, &tree, &mut tables);
+            // phase B: the root-first stream sweep, through the same
+            // incremental observe/re-plan loop as the star executor
+            let mut pending: Vec<PlannedEdge> = plan.edges.clone();
+            let mut i = 0;
+            let mut scratch = EdgeScratch::default();
+            while i < pending.len() {
+                let glen = if spec.probe == ProbeMode::Fused {
+                    graph_fused_group_len(&pending, i, &tree, tables.orders_joined, faults)
+                } else {
+                    0
+                };
+                if glen >= 2 {
+                    let group: Vec<PlannedEdge> = pending[i..i + glen].to_vec();
+                    let group_end = i + glen;
+                    let results = run_fused_group(
+                        cluster,
+                        spec,
+                        &group,
+                        parts,
+                        &mut stream,
+                        &mut tables,
+                        &mut scratch,
+                        &probe_path,
+                        filters,
+                        faults,
+                        &run_calib,
+                    );
+                    for (j, r) in results.into_iter().enumerate() {
+                        let edge = &group[j];
+                        let GroupEdgeResult {
+                            metrics: mut m,
+                            resized,
+                            probe_rows,
+                            survivors,
+                            expected,
+                            est_entering,
+                        } = r;
+                        if let Some(red) = take_reduction(&mut reductions, edge.relation) {
+                            // the sweep step ran in phase A; its stages
+                            // lead this edge's ledger slice
+                            for (k, s) in red.stages.into_iter().enumerate() {
+                                m.stages.insert(k, s);
+                            }
+                        }
+                        let obs = observe_edge(
+                            cluster.config(),
+                            edge,
+                            &m,
+                            probe_rows,
+                            survivors,
+                            resized.as_ref(),
+                        );
+                        if let Some(rz) = &resized {
+                            ledger.resizes.push(ResizeEvent {
+                                edge: edge.name.clone(),
+                                old_eps: rz.old_fpr,
+                                new_eps: rz.new_fpr,
+                                build_estimate: rz.build_estimate,
+                                probe_rows: est_entering,
+                            });
+                        }
+                        run_calib.record(&obs);
+                        let replan = |factors: Option<(f64, f64)>| {
+                            if !pending[group_end..].iter().all(PlannedEdge::has_estimates) {
+                                return None;
+                            }
+                            let ratio = survivors as f64 / expected.max(1) as f64;
+                            Some(replan_graph_tail(
+                                cluster.config(),
+                                spec.eps_mode,
+                                factors,
+                                &pending[group_end..],
+                                ratio,
+                            ))
+                        };
+                        let new_tail = trigger_tail(
+                            cluster.config(),
+                            spec,
+                            persistent_factors,
+                            &run_calib,
+                            &mut ledger,
+                            edge,
+                            &pending[group_end..],
+                            survivors,
+                            expected,
+                            &replan,
+                        );
+                        if let Some(new_tail) = new_tail {
+                            pending.truncate(group_end);
+                            pending.extend(new_tail);
+                        }
+                        ledger.observations.push(obs);
+                        edge_reports.push(edge_report(edge, &m, probe_rows));
+                        metrics.absorb(&format!("e{}", i + 1 + j), m);
+                    }
+                    i += glen;
+                    continue;
+                }
+                let edge = pending[i].clone();
+                let node =
+                    *tree.node(edge.relation).expect("every planned graph edge is a tree node");
+                let probe_rows = stream.len() as u64;
+                let decider = wants_resize(spec, &edge, probe_rows).then(|| {
+                    resize_decider(
+                        cluster.config().clone(),
+                        edge.stats.clone(),
+                        probe_rows,
+                        run_calib.factors_with_min(1),
+                    )
+                });
+                let resize = decider.as_ref().map(|f| f as ResizeDecision<'_>);
+                let (mut m, resized) = run_graph_edge(
+                    cluster,
+                    &edge,
+                    &node,
+                    parts,
+                    &mut stream,
+                    &mut tables,
+                    resize,
+                    filters,
+                    faults,
+                    &probe_path,
+                    &mut scratch,
+                );
+                if let Some(red) = take_reduction(&mut reductions, edge.relation) {
+                    for (k, s) in red.stages.into_iter().enumerate() {
+                        m.stages.insert(k, s);
+                    }
+                }
+                let survivors = stream.len() as u64;
+                let obs = observe_edge(
+                    cluster.config(),
+                    &edge,
+                    &m,
+                    probe_rows,
+                    survivors,
+                    resized.as_ref(),
+                );
+                if let Some(r) = &resized {
+                    ledger.resizes.push(ResizeEvent {
+                        edge: edge.name.clone(),
+                        old_eps: r.old_fpr,
+                        new_eps: r.new_fpr,
+                        build_estimate: r.build_estimate,
+                        probe_rows,
+                    });
+                }
+                run_calib.record(&obs);
+                // unclamped: graph edges on non-unique keys fan out
+                let expected = graph_expected_survivors(&edge.stats, probe_rows);
+                let replan = |factors: Option<(f64, f64)>| {
+                    if !pending[i + 1..].iter().all(PlannedEdge::has_estimates) {
+                        return None;
+                    }
+                    let ratio = survivors as f64 / expected.max(1) as f64;
+                    Some(replan_graph_tail(
+                        cluster.config(),
+                        spec.eps_mode,
+                        factors,
+                        &pending[i + 1..],
+                        ratio,
+                    ))
+                };
+                let new_tail = trigger_tail(
+                    cluster.config(),
+                    spec,
+                    persistent_factors,
+                    &run_calib,
+                    &mut ledger,
+                    &edge,
+                    &pending[i + 1..],
+                    survivors,
+                    expected,
+                    &replan,
+                );
+                if let Some(new_tail) = new_tail {
+                    pending.truncate(i + 1);
+                    pending.extend(new_tail);
+                }
+                ledger.observations.push(obs);
+                edge_reports.push(edge_report(&edge, &m, probe_rows));
+                metrics.absorb(&format!("e{}", i + 1), m);
+                i += 1;
+            }
+            stream.assemble(cluster.pool())
+        }
     };
 
     metrics.output_rows = rows.len() as u64;
@@ -1881,7 +2707,7 @@ pub fn execute_with_filters(
 
 #[cfg(test)]
 mod tests {
-    use super::super::{plan_edges, prepare, EpsMode, PlanSpec};
+    use super::super::{plan_edges, prepare, EpsMode, JoinGraph, PlanSpec};
     use super::*;
     use crate::cluster::ClusterConfig;
 
@@ -2130,6 +2956,101 @@ mod tests {
         };
         assert!(broadcasts(&out) > 0);
         assert_eq!(broadcasts(&clean), 0);
+    }
+
+    /// The "snowflake with a tail": ORDERS–CUSTOMER–SUPPLIER hang off
+    /// the fact in a chain (SUPPLIER via nationkey) plus a PART branch —
+    /// neither a star nor a chain.
+    fn tail_graph_spec() -> PlanSpec {
+        let graph = JoinGraph::parse_compact(
+            "lineitem-orders,orders-customer,customer-supplier,lineitem-part",
+        )
+        .expect("the tail shape is valid");
+        PlanSpec {
+            topology: Topology::Graph,
+            dims: graph.dims(),
+            graph: Some(graph),
+            ..tiny_spec()
+        }
+    }
+
+    #[test]
+    fn planned_graph_matches_oracle_on_snowflake_with_tail() {
+        let spec = tail_graph_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&spec);
+        let tree = spec.effective_graph().unwrap().tree();
+        let want = graph_oracle(&inputs, &tree);
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        assert_eq!(plan.edges.len(), 4);
+        let mut out = execute(&cluster, &spec, &plan, inputs);
+        out.rows.sort_unstable();
+        assert!(!out.rows.is_empty(), "widen the predicates");
+        assert_eq!(out.rows, want);
+        // two internal edges (CUSTOMER reduces ORDERS, SUPPLIER reduces
+        // CUSTOMER) each book a sweep-step pair under their own prefix
+        let count = |suffix: &str| {
+            out.metrics.stages.iter().filter(|s| s.name.ends_with(suffix)).count()
+        };
+        assert_eq!(count("/reduce_build"), 2);
+        assert_eq!(count("/reduce_scan"), 2);
+        // the merged slices stay consistent with the per-edge reports
+        for (i, r) in out.edge_reports.iter().enumerate() {
+            let slice = out.metrics.prefix_sim_s(&format!("e{}", i + 1));
+            assert!((slice - r.sim_s).abs() < 1e-9, "edge {i}: {slice} vs {}", r.sim_s);
+        }
+        // reduction stages sit in neither §7 bucket, so calibration's
+        // stage split never sees sweep work
+        let bucketed = out.metrics.bloom_creation_s() + out.metrics.filter_join_s();
+        assert!(bucketed < out.metrics.total_sim_s());
+        // re-plan machinery observed every edge
+        assert_eq!(out.ledger.observations.len(), out.edge_reports.len());
+    }
+
+    #[test]
+    fn star_as_graph_reproduces_legacy_star_rows() {
+        let legacy = wide_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&legacy);
+        let star_plan = plan_edges(&cluster, &legacy, &inputs);
+        let mut star = execute(&cluster, &legacy, &star_plan, inputs.clone());
+
+        let graph = JoinGraph::star(&legacy.dims).unwrap();
+        let spec =
+            PlanSpec { topology: Topology::Graph, graph: Some(graph), ..legacy.clone() };
+        let plan = plan_edges(&cluster, &spec, &inputs);
+        let mut out = execute(&cluster, &spec, &plan, inputs);
+        star.rows.sort_unstable();
+        out.rows.sort_unstable();
+        assert_eq!(out.rows, star.rows);
+        // the CUSTOMER edge makes ORDERS an internal parent: exactly one
+        // reduction sweep step runs
+        let scans =
+            out.metrics.stages.iter().filter(|s| s.name.ends_with("/reduce_scan")).count();
+        assert_eq!(scans, 1);
+    }
+
+    #[test]
+    fn fused_graph_probe_matches_edge_mode_and_adaptive_rows_are_stable() {
+        let base = tail_graph_spec();
+        let cluster = Cluster::new(ClusterConfig::local());
+        let inputs = prepare(&base);
+        let plan = plan_edges(&cluster, &base, &inputs);
+        let mut edge_mode = execute(&cluster, &base, &plan, inputs.clone());
+        edge_mode.rows.sort_unstable();
+        let fused_spec = PlanSpec { probe: ProbeMode::Fused, ..base.clone() };
+        let plan_f = plan_edges(&cluster, &fused_spec, &inputs);
+        let mut fused = execute(&cluster, &fused_spec, &plan_f, inputs.clone());
+        fused.rows.sort_unstable();
+        assert_eq!(fused.rows, edge_mode.rows);
+        assert_eq!(fused.ledger.observations.len(), fused.edge_reports.len());
+        // mid-sweep re-planning must not change the graph join result
+        for policy in [ReplanPolicy::Adaptive, ReplanPolicy::Regret] {
+            let respec = PlanSpec { replan: policy, ..base.clone() };
+            let mut b = execute(&cluster, &respec, &plan, inputs.clone());
+            b.rows.sort_unstable();
+            assert_eq!(edge_mode.rows, b.rows, "{}", policy.name());
+        }
     }
 
     #[test]

@@ -91,10 +91,37 @@ pub fn spec_fingerprint(spec: &PlanSpec) -> u64 {
         .u64(match spec.topology {
             Topology::Star => 1,
             Topology::Chain => 2,
-        })
-        .u64(spec.dims.len() as u64);
-    for &d in &spec.dims {
-        h = h.u64(relation_tag(d));
+            Topology::Graph => 3,
+        });
+    // The canonical join-graph identity: relation set + join keys,
+    // however the spec spelled them (explicit `graph` field or the
+    // legacy dims shim).  Two spellings of the same acyclic graph hash
+    // identically; the topology tag above keeps the legacy Star/Chain
+    // planners' cache slots separate from the full-reducer's.
+    match spec.effective_graph() {
+        Ok(g) => {
+            let tags = g.canonical_tags();
+            h = h.u64(tags.len() as u64);
+            for (a, b, k) in tags {
+                h = h.u64(a).u64(b).u64(k);
+            }
+        }
+        // a spec with an invalid dims shim still needs a total hash
+        Err(_) => {
+            h = h.u64(0);
+            for &d in &spec.dims {
+                h = h.u64(relation_tag(d));
+            }
+        }
+    }
+    // The listed dims order is the probe order only when ranking is off;
+    // ranked plans derive their own order, so hashing the listed order
+    // there would split cache slots between equivalent requests.
+    if matches!(spec.pushdown, PushdownMode::Unranked) {
+        h = h.u64(spec.dims.len() as u64);
+        for &d in &spec.dims {
+            h = h.u64(relation_tag(d));
+        }
     }
     h = predicate_fields(h, spec);
     h = match spec.eps_mode {
@@ -157,7 +184,10 @@ pub fn filter_context_fingerprint(spec: &PlanSpec, relation: Relation) -> u64 {
             let base =
                 h.i64(spec.order_date_window.0 as i64).i64(spec.order_date_window.1 as i64);
             match spec.topology {
-                Topology::Star => base,
+                // graph plans never publish a reduced (internal-parent)
+                // ORDERS filter — the executor gates those — so the
+                // star context is exactly right for the ones they do
+                Topology::Star | Topology::Graph => base,
                 Topology::Chain => {
                     base.u64(0xC4A1).opt_i64(spec.mktsegment.map(|v| v as i64))
                 }
@@ -192,9 +222,18 @@ mod tests {
         assert_ne!(spec_fingerprint(&spec()), spec_fingerprint(&other));
         let mut reordered = spec();
         reordered.dims = vec![Relation::Part, Relation::Customer, Relation::Orders];
-        assert_ne!(
+        assert_eq!(
             spec_fingerprint(&spec()),
             spec_fingerprint(&reordered),
+            "ranked plans derive their own order — same canonical graph, same plan"
+        );
+        let mut unranked = spec();
+        unranked.pushdown = PushdownMode::Unranked;
+        let mut unranked_reordered = reordered.clone();
+        unranked_reordered.pushdown = PushdownMode::Unranked;
+        assert_ne!(
+            spec_fingerprint(&unranked),
+            spec_fingerprint(&unranked_reordered),
             "dims order is the unranked probe order — it plans differently"
         );
         let mut replan = spec();
@@ -214,6 +253,31 @@ mod tests {
             spec_fingerprint(&kernel),
             "the probe engine changes neither rows nor simulated cost"
         );
+    }
+
+    #[test]
+    fn graph_spellings_share_a_fingerprint() {
+        use super::super::JoinGraph;
+        let g1 =
+            JoinGraph::parse_compact("lineitem-orders,orders-customer,lineitem-part").unwrap();
+        let g2 =
+            JoinGraph::parse_compact("lineitem-part,orders-lineitem,customer-orders").unwrap();
+        let a = PlanSpec {
+            topology: Topology::Graph,
+            dims: g1.dims(),
+            graph: Some(g1),
+            ..spec()
+        };
+        let b = PlanSpec {
+            topology: Topology::Graph,
+            dims: g2.dims(),
+            graph: Some(g2),
+            ..spec()
+        };
+        assert_eq!(spec_fingerprint(&a), spec_fingerprint(&b));
+        // a star-shaped graph spec is still a *graph* plan (it runs the
+        // reducer sweep) — it must not share the legacy star cache slot
+        assert_ne!(spec_fingerprint(&a), spec_fingerprint(&spec()));
     }
 
     #[test]

@@ -1,0 +1,583 @@
+//! Acyclic join graphs: the typed topology surface behind every plan.
+//!
+//! A [`JoinGraph`] is a set of key-equality edges over the 5-relation
+//! TPC-H schema with LINEITEM as the mandatory fact.  Validation
+//! (union-find) rejects cycles, disconnected graphs, duplicate edges and
+//! key mismatches with the offending edge named, so both the CLI and the
+//! server surface typed errors instead of panics.  A valid graph is a
+//! tree on the relations; [`JoinGraph::tree`] roots it at the fact and
+//! [`JoinGraph::classify`] detects graphs isomorphic to the legacy star
+//! shape (so they keep the legacy planner, ledgers and cache keys).
+//!
+//! General (non-star) graphs execute as a Yannakakis-style **bloom full
+//! reducer** (see `plan::executor`): a bottom-up semi-join sweep reduces
+//! every internal dimension table by its children's bloom filters, then
+//! a root-first join sweep over the fact stream realises the top-down
+//! pass.  `plan::costing::plan_graph_edges` prices each sweep step as a
+//! §7 stage and picks strategy + ε + join order jointly by bottom-up
+//! enumeration over subtrees (memoized on the edge subset).
+
+use std::fmt;
+
+use super::catalog::Relation;
+
+/// A join column of the TPC-H schema.  Edges are key equalities, so an
+/// edge's key must be a column of both endpoint relations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum JoinKey {
+    OrderKey,
+    PartKey,
+    SuppKey,
+    CustKey,
+    NationKey,
+}
+
+impl JoinKey {
+    pub fn name(self) -> &'static str {
+        match self {
+            JoinKey::OrderKey => "orderkey",
+            JoinKey::PartKey => "partkey",
+            JoinKey::SuppKey => "suppkey",
+            JoinKey::CustKey => "custkey",
+            JoinKey::NationKey => "nationkey",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JoinKey> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "orderkey" | "o_orderkey" | "l_orderkey" => Some(JoinKey::OrderKey),
+            "partkey" | "p_partkey" | "l_partkey" => Some(JoinKey::PartKey),
+            "suppkey" | "s_suppkey" | "l_suppkey" => Some(JoinKey::SuppKey),
+            "custkey" | "c_custkey" | "o_custkey" => Some(JoinKey::CustKey),
+            "nationkey" | "n_nationkey" | "c_nationkey" | "s_nationkey" => Some(JoinKey::NationKey),
+            _ => None,
+        }
+    }
+
+    /// Stable tag for fingerprinting (see `plan::fingerprint`).
+    pub fn tag(self) -> u64 {
+        match self {
+            JoinKey::OrderKey => 1,
+            JoinKey::PartKey => 2,
+            JoinKey::SuppKey => 3,
+            JoinKey::CustKey => 4,
+            JoinKey::NationKey => 5,
+        }
+    }
+}
+
+/// The join columns each relation actually has.  KeyMismatch validation
+/// and `:key`-less edge inference both read this table.
+pub fn relation_keys(r: Relation) -> &'static [JoinKey] {
+    match r {
+        Relation::Lineitem => &[JoinKey::OrderKey, JoinKey::PartKey, JoinKey::SuppKey],
+        Relation::Orders => &[JoinKey::OrderKey, JoinKey::CustKey],
+        Relation::Customer => &[JoinKey::CustKey, JoinKey::NationKey],
+        Relation::Part => &[JoinKey::PartKey],
+        Relation::Supplier => &[JoinKey::SuppKey, JoinKey::NationKey],
+    }
+}
+
+/// The single key two relations can equate on, if any.  Every TPC-H pair
+/// shares at most one column, so `a-b` edges without an explicit `:key`
+/// are unambiguous.
+pub fn shared_key(a: Relation, b: Relation) -> Option<JoinKey> {
+    relation_keys(a).iter().copied().find(|k| relation_keys(b).contains(k))
+}
+
+fn relation_order(r: Relation) -> u8 {
+    // Fact first, then the canonical legacy dim order.
+    match r {
+        Relation::Lineitem => 0,
+        Relation::Orders => 1,
+        Relation::Customer => 2,
+        Relation::Part => 3,
+        Relation::Supplier => 4,
+    }
+}
+
+/// One key-equality edge.  Endpoints are stored in canonical order
+/// (fact-first, then legacy dim order) so `a-b` and `b-a` inputs denote
+/// the same edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GraphEdge {
+    pub a: Relation,
+    pub b: Relation,
+    pub key: JoinKey,
+}
+
+impl GraphEdge {
+    pub fn new(a: Relation, b: Relation, key: JoinKey) -> GraphEdge {
+        if relation_order(a) <= relation_order(b) {
+            GraphEdge { a, b, key }
+        } else {
+            GraphEdge { a: b, b: a, key }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}:{}", self.a.name(), self.b.name(), self.key.name())
+    }
+}
+
+impl fmt::Display for GraphEdge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Typed graph-validation errors.  Every variant names the offending
+/// edge (or token) so the CLI and server can report it verbatim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GraphError {
+    Empty,
+    Malformed(String),
+    UnknownRelation(String),
+    UnknownKey(String),
+    SelfEdge(String),
+    KeyMismatch { edge: String },
+    DuplicateEdge { edge: String },
+    Cycle { edge: String },
+    Disconnected { node: String },
+    MissingFact,
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::Empty => write!(f, "join graph has no edges"),
+            GraphError::Malformed(tok) => {
+                write!(f, "malformed graph edge {tok:?} (want a-b or a-b:key)")
+            }
+            GraphError::UnknownRelation(tok) => write!(
+                f,
+                "unknown relation {tok:?} (lineitem|orders|customer|part|supplier)"
+            ),
+            GraphError::UnknownKey(tok) => write!(
+                f,
+                "unknown join key {tok:?} (orderkey|partkey|suppkey|custkey|nationkey)"
+            ),
+            GraphError::SelfEdge(edge) => write!(f, "self edge {edge}: endpoints must differ"),
+            GraphError::KeyMismatch { edge } => {
+                write!(f, "edge {edge}: key is not a column of both relations")
+            }
+            GraphError::DuplicateEdge { edge } => {
+                write!(f, "duplicate edge {edge}: the pair is already joined")
+            }
+            GraphError::Cycle { edge } => {
+                write!(f, "edge {edge} closes a cycle: join graphs must be acyclic")
+            }
+            GraphError::Disconnected { node } => {
+                write!(f, "join graph is disconnected: {node} is not reachable from lineitem")
+            }
+            GraphError::MissingFact => write!(f, "join graph must include the lineitem fact"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// How a valid graph executes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GraphShape {
+    /// Isomorphic to the legacy star/snowflake: every edge hangs off
+    /// lineitem on a fact key, except CUSTOMER under ORDERS on custkey.
+    /// Carries the dims in canonical order — such graphs run through the
+    /// legacy star planner so ledgers and cache keys are unchanged.
+    Star(Vec<Relation>),
+    /// Anything else: runs through the bloom full reducer.
+    General,
+}
+
+/// One non-fact node of the rooted join tree, in pre-order (every
+/// node's parent precedes it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeNode {
+    pub relation: Relation,
+    pub parent: Relation,
+    /// The key equated with the parent — the node's *incoming* key.
+    pub key: JoinKey,
+    pub depth: usize,
+}
+
+/// The graph rooted at LINEITEM.  `nodes` excludes the root and is in
+/// deterministic pre-order (DFS, neighbours in canonical relation
+/// order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JoinTree {
+    pub nodes: Vec<TreeNode>,
+}
+
+impl JoinTree {
+    pub fn node(&self, rel: Relation) -> Option<&TreeNode> {
+        self.nodes.iter().find(|n| n.relation == rel)
+    }
+
+    pub fn children(&self, rel: Relation) -> Vec<Relation> {
+        self.nodes.iter().filter(|n| n.parent == rel).map(|n| n.relation).collect()
+    }
+
+    /// Whether `rel` has children, i.e. its table is reduced by a
+    /// bottom-up sweep before the fact stream reaches it.
+    pub fn is_internal_parent(&self, rel: Relation) -> bool {
+        self.nodes.iter().any(|n| n.parent == rel)
+    }
+}
+
+/// A validated acyclic join graph over the TPC-H relations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JoinGraph {
+    edges: Vec<GraphEdge>,
+}
+
+impl JoinGraph {
+    /// The legacy star/snowflake builder: each dim hangs off lineitem on
+    /// its fact key, CUSTOMER under ORDERS on custkey.  Fails (as
+    /// `from_edges` would) when a dim has no path — e.g. CUSTOMER
+    /// without ORDERS.
+    pub fn star(dims: &[Relation]) -> Result<JoinGraph, GraphError> {
+        let mut edges = Vec::new();
+        for &d in dims {
+            let edge = match d {
+                Relation::Lineitem => {
+                    return Err(GraphError::SelfEdge("lineitem-lineitem".into()))
+                }
+                Relation::Orders => GraphEdge::new(Relation::Lineitem, Relation::Orders, JoinKey::OrderKey),
+                Relation::Customer => GraphEdge::new(Relation::Orders, Relation::Customer, JoinKey::CustKey),
+                Relation::Part => GraphEdge::new(Relation::Lineitem, Relation::Part, JoinKey::PartKey),
+                Relation::Supplier => GraphEdge::new(Relation::Lineitem, Relation::Supplier, JoinKey::SuppKey),
+            };
+            edges.push(edge);
+        }
+        JoinGraph::from_edges(edges)
+    }
+
+    /// The legacy chain builder: LINEITEM–ORDERS–CUSTOMER.  Shape-wise
+    /// this is the two-dim snowflake; the `Topology::Chain` enum value
+    /// selects the pre-reduction execution style, not a different graph.
+    pub fn chain() -> JoinGraph {
+        JoinGraph::star(&[Relation::Orders, Relation::Customer])
+            .expect("the chain shape is statically valid")
+    }
+
+    /// Validate and build.  Union-find over the endpoints: the first
+    /// edge that re-unites two already-connected relations is reported
+    /// as the cycle; leftover components are reported as disconnected.
+    pub fn from_edges(edges: Vec<GraphEdge>) -> Result<JoinGraph, GraphError> {
+        JoinGraph::from_edges_with_nodes(None, edges)
+    }
+
+    /// `from_edges` with an explicit node list (the wire form's `nodes`
+    /// field): declared nodes that no edge touches are disconnected.
+    pub fn from_edges_with_nodes(
+        declared: Option<Vec<Relation>>,
+        edges: Vec<GraphEdge>,
+    ) -> Result<JoinGraph, GraphError> {
+        if edges.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        let mut canon: Vec<GraphEdge> = Vec::with_capacity(edges.len());
+        // union-find over the 5 relations, indexed by canonical order
+        let mut parent: [usize; 5] = [0, 1, 2, 3, 4];
+        fn find(parent: &mut [usize; 5], mut i: usize) -> usize {
+            while parent[i] != i {
+                parent[i] = parent[parent[i]];
+                i = parent[i];
+            }
+            i
+        }
+        for e in edges {
+            if e.a == e.b {
+                return Err(GraphError::SelfEdge(format!("{}-{}", e.a.name(), e.b.name())));
+            }
+            let e = GraphEdge::new(e.a, e.b, e.key);
+            if !relation_keys(e.a).contains(&e.key) || !relation_keys(e.b).contains(&e.key) {
+                return Err(GraphError::KeyMismatch { edge: e.label() });
+            }
+            if canon.iter().any(|c| c.a == e.a && c.b == e.b) {
+                return Err(GraphError::DuplicateEdge { edge: e.label() });
+            }
+            let (ra, rb) = (
+                find(&mut parent, relation_order(e.a) as usize),
+                find(&mut parent, relation_order(e.b) as usize),
+            );
+            if ra == rb {
+                return Err(GraphError::Cycle { edge: e.label() });
+            }
+            parent[ra] = rb;
+            canon.push(e);
+        }
+        let mut touched = [false; 5];
+        for e in &canon {
+            touched[relation_order(e.a) as usize] = true;
+            touched[relation_order(e.b) as usize] = true;
+        }
+        if !touched[0] {
+            return Err(GraphError::MissingFact);
+        }
+        if let Some(decl) = declared {
+            for r in decl {
+                if !touched[relation_order(r) as usize] {
+                    return Err(GraphError::Disconnected { node: r.name().into() });
+                }
+            }
+        }
+        // a forest with E edges spans E+1 nodes; fewer touched nodes in
+        // one component means a second component exists
+        let root0 = find(&mut parent, 0);
+        for (i, &t) in touched.iter().enumerate() {
+            if t && find(&mut parent, i) != root0 {
+                return Err(GraphError::Disconnected {
+                    node: ALL_RELATIONS[i].name().into(),
+                });
+            }
+        }
+        Ok(JoinGraph { edges: canon })
+    }
+
+    /// Parse the compact CLI form: comma-separated `a-b` or `a-b:key`
+    /// edges, e.g. `lineitem-orders,orders-customer:custkey`.  The key
+    /// is inferred when omitted (every TPC-H pair shares at most one).
+    pub fn parse_compact(s: &str) -> Result<JoinGraph, GraphError> {
+        let mut edges = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            edges.push(parse_edge_token(tok)?);
+        }
+        JoinGraph::from_edges(edges)
+    }
+
+    pub fn edges(&self) -> &[GraphEdge] {
+        &self.edges
+    }
+
+    /// All relations, fact first, canonical order.
+    pub fn nodes(&self) -> Vec<Relation> {
+        let mut out: Vec<Relation> = ALL_RELATIONS
+            .iter()
+            .copied()
+            .filter(|r| {
+                self.edges.iter().any(|e| e.a == *r || e.b == *r)
+            })
+            .collect();
+        out.sort_by_key(|r| relation_order(*r));
+        out
+    }
+
+    /// The non-fact relations in canonical order — what `PlanSpec.dims`
+    /// carries for a graph spec (table generation gates on it).
+    pub fn dims(&self) -> Vec<Relation> {
+        self.nodes().into_iter().filter(|r| *r != Relation::Lineitem).collect()
+    }
+
+    /// Canonical `(a, b, key)` tag triples, sorted — the fingerprint
+    /// payload.  Two graphs denote the same query iff these are equal,
+    /// however their edges were spelled or ordered.
+    pub fn canonical_tags(&self) -> Vec<(u64, u64, u64)> {
+        let mut tags: Vec<(u64, u64, u64)> = self
+            .edges
+            .iter()
+            .map(|e| (relation_order(e.a) as u64, relation_order(e.b) as u64, e.key.tag()))
+            .collect();
+        tags.sort_unstable();
+        tags
+    }
+
+    /// Root at LINEITEM and emit the tree in deterministic pre-order.
+    pub fn tree(&self) -> JoinTree {
+        let mut nodes = Vec::new();
+        let mut stack: Vec<(Relation, usize)> = vec![(Relation::Lineitem, 0)];
+        let mut visited = [false; 5];
+        visited[0] = true;
+        while let Some((at, depth)) = stack.pop() {
+            // neighbours in reverse canonical order so the stack pops
+            // them in canonical order
+            let mut nbrs: Vec<(Relation, JoinKey)> = self
+                .edges
+                .iter()
+                .filter_map(|e| {
+                    if e.a == at {
+                        Some((e.b, e.key))
+                    } else if e.b == at {
+                        Some((e.a, e.key))
+                    } else {
+                        None
+                    }
+                })
+                .filter(|(r, _)| !visited[relation_order(*r) as usize])
+                .collect();
+            nbrs.sort_by_key(|(r, _)| std::cmp::Reverse(relation_order(*r)));
+            for (r, key) in nbrs {
+                visited[relation_order(r) as usize] = true;
+                stack.push((r, depth + 1));
+                // pre-order position: record now, in push order reversed
+                // below
+                nodes.push(TreeNode { relation: r, parent: at, key, depth: depth + 1 });
+            }
+        }
+        // `nodes` is in discovery order of a DFS that pushes children in
+        // reverse canonical order; re-walk to true pre-order
+        let mut ordered: Vec<TreeNode> = Vec::with_capacity(nodes.len());
+        fn emit(nodes: &[TreeNode], at: Relation, ordered: &mut Vec<TreeNode>) {
+            let mut kids: Vec<&TreeNode> = nodes.iter().filter(|n| n.parent == at).collect();
+            kids.sort_by_key(|n| relation_order(n.relation));
+            for k in kids {
+                ordered.push(*k);
+                emit(nodes, k.relation, ordered);
+            }
+        }
+        emit(&nodes, Relation::Lineitem, &mut ordered);
+        JoinTree { nodes: ordered }
+    }
+
+    /// Detect graphs isomorphic to the legacy star/snowflake shape.
+    pub fn classify(&self) -> GraphShape {
+        let star_edge = |e: &GraphEdge| {
+            matches!(
+                (e.a, e.b, e.key),
+                (Relation::Lineitem, Relation::Orders, JoinKey::OrderKey)
+                    | (Relation::Lineitem, Relation::Part, JoinKey::PartKey)
+                    | (Relation::Lineitem, Relation::Supplier, JoinKey::SuppKey)
+                    | (Relation::Orders, Relation::Customer, JoinKey::CustKey)
+            )
+        };
+        if self.edges.iter().all(star_edge) {
+            GraphShape::Star(self.dims())
+        } else {
+            GraphShape::General
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.edges.iter().map(|e| e.label()).collect::<Vec<_>>().join(",")
+    }
+}
+
+impl fmt::Display for JoinGraph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+const ALL_RELATIONS: [Relation; 5] = [
+    Relation::Lineitem,
+    Relation::Orders,
+    Relation::Customer,
+    Relation::Part,
+    Relation::Supplier,
+];
+
+fn parse_edge_token(tok: &str) -> Result<GraphEdge, GraphError> {
+    let (pair, key) = match tok.split_once(':') {
+        Some((p, k)) => (p, Some(k)),
+        None => (tok, None),
+    };
+    let (a, b) = pair
+        .split_once('-')
+        .ok_or_else(|| GraphError::Malformed(tok.into()))?;
+    let ra = Relation::parse(a.trim()).ok_or_else(|| GraphError::UnknownRelation(a.trim().into()))?;
+    let rb = Relation::parse(b.trim()).ok_or_else(|| GraphError::UnknownRelation(b.trim().into()))?;
+    let k = match key {
+        Some(k) => JoinKey::parse(k).ok_or_else(|| GraphError::UnknownKey(k.trim().into()))?,
+        None => shared_key(ra, rb).ok_or_else(|| GraphError::KeyMismatch {
+            edge: format!("{}-{}", ra.name(), rb.name()),
+        })?,
+    };
+    Ok(GraphEdge::new(ra, rb, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snowflake_with_tail() -> JoinGraph {
+        // L-O-C with a C-S nation tail plus a PART branch off the fact
+        JoinGraph::parse_compact("lineitem-orders,orders-customer,customer-supplier,lineitem-part")
+            .unwrap()
+    }
+
+    #[test]
+    fn star_and_chain_builders_classify_as_star() {
+        let g = JoinGraph::star(&[Relation::Orders, Relation::Customer, Relation::Part]).unwrap();
+        assert_eq!(
+            g.classify(),
+            GraphShape::Star(vec![Relation::Orders, Relation::Customer, Relation::Part])
+        );
+        assert_eq!(JoinGraph::chain().classify(), GraphShape::Star(vec![
+            Relation::Orders,
+            Relation::Customer
+        ]));
+    }
+
+    #[test]
+    fn key_inference_fills_the_unique_shared_key() {
+        let g = JoinGraph::parse_compact("lineitem-orders,customer-orders").unwrap();
+        assert!(g.edges().iter().any(|e| e.key == JoinKey::OrderKey));
+        assert!(g.edges().iter().any(|e| e.key == JoinKey::CustKey));
+        // endpoint order is canonicalised
+        assert_eq!(g.edges()[1].a, Relation::Orders);
+    }
+
+    #[test]
+    fn tail_shape_is_general_and_trees_in_preorder() {
+        let g = snowflake_with_tail();
+        assert_eq!(g.classify(), GraphShape::General);
+        let t = g.tree();
+        let rels: Vec<Relation> = t.nodes.iter().map(|n| n.relation).collect();
+        assert_eq!(
+            rels,
+            vec![Relation::Orders, Relation::Customer, Relation::Supplier, Relation::Part]
+        );
+        let supp = t.node(Relation::Supplier).unwrap();
+        assert_eq!(supp.parent, Relation::Customer);
+        assert_eq!(supp.key, JoinKey::NationKey);
+        assert_eq!(supp.depth, 3);
+        assert!(t.is_internal_parent(Relation::Customer));
+        assert!(!t.is_internal_parent(Relation::Part));
+    }
+
+    #[test]
+    fn validation_names_the_offending_edge() {
+        // cycle: customer-supplier closes lineitem→orders→customer /
+        // lineitem→supplier
+        let err = JoinGraph::parse_compact(
+            "lineitem-orders,orders-customer,lineitem-supplier,customer-supplier",
+        )
+        .unwrap_err();
+        assert_eq!(err, GraphError::Cycle { edge: "customer-supplier:nationkey".into() });
+        assert!(err.to_string().contains("customer-supplier:nationkey"));
+
+        let err = JoinGraph::parse_compact("lineitem-orders,lineitem-orders").unwrap_err();
+        assert!(matches!(err, GraphError::DuplicateEdge { .. }));
+
+        let err = JoinGraph::parse_compact("orders-customer").unwrap_err();
+        assert_eq!(err, GraphError::MissingFact);
+
+        let err = JoinGraph::parse_compact("lineitem-customer").unwrap_err();
+        assert!(matches!(err, GraphError::KeyMismatch { .. }));
+
+        let err = JoinGraph::parse_compact("lineitem-orders:partkey").unwrap_err();
+        assert!(matches!(err, GraphError::KeyMismatch { .. }));
+
+        let err = JoinGraph::parse_compact("lineitem-ordersz").unwrap_err();
+        assert_eq!(err, GraphError::UnknownRelation("ordersz".into()));
+
+        let err = JoinGraph::parse_compact("lineitem-orders:zzz").unwrap_err();
+        assert_eq!(err, GraphError::UnknownKey("zzz".into()));
+
+        let err = JoinGraph::from_edges_with_nodes(
+            Some(vec![Relation::Lineitem, Relation::Orders, Relation::Part]),
+            vec![GraphEdge::new(Relation::Lineitem, Relation::Orders, JoinKey::OrderKey)],
+        )
+        .unwrap_err();
+        assert_eq!(err, GraphError::Disconnected { node: "part".into() });
+    }
+
+    #[test]
+    fn canonical_tags_ignore_spelling_and_order() {
+        let a = JoinGraph::parse_compact("lineitem-part,orders-lineitem:orderkey").unwrap();
+        let b = JoinGraph::parse_compact("lineitem-orders,part-lineitem").unwrap();
+        assert_eq!(a.canonical_tags(), b.canonical_tags());
+        let c = JoinGraph::parse_compact("lineitem-orders,lineitem-supplier").unwrap();
+        assert_ne!(a.canonical_tags(), c.canonical_tags());
+    }
+}

@@ -62,6 +62,7 @@ pub mod catalog;
 pub mod costing;
 pub mod executor;
 pub mod fingerprint;
+pub mod graph;
 pub mod report;
 
 pub use adaptive::{
@@ -70,19 +71,26 @@ pub use adaptive::{
     ReplanTrigger, ResizeEvent, DEFAULT_ROW_FLOOR, REGRET_MARGIN, RESIZE_RATIO,
 };
 pub use catalog::{
-    chain_edge_stats, prepare, star_dim_stats, DimStats, EdgeStats, FactRow, PlanInputs, Relation,
+    chain_edge_stats, graph_build_row_bytes, graph_edge_infos, prepare, star_dim_stats, DimStats,
+    EdgeStats, FactRow, GraphEdgeInfo, PlanInputs, Relation,
 };
 pub use costing::{
     cost_fingerprint, degrade_broadcast_price, derive_edge_stats, discount_cached_builds,
-    discount_fused_probes, plan_edges, plan_edges_calibrated, price_edges_with, rank_dims,
-    retry_build_price, retry_ship_price, shard_rebuild_price, speculative_rerun_price,
-    star_edge_stats, CostCalibration, EdgePrediction, StrategyCost,
+    discount_fused_probes, discount_fused_probes_graph, graph_edges_for_order, plan_edges,
+    plan_edges_calibrated, plan_graph_edges_greedy, plan_graph_edges_with, plan_graph_order,
+    plan_graph_order_greedy, price_edges_with, rank_dims, reduction_price, retry_build_price,
+    retry_ship_price, shard_rebuild_price, speculative_rerun_price, star_edge_stats,
+    CostCalibration, EdgePrediction, StrategyCost,
 };
 pub use executor::{
-    execute, execute_with, execute_with_filters, nested_loop_oracle, EdgeReport, FilterSource,
-    PlanOutput, PlanRow, StreamIdx,
+    execute, execute_with, execute_with_filters, graph_filter_allowlist, graph_oracle,
+    nested_loop_oracle, EdgeReport, FilterSource, PlanOutput, PlanRow, StreamIdx,
 };
 pub use fingerprint::{catalog_fingerprint, filter_context_fingerprint, spec_fingerprint};
+pub use graph::{
+    relation_keys, shared_key, GraphEdge, GraphError, GraphShape, JoinGraph, JoinKey, JoinTree,
+    TreeNode,
+};
 pub use report::plan_report_json;
 
 use crate::tpch::ORDERDATE_RANGE_DAYS;
@@ -95,6 +103,12 @@ pub enum Topology {
     /// `LINEITEM ⋈ (ORDERS ⋈ CUSTOMER)` — dimension reduction first
     /// (3-relation trees only).
     Chain,
+    /// An arbitrary acyclic join graph ([`PlanSpec::graph`]): a bloom
+    /// full reducer sweeps the rooted join tree bottom-up, then a
+    /// root-first join sweep over the fact stream realises the top-down
+    /// pass.  Graphs isomorphic to the star shape classify back to
+    /// [`Topology::Star`] so legacy ledgers and cache keys are kept.
+    Graph,
 }
 
 impl Topology {
@@ -102,6 +116,7 @@ impl Topology {
         match self {
             Topology::Star => "star",
             Topology::Chain => "chain",
+            Topology::Graph => "graph",
         }
     }
 
@@ -109,6 +124,7 @@ impl Topology {
         match s {
             "star" => Some(Topology::Star),
             "chain" => Some(Topology::Chain),
+            "graph" => Some(Topology::Graph),
             _ => None,
         }
     }
@@ -224,7 +240,15 @@ pub struct PlanSpec {
     /// Dimensions joined to the LINEITEM fact.  The listed order is the
     /// unranked probe order; [`PushdownMode::Ranked`] reorders it.
     /// CUSTOMER requires ORDERS in the set (snowflake dependency).
+    /// For graph specs this mirrors the graph's non-fact nodes in
+    /// canonical order (table generation gates on it).
     pub dims: Vec<Relation>,
+    /// The typed join graph this spec denotes.  `None` means "derive
+    /// from the legacy `topology` + `dims` shims" — [`Topology::Star`]
+    /// and [`Topology::Chain`] are now thin constructors over
+    /// [`JoinGraph::star`] / [`JoinGraph::chain`]; see
+    /// [`PlanSpec::effective_graph`].  Required for [`Topology::Graph`].
+    pub graph: Option<JoinGraph>,
     /// cond on ORDERS: keep `o_orderdate ∈ [lo, hi)`.
     pub order_date_window: (i32, i32),
     /// cond on LINEITEM: keep `l_shipdate < max`.
@@ -270,6 +294,7 @@ impl Default for PlanSpec {
             partitions: 8,
             topology: Topology::Star,
             dims: vec![Relation::Orders, Relation::Customer],
+            graph: None,
             // ~10 % of the order-date range, like the paper's query
             order_date_window: (400, 400 + ORDERDATE_RANGE_DAYS / 10),
             ship_date_max: ORDERDATE_RANGE_DAYS + 121,
@@ -284,6 +309,22 @@ impl Default for PlanSpec {
             probe: ProbeMode::Edge,
             probe_path: ProbePathChoice::Native,
             faults: None,
+        }
+    }
+}
+
+impl PlanSpec {
+    /// The [`JoinGraph`] this spec denotes.  An explicit `graph` field
+    /// wins; the legacy `topology` + `dims` shims derive theirs from the
+    /// typed builders, so every spec — however it was written — has one
+    /// canonical graph (which is what [`spec_fingerprint`] hashes).
+    pub fn effective_graph(&self) -> Result<JoinGraph, GraphError> {
+        if let Some(g) = &self.graph {
+            return Ok(g.clone());
+        }
+        match self.topology {
+            Topology::Chain => Ok(JoinGraph::chain()),
+            Topology::Star | Topology::Graph => JoinGraph::star(&self.dims),
         }
     }
 }
@@ -459,7 +500,7 @@ mod tests {
 
     #[test]
     fn topology_parse_roundtrips() {
-        for t in [Topology::Star, Topology::Chain] {
+        for t in [Topology::Star, Topology::Chain, Topology::Graph] {
             assert_eq!(Topology::parse(t.name()), Some(t));
         }
         assert_eq!(Topology::parse("snowflake"), None);

@@ -5,7 +5,7 @@
 //! cross-checks the ledger in this payload against the metrics ledger,
 //! so the server must not invent its own envelope — it wraps this one.
 
-use super::{CostCalibration, EdgeReport, JoinPlan, PlanOutput, PlanSpec, PlannedEdge};
+use super::{CostCalibration, EdgeReport, JoinPlan, PlanOutput, PlanSpec, PlannedEdge, Topology};
 use crate::util::Json;
 
 fn planned_edge_json(e: &PlannedEdge) -> Json {
@@ -46,7 +46,7 @@ pub fn plan_report_json(
     out: Option<&PlanOutput>,
 ) -> Json {
     let dims: Vec<Json> = spec.dims.iter().map(|r| Json::str(r.name())).collect();
-    let spec_json = Json::obj([
+    let mut spec_fields = vec![
         ("topology", Json::str(spec.topology.name())),
         ("pushdown", Json::str(spec.pushdown.name())),
         ("replan", Json::str(spec.replan.name())),
@@ -54,7 +54,15 @@ pub fn plan_report_json(
         ("sf", Json::num(spec.sf)),
         ("partitions", Json::num(spec.partitions as f64)),
         ("dims", Json::Arr(dims)),
-    ]);
+    ];
+    // only graph specs carry the edge list, so legacy star/chain
+    // payloads stay byte-identical to the pre-graph shape
+    if matches!(spec.topology, Topology::Graph) {
+        if let Ok(g) = spec.effective_graph() {
+            spec_fields.push(("graph", Json::str(g.label())));
+        }
+    }
+    let spec_json = Json::obj(spec_fields);
     let edges: Vec<Json> = join_plan.edges.iter().map(planned_edge_json).collect();
     let mut calib_fields = vec![("samples", Json::num(calibration.samples.len() as f64))];
     if let Some((alpha, beta)) = calibration.factors() {

@@ -13,8 +13,8 @@
 
 use crate::cluster::FaultPlan;
 use crate::plan::{
-    EpsMode, PlanSpec, ProbeMode, ProbePathChoice, PushdownMode, Relation, ReplanPolicy,
-    StrategyKind, Topology,
+    EpsMode, GraphShape, JoinGraph, PlanSpec, ProbeMode, ProbePathChoice, PushdownMode, Relation,
+    ReplanPolicy, StrategyKind, Topology,
 };
 use crate::util::Json;
 
@@ -175,18 +175,101 @@ fn parse_relations(j: &Json) -> Result<Vec<Relation>, String> {
     Ok(dims)
 }
 
-fn spec_from(j: &Json) -> Result<PlanSpec, String> {
-    let dims = parse_relations(j)?;
-    let t = get_str(j, "topology")?.unwrap_or("star");
-    let topology =
-        Topology::parse(t).ok_or_else(|| format!("unknown topology {t:?} (star|chain)"))?;
-    if topology == Topology::Chain
-        && !(dims.len() == 2
-            && dims.contains(&Relation::Orders)
-            && dims.contains(&Relation::Customer))
-    {
-        return Err("topology chain supports exactly customer,orders,lineitem".into());
+/// Parse the `graph` field: either the CLI's compact string
+/// (`"lineitem-orders,orders-customer"`) or a `{nodes, edges}` object
+/// whose edges are `"a-b:key"` strings or `{a, b, key}` objects.
+/// Mutually exclusive with the legacy `relations`/`topology` fields.
+/// Every [`crate::plan::GraphError`] surfaces as a typed `bad_request`
+/// naming the offending edge.
+fn parse_graph(j: &Json) -> Result<Option<JoinGraph>, String> {
+    let g = match j.get("graph") {
+        None | Some(Json::Null) => return Ok(None),
+        Some(g) => g,
+    };
+    if j.get("relations").is_some() || j.get("topology").is_some() {
+        return Err("graph replaces relations/topology; pass one form, not both".into());
     }
+    let compact = match g {
+        Json::Str(s) => s.clone(),
+        Json::Obj(_) => {
+            let edges = match g.get("edges") {
+                Some(Json::Arr(a)) => a,
+                _ => return Err("graph.edges must be an array".into()),
+            };
+            let mut toks: Vec<String> = Vec::new();
+            for e in edges {
+                let tok = match e {
+                    Json::Str(s) => s.clone(),
+                    Json::Obj(_) => {
+                        let a = get_str(e, "a")?.ok_or("graph edge object needs \"a\"")?;
+                        let b = get_str(e, "b")?.ok_or("graph edge object needs \"b\"")?;
+                        match get_str(e, "key")? {
+                            Some(k) => format!("{a}-{b}:{k}"),
+                            None => format!("{a}-{b}"),
+                        }
+                    }
+                    _ => {
+                        return Err(
+                            "graph edges must be \"a-b:key\" strings or {a,b,key} objects".into()
+                        )
+                    }
+                };
+                toks.push(tok);
+            }
+            toks.join(",")
+        }
+        _ => return Err("graph must be a compact string or a {nodes, edges} object".into()),
+    };
+    let graph = JoinGraph::parse_compact(&compact).map_err(|e| format!("graph: {e}"))?;
+    // `nodes` is optional (derivable from the edges) but when present it
+    // must agree with them — a typo'd node list is a bad request, not
+    // something to silently ignore
+    if let Some(Json::Arr(nodes)) = g.get("nodes") {
+        let mut want: Vec<Relation> = Vec::new();
+        for n in nodes {
+            let name = n.as_str().ok_or("graph.nodes must hold relation name strings")?;
+            let rel = Relation::parse(name)
+                .ok_or_else(|| format!("unknown relation {name:?} in graph.nodes"))?;
+            if !want.contains(&rel) {
+                want.push(rel);
+            }
+        }
+        let have = graph.nodes();
+        if want.len() != have.len() || want.iter().any(|r| !have.contains(r)) {
+            return Err("graph.nodes must list exactly the relations the edges touch".into());
+        }
+    }
+    Ok(Some(graph))
+}
+
+fn spec_from(j: &Json) -> Result<PlanSpec, String> {
+    // the `graph` field is the general form; `relations` + `topology`
+    // are shims over it.  Star-isomorphic graphs classify back to
+    // `Topology::Star`, so a graph-form request and the legacy form that
+    // denotes the same join hit the same plan/filter cache slots.
+    let (topology, dims, graph) = match parse_graph(j)? {
+        Some(g) => match g.classify() {
+            GraphShape::Star(dims) => (Topology::Star, dims, None),
+            GraphShape::General => (Topology::Graph, g.dims(), Some(g)),
+        },
+        None => {
+            let dims = parse_relations(j)?;
+            let t = get_str(j, "topology")?.unwrap_or("star");
+            let topology = Topology::parse(t)
+                .ok_or_else(|| format!("unknown topology {t:?} (star|chain|graph)"))?;
+            if topology == Topology::Graph {
+                return Err("topology graph needs the edge list — pass the graph field".into());
+            }
+            if topology == Topology::Chain
+                && !(dims.len() == 2
+                    && dims.contains(&Relation::Orders)
+                    && dims.contains(&Relation::Customer))
+            {
+                return Err("topology chain supports exactly customer,orders,lineitem".into());
+            }
+            (topology, dims, None)
+        }
+    };
     let eps_mode = match get_str(j, "eps_mode")?.unwrap_or("per-filter") {
         "per-filter" => EpsMode::PerFilter,
         "global" => EpsMode::Global(get_f64(j, "eps")?.unwrap_or(0.05)),
@@ -214,6 +297,7 @@ fn spec_from(j: &Json) -> Result<PlanSpec, String> {
     let mut spec = PlanSpec {
         topology,
         dims,
+        graph,
         eps_mode,
         pushdown,
         replan,
@@ -408,6 +492,85 @@ mod tests {
             (r#"{"op":"plan","relations":"lineitem,orders","probe_path":"xla"}"#, "probe_path"),
             (r#"{"op":"teleport"}"#, "unknown op"),
             (r#"not json"#, "parse error"),
+        ] {
+            let err = parse_request(line).expect_err(line);
+            assert!(err.message.contains(needle), "{line} -> {}", err.message);
+        }
+    }
+
+    #[test]
+    fn graph_field_accepts_both_wire_forms_and_classifies_star() {
+        use crate::plan::spec_fingerprint;
+        // a star-isomorphic graph classifies back to the legacy star
+        // spec — same fingerprint, same cache slots, either wire form
+        let legacy = parse_request(
+            r#"{"op":"plan","relations":"lineitem,orders,customer","topology":"star"}"#,
+        )
+        .expect("parses");
+        let Request::Plan(legacy) = legacy.req else { panic!() };
+        for line in [
+            r#"{"op":"plan","graph":"lineitem-orders,orders-customer"}"#,
+            r#"{"op":"plan","graph":{"nodes":["lineitem","orders","customer"],
+                "edges":["lineitem-orders","orders-customer"]}}"#,
+            r#"{"op":"plan","graph":{"edges":[{"a":"lineitem","b":"orders"},
+                {"a":"orders","b":"customer","key":"custkey"}]}}"#,
+        ] {
+            let p = parse_request(line).expect(line);
+            let Request::Plan(req) = p.req else { panic!() };
+            assert_eq!(req.spec.topology, Topology::Star, "{line}");
+            assert!(req.spec.graph.is_none(), "{line}");
+            assert_eq!(
+                spec_fingerprint(&req.spec),
+                spec_fingerprint(&legacy.spec),
+                "{line}"
+            );
+        }
+        // a non-star shape runs the full reducer
+        let p = parse_request(
+            r#"{"op":"plan","graph":"lineitem-orders,orders-customer,customer-supplier"}"#,
+        )
+        .expect("parses");
+        let Request::Plan(req) = p.req else { panic!() };
+        assert_eq!(req.spec.topology, Topology::Graph);
+        assert!(req.spec.graph.is_some());
+        assert_eq!(req.spec.dims.len(), 3);
+    }
+
+    #[test]
+    fn graph_field_errors_are_typed_bad_requests() {
+        for (line, needle) in [
+            // mutual exclusion with the legacy shims
+            (
+                r#"{"op":"plan","graph":"lineitem-orders","relations":"lineitem,orders"}"#,
+                "one form",
+            ),
+            (r#"{"op":"plan","graph":"lineitem-orders","topology":"star"}"#, "one form"),
+            // every GraphError names the offending edge or token
+            (
+                r#"{"op":"plan","graph":"lineitem-orders,orders-lineitem"}"#,
+                "duplicate edge",
+            ),
+            (
+                r#"{"op":"plan","graph":"lineitem-orders,orders-customer,customer-supplier,supplier-lineitem"}"#,
+                "cycle",
+            ),
+            (
+                r#"{"op":"plan","graph":"lineitem-orders,customer-supplier"}"#,
+                "disconnected",
+            ),
+            (r#"{"op":"plan","graph":"lineitem-warehouse"}"#, "unknown relation"),
+            (r#"{"op":"plan","graph":"lineitem-part:suppkey"}"#, "key"),
+            // malformed object forms
+            (r#"{"op":"plan","graph":{"edges":"lineitem-orders"}}"#, "array"),
+            (r#"{"op":"plan","graph":{"edges":[{"a":"lineitem"}]}}"#, "\"b\""),
+            (
+                r#"{"op":"plan","graph":{"nodes":["lineitem","orders","part"],
+                    "edges":["lineitem-orders"]}}"#,
+                "exactly",
+            ),
+            (r#"{"op":"plan","graph":7}"#, "compact string"),
+            // topology graph without the edge list
+            (r#"{"op":"plan","topology":"graph"}"#, "graph field"),
         ] {
             let err = parse_request(line).expect_err(line);
             assert!(err.message.contains(needle), "{line} -> {}", err.message);

@@ -24,8 +24,9 @@ use crate::cluster::{Cluster, ClusterConfig};
 use crate::plan::fingerprint::Fnv;
 use crate::plan::{
     catalog_fingerprint, cost_fingerprint, discount_cached_builds, execute_with_filters,
-    filter_context_fingerprint, plan_report_json, plan_edges_calibrated, spec_fingerprint,
-    CostCalibration, EdgeStrategy, FilterSource, PlanInputs, PlanOutput, PlanSpec, Relation,
+    filter_context_fingerprint, graph_filter_allowlist, plan_report_json, plan_edges_calibrated,
+    spec_fingerprint, CostCalibration, EdgeStrategy, FilterSource, PlanInputs, PlanOutput,
+    PlanSpec, Relation,
 };
 use crate::util::Json;
 
@@ -269,11 +270,23 @@ impl Engine {
                 e.strategy = EdgeStrategy::for_kind(kind, e.prediction.eps_star);
             }
         }
+        // graph plans only touch the filter cache for relations whose
+        // build side matches the canonical star one (the executor gates
+        // the rest), so only those may be priced as cache hits
+        let cacheable: Option<Vec<Relation>> = match spec.effective_graph() {
+            Ok(g) if matches!(spec.topology, crate::plan::Topology::Graph) => {
+                Some(graph_filter_allowlist(&g.tree()))
+            }
+            _ => None,
+        };
         let discounted = discount_cached_builds(
             self.cluster.config(),
             factors,
             &mut plan,
-            &|rel, eps| self.filters.contains(rel, filter_context_fingerprint(spec, rel), eps),
+            &|rel, eps| {
+                cacheable.as_ref().map_or(true, |allow| allow.contains(&rel))
+                    && self.filters.contains(rel, filter_context_fingerprint(spec, rel), eps)
+            },
         );
 
         let qf = QueryFilters {

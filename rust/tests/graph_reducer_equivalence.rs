@@ -1,0 +1,337 @@
+//! Bloom full-reducer equivalence properties: a `Topology::Graph` plan
+//! — bottom-up semi-join sweep of bloom/exact reduction messages, then
+//! the root-first stream sweep — returns exactly the rows of the n-way
+//! nested-loop oracle walked over the same rooted join tree.  Checked
+//! across three acyclic non-star, non-chain shapes (a snowflake with a
+//! tail, a nation-rekeyed branch, and a three-deep chain under the
+//! fact), sampled strategy assignments covering all five kinds, both
+//! probe modes, every named fault profile, and every re-plan policy.
+//! Bloom reduction messages keep false positives in the parent tables;
+//! the exact stream joins remove them, which is what these properties
+//! pin down.
+//!
+//! Also regression-checked: the legacy star/chain spellings still run
+//! unchanged, and a star graph classifies back to the legacy star spec
+//! (same rows, same ledger stage names).
+
+use bloomjoin::cluster::{Cluster, ClusterConfig, FaultPlan};
+use bloomjoin::dataset::PartitionedTable;
+use bloomjoin::plan::{
+    execute, graph_oracle, plan_edges, prepare, EdgeStrategy, FactRow, GraphShape, JoinGraph,
+    JoinPlan, PlanInputs, PlanOutput, PlanSpec, PlannedEdge, ProbeMode, Relation, ReplanPolicy,
+    Topology,
+};
+use bloomjoin::testkit::{check, Gen};
+
+struct WideCase {
+    customer: Vec<(u64, i32)>,
+    orders: Vec<(u64, u64, i32)>,
+    lineitem: Vec<FactRow>,
+    part: Vec<(u64, i32)>,
+    supplier: Vec<(u64, i32)>,
+}
+
+fn gen_wide(g: &mut Gen) -> WideCase {
+    let cust_space = 1 + g.u64_below(40);
+    let order_space = 1 + g.u64_below(120);
+    let part_space = 1 + g.u64_below(30);
+    let supp_space = 1 + g.u64_below(12);
+    WideCase {
+        customer: (0..g.size)
+            .map(|_| (g.rng.below(cust_space), g.rng.next_u32() as i32 % 25))
+            .collect(),
+        orders: (0..g.size * 2)
+            .map(|_| {
+                (g.rng.below(order_space), g.rng.below(cust_space), g.rng.below(2_000) as i32)
+            })
+            .collect(),
+        lineitem: (0..g.size * 5)
+            .map(|_| FactRow {
+                orderkey: g.rng.below(order_space),
+                partkey: g.rng.below(part_space),
+                suppkey: g.rng.below(supp_space),
+                price_cents: g.rng.next_u64() as i64,
+            })
+            .collect(),
+        part: (0..g.size)
+            .map(|_| (g.rng.below(part_space), g.rng.next_u32() as i32 % 7))
+            .collect(),
+        // nationkeys overlap CUSTOMER's 0..25 range so the nation-keyed
+        // edges genuinely fan out
+        supplier: (0..g.size)
+            .map(|_| (g.rng.below(supp_space), g.rng.next_u32() as i32 % 5))
+            .collect(),
+    }
+}
+
+fn wide_inputs(case: &WideCase) -> PlanInputs {
+    PlanInputs {
+        customer: PartitionedTable::from_rows(case.customer.clone(), 3),
+        orders: PartitionedTable::from_rows(case.orders.clone(), 4),
+        lineitem: PartitionedTable::from_rows(case.lineitem.clone(), 5),
+        part: PartitionedTable::from_rows(case.part.clone(), 2),
+        supplier: PartitionedTable::from_rows(case.supplier.clone(), 2),
+    }
+}
+
+/// Three acyclic shapes that are neither the star nor the 3-relation
+/// chain, exercising every `(relation, key)` executor variant: CUSTOMER
+/// under ORDERS and under SUPPLIER, SUPPLIER under CUSTOMER, and ORDERS
+/// re-keyed under CUSTOMER.
+const SHAPES: [&str; 3] = [
+    // snowflake with a tail: L–O–C–S(nationkey) plus a PART branch
+    "lineitem-orders,orders-customer,customer-supplier,lineitem-part",
+    // SUPPLIER off the fact, CUSTOMER nation-rekeyed beneath it
+    "lineitem-orders,lineitem-supplier,supplier-customer,lineitem-part",
+    // three-deep: S–C by nation, then ORDERS by customer
+    "lineitem-part,lineitem-supplier,supplier-customer,customer-orders",
+];
+
+/// Force one strategy per tree edge, in the tree's pre-order (the order
+/// the planner itself emits — a parent's payload column must be on the
+/// stream before a child's edge probes it).
+fn forced_graph_plan(graph: &JoinGraph, strats: &[EdgeStrategy; 4]) -> JoinPlan {
+    let tree = graph.tree();
+    JoinPlan {
+        topology: Topology::Graph,
+        edges: tree
+            .nodes
+            .iter()
+            .zip(strats)
+            .enumerate()
+            .map(|(i, (n, s))| {
+                PlannedEdge::forced(n.relation, format!("e{}", i + 1), s.clone())
+            })
+            .collect(),
+        dim_stats: Vec::new(),
+    }
+}
+
+fn graph_spec(graph: &JoinGraph) -> PlanSpec {
+    PlanSpec {
+        topology: Topology::Graph,
+        dims: graph.dims(),
+        graph: Some(graph.clone()),
+        partitions: 4,
+        ..Default::default()
+    }
+}
+
+fn sorted_rows(out: &PlanOutput) -> Vec<bloomjoin::plan::PlanRow> {
+    let mut rows = out.rows.clone();
+    rows.sort_unstable();
+    rows
+}
+
+/// Strategy assignments covering all five kinds: bloom and exact
+/// reduction messages, and mixed sweeps.
+fn assignments() -> Vec<[EdgeStrategy; 4]> {
+    let b = EdgeStrategy::Bloom { eps: 0.05 };
+    let p = EdgeStrategy::BloomPartitioned { eps: 0.05 };
+    let x = EdgeStrategy::BloomExchange { eps: 0.05 };
+    vec![
+        [b.clone(), b.clone(), b.clone(), b.clone()],
+        [p.clone(), p.clone(), p.clone(), p.clone()],
+        [b.clone(), EdgeStrategy::Broadcast, EdgeStrategy::SortMerge, b.clone()],
+        [EdgeStrategy::SortMerge, b.clone(), x, p],
+    ]
+}
+
+#[test]
+fn reducer_rows_match_the_oracle_across_shapes_and_strategies() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("graph reducer ≡ nested-loop oracle", 3, gen_wide, |case| {
+        for shape in SHAPES {
+            let graph = JoinGraph::parse_compact(shape).expect("the shapes are valid");
+            assert!(
+                matches!(graph.classify(), GraphShape::General),
+                "{shape} must exercise the reducer, not the star shim"
+            );
+            let want = graph_oracle(&wide_inputs(case), &graph.tree());
+            for strats in assignments() {
+                let label: Vec<String> = strats.iter().map(|s| s.label()).collect();
+                let plan = forced_graph_plan(&graph, &strats);
+                for probe in [ProbeMode::Edge, ProbeMode::Fused] {
+                    let spec = PlanSpec { probe, ..graph_spec(&graph) };
+                    let out = execute(&cluster, &spec, &plan, wide_inputs(case));
+                    if sorted_rows(&out) != want {
+                        return Err(format!(
+                            "{shape} / {probe:?} / {label:?}: rows diverge from the oracle"
+                        ));
+                    }
+                    if out.ledger.observations.len() != plan.edges.len() {
+                        return Err(format!(
+                            "{shape} / {probe:?} / {label:?}: {} observations for {} edges",
+                            out.ledger.observations.len(),
+                            plan.edges.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reducer_books_sweep_stages_for_every_internal_edge() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("reduction stages match the tree's internal edges", 3, gen_wide, |case| {
+        for shape in SHAPES {
+            let graph = JoinGraph::parse_compact(shape).expect("valid");
+            let tree = graph.tree();
+            let internal =
+                tree.nodes.iter().filter(|n| n.parent != Relation::Lineitem).count();
+            let b = EdgeStrategy::Bloom { eps: 0.05 };
+            let plan = forced_graph_plan(&graph, &[b.clone(), b.clone(), b.clone(), b]);
+            let out = execute(&cluster, &graph_spec(&graph), &plan, wide_inputs(case));
+            let builds = out
+                .metrics
+                .stages
+                .iter()
+                .filter(|s| s.name.ends_with("/reduce_build"))
+                .count();
+            if builds != internal {
+                return Err(format!(
+                    "{shape}: {builds} reduce_build stages for {internal} internal edges"
+                ));
+            }
+            // sweep work rides inside each owning edge's e{i}/ prefix,
+            // so the per-edge reports and the ledger stay consistent
+            for (i, r) in out.edge_reports.iter().enumerate() {
+                let slice = out.metrics.prefix_sim_s(&format!("e{}", i + 1));
+                if (slice - r.sim_s).abs() > 1e-9 {
+                    return Err(format!(
+                        "{shape}: edge {} report {} != merged slice {slice}",
+                        i + 1,
+                        r.sim_s
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reducer_recovers_bit_identical_under_every_fault_profile() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    check("graph × fault profiles ≡ fault-free", 3, gen_wide, |case| {
+        let b = EdgeStrategy::Bloom { eps: 0.05 };
+        let p = EdgeStrategy::BloomPartitioned { eps: 0.05 };
+        for shape in SHAPES {
+            let graph = JoinGraph::parse_compact(shape).expect("valid");
+            let plan =
+                forced_graph_plan(&graph, &[b.clone(), p.clone(), b.clone(), p.clone()]);
+            let clean = execute(&cluster, &graph_spec(&graph), &plan, wide_inputs(case));
+            let clean_rows = sorted_rows(&clean);
+            for profile in FaultPlan::PROFILES {
+                if profile == "none" {
+                    continue;
+                }
+                let fault_plan = FaultPlan::parse(profile).expect("named profile");
+                let faulted = PlanSpec {
+                    faults: (!fault_plan.is_empty()).then_some(fault_plan),
+                    ..graph_spec(&graph)
+                };
+                let out = execute(&cluster, &faulted, &plan, wide_inputs(case));
+                if sorted_rows(&out) != clean_rows {
+                    return Err(format!("{shape} / {profile}: recovery changed the rows"));
+                }
+                if out.injected_faults.len() != out.recovery.len() {
+                    return Err(format!(
+                        "{shape} / {profile}: {} faults but {} recoveries",
+                        out.injected_faults.len(),
+                        out.recovery.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Planned (not forced) graph edges through every re-plan policy: the
+/// mid-sweep cardinality and regret triggers may rewrite the tail's
+/// strategies and ε, never the rows.
+#[test]
+fn replan_policies_do_not_change_planned_graph_rows() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    for shape in SHAPES {
+        let graph = JoinGraph::parse_compact(shape).expect("valid");
+        let base = PlanSpec { sf: 0.005, ..graph_spec(&graph) };
+        let inputs = prepare(&base);
+        let want = graph_oracle(&inputs, &graph.tree());
+        let plan = plan_edges(&cluster, &base, &inputs);
+        assert_eq!(plan.edges.len(), 4, "{shape}");
+        for replan in [ReplanPolicy::Static, ReplanPolicy::Adaptive, ReplanPolicy::Regret] {
+            for probe in [ProbeMode::Edge, ProbeMode::Fused] {
+                let spec = PlanSpec { replan, probe, ..base.clone() };
+                let out = execute(&cluster, &spec, &plan, inputs.clone());
+                assert_eq!(
+                    sorted_rows(&out),
+                    want,
+                    "{shape} / {} / {probe:?}: rows diverge from the oracle",
+                    replan.name()
+                );
+            }
+        }
+    }
+}
+
+/// The legacy spellings are shims, not forks: a star graph classifies
+/// back to the very spec `--relations`/`--topology star` builds (same
+/// rows, same ledger stage names), and `--topology chain` still runs its
+/// own plan over what is — as a graph — the same join.
+#[test]
+fn legacy_spellings_are_unchanged_by_the_graph_front_door() {
+    let cluster = Cluster::new(ClusterConfig::local());
+    let legacy = PlanSpec {
+        sf: 0.005,
+        partitions: 4,
+        dims: vec![Relation::Orders, Relation::Customer, Relation::Part, Relation::Supplier],
+        ..Default::default()
+    };
+    let inputs = prepare(&legacy);
+    let plan = plan_edges(&cluster, &legacy, &inputs);
+    let star = execute(&cluster, &legacy, &plan, inputs.clone());
+
+    let graph = JoinGraph::star(&legacy.dims).expect("star dims are valid");
+    let GraphShape::Star(dims) = graph.classify() else {
+        panic!("the star builder must classify as the star shape");
+    };
+    let shimmed = PlanSpec { dims, ..legacy.clone() };
+    let plan2 = plan_edges(&cluster, &shimmed, &inputs);
+    let out = execute(&cluster, &shimmed, &plan2, inputs.clone());
+    assert_eq!(sorted_rows(&out), sorted_rows(&star), "star-as-graph changed the rows");
+    let names = |o: &PlanOutput| -> Vec<String> {
+        o.metrics.stages.iter().map(|s| s.name.clone()).collect()
+    };
+    assert_eq!(names(&out), names(&star), "star-as-graph changed the ledger stage names");
+
+    // the chain spelling still runs its dimension-reduction plan, and
+    // the same join spelled as a graph returns the same rows
+    let chain = PlanSpec {
+        topology: Topology::Chain,
+        dims: vec![Relation::Orders, Relation::Customer],
+        ..legacy.clone()
+    };
+    let chain_inputs = prepare(&chain);
+    let chain_plan = plan_edges(&cluster, &chain, &chain_inputs);
+    let chain_out = execute(&cluster, &chain, &chain_plan, chain_inputs.clone());
+    let chain_graph = JoinGraph::chain();
+    let as_graph = PlanSpec {
+        topology: Topology::Graph,
+        dims: chain_graph.dims(),
+        graph: Some(chain_graph.clone()),
+        ..chain.clone()
+    };
+    let g_plan = plan_edges(&cluster, &as_graph, &chain_inputs);
+    let g_out = execute(&cluster, &as_graph, &g_plan, chain_inputs.clone());
+    assert_eq!(
+        sorted_rows(&g_out),
+        sorted_rows(&chain_out),
+        "the chain join spelled as a graph changed the rows"
+    );
+    assert_eq!(sorted_rows(&g_out), graph_oracle(&chain_inputs, &chain_graph.tree()));
+}

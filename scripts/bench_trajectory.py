@@ -65,6 +65,15 @@ TRACKED = {
         "fused probe win ratio (edge/fused sim)",
         lambda p: p["edge_sim_s"] / max(p["fused_sim_s"], 1e-9),
     ),
+    # graph-planner win: the branched acyclic shape planned by the
+    # bottom-up enumeration vs the greedy-legacy order, both executed
+    # through the same bloom full reducer.  Both totals are simulated, so
+    # the ratio is exact; it falls when the joint strategy/ε/order choice
+    # stops paying for itself on non-star shapes
+    "fig14_graph": (
+        "graph planner win ratio (greedy/DP sim)",
+        lambda p: p["greedy_sim_s"] / max(p["dp_sim_s"], 1e-9),
+    ),
 }
 # fail when a metric drops below this fraction of the last committed point
 THRESHOLD = 0.8
